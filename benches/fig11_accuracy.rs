@@ -1,0 +1,176 @@
+//! Figure 11 (and Table 2) reproduction — ALL REAL TIER, no simulation:
+//!
+//! * Table 2 row: full-model accuracies of the mini zoo on the synthetic
+//!   datasets (PJRT-trained from Rust).
+//! * Fig 11(a,b): final accuracy of every pruned configuration in a
+//!   subspace, default vs block-trained, with the full-model reference.
+//! * Fig 11(c,d): accuracy-vs-step convergence curves of one heavily
+//!   pruned config (70 % everywhere) under both inits.
+//!
+//! Env: COCOPIE_FULL=1 trains all 4 models x 4 datasets for Table 2
+//! (default: resnet_mini x 2 datasets to keep the run under ~2 min).
+
+use cocopie::cocotune::explore::{explore, InitMode};
+use cocopie::cocotune::pretrain::pretrain_bank;
+use cocopie::cocotune::trainer::{
+    config_masks, sample_subspace, ModelState, TrainOpts, Trainer,
+};
+use cocopie::runtime::Runtime;
+use cocopie::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("COCOPIE_FULL").is_ok();
+    let rt = Runtime::new(&Runtime::default_dir())?;
+
+    // ---- Table 2: full-model accuracies ---------------------------------
+    let models: Vec<&str> = if full {
+        vec!["resnet_mini", "incept_mini", "vgg_mini", "mbnt_mini"]
+    } else {
+        vec!["resnet_mini"]
+    };
+    let datasets: Vec<&str> = if full {
+        vec!["synflowers", "synbirds", "syncars", "syndogs"]
+    } else {
+        vec!["synflowers", "synbirds"]
+    };
+    let mut t2 = Table::new(&["dataset", "model", "accuracy"]);
+    for ds_name in &datasets {
+        for model in &models {
+            let trainer = Trainer::new(&rt, model)?;
+            let ds = rt.manifest.datasets[*ds_name].clone();
+            let n_mod = trainer.spec.prunable_modules.len();
+            let mut st = ModelState::init(&trainer.spec, 42);
+            let ones = config_masks(&trainer.spec, &st, &vec![0; n_mod]);
+            // harder (noisier) datasets need a gentler schedule
+            let (lr, steps) = if *ds_name == "synflowers" {
+                (0.02, 450)
+            } else {
+                (0.015, 600)
+            };
+            let res = trainer.train(
+                &mut st,
+                &ones,
+                &ds,
+                &TrainOpts {
+                    steps,
+                    lr,
+                    eval_every: 150,
+                    eval_batches: 12,
+                    target_acc: None,
+                    seed: 1,
+                },
+            )?;
+            t2.row(&[
+                ds_name.to_string(),
+                model.to_string(),
+                format!("{:.3}", res.final_acc),
+            ]);
+        }
+    }
+    println!("== Table 2 (mini tier): full-model accuracies ==\n");
+    t2.print();
+
+    // ---- Fig 11: default vs block-trained, real exploration -------------
+    let trainer = Trainer::new(&rt, "resnet_mini")?;
+    let ds = rt.manifest.datasets["synflowers"].clone();
+    let n_mod = trainer.spec.prunable_modules.len();
+    let mut teacher = ModelState::init(&trainer.spec, 42);
+    let ones = config_masks(&trainer.spec, &teacher, &vec![0; n_mod]);
+    let res = trainer.train(
+        &mut teacher,
+        &ones,
+        &ds,
+        &TrainOpts {
+            steps: 450,
+            lr: 0.02,
+            eval_every: 150,
+            eval_batches: 12,
+            target_acc: None,
+            seed: 1,
+        },
+    )?;
+    println!("\nfull ResNet-mini accuracy: {:.3}", res.final_acc);
+
+    let bank = pretrain_bank(&trainer, &teacher, &ds, 120, 0.02, 7)?;
+    let n_cfg = if full { 16 } else { 8 };
+    let configs = sample_subspace(n_mod, n_cfg, 3);
+    // short fine-tune budget: the regime where initialization quality
+    // dominates (paper Fig 11 c,d — the gap is at early steps)
+    let opts = TrainOpts {
+        steps: 60,
+        lr: 0.015,
+        eval_every: 25,
+        eval_batches: 12,
+        target_acc: None,
+        seed: 5,
+    };
+    // no early stop: Fig 11 wants the full accuracy-vs-size scatter
+    let base = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::Default, &opts, 2.0, false)?;
+    let comp = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::BlockTrained(&bank), &opts, 2.0, false)?;
+
+    println!("\n== Fig 11 (a,b): accuracy vs model size ==\n");
+    let mut fig = Table::new(&[
+        "size", "default acc", "block acc", "delta", "init d", "init b",
+    ]);
+    let mut wins = 0;
+    let mut init_wins = 0;
+    for rb in &comp.results {
+        let rd = base
+            .results
+            .iter()
+            .find(|r| r.config == rb.config)
+            .unwrap();
+        if rb.final_acc >= rd.final_acc {
+            wins += 1;
+        }
+        if rb.initial_acc >= rd.initial_acc {
+            init_wins += 1;
+        }
+        fig.row(&[
+            rb.model_size.to_string(),
+            format!("{:.3}", rd.final_acc),
+            format!("{:.3}", rb.final_acc),
+            format!("{:+.3}", rb.final_acc - rd.final_acc),
+            format!("{:.3}", rd.initial_acc),
+            format!("{:.3}", rb.initial_acc),
+        ]);
+    }
+    fig.print();
+    println!(
+        "\nblock-trained >= default: final acc on {wins}/{n}, initial \
+         acc on {init_wins}/{n} configs (paper: clearly better overall; \
+         1-4% final, 50-90% initial). NOTE mini-scale deviation: our \
+         masked-teacher default init is function-preserving (consumer \
+         pruning), making the baseline unusually strong at light rates — \
+         the block advantage here shows in initial accuracy and in the \
+         heavy-pruning convergence curves below, not final accuracy.",
+        n = comp.results.len()
+    );
+
+    // ---- Fig 11 (c,d): convergence curves at 70% everywhere -------------
+    println!("\n== Fig 11 (c,d): convergence at 70% pruning ==\n");
+    let heavy = vec![3u8; n_mod];
+    let masks = config_masks(&trainer.spec, &teacher, &heavy);
+    let curve_opts = TrainOpts {
+        steps: 150,
+        lr: 0.015,
+        eval_every: 15,
+        eval_batches: 12,
+        target_acc: None,
+        seed: 9,
+    };
+    let mut st_d = teacher.clone();
+    st_d.zero_vels();
+    let r_d = trainer.train(&mut st_d, &masks, &ds, &curve_opts)?;
+    let mut st_b =
+        cocopie::cocotune::pretrain::assemble(&trainer.spec, &teacher,
+                                              &bank, &heavy);
+    let r_b = trainer.train(&mut st_b, &masks, &ds, &curve_opts)?;
+    println!("step | default | block-trained");
+    for ((s, a), (_, b)) in r_d.acc_curve.iter().zip(&r_b.acc_curve) {
+        println!("{s:4} | {a:.3}   | {b:.3}");
+    }
+    Ok(())
+}

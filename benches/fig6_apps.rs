@@ -1,0 +1,50 @@
+//! Figure 6 reproduction: application-demo speedups (style transfer,
+//! coloring, super resolution). Paper claims 4.2x / 3.6x / 3.7x and all
+//! inference within 75 ms on the S10.
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::exec::{ModelExecutor, Tensor};
+use cocopie::ir::zoo;
+use cocopie::util::bench::{bench, fmt_time, Table};
+use cocopie::util::rng::Rng;
+
+fn main() {
+    let threads = 4;
+    let apps = [
+        ("style_transfer", zoo::style_transfer_net(128), 4.2),
+        ("coloring", zoo::coloring_net(128), 3.6),
+        ("super_resolution", zoo::super_resolution_net(64), 3.7),
+    ];
+    let mut table = Table::new(&[
+        "app", "dense(im2col)", "cocogen", "speedup", "paper", "<75ms",
+    ]);
+    for (name, ir, paper) in apps {
+        let mut rng = Rng::seed_from(3);
+        let input = Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                   &mut rng);
+        let dense = build_plan(&ir, Scheme::DenseIm2col,
+                               PruneConfig::default(), 5);
+        let mut coco = build_plan(&ir, Scheme::CocoGen,
+                                  PruneConfig::default(), 5);
+        cocopie::codegen::autotune_plan(&mut coco, threads);
+        let coco = coco;
+        let mut e_d = ModelExecutor::new(&dense, threads);
+        let mut e_c = ModelExecutor::new(&coco, threads);
+        let t_d = bench(name, 0.6, 40, || {
+            std::hint::black_box(e_d.run(&input));
+        });
+        let t_c = bench(name, 0.6, 80, || {
+            std::hint::black_box(e_c.run(&input));
+        });
+        table.row(&[
+            name.to_string(),
+            fmt_time(t_d.median_s),
+            fmt_time(t_c.median_s),
+            format!("{:.2}x", t_d.median_s / t_c.median_s),
+            format!("{paper}x"),
+            (if t_c.median_s < 0.075 { "yes" } else { "no" }).to_string(),
+        ]);
+    }
+    println!("\n== Fig. 6: application demo speedups ==");
+    table.print();
+}

@@ -1,0 +1,78 @@
+//! Figure 7 reproduction: energy-efficiency of mobile + CoCo-Gen vs ASIC
+//! and FPGA accelerators (TPU-V2, edge TPU, Jetson AGX Xavier, Cambricon
+//! MLU-100, Eyeriss, ESE) on a VGG-16-class workload.
+//!
+//! Method (DESIGN.md §2): accelerator operating points come from the
+//! sources the paper cites; the S10 + CoCo-Gen reference point is the
+//! paper's own measured 18.9 ms VGG CONV at a ~3 W GPU envelope. Our
+//! testbed's measured cocogen latency (FLOP-scaled to VGG-224) is shown
+//! alongside for transparency, and the *mechanism* — the pruned-vs-dense
+//! speedup CoCo-Gen contributes — is measured for real below.
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::exec::{ModelExecutor, Tensor};
+use cocopie::hwsim;
+use cocopie::ir::zoo;
+use cocopie::util::bench::{bench, Table};
+use cocopie::util::rng::Rng;
+
+fn main() {
+    // Measure dense and CoCo-Gen on the reduced VGG: the speedup factor
+    // is the mechanism behind the paper's mobile operating point.
+    let ir = zoo::vgg16(zoo::IMAGENET_HW, 1000);
+    let mut rng = Rng::seed_from(1);
+    let input = Tensor::random(3, zoo::IMAGENET_HW, zoo::IMAGENET_HW,
+                               &mut rng);
+    let dense_plan = build_plan(&ir, Scheme::DenseIm2col,
+                                PruneConfig::default(), 42);
+    let mut coco_plan = build_plan(&ir, Scheme::CocoGen,
+                                   PruneConfig::default(), 42);
+    cocopie::codegen::autotune_plan(&mut coco_plan, 4);
+    let coco_plan = coco_plan;
+    let mut e_d = ModelExecutor::new(&dense_plan, 4);
+    let mut e_c = ModelExecutor::new(&coco_plan, 4);
+    let t_d = bench("vgg-dense", 1.0, 30, || {
+        std::hint::black_box(e_d.run(&input));
+    });
+    let t_c = bench("vgg-cocogen", 1.0, 40, || {
+        std::hint::black_box(e_c.run(&input));
+    });
+    println!(
+        "measured VGG-{}: dense {:.1} ms -> cocogen {:.1} ms \
+         ({:.2}x; this speedup factor is what puts the paper's S10 at \
+         18.9 ms)",
+        zoo::IMAGENET_HW,
+        t_d.median_s * 1e3,
+        t_c.median_s * 1e3,
+        t_d.median_s / t_c.median_s
+    );
+
+    let full = zoo::vgg16(224, 1000);
+    let testbed_ips = hwsim::flop_scaled_inf_per_s(
+        t_c.median_s,
+        ir.flops(),
+        full.flops(),
+    );
+
+    let rows = hwsim::fig7_table(testbed_ips);
+    let mut table = Table::new(&[
+        "device", "inf/s", "power W", "inf/J", "vs S10+CoCo-Gen",
+    ]);
+    for r in &rows {
+        table.row(&[
+            r.device.clone(),
+            format!("{:.1}", r.inf_per_s),
+            format!("{:.1}", r.power_w),
+            format!("{:.2}", r.inf_per_j),
+            format!("{:.2}x", r.vs_mobile),
+        ]);
+    }
+    println!("\n== Fig. 7: energy efficiency vs ASIC/FPGA (VGG-16 class) ==");
+    table.print();
+    let beaten = rows[2..].iter().filter(|r| r.vs_mobile < 1.0).count();
+    println!(
+        "\nmobile + CoCo-Gen beats {beaten}/{} accelerators on inf/J \
+         (paper: consistently outperforms the set)",
+        rows.len() - 2
+    );
+}

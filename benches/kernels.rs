@@ -1,0 +1,125 @@
+//! Kernel-level microbenchmarks: conv engines across layer shapes, GEMM,
+//! and the codegen passes' effect (reorder on/off, tile sweep).
+//! Supporting evidence for the Fig. 5 end-to-end numbers and the §Perf
+//! iteration log.
+
+use cocopie::codegen::reorder::filter_kernel_reorder;
+use cocopie::codegen::{tuner, TileConfig};
+use cocopie::compress::{CsrLayer, DenseLayer, FkwLayer};
+use cocopie::exec::im2col::Im2colScratch;
+use cocopie::exec::{csr, im2col, naive, pattern, Tensor};
+use cocopie::patterns::connectivity::prune_unstructured;
+use cocopie::util::bench::{bench, fmt_time, Table};
+use cocopie::util::rng::Rng;
+
+fn main() {
+    let threads = 4;
+    let shapes: &[(usize, usize, usize)] = &[
+        (32, 32, 32),   // (C, H==W, Cout) early layer
+        (64, 56, 64),   // mid layer
+        (128, 28, 128), // late layer
+        (256, 14, 256), // deep layer
+    ];
+    let mut table = Table::new(&[
+        "shape", "naive", "im2col", "csr(25%)", "cocogen", "coco/im2col",
+        "gflops(coco)",
+    ]);
+    let mut rng = Rng::seed_from(1);
+    for &(c, hw, co) in shapes {
+        let dense = DenseLayer {
+            cout: co,
+            cin: c,
+            kh: 3,
+            kw: 3,
+            weights: (0..co * c * 9).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; co],
+        };
+        let mask = prune_unstructured(&dense.weights, 0.25);
+        let csr_l = CsrLayer::from_dense(&dense, Some(&mask));
+        let conn = cocopie::codegen::prune_conn_oihw(&dense, 0.55);
+        let mut fkw = FkwLayer::from_dense(&dense, &conn);
+        filter_kernel_reorder(&mut fkw);
+        let input = Tensor::random(c, hw, hw, &mut rng);
+        let mut scratch = Im2colScratch::default();
+
+        let t_naive = bench("naive", 0.4, 50, || {
+            std::hint::black_box(naive::conv2d(&input, &dense, 1, true,
+                                               threads));
+        });
+        let t_im2col = bench("im2col", 0.4, 200, || {
+            std::hint::black_box(im2col::conv2d(
+                &input, &dense, 1, true, threads, &mut scratch,
+            ));
+        });
+        let t_csr = bench("csr", 0.4, 200, || {
+            std::hint::black_box(csr::conv2d(&input, &csr_l, 1, true,
+                                             threads));
+        });
+        let tile = TileConfig::default();
+        let t_coco = bench("cocogen", 0.4, 400, || {
+            std::hint::black_box(pattern::conv2d(&input, &fkw, 1, true,
+                                                 threads, tile));
+        });
+        let flops = 2.0 * (hw * hw) as f64 * fkw.nnz() as f64;
+        table.row(&[
+            format!("{c}x{hw}x{hw}->{co}"),
+            fmt_time(t_naive.median_s),
+            fmt_time(t_im2col.median_s),
+            fmt_time(t_csr.median_s),
+            fmt_time(t_coco.median_s),
+            format!("{:.2}x", t_im2col.median_s / t_coco.median_s),
+            format!("{:.2}", flops / t_coco.median_s / 1e9),
+        ]);
+    }
+    println!("\n== conv engine comparison (3x3, stride 1, fused relu) ==");
+    table.print();
+
+    // ---- reorder ablation --------------------------------------------
+    println!("\n== filter-kernel reorder ablation (128x28x28 -> 128) ==");
+    let c = 128;
+    let hw = 28;
+    let dense = DenseLayer {
+        cout: c,
+        cin: c,
+        kh: 3,
+        kw: 3,
+        weights: (0..c * c * 9).map(|_| rng.normal_f32()).collect(),
+        bias: vec![0.0; c],
+    };
+    let conn = cocopie::codegen::prune_conn_oihw(&dense, 0.55);
+    let unordered = FkwLayer::from_dense(&dense, &conn);
+    let mut ordered = unordered.clone();
+    filter_kernel_reorder(&mut ordered);
+    let input = Tensor::random(c, hw, hw, &mut rng);
+    let tile = TileConfig::default();
+    let t_un = bench("unordered", 0.4, 400, || {
+        std::hint::black_box(pattern::conv2d(&input, &unordered, 1, true,
+                                             threads, tile));
+    });
+    let t_or = bench("ordered", 0.4, 400, || {
+        std::hint::black_box(pattern::conv2d(&input, &ordered, 1, true,
+                                             threads, tile));
+    });
+    println!(
+        "unordered {} -> reordered {} ({:+.1}% throughput)",
+        fmt_time(t_un.median_s),
+        fmt_time(t_or.median_s),
+        (t_un.median_s / t_or.median_s - 1.0) * 100.0
+    );
+
+    // ---- tile auto-tuning sweep ----------------------------------------
+    println!("\n== parameter auto-tuning (tile sweep, same layer) ==");
+    let (best, results) = tuner::autotune(hw, 3, |cfg| {
+        std::hint::black_box(pattern::conv2d(&input, &ordered, 1, true,
+                                             threads, cfg));
+    });
+    for (cfg, t) in &results {
+        println!(
+            "  h_tile {:2} co_block {:2}: {}{}",
+            cfg.h_tile,
+            cfg.co_block,
+            fmt_time(*t),
+            if cfg == &best { "   <= selected" } else { "" }
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Table 3 reproduction: speedups and configuration savings of
+//! composability-based pruning at tolerable accuracy-drop rates alpha,
+//! with 1/4/16 cluster nodes, over four datasets and two models.
+//!
+//! Two-tier method (DESIGN.md §2): the behaviour model is CALIBRATED from
+//! a real PJRT exploration on the mini tier (set COCOPIE_CALIBRATE=0 to
+//! use the paper-reported ranges instead and skip the ~1 min of real
+//! training), then the discrete-event cluster simulator replays the
+//! paper's full protocol: 500-config subspace, smallest-first order,
+//! stop at threshold.
+
+use cocopie::cocotune::blocks::{identify_blocks, BlockSelection};
+use cocopie::cocotune::calib::Calibration;
+use cocopie::cocotune::cluster::{sample_sim_subspace, simulate, SimMode};
+use cocopie::cocotune::explore::{explore, InitMode};
+use cocopie::cocotune::pretrain::pretrain_bank;
+use cocopie::cocotune::trainer::{
+    config_masks, sample_subspace, ModelState, TrainOpts, Trainer,
+};
+use cocopie::runtime::Runtime;
+use cocopie::util::bench::Table;
+
+/// Real-tier calibration (resnet_mini on synflowers, small budget).
+fn calibrate_real() -> anyhow::Result<Calibration> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let trainer = Trainer::new(&rt, "resnet_mini")?;
+    let ds = rt.manifest.datasets["synflowers"].clone();
+    let n_mod = trainer.spec.prunable_modules.len();
+    let mut teacher = ModelState::init(&trainer.spec, 42);
+    let ones = config_masks(&trainer.spec, &teacher, &vec![0; n_mod]);
+    let res = trainer.train(
+        &mut teacher,
+        &ones,
+        &ds,
+        &TrainOpts {
+            steps: 400,
+            lr: 0.02,
+            eval_every: 125,
+            eval_batches: 12,
+            target_acc: None,
+            seed: 1,
+        },
+    )?;
+    let bank = pretrain_bank(&trainer, &teacher, &ds, 30, 0.02, 7)?;
+    let configs = sample_subspace(n_mod, 6, 3);
+    let opts = TrainOpts {
+        steps: 100,
+        lr: 0.015,
+        eval_every: 25,
+        eval_batches: 12,
+        target_acc: None,
+        seed: 5,
+    };
+    // no early stop: we want matched accuracy/step measurements
+    let base = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::Default, &opts, 2.0, false)?;
+    let comp = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::BlockTrained(&bank), &opts, 2.0, false)?;
+    Ok(Calibration::from_runs(res.final_acc, &base, &comp))
+}
+
+fn main() -> anyhow::Result<()> {
+    let use_real = std::env::var("COCOPIE_CALIBRATE")
+        .map(|v| v != "0")
+        .unwrap_or(true);
+    let calib_base = if use_real {
+        println!("calibrating behaviour model from real PJRT tier ...");
+        match calibrate_real() {
+            Ok(c) => {
+                println!(
+                    "calibrated: recovery {:.2}, init boost {:+.3}, \
+                     steps ratio {:.2}, hardness {:.2}, noise {:.3}\n",
+                    c.recovery, c.init_boost, c.block_steps_ratio,
+                    c.hardness, c.acc_noise
+                );
+                c
+            }
+            Err(e) => {
+                println!("real calibration failed ({e}); using \
+                          paper-scale constants\n");
+                Calibration::paper_scale(0.85)
+            }
+        }
+    } else {
+        Calibration::paper_scale(0.85)
+    };
+
+    // Per-(model, dataset) base accuracies and alpha sets follow the
+    // paper's Table 3 exactly; dataset hardness presets come from
+    // Calibration::with_dataset, the rest from the calibration above.
+    let datasets: &[(&str, f64, [f64; 3])] = &[
+        ("Flowers102", 0.973, [-0.01, 0.0, 0.01]),
+        ("CUB200", 0.770, [0.04, 0.05, 0.06]),
+        ("Cars", 0.822, [-0.01, 0.0, 0.01]),
+        ("Dogs", 0.850, [0.06, 0.07, 0.08]),
+    ];
+    let models: &[(&str, usize, u64)] =
+        &[("ResNet-50", 16, 11), ("Inception-V3", 11, 23)];
+    let nodes_list = [1usize, 4, 16];
+
+    // Two rows of the experiment: the model calibrated from OUR mini
+    // tier (honest small-scale behaviour), and the paper-envelope model
+    // (the paper's own reported ranges) — both replay the same protocol.
+    for (variant, cal0) in [
+        ("calibrated(mini-tier)", calib_base.clone()),
+        ("paper-envelope", Calibration::paper_scale(0.85)),
+    ] {
+    println!("\n---- behaviour model: {variant} ----\n");
+    let mut table = Table::new(&[
+        "dataset", "model", "alpha", "nodes", "thr", "cfg base",
+        "cfg comp", "h base", "h comp", "size b", "size c", "speedup",
+        "overhead",
+    ]);
+    for (ds_name, base_acc, alphas) in datasets {
+        for (model, n_modules, seed0) in models {
+            let mut calib = cal0.clone().with_dataset(ds_name);
+            calib.base_acc = *base_acc;
+            // tuning blocks for the sim subspace (module-level configs)
+            let cfgs_disc = sample_subspace(*n_modules, 64, *seed0);
+            let sel: BlockSelection =
+                identify_blocks(&cfgs_disc, *n_modules);
+            let sim_cfgs = sample_sim_subspace(
+                500,
+                seed0 ^ fx(ds_name.as_bytes()),
+            );
+            for &alpha in alphas {
+                let thr = base_acc - alpha;
+                for &nodes in &nodes_list {
+                    let b = simulate(&sim_cfgs, &calib, SimMode::Default,
+                                     nodes, thr, true);
+                    let c = simulate(&sim_cfgs, &calib,
+                                     SimMode::Block(&sel), nodes, thr,
+                                     true);
+                    let b_h = b.hours / nodes as f64 * nodes as f64;
+                    table.row(&[
+                        ds_name.to_string(),
+                        model.to_string(),
+                        format!("{:.0}%", alpha * 100.0),
+                        nodes.to_string(),
+                        format!("{thr:.3}"),
+                        b.configs_evaluated.to_string(),
+                        c.configs_evaluated.to_string(),
+                        format!("{:.1}", b.hours),
+                        format!("{:.1}", c.hours),
+                        b.winner_size_frac
+                            .map(|s| format!("{:.0}%", s * 100.0))
+                            .unwrap_or_else(|| "-".into()),
+                        c.winner_size_frac
+                            .map(|s| format!("{:.0}%", s * 100.0))
+                            .unwrap_or_else(|| "-".into()),
+                        format!("{:.1}x", b_h / c.hours.max(1e-9)),
+                        format!("{:.0}%", c.overhead_frac * 100.0),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("== Table 3 ({variant}) ==\n");
+    table.print();
+    }
+    println!(
+        "\npaper shape: speedups grow with alpha up to ~100-186x \
+         (ResNet) / ~30x (Inception) at 1 node; block-trained finds \
+         smaller winners; overhead fraction grows as exploration shrinks"
+    );
+    Ok(())
+}
+
+fn fx(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

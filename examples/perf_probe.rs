@@ -1,0 +1,29 @@
+//! Perf probe: pattern executor paths across shapes (perf-pass tooling).
+use cocopie::codegen::reorder::filter_kernel_reorder;
+use cocopie::codegen::TileConfig;
+use cocopie::compress::{DenseLayer, FkwLayer};
+use cocopie::exec::im2col::Im2colScratch;
+use cocopie::exec::{im2col, pattern, Tensor};
+use cocopie::util::bench::bench;
+use cocopie::util::rng::Rng;
+
+fn main() {
+    let threads = 4;
+    let mut rng = Rng::seed_from(1);
+    println!("{:<18} {:>9} {:>9} {:>9} {:>7}", "shape", "im2col", "axpy", "gemm", "best/i2c");
+    for &(c, hw, co) in &[(32usize, 32usize, 32usize), (64, 64, 64), (64, 56, 64), (128, 28, 128), (256, 14, 256), (512, 8, 512), (64, 32, 128), (128, 32, 256)] {
+        let dense = DenseLayer { cout: co, cin: c, kh: 3, kw: 3,
+            weights: (0..co * c * 9).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; co] };
+        let conn = cocopie::codegen::prune_conn_oihw(&dense, 0.55);
+        let mut fkw = FkwLayer::from_dense(&dense, &conn);
+        filter_kernel_reorder(&mut fkw);
+        let input = Tensor::random(c, hw, hw, &mut rng);
+        let mut scratch = Im2colScratch::default();
+        let t_i = bench("i", 0.3, 200, || { std::hint::black_box(im2col::conv2d(&input, &dense, 1, true, threads, &mut scratch)); }).median_s;
+        let t_a = bench("a", 0.3, 400, || { std::hint::black_box(pattern::conv2d(&input, &fkw, 1, true, threads, TileConfig::default())); }).median_s;
+        let t_g = bench("g", 0.3, 400, || { std::hint::black_box(pattern::conv2d_gemm(&input, &fkw, 1, true, threads)); }).median_s;
+        println!("{:<18} {:>8.2}ms {:>8.2}ms {:>8.2}ms {:>6.2}x", format!("{c}x{hw}->{co}"),
+            t_i*1e3, t_a*1e3, t_g*1e3, t_i/t_a.min(t_g));
+    }
+}

@@ -1,0 +1,120 @@
+//! CoCo-Tune end-to-end (real tier): train a teacher, pre-train the
+//! tuning-block bank (Teacher-Student, all modules concurrently), identify
+//! tuning blocks with the hierarchical grammar pass, then explore a
+//! promising subspace default vs block-trained — the paper's §2.2
+//! pipeline at mini scale.
+//!
+//! Run: `make artifacts && cargo run --release --example prune_explore`
+//! Environment: COCOPIE_CONFIGS=<n> to change the subspace size.
+
+use cocopie::cocotune::blocks::{identify_blocks, per_module_blocks};
+use cocopie::cocotune::explore::{explore, InitMode};
+use cocopie::cocotune::pretrain::pretrain_bank;
+use cocopie::cocotune::trainer::{
+    config_masks, sample_subspace, ModelState, TrainOpts, Trainer,
+};
+use cocopie::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let n_cfg: usize = std::env::var("COCOPIE_CONFIGS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let trainer = Trainer::new(&rt, "resnet_mini")?;
+    let ds = rt.manifest.datasets["synflowers"].clone();
+    let n_mod = trainer.spec.prunable_modules.len();
+
+    println!("== teacher ==");
+    let mut teacher = ModelState::init(&trainer.spec, 42);
+    let ones = config_masks(&trainer.spec, &teacher, &vec![0; n_mod]);
+    let res = trainer.train(
+        &mut teacher,
+        &ones,
+        &ds,
+        &TrainOpts {
+            steps: 450,
+            lr: 0.02,
+            eval_every: 50,
+            eval_batches: 12,
+            target_acc: None,
+            seed: 1,
+        },
+    )?;
+    println!("teacher accuracy {:.3}", res.final_acc);
+
+    println!("== tuning-block identification ==");
+    let configs = sample_subspace(n_mod, n_cfg, 3);
+    let sel = identify_blocks(&configs, n_mod);
+    let naive_sel = per_module_blocks(&configs, n_mod);
+    println!(
+        "grammar found {} rules; selected {} blocks \
+         ({} multi-module, {} module-units) vs {} per-module blocks",
+        sel.grammar_rules,
+        sel.blocks.len(),
+        sel.multi_module_blocks(),
+        sel.pretrain_module_units(),
+        naive_sel.blocks.len()
+    );
+
+    println!("== block pre-training (Teacher-Student) ==");
+    let bank = pretrain_bank(&trainer, &teacher, &ds, 50, 0.02, 7)?;
+    for (rate, curve) in &bank.loss_curves {
+        let first = curve.first().map(|(_, l)| *l).unwrap_or(0.0);
+        let last = curve.last().map(|(_, l)| *l).unwrap_or(0.0);
+        println!(
+            "  rate {:2}%: reconstruction loss {:.4} -> {:.4}",
+            [0, 30, 50, 70][*rate as usize],
+            first,
+            last
+        );
+    }
+
+    println!("== exploration: default vs block-trained ==");
+    let thr = res.final_acc; // alpha = 0 (paper mid-range)
+    let opts = TrainOpts {
+        steps: 120,
+        lr: 0.015,
+        eval_every: 20,
+        eval_batches: 12,
+        target_acc: None,
+        seed: 5,
+    };
+    let base = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::Default, &opts, thr, true)?;
+    let comp = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::BlockTrained(&bank), &opts, thr, true)?;
+
+    println!("\n| config | size | default acc | block acc | d-steps | b-steps |");
+    for rb in &comp.results {
+        if let Some(rd) = base
+            .results
+            .iter()
+            .find(|r| r.config == rb.config)
+        {
+            println!(
+                "| {:?} | {} | {:.3} (init {:.3}) | {:.3} (init {:.3}) | {} | {} |",
+                rb.config, rb.model_size, rd.final_acc, rd.initial_acc,
+                rb.final_acc, rb.initial_acc, rd.steps, rb.steps
+            );
+        }
+    }
+    println!(
+        "\ndefault:       explored {}, total {} steps, found idx {:?}",
+        base.results.len(),
+        base.total_steps,
+        base.found
+    );
+    println!(
+        "block-trained: explored {}, total {} steps (+{} pretrain), \
+         found idx {:?}",
+        comp.results.len(),
+        comp.total_steps,
+        bank.pretrain_steps,
+        comp.found
+    );
+    let base_cost = base.total_steps as f64;
+    let comp_cost = (comp.total_steps + bank.pretrain_steps) as f64;
+    println!("speedup (train-step cost): {:.2}x", base_cost / comp_cost);
+    Ok(())
+}

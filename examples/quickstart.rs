@@ -1,0 +1,88 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. Load the AOT artifacts (L1 Pallas kernel + L2 JAX graphs, compiled
+//!    to HLO text at build time) through the PJRT runtime.
+//! 2. Run the pattern-conv micro kernel.
+//! 3. Pattern-compress a conv layer on the Rust side (CoCo-Gen), run the
+//!    pattern executor against the dense baseline, and print the
+//!    storage/FLOPs/latency story.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::time::Instant;
+
+use cocopie::codegen::reorder::filter_kernel_reorder;
+use cocopie::codegen::TileConfig;
+use cocopie::compress::{CompressionReport, DenseLayer, FkwLayer};
+use cocopie::exec::{naive, pattern, Tensor};
+use cocopie::runtime::{HostTensor, Runtime};
+use cocopie::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. PJRT runtime + AOT artifacts --------------------------------
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // --- 2. run the L1 Pallas pattern-conv kernel through PJRT ----------
+    let exe = rt.load_micro("pattern_conv")?;
+    let (n, h, w, cin, cout, k) = (1, 16, 16, 16, 32, 4);
+    let out = exe.run(&[
+        HostTensor::ones(&[n, h, w, cin]),
+        HostTensor::ones(&[k, cin, cout]),
+        HostTensor::zeros(&[cout]),
+    ])?;
+    println!(
+        "pallas pattern_conv: out shape {:?}, interior value {}",
+        out[0].shape(),
+        out[0].as_f32()?[(8 * w + 8) * cout]
+    );
+
+    // --- 3. CoCo-Gen on the Rust side ------------------------------------
+    let mut rng = Rng::seed_from(0);
+    let (ci, co, hh, ww) = (64, 64, 56, 56);
+    let dense = DenseLayer {
+        cout: co,
+        cin: ci,
+        kh: 3,
+        kw: 3,
+        weights: (0..co * ci * 9).map(|_| rng.normal_f32()).collect(),
+        bias: vec![0.0; co],
+    };
+    let conn = cocopie::codegen::prune_conn_oihw(&dense, 0.55);
+    let mut fkw = FkwLayer::from_dense(&dense, &conn);
+    filter_kernel_reorder(&mut fkw);
+    let report = CompressionReport::build(&dense, &fkw);
+    println!(
+        "compression: dense {} KB, csr {} KB, fkw {} KB \
+         (fkw beats csr {:.2}x, dense {:.2}x)",
+        report.dense_bytes / 1024,
+        report.csr_bytes / 1024,
+        report.fkw_bytes / 1024,
+        report.fkw_vs_csr(),
+        report.fkw_vs_dense()
+    );
+
+    let input = Tensor::random(ci, hh, ww, &mut rng);
+    let t0 = Instant::now();
+    let a = naive::conv2d(&input, &dense, 1, true, 4);
+    let t_dense = t0.elapsed();
+    let t0 = Instant::now();
+    let b = pattern::conv2d(&input, &fkw, 1, true, 4, TileConfig::default());
+    let t_pat = t0.elapsed();
+    // correctness vs the dense expansion of the pruned weights
+    let want = naive::conv2d(&input, &fkw.to_dense(), 1, true, 1);
+    println!(
+        "pattern conv matches oracle: max |diff| = {:.2e}",
+        b.max_abs_diff(&want)
+    );
+    println!(
+        "latency: dense {:.2} ms -> cocogen {:.2} ms ({:.1}x) on {}x{}x{}",
+        t_dense.as_secs_f64() * 1e3,
+        t_pat.as_secs_f64() * 1e3,
+        t_dense.as_secs_f64() / t_pat.as_secs_f64(),
+        ci, hh, ww
+    );
+    let _ = a;
+    println!("quickstart OK");
+    Ok(())
+}

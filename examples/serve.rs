@@ -1,0 +1,69 @@
+//! Serving demo: the L3 coordinator under open-loop synthetic traffic,
+//! plus the SLA router choosing among deployment variants.
+//!
+//! Run: `make artifacts && cargo run --release --example serve`
+
+use std::time::{Duration, Instant};
+
+use cocopie::coordinator::router::{Backend, Router, Sla};
+use cocopie::coordinator::{BatchPolicy, Coordinator, ServeConfig};
+use cocopie::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- router across CoCo-Gen deployment variants ----------------------
+    // latency/accuracy operating points come from the Fig.5/Table1 benches
+    let router = Router::new(vec![
+        Backend::new("dense", 9.8, 0.95),
+        Backend::new("pattern-2.5x", 4.1, 0.94),
+        Backend::new("pattern-7x", 1.6, 0.91),
+    ]);
+    for sla in [Sla::Realtime, Sla::Standard, Sla::Quality] {
+        println!("router {:?} -> {}", sla, router.route(sla).name);
+    }
+
+    // --- live serving through PJRT ---------------------------------------
+    let mut cfg = ServeConfig::new("resnet_mini");
+    cfg.policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
+    let coord = Coordinator::start(cfg)?;
+    let client = coord.client();
+    let elems = 16 * 16 * 3;
+    let mut rng = Rng::seed_from(3);
+    let n_requests = 512;
+    let t0 = Instant::now();
+    // open-loop arrivals at ~2000 rps
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push(client.submit(img)?);
+        if i % 2 == 0 {
+            // open-loop pacing below the service rate so queues stay
+            // bounded (see EXPERIMENTS.md §Perf for the buffer-upload
+            // optimization that raises the service rate)
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let mut classes = vec![0usize; 16];
+    for p in pending {
+        let pred = p.recv()?;
+        classes[pred.class] += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(client);
+    let s = coord.shutdown();
+    println!(
+        "served {} requests in {:.2}s ({:.0} rps)",
+        s.completed,
+        wall,
+        s.completed as f64 / wall
+    );
+    println!(
+        "latency p50 {:.2} ms, p99 {:.2} ms; mean queue {:.2} ms; \
+         mean batch {:.1}",
+        s.p50_ms, s.p99_ms, s.mean_queue_ms, s.mean_batch
+    );
+    println!("class histogram: {classes:?}");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT export: lower every L2 graph to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``).  Python never runs on the
+request path: the Rust runtime loads artifacts/<name>.hlo.txt via
+``HloModuleProto::from_text_file`` and executes through PJRT.
+
+HLO text -- NOT ``lowered.compile().serialize()`` -- is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate binds)
+rejects (``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as dsets
+from . import model as zoo
+from . import patterns
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(names: Sequence[str], shapes: Sequence[tuple],
+         dtype: str = "f32") -> List[dict]:
+    return [{"name": n, "shape": list(s), "dtype": dtype}
+            for n, s in zip(names, shapes)]
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.manifest = {
+            "format": 1,
+            "models": {},
+            "micro": {},
+            "data": dsets.manifest_entry(),
+            "pattern_set": [list(map(list, p))
+                            for p in patterns.PATTERN_SET_4],
+        }
+
+    def emit(self, name: str, fn, example_args, inputs_sig, outputs_sig
+             ) -> dict:
+        # keep_unused=True: the manifest promises a positional input
+        # signature; jit's default drops parameters the graph doesn't use
+        # (e.g. the teacher head in block_pretrain), which would desync
+        # the Rust feed order from the compiled program.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text)} chars)")
+        return {"file": fname, "inputs": inputs_sig, "outputs": outputs_sig}
+
+    # -- model graph family -------------------------------------------------
+    def export_model(self, m: zoo.ModelDef, batches=(1, 8),
+                     train_batch: int = 32, with_pretrain: bool = False,
+                     with_admm: bool = False, with_pallas: bool = False):
+        print(f"model {m.name}:")
+        spec = m.spec_json()
+        h, w, c = m.input_shape
+        pshapes = [tuple(p["shape"]) for p in spec["params"]]
+        pnames = [p["name"] for p in spec["params"]]
+        mshapes = [tuple(p["shape"]) for p in spec["masks"]]
+        mnames = [p["name"] for p in spec["masks"]]
+        p_sds = tuple(sds(s) for s in pshapes)
+        m_sds = tuple(sds(s) for s in mshapes)
+        arts = {}
+
+        infer = zoo.make_infer_fn(m, "lax")
+        for b in batches:
+            x_sds = sds((b, h, w, c))
+            arts[f"infer_b{b}"] = self.emit(
+                f"{m.name}.infer_b{b}", infer, (p_sds, m_sds, x_sds),
+                _sig([f"p:{n}" for n in pnames], pshapes)
+                + _sig([f"mask:{n}" for n in mnames], mshapes)
+                + _sig(["x"], [(b, h, w, c)]),
+                _sig(["logits"], [(b, m.classes)]))
+
+        if with_pallas:
+            infer_pl = zoo.make_infer_fn(m, "pallas")
+            b = batches[0]
+            x_sds = sds((b, h, w, c))
+            arts[f"infer_pallas_b{b}"] = self.emit(
+                f"{m.name}.infer_pallas_b{b}", infer_pl,
+                (p_sds, m_sds, x_sds),
+                _sig([f"p:{n}" for n in pnames], pshapes)
+                + _sig([f"mask:{n}" for n in mnames], mshapes)
+                + _sig(["x"], [(b, h, w, c)]),
+                _sig(["logits"], [(b, m.classes)]))
+
+        tb = train_batch
+        x_sds = sds((tb, h, w, c))
+        y_sds = sds((tb,), I32)
+        lr_sds = sds((), F32)
+        train = zoo.make_train_fn(m)
+        arts["train_step"] = self.emit(
+            f"{m.name}.train_step", train,
+            (p_sds, p_sds, m_sds, x_sds, y_sds, lr_sds),
+            _sig([f"p:{n}" for n in pnames], pshapes)
+            + _sig([f"v:{n}" for n in pnames], pshapes)
+            + _sig([f"mask:{n}" for n in mnames], mshapes)
+            + _sig(["x"], [(tb, h, w, c)])
+            + _sig(["y"], [(tb,)], "i32") + _sig(["lr"], [()]),
+            _sig([f"p:{n}" for n in pnames], pshapes)
+            + _sig([f"v:{n}" for n in pnames], pshapes)
+            + _sig(["loss", "acc"], [(), ()]))
+
+        if with_admm:
+            admm = zoo.make_admm_train_fn(m)
+            rho_sds = sds((), F32)
+            arts["admm_train_step"] = self.emit(
+                f"{m.name}.admm_train_step", admm,
+                (p_sds, p_sds, m_sds, m_sds, m_sds, x_sds, y_sds, lr_sds,
+                 rho_sds),
+                _sig([f"p:{n}" for n in pnames], pshapes)
+                + _sig([f"v:{n}" for n in pnames], pshapes)
+                + _sig([f"mask:{n}" for n in mnames], mshapes)
+                + _sig([f"z:{n}" for n in mnames], mshapes)
+                + _sig([f"u:{n}" for n in mnames], mshapes)
+                + _sig(["x"], [(tb, h, w, c)])
+                + _sig(["y"], [(tb,)], "i32")
+                + _sig(["lr", "rho"], [(), ()]),
+                _sig([f"p:{n}" for n in pnames], pshapes)
+                + _sig([f"v:{n}" for n in pnames], pshapes)
+                + _sig(["loss", "acc"], [(), ()]))
+
+        if with_pretrain:
+            snames = m.student_param_names()
+            sshapes = [tuple(m.init_params_np[k].shape) for k in snames]
+            s_sds = tuple(sds(s) for s in sshapes)
+            pre = zoo.make_block_pretrain_fn(m)
+            nblocks = len(m.prunable_modules)
+            arts["block_pretrain"] = self.emit(
+                f"{m.name}.block_pretrain", pre,
+                (p_sds, s_sds, s_sds, m_sds, x_sds, lr_sds),
+                _sig([f"t:{n}" for n in pnames], pshapes)
+                + _sig([f"s:{n}" for n in snames], sshapes)
+                + _sig([f"sv:{n}" for n in snames], sshapes)
+                + _sig([f"mask:{n}" for n in mnames], mshapes)
+                + _sig(["x"], [(tb, h, w, c)]) + _sig(["lr"], [()]),
+                _sig([f"s:{n}" for n in snames], sshapes)
+                + _sig([f"sv:{n}" for n in snames], sshapes)
+                + _sig(["block_losses"], [(nblocks,)]))
+
+        spec["artifacts"] = arts
+        spec["train_batch"] = tb
+        self.manifest["models"][m.name] = spec
+
+    # -- micro artifacts ------------------------------------------------
+    def export_micro(self):
+        print("micro artifacts:")
+        from .kernels import gemm as kgemm
+        from .kernels import pattern_conv as kconv
+
+        taps = patterns.PATTERN_SET_4[0]
+        n, h, w, cin, cout = 1, 16, 16, 16, 32
+
+        def pconv(x, wc, b):
+            return (kconv.pattern_conv2d(x, wc, b, taps),)
+
+        self.manifest["micro"]["pattern_conv"] = self.emit(
+            "micro.pattern_conv", pconv,
+            (sds((n, h, w, cin)), sds((4, cin, cout)), sds((cout,))),
+            _sig(["x", "w_compact", "bias"],
+                 [(n, h, w, cin), (4, cin, cout), (cout,)]),
+            _sig(["out"], [(n, h, w, cout)]))
+        self.manifest["micro"]["pattern_conv"]["taps"] = [
+            list(t) for t in taps]
+
+        def dconv(x, wt, b):
+            return (kconv.dense_conv2d(x, wt, b),)
+
+        self.manifest["micro"]["dense_conv"] = self.emit(
+            "micro.dense_conv", dconv,
+            (sds((n, h, w, cin)), sds((3, 3, cin, cout)), sds((cout,))),
+            _sig(["x", "w", "bias"],
+                 [(n, h, w, cin), (3, 3, cin, cout), (cout,)]),
+            _sig(["out"], [(n, h, w, cout)]))
+
+        def gm(x, wt):
+            return (kgemm.gemm(x, wt),)
+
+        self.manifest["micro"]["gemm"] = self.emit(
+            "micro.gemm", gm, (sds((128, 128)), sds((128, 128))),
+            _sig(["x", "w"], [(128, 128), (128, 128)]),
+            _sig(["out"], [(128, 128)]))
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    ex = Exporter(args.out)
+    ex.export_micro()
+    ex.export_model(zoo.resnet_mini(), with_pretrain=True, with_admm=True,
+                    with_pallas=True)
+    ex.export_model(zoo.incept_mini(), with_pretrain=True)
+    ex.export_model(zoo.vgg_mini())
+    ex.export_model(zoo.mbnt_mini())
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Synthetic fine-grained classification datasets.
+
+Substitution for Flowers102 / CUB200 / Cars / Dogs (paper Table 2): four
+class-conditional image distributions over 16x16x3 with controllable
+difficulty.  Class c is rendered as an oriented grating (frequency + angle
+drawn from class-specific parameters) plus a class colour tint and additive
+noise.  The same generative family is implemented in Rust
+(`rust/src/data/`), reading these parameters from artifacts/manifest.json,
+so Python (pytest) and Rust (PJRT training) draw from one source of truth.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+# name -> (classes, noise_sigma, freq_base, angle_jitter, train, test)
+DATASETS: Dict[str, dict] = {
+    "synflowers": {"classes": 16, "noise": 0.10, "freq_base": 1.5,
+                   "angle_jitter": 0.05, "train": 2048, "test": 512},
+    "synbirds":   {"classes": 16, "noise": 0.22, "freq_base": 2.0,
+                   "angle_jitter": 0.12, "train": 2048, "test": 512},
+    "syncars":    {"classes": 16, "noise": 0.15, "freq_base": 2.5,
+                   "angle_jitter": 0.08, "train": 2048, "test": 512},
+    "syndogs":    {"classes": 16, "noise": 0.20, "freq_base": 1.0,
+                   "angle_jitter": 0.14, "train": 2048, "test": 512},
+}
+
+SIZE = 16
+
+
+def class_params(ds: dict, c: int) -> Tuple[float, float, np.ndarray]:
+    """Deterministic per-class (angle, freq, tint). Mirrored in Rust."""
+    classes = ds["classes"]
+    angle = math.pi * c / classes
+    freq = ds["freq_base"] * (1.0 + 0.5 * (c % 4) / 4.0)
+    tint = np.array([
+        0.5 + 0.5 * math.sin(2 * math.pi * c / classes),
+        0.5 + 0.5 * math.sin(2 * math.pi * c / classes + 2.1),
+        0.5 + 0.5 * math.sin(2 * math.pi * c / classes + 4.2),
+    ], dtype=np.float32)
+    return angle, freq, tint
+
+
+def make_batch(name: str, n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (x [n,16,16,3] f32, y [n] i32)."""
+    ds = DATASETS[name]
+    rng = np.random.default_rng(seed)
+    ys = rng.integers(0, ds["classes"], size=n).astype(np.int32)
+    xs = np.zeros((n, SIZE, SIZE, 3), dtype=np.float32)
+    yy, xx = np.mgrid[0:SIZE, 0:SIZE].astype(np.float32) / SIZE
+    for i, c in enumerate(ys):
+        angle, freq, tint = class_params(ds, int(c))
+        a = angle + rng.normal(0.0, ds["angle_jitter"])
+        phase = rng.uniform(0, 2 * math.pi)
+        grating = np.sin(
+            2 * math.pi * freq * (xx * math.cos(a) + yy * math.sin(a))
+            + phase)
+        img = 0.5 + 0.35 * grating[:, :, None] * tint[None, None, :]
+        img += rng.normal(0.0, ds["noise"], size=img.shape)
+        xs[i] = np.clip(img, 0.0, 1.0)
+    return xs, ys
+
+
+def manifest_entry() -> dict:
+    return {"size": SIZE, "datasets": DATASETS}

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: blocked GEMM for fully-connected layers.
+
+The FC layers of the paper's models (VGG head, classifier heads) are plain
+matmuls; this kernel is the MXU-tiled version used by the AOT micro
+artifacts and the model heads.  Block sizes default to MXU-friendly 128
+(clamped to the problem size).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref):
+    """o[bm, bn] = x[bm, K] @ w[K, bn] -- full-K blocks, f32 accumulate."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _round_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (keeps the grid exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked matmul: [M, K] @ [K, N] -> [M, N] (f32)."""
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"inner-dim mismatch: {k} vs {k2}")
+    bm = _round_block(m, block_m)
+    bn = _round_block(n, block_n)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array,
+           *, interpret: bool = True) -> jax.Array:
+    """FC layer: gemm + bias."""
+    return gemm(x, w, interpret=interpret) + b[None, :]

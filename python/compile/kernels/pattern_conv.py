@@ -1,0 +1,265 @@
+"""L1 Pallas kernels: pattern-sparse / dense / depthwise 2-D convolution.
+
+These kernels are the TPU re-thinking of CoCoPIE's pattern-based code
+generation (paper §2.1.2-2.1.3).  The paper targets ARM SIMD and eliminates
+branch divergence by *filter-kernel reorder* so that one instruction
+sequence serves all kernels that share a pattern.  On TPU the same insight
+becomes:
+
+  * a pattern is a static list of K taps (e.g. 4 surviving positions of a
+    3x3 kernel).  The kernel is compiled per pattern-group, so the taps are
+    compile-time constants -- the irregular sparsity disappears and each tap
+    turns into a dense `[H*W, Cin] x [Cin, Cout]` contraction that feeds the
+    MXU systolic array (the analogue of the paper's SIMD-friendly 4-entry
+    patterns);
+  * the input tile is staged once into VMEM per grid step and *re-used by
+    every tap and every output filter* -- the TPU analogue of the paper's
+    register-level load redundancy elimination;
+  * filter-kernel reorder happens upstream (L3 physically permutes the
+    filters so same-pattern groups are contiguous); the grid then walks the
+    groups without any per-kernel control flow.
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.  Correctness is checked
+against the pure-jnp oracles in :mod:`ref` by the pytest/hypothesis suite.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The default pattern universe (paper Fig. 2: 4-entry patterns over 3x3).
+# Taps are (dy, dx) offsets into the padded input window.
+FULL_3X3: Tuple[Tuple[int, int], ...] = tuple(
+    (dy, dx) for dy in range(3) for dx in range(3)
+)
+
+
+def _check_taps(taps: Sequence[Tuple[int, int]], kh: int, kw: int) -> None:
+    seen = set()
+    for dy, dx in taps:
+        if not (0 <= dy < kh and 0 <= dx < kw):
+            raise ValueError(f"tap ({dy},{dx}) outside {kh}x{kw} kernel")
+        if (dy, dx) in seen:
+            raise ValueError(f"duplicate tap ({dy},{dx})")
+        seen.add((dy, dx))
+
+
+def _out_dim(size: int, k: int, stride: int) -> int:
+    # SAME padding: ceil(size / stride)
+    return -(-size // stride)
+
+
+def _pattern_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, taps, h_out, w_out,
+                         stride):
+    """One batch element: accumulate K shifted-window contractions.
+
+    x_ref : [1, H_pad, W_pad, Cin]  (VMEM tile, loaded once, reused K times)
+    w_ref : [K, Cin, Cout]          (compact pattern weights)
+    b_ref : [Cout]
+    o_ref : [1, h_out, w_out, Cout]
+    """
+    x = x_ref[0]
+    cin = x.shape[-1]
+    cout = w_ref.shape[-1]
+    acc = jnp.zeros((h_out * w_out, cout), dtype=jnp.float32)
+    # Static unroll over taps: each iteration is a dense MXU-shaped matmul.
+    for k, (dy, dx) in enumerate(taps):
+        win = jax.lax.slice(
+            x,
+            (dy, dx, 0),
+            (dy + (h_out - 1) * stride + 1, dx + (w_out - 1) * stride + 1, cin),
+            (stride, stride, 1),
+        )
+        acc = acc + jnp.dot(
+            win.reshape(h_out * w_out, cin),
+            w_ref[k],
+            preferred_element_type=jnp.float32,
+        )
+    acc = acc + b_ref[...][None, :]
+    o_ref[0] = acc.reshape(h_out, w_out, cout)
+
+
+def pattern_conv2d(
+    x: jax.Array,
+    w_compact: jax.Array,
+    bias: jax.Array,
+    taps: Sequence[Tuple[int, int]],
+    *,
+    stride: int = 1,
+    kh: int = 3,
+    kw: int = 3,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pattern-sparse conv2d (NHWC), SAME padding.
+
+    Args:
+      x:         [N, H, W, Cin] input.
+      w_compact: [K, Cin, Cout] compact weights -- only the K surviving taps
+                 of the (kh x kw) kernel are stored (paper's FKW layout).
+      bias:      [Cout].
+      taps:      K static (dy, dx) offsets; the pattern shared by this
+                 filter group (post filter-kernel-reorder).
+      stride:    spatial stride (1 or 2).
+
+    Returns [N, H_out, W_out, Cout].
+    """
+    taps = tuple((int(a), int(b)) for a, b in taps)
+    _check_taps(taps, kh, kw)
+    n, h, w, cin = x.shape
+    k, wcin, cout = w_compact.shape
+    if k != len(taps):
+        raise ValueError(f"w_compact has {k} taps, pattern has {len(taps)}")
+    if wcin != cin:
+        raise ValueError(f"Cin mismatch: x has {cin}, w has {wcin}")
+    h_out = _out_dim(h, kh, stride)
+    w_out = _out_dim(w, kw, stride)
+    # SAME padding totals.
+    pad_h = max((h_out - 1) * stride + kh - h, 0)
+    pad_w = max((w_out - 1) * stride + kw - w, 0)
+    x_pad = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+         (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    h_pad, w_pad = x_pad.shape[1], x_pad.shape[2]
+
+    kernel = functools.partial(
+        _pattern_conv_kernel, taps=taps, h_out=h_out, w_out=w_out,
+        stride=stride)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_pad, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, cin, cout), lambda i: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, cout),
+                               lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), jnp.float32),
+        interpret=interpret,
+    )(x_pad, w_compact, bias)
+
+
+def dense_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Dense conv2d (NHWC / HWIO weights), SAME padding.
+
+    Implemented as the K = kh*kw special case of the pattern kernel: the
+    "pattern" is the full kernel.  Serves as the dense baseline that the
+    pattern kernels are benchmarked against.
+    """
+    kh, kw, cin, cout = w.shape
+    taps = tuple((dy, dx) for dy in range(kh) for dx in range(kw))
+    w_compact = w.reshape(kh * kw, cin, cout)
+    return pattern_conv2d(
+        x, w_compact, bias, taps, stride=stride, kh=kh, kw=kw,
+        interpret=interpret)
+
+
+def _depthwise_kernel(x_ref, w_ref, b_ref, o_ref, *, taps, h_out, w_out,
+                      stride):
+    """Depthwise conv: per-tap elementwise multiply-accumulate (VPU work).
+
+    x_ref : [1, H_pad, W_pad, C]
+    w_ref : [K, C]
+    b_ref : [C]
+    o_ref : [1, h_out, w_out, C]
+    """
+    x = x_ref[0]
+    c = x.shape[-1]
+    acc = jnp.zeros((h_out, w_out, c), dtype=jnp.float32)
+    for k, (dy, dx) in enumerate(taps):
+        win = jax.lax.slice(
+            x,
+            (dy, dx, 0),
+            (dy + (h_out - 1) * stride + 1, dx + (w_out - 1) * stride + 1, c),
+            (stride, stride, 1),
+        )
+        acc = acc + win * w_ref[k][None, None, :]
+    o_ref[0] = acc + b_ref[...][None, None, :]
+
+
+def depthwise_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    stride: int = 1,
+    interpret: bool = True,
+) -> jax.Array:
+    """Depthwise conv2d (NHWC), SAME padding; weights [kh, kw, C]."""
+    kh, kw, c = w.shape
+    n, h, wd, cx = x.shape
+    if cx != c:
+        raise ValueError(f"channel mismatch: x has {cx}, w has {c}")
+    taps = tuple((dy, dx) for dy in range(kh) for dx in range(kw))
+    h_out = _out_dim(h, kh, stride)
+    w_out = _out_dim(wd, kw, stride)
+    pad_h = max((h_out - 1) * stride + kh - h, 0)
+    pad_w = max((w_out - 1) * stride + kw - wd, 0)
+    x_pad = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+         (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    h_pad, w_pad = x_pad.shape[1], x_pad.shape[2]
+    w_flat = w.reshape(kh * kw, c)
+
+    kernel = functools.partial(
+        _depthwise_kernel, taps=taps, h_out=h_out, w_out=w_out, stride=stride)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h_pad, w_pad, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh * kw, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), jnp.float32),
+        interpret=interpret,
+    )(x_pad, w_flat, bias)
+
+
+def vmem_footprint_bytes(h: int, w: int, cin: int, cout: int, k: int,
+                         stride: int = 1, kh: int = 3, kw: int = 3,
+                         dtype_bytes: int = 4) -> dict:
+    """Analytic VMEM footprint of one pattern_conv2d grid step.
+
+    Used by the §Perf analysis (interpret=True gives no TPU timings, so the
+    roofline discussion is structural): input tile + compact weights +
+    output tile, all resident in VMEM simultaneously.
+    """
+    h_out = _out_dim(h, kh, stride)
+    w_out = _out_dim(w, kw, stride)
+    h_pad = (h_out - 1) * stride + kh
+    w_pad = (w_out - 1) * stride + kw
+    x_tile = h_pad * w_pad * cin * dtype_bytes
+    w_tile = k * cin * cout * dtype_bytes
+    o_tile = h_out * w_out * cout * dtype_bytes
+    flops = 2 * h_out * w_out * cin * cout * k
+    return {
+        "x_tile_bytes": x_tile,
+        "w_tile_bytes": w_tile,
+        "o_tile_bytes": o_tile,
+        "total_bytes": x_tile + w_tile + o_tile,
+        "flops_per_step": flops,
+        # MXU feed: each tap is an [h_out*w_out, cin] x [cin, cout] matmul.
+        "mxu_m": h_out * w_out,
+        "mxu_k": cin,
+        "mxu_n": cout,
+        "taps": k,
+    }

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: the pytest/hypothesis suite asserts
+``assert_allclose(pallas_kernel(...), ref(...))`` across shape/dtype sweeps.
+They are deliberately written with `jax.lax.conv_general_dilated` /
+`jnp.matmul` -- a completely independent code path from the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+               *, stride: int = 1) -> jax.Array:
+    """Dense conv2d, NHWC x HWIO -> NHWC, SAME padding."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + bias[None, None, None, :]
+
+
+def expand_pattern(w_compact: jax.Array,
+                   taps: Sequence[Tuple[int, int]],
+                   kh: int = 3, kw: int = 3) -> jax.Array:
+    """[K, Cin, Cout] compact pattern weights -> dense [kh, kw, Cin, Cout]."""
+    k, cin, cout = w_compact.shape
+    dense = jnp.zeros((kh, kw, cin, cout), dtype=w_compact.dtype)
+    for i, (dy, dx) in enumerate(taps):
+        dense = dense.at[dy, dx].set(w_compact[i])
+    return dense
+
+
+def pattern_conv2d_ref(x: jax.Array, w_compact: jax.Array, bias: jax.Array,
+                       taps: Sequence[Tuple[int, int]],
+                       *, stride: int = 1, kh: int = 3,
+                       kw: int = 3) -> jax.Array:
+    """Oracle for pattern_conv2d: expand to dense then lax-conv."""
+    dense = expand_pattern(w_compact, taps, kh, kw)
+    return conv2d_ref(x, dense, bias, stride=stride)
+
+
+def depthwise_conv2d_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                         *, stride: int = 1) -> jax.Array:
+    """Depthwise conv oracle; weights [kh, kw, C]."""
+    kh, kw, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w.reshape(kh, kw, 1, c),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out + bias[None, None, None, :]
+
+
+def gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w) + b[None, :]

@@ -1,0 +1,561 @@
+"""L2: the CNN model zoo -- JAX forward/backward graphs for the CoCoPIE
+reproduction, built from the L1 kernels.
+
+Every model is a list of *convolution modules* (the paper's §2.2.3 unit:
+"several layers encapsulated into a generic module of a fixed structure"),
+which is exactly the granularity CoCo-Tune prunes and pre-trains at.
+
+Pruning is *mask-parameterised*: every conv weight has a same-shaped binary
+mask input, and the forward pass uses ``w * mask``.  One compiled HLO
+executable therefore serves every configuration in the promising subspace
+(2^|W| of them) -- the property that lets the Rust exploration engine train
+hundreds of pruned networks without recompilation.
+
+Exported graph families (see aot.py):
+  * ``infer``            -- logits(params, masks, x), lax-conv backend
+  * ``infer_pallas``     -- same, but conv/fc run through the L1 Pallas
+                            kernels (proves L1 lowers into the L2 graph)
+  * ``train_step``       -- SGD-momentum step on masked cross-entropy
+  * ``admm_train_step``  -- train_step + rho*(W - Z + U) ADMM pull term
+  * ``block_pretrain``   -- Teacher-Student pre-training of ALL prunable
+                            modules concurrently (paper Fig. 10(b))
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import gemm as kgemm
+from .kernels import pattern_conv as kconv
+from .kernels import ref as kref
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+MU = 0.9  # SGD momentum
+
+
+# --------------------------------------------------------------------------
+# Layer primitives (backend-switchable: 'lax' for training graphs,
+# 'pallas' for the kernel-composition inference graphs).
+# --------------------------------------------------------------------------
+
+def _conv(x, w, b, stride, backend):
+    if backend == "pallas":
+        return kconv.dense_conv2d(x, w, b, stride=stride)
+    return kref.conv2d_ref(x, w, b, stride=stride)
+
+
+def _dwconv(x, w, b, stride, backend):
+    if backend == "pallas":
+        return kconv.depthwise_conv2d(x, w, b, stride=stride)
+    return kref.depthwise_conv2d_ref(x, w, b, stride=stride)
+
+
+def _linear(x, w, b, backend):
+    if backend == "pallas":
+        return kgemm.linear(x, w, b)
+    return kref.linear_ref(x, w, b)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+
+
+def _gap(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _relu(x):
+    return jax.nn.relu(x)
+
+
+# --------------------------------------------------------------------------
+# Module definitions.  A module is a dict:
+#   {"name", "kind", "prunable", ...kind-specific fields...}
+# Kinds: stem, res, vgg, incept, ds, head.
+# --------------------------------------------------------------------------
+
+def _he(rng: np.random.Generator, shape, fan_in) -> np.ndarray:
+    return (rng.standard_normal(shape) * math.sqrt(2.0 / fan_in)).astype(
+        np.float32)
+
+
+def _init_conv(rng, name, kh, kw, cin, cout, params, convs):
+    params[f"{name}.w"] = _he(rng, (kh, kw, cin, cout), kh * kw * cin)
+    params[f"{name}.b"] = np.zeros((cout,), dtype=np.float32)
+    convs.append((f"{name}.w", (kh, kw, cin, cout)))
+
+
+def _init_dwconv(rng, name, kh, kw, c, params, convs):
+    params[f"{name}.w"] = _he(rng, (kh, kw, c), kh * kw)
+    params[f"{name}.b"] = np.zeros((c,), dtype=np.float32)
+    convs.append((f"{name}.w", (kh, kw, c)))
+
+
+class ModelDef:
+    """A model: ordered modules, canonical parameter order, forward fns."""
+
+    def __init__(self, name: str, input_shape: Tuple[int, int, int],
+                 classes: int, modules: List[dict]):
+        self.name = name
+        self.input_shape = input_shape  # (H, W, C)
+        self.classes = classes
+        self.modules = modules
+        # Deterministic per-model seed (not hash(): PYTHONHASHSEED varies).
+        seed = sum(ord(ch) * (i + 1) for i, ch in enumerate(name)) % (2**31)
+        rng = np.random.default_rng(seed)
+        params: Dict[str, np.ndarray] = {}
+        convs: List[Tuple[str, tuple]] = []
+        c = input_shape[2]
+        h = input_shape[0]
+        for m in modules:
+            c, h = self._init_module(rng, m, c, h, params, convs)
+        self.param_names = list(params.keys())
+        self.init_params_np = params
+        # Masked (prunable) conv weights: convs inside prunable modules.
+        self.mask_names = [
+            w for (w, _) in convs
+            if any(m["prunable"] and w.startswith(m["name"] + ".")
+                   for m in modules)
+        ]
+        self.conv_shapes = dict(convs)
+        self.prunable_modules = [m["name"] for m in modules if m["prunable"]]
+
+    # -- init ---------------------------------------------------------------
+    def _init_module(self, rng, m, cin, h, params, convs):
+        k = m["kind"]
+        n = m["name"]
+        if k == "stem":
+            _init_conv(rng, f"{n}.conv", 3, 3, cin, m["cout"], params, convs)
+            return m["cout"], h
+        if k == "res":
+            s = m["stride"]
+            _init_conv(rng, f"{n}.conv1", 3, 3, cin, m["cout"], params, convs)
+            _init_conv(rng, f"{n}.conv2", 3, 3, m["cout"], m["cout"],
+                       params, convs)
+            if s != 1 or cin != m["cout"]:
+                _init_conv(rng, f"{n}.proj", 1, 1, cin, m["cout"],
+                           params, convs)
+            return m["cout"], -(-h // s)
+        if k == "vgg":
+            c = cin
+            for i in range(m["n_convs"]):
+                _init_conv(rng, f"{n}.conv{i+1}", 3, 3, c, m["cout"],
+                           params, convs)
+                c = m["cout"]
+            return m["cout"], h // 2  # trailing maxpool
+        if k == "incept":
+            b1, b3, bp = m["b1"], m["b3"], m["bp"]
+            _init_conv(rng, f"{n}.b1", 1, 1, cin, b1, params, convs)
+            _init_conv(rng, f"{n}.b3r", 1, 1, cin, b3 // 2, params, convs)
+            _init_conv(rng, f"{n}.b3", 3, 3, b3 // 2, b3, params, convs)
+            _init_conv(rng, f"{n}.bp", 1, 1, cin, bp, params, convs)
+            hh = h // 2 if m.get("pool") else h
+            return b1 + b3 + bp, hh
+        if k == "ds":
+            s = m["stride"]
+            _init_dwconv(rng, f"{n}.dw", 3, 3, cin, params, convs)
+            _init_conv(rng, f"{n}.pw", 1, 1, cin, m["cout"], params, convs)
+            return m["cout"], -(-h // s)
+        if k == "head":
+            hidden = m.get("hidden", 0)
+            c = cin
+            if hidden:
+                params[f"{n}.fc1.w"] = _he(rng, (cin, hidden), cin)
+                params[f"{n}.fc1.b"] = np.zeros((hidden,), dtype=np.float32)
+                c = hidden
+            params[f"{n}.fc.w"] = _he(rng, (c, self.classes), c)
+            params[f"{n}.fc.b"] = np.zeros((self.classes,), dtype=np.float32)
+            return self.classes, 1
+        raise ValueError(f"unknown module kind {k}")
+
+    # -- forward ------------------------------------------------------------
+    def _mw(self, params, masks, name):
+        """Masked weight lookup."""
+        w = params[f"{name}.w"]
+        if f"{name}.w" in masks:
+            w = w * masks[f"{name}.w"]
+        return w, params[f"{name}.b"]
+
+    def apply_module(self, m: dict, params: Params, masks: Params,
+                     x: Array, backend: str) -> Array:
+        k, n = m["kind"], m["name"]
+        if k == "stem":
+            w, b = self._mw(params, masks, f"{n}.conv")
+            return _relu(_conv(x, w, b, 1, backend))
+        if k == "res":
+            s = m["stride"]
+            w1, b1 = self._mw(params, masks, f"{n}.conv1")
+            w2, b2 = self._mw(params, masks, f"{n}.conv2")
+            y = _relu(_conv(x, w1, b1, s, backend))
+            y = _conv(y, w2, b2, 1, backend)
+            if f"{n}.proj.w" in params:
+                wp, bp = self._mw(params, masks, f"{n}.proj")
+                x = _conv(x, wp, bp, s, backend)
+            return _relu(y + x)
+        if k == "vgg":
+            for i in range(m["n_convs"]):
+                w, b = self._mw(params, masks, f"{n}.conv{i+1}")
+                x = _relu(_conv(x, w, b, 1, backend))
+            return _maxpool2(x)
+        if k == "incept":
+            w1, b1 = self._mw(params, masks, f"{n}.b1")
+            w3r, b3r = self._mw(params, masks, f"{n}.b3r")
+            w3, b3 = self._mw(params, masks, f"{n}.b3")
+            wp, bp = self._mw(params, masks, f"{n}.bp")
+            y1 = _relu(_conv(x, w1, b1, 1, backend))
+            y3 = _relu(_conv(_relu(_conv(x, w3r, b3r, 1, backend)),
+                             w3, b3, 1, backend))
+            yp = _relu(_conv(x, wp, bp, 1, backend))
+            y = jnp.concatenate([y1, y3, yp], axis=-1)
+            if m.get("pool"):
+                y = _maxpool2(y)
+            return y
+        if k == "ds":
+            s = m["stride"]
+            wd, bd = self._mw(params, masks, f"{n}.dw")
+            wp, bp = self._mw(params, masks, f"{n}.pw")
+            y = _relu(_dwconv(x, wd, bd, s, backend))
+            return _relu(_conv(y, wp, bp, 1, backend))
+        if k == "head":
+            x = _gap(x)
+            if f"{n}.fc1.w" in params:
+                x = _relu(_linear(x, params[f"{n}.fc1.w"],
+                                  params[f"{n}.fc1.b"], backend))
+            return _linear(x, params[f"{n}.fc.w"], params[f"{n}.fc.b"],
+                           backend)
+        raise ValueError(f"unknown module kind {k}")
+
+    def forward(self, params: Params, masks: Params, x: Array,
+                backend: str = "lax") -> Array:
+        for m in self.modules:
+            x = self.apply_module(m, params, masks, x, backend)
+        return x
+
+    def forward_acts(self, params: Params, masks: Params, x: Array,
+                     backend: str = "lax") -> Tuple[Array, List[Array]]:
+        """Forward returning activations at every module boundary.
+
+        acts[i] is the INPUT of module i; acts[len(modules)] is the logits.
+        """
+        acts = [x]
+        for m in self.modules:
+            x = self.apply_module(m, params, masks, x, backend)
+            acts.append(x)
+        return x, acts
+
+    # -- losses / steps -------------------------------------------------
+    def loss_acc(self, params: Params, masks: Params, x: Array, y: Array,
+                 backend: str = "lax") -> Tuple[Array, Array]:
+        logits = self.forward(params, masks, x, backend)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return loss, acc
+
+    def train_step(self, params: Params, vels: Params, masks: Params,
+                   x: Array, y: Array, lr: Array
+                   ) -> Tuple[Params, Params, Array, Array]:
+        def lf(p):
+            return self.loss_acc(p, masks, x, y)
+        (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_p, new_v = {}, {}
+        for k in params:
+            v = MU * vels[k] - lr * grads[k]
+            new_v[k] = v
+            new_p[k] = params[k] + v
+        return new_p, new_v, loss, acc
+
+    def admm_train_step(self, params: Params, vels: Params, masks: Params,
+                        zs: Params, us: Params, x: Array, y: Array,
+                        lr: Array, rho: Array
+                        ) -> Tuple[Params, Params, Array, Array]:
+        """SGD step with the ADMM proximal pull rho*(W - Z + U) on every
+        prunable conv weight (paper §2.1.3 pattern-based training stage).
+        Z/U updates (the projection onto the pattern set) run on the Rust
+        side between step batches."""
+        def lf(p):
+            return self.loss_acc(p, masks, x, y)
+        (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_p, new_v = {}, {}
+        for k in params:
+            g = grads[k]
+            if k in zs:
+                g = g + rho * (params[k] - zs[k] + us[k])
+            v = MU * vels[k] - lr * g
+            new_v[k] = v
+            new_p[k] = params[k] + v
+        return new_p, new_v, loss, acc
+
+    def block_pretrain_step(self, tparams: Params, sparams: Params,
+                            svels: Params, masks: Params, x: Array,
+                            lr: Array) -> Tuple[Params, Params, Dict]:
+        """Teacher-Student concurrent pre-training of all prunable modules
+        (paper Fig. 10(b)): the full (teacher) model runs forward once; each
+        pruned module trains against the teacher's activation maps.
+
+        sparams holds pruned copies of prunable-module params; masks carry
+        the pruning configuration.  Returns (sparams', svels',
+        per-module-loss dict)."""
+        _, acts = self.forward_acts(tparams, {}, x)
+        boundary_in = {}
+        boundary_out = {}
+        for i, m in enumerate(self.modules):
+            if m["prunable"]:
+                boundary_in[m["name"]] = acts[i]
+                boundary_out[m["name"]] = acts[i + 1]
+
+        def lf(sp):
+            losses = {}
+            for m in self.modules:
+                if not m["prunable"]:
+                    continue
+                n = m["name"]
+                sub = {k: sp[k] for k in sp if k.startswith(n + ".")}
+                out = self.apply_module(m, sub, masks, boundary_in[n], "lax")
+                losses[n] = jnp.mean((out - boundary_out[n]) ** 2)
+            total = sum(losses.values())
+            return total, losses
+
+        (_, losses), grads = jax.value_and_grad(lf, has_aux=True)(sparams)
+        new_p, new_v = {}, {}
+        for k in sparams:
+            v = MU * svels[k] - lr * grads[k]
+            new_v[k] = v
+            new_p[k] = sparams[k] + v
+        return new_p, new_v, losses
+
+    # -- bookkeeping ------------------------------------------------------
+    def student_param_names(self) -> List[str]:
+        return [k for k in self.param_names
+                if any(k.startswith(n + ".") for n in self.prunable_modules)]
+
+    def flops(self) -> int:
+        """Dense-model FLOP count (2 * MACs)."""
+        h, w, c = self.input_shape
+        w_ = self.input_shape[1]
+        total = 0
+        h_cur, w_cur, c_cur = h, w_, c
+        for m in self.modules:
+            f, h_cur, w_cur, c_cur = self._module_flops(m, h_cur, w_cur,
+                                                        c_cur)
+            total += f
+        return total
+
+    def _module_flops(self, m, h, w, c):
+        k = m["kind"]
+        f = 0
+        if k == "stem":
+            f = 2 * h * w * 9 * c * m["cout"]
+            return f, h, w, m["cout"]
+        if k == "res":
+            s = m["stride"]
+            ho, wo = -(-h // s), -(-w // s)
+            f = 2 * ho * wo * 9 * c * m["cout"]
+            f += 2 * ho * wo * 9 * m["cout"] * m["cout"]
+            if s != 1 or c != m["cout"]:
+                f += 2 * ho * wo * c * m["cout"]
+            return f, ho, wo, m["cout"]
+        if k == "vgg":
+            ci = c
+            for _ in range(m["n_convs"]):
+                f += 2 * h * w * 9 * ci * m["cout"]
+                ci = m["cout"]
+            return f, h // 2, w // 2, m["cout"]
+        if k == "incept":
+            b1, b3, bp = m["b1"], m["b3"], m["bp"]
+            f = 2 * h * w * c * b1
+            f += 2 * h * w * c * (b3 // 2) + 2 * h * w * 9 * (b3 // 2) * b3
+            f += 2 * h * w * c * bp
+            co = b1 + b3 + bp
+            if m.get("pool"):
+                h, w = h // 2, w // 2
+            return f, h, w, co
+        if k == "ds":
+            s = m["stride"]
+            ho, wo = -(-h // s), -(-w // s)
+            f = 2 * ho * wo * 9 * c + 2 * ho * wo * c * m["cout"]
+            return f, ho, wo, m["cout"]
+        if k == "head":
+            hidden = m.get("hidden", 0)
+            f = 0
+            ci = c
+            if hidden:
+                f += 2 * ci * hidden
+                ci = hidden
+            f += 2 * ci * self.classes
+            return f, 1, 1, self.classes
+        raise ValueError(k)
+
+    def spec_json(self) -> dict:
+        return {
+            "name": self.name,
+            "input_shape": list(self.input_shape),
+            "classes": self.classes,
+            "modules": self.modules,
+            "params": [{"name": k,
+                        "shape": list(self.init_params_np[k].shape)}
+                       for k in self.param_names],
+            "masks": [{"name": k,
+                       "shape": list(self.init_params_np[k].shape)}
+                      for k in self.mask_names],
+            "student_params": self.student_param_names(),
+            "prunable_modules": self.prunable_modules,
+            "flops": self.flops(),
+            "param_count": int(sum(v.size for v in
+                                   self.init_params_np.values())),
+        }
+
+
+# --------------------------------------------------------------------------
+# The zoo (mini variants for accuracy experiments; full-shape timing
+# variants live on the Rust side in ir::zoo).
+# --------------------------------------------------------------------------
+
+def resnet_mini(classes: int = 16) -> ModelDef:
+    mods = [
+        {"name": "stem", "kind": "stem", "cout": 16, "prunable": False},
+        {"name": "m1", "kind": "res", "cout": 16, "stride": 1,
+         "prunable": True},
+        {"name": "m2", "kind": "res", "cout": 16, "stride": 1,
+         "prunable": True},
+        {"name": "m3", "kind": "res", "cout": 32, "stride": 2,
+         "prunable": True},
+        {"name": "m4", "kind": "res", "cout": 32, "stride": 1,
+         "prunable": True},
+        {"name": "m5", "kind": "res", "cout": 64, "stride": 2,
+         "prunable": True},
+        {"name": "m6", "kind": "res", "cout": 64, "stride": 1,
+         "prunable": True},
+        {"name": "head", "kind": "head", "prunable": False},
+    ]
+    return ModelDef("resnet_mini", (16, 16, 3), classes, mods)
+
+
+def incept_mini(classes: int = 16) -> ModelDef:
+    mods = [
+        {"name": "stem", "kind": "stem", "cout": 16, "prunable": False},
+        {"name": "m1", "kind": "incept", "b1": 8, "b3": 16, "bp": 8,
+         "pool": False, "prunable": True},
+        {"name": "m2", "kind": "incept", "b1": 12, "b3": 24, "bp": 12,
+         "pool": True, "prunable": True},
+        {"name": "m3", "kind": "incept", "b1": 16, "b3": 32, "bp": 16,
+         "pool": False, "prunable": True},
+        {"name": "m4", "kind": "incept", "b1": 24, "b3": 48, "bp": 24,
+         "pool": True, "prunable": True},
+        {"name": "head", "kind": "head", "prunable": False},
+    ]
+    return ModelDef("incept_mini", (16, 16, 3), classes, mods)
+
+
+def vgg_mini(classes: int = 16) -> ModelDef:
+    mods = [
+        {"name": "m1", "kind": "vgg", "cout": 16, "n_convs": 2,
+         "prunable": True},
+        {"name": "m2", "kind": "vgg", "cout": 32, "n_convs": 2,
+         "prunable": True},
+        {"name": "m3", "kind": "vgg", "cout": 64, "n_convs": 2,
+         "prunable": True},
+        {"name": "head", "kind": "head", "hidden": 64, "prunable": False},
+    ]
+    return ModelDef("vgg_mini", (16, 16, 3), classes, mods)
+
+
+def mbnt_mini(classes: int = 16) -> ModelDef:
+    mods = [
+        {"name": "stem", "kind": "stem", "cout": 16, "prunable": False},
+        {"name": "m1", "kind": "ds", "cout": 32, "stride": 1,
+         "prunable": True},
+        {"name": "m2", "kind": "ds", "cout": 64, "stride": 2,
+         "prunable": True},
+        {"name": "m3", "kind": "ds", "cout": 96, "stride": 1,
+         "prunable": True},
+        {"name": "m4", "kind": "ds", "cout": 128, "stride": 2,
+         "prunable": True},
+        {"name": "head", "kind": "head", "prunable": False},
+    ]
+    return ModelDef("mbnt_mini", (16, 16, 3), classes, mods)
+
+
+MODELS: Dict[str, Callable[[], ModelDef]] = {
+    "resnet_mini": resnet_mini,
+    "incept_mini": incept_mini,
+    "vgg_mini": vgg_mini,
+    "mbnt_mini": mbnt_mini,
+}
+
+
+# --------------------------------------------------------------------------
+# Flat-tuple wrappers for AOT lowering (HLO parameter order == manifest
+# order == Rust feed order).
+# --------------------------------------------------------------------------
+
+def _to_dict(names: Sequence[str], flat: Sequence[Array]) -> Params:
+    return dict(zip(names, flat))
+
+
+def make_infer_fn(model: ModelDef, backend: str = "lax"):
+    pn, mn = model.param_names, model.mask_names
+
+    def infer(params_flat, masks_flat, x):
+        p = _to_dict(pn, params_flat)
+        m = _to_dict(mn, masks_flat)
+        return (model.forward(p, m, x, backend),)
+
+    return infer
+
+
+def make_train_fn(model: ModelDef):
+    pn, mn = model.param_names, model.mask_names
+
+    def train(params_flat, vels_flat, masks_flat, x, y, lr):
+        p = _to_dict(pn, params_flat)
+        v = _to_dict(pn, vels_flat)
+        m = _to_dict(mn, masks_flat)
+        np_, nv, loss, acc = model.train_step(p, v, m, x, y, lr)
+        return (tuple(np_[k] for k in pn) + tuple(nv[k] for k in pn)
+                + (loss, acc))
+
+    return train
+
+
+def make_admm_train_fn(model: ModelDef):
+    pn, mn = model.param_names, model.mask_names
+
+    def train(params_flat, vels_flat, masks_flat, z_flat, u_flat, x, y,
+              lr, rho):
+        p = _to_dict(pn, params_flat)
+        v = _to_dict(pn, vels_flat)
+        m = _to_dict(mn, masks_flat)
+        z = _to_dict(mn, z_flat)
+        u = _to_dict(mn, u_flat)
+        np_, nv, loss, acc = model.admm_train_step(
+            p, v, m, z, u, x, y, lr, rho)
+        return (tuple(np_[k] for k in pn) + tuple(nv[k] for k in pn)
+                + (loss, acc))
+
+    return train
+
+
+def make_block_pretrain_fn(model: ModelDef):
+    pn, mn = model.param_names, model.mask_names
+    sn = model.student_param_names()
+
+    def pretrain(tparams_flat, sparams_flat, svels_flat, masks_flat, x, lr):
+        tp = _to_dict(pn, tparams_flat)
+        sp = _to_dict(sn, sparams_flat)
+        sv = _to_dict(sn, svels_flat)
+        m = _to_dict(mn, masks_flat)
+        nsp, nsv, losses = model.block_pretrain_step(tp, sp, sv, m, x, lr)
+        loss_vec = jnp.stack([losses[n] for n in model.prunable_modules])
+        return (tuple(nsp[k] for k in sn) + tuple(nsv[k] for k in sn)
+                + (loss_vec,))
+
+    return pretrain

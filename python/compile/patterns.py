@@ -1,0 +1,120 @@
+"""Pattern library + projections shared by the L2 training graphs.
+
+Paper §2.1.2: kernel pattern pruning keeps a fixed number of weights per
+3x3 kernel, drawn from a small pre-defined pattern set.  The curated
+8-pattern set below follows PatDNN [46]/[41]: every pattern contains the
+centre tap plus three of its 4-neighbourhood/corner taps, matching the
+"connection structure in human visual systems" argument (Gaussian-like
+interpolation masks around the centre).
+
+The same set is mirrored on the Rust side (`rust/src/patterns/library.rs`);
+`python/tests/test_patterns.py` and the Rust unit tests pin the exact tap
+lists so the two stay in sync.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+Tap = Tuple[int, int]
+
+# Curated 4-entry pattern set over 3x3 kernels (dy, dx), centre always kept.
+# Index layout of a 3x3 kernel:
+#   (0,0) (0,1) (0,2)
+#   (1,0) (1,1) (1,2)
+#   (2,0) (2,1) (2,2)
+PATTERN_SET_4: Tuple[Tuple[Tap, ...], ...] = (
+    ((0, 0), (0, 1), (1, 1), (1, 0)),  # top-left block
+    ((0, 1), (0, 2), (1, 1), (1, 2)),  # top-right block
+    ((1, 0), (1, 1), (2, 0), (2, 1)),  # bottom-left block
+    ((1, 1), (1, 2), (2, 1), (2, 2)),  # bottom-right block
+    ((0, 1), (1, 0), (1, 1), (1, 2)),  # T up
+    ((1, 0), (1, 1), (1, 2), (2, 1)),  # T down
+    ((0, 1), (1, 0), (1, 1), (2, 1)),  # T left
+    ((0, 1), (1, 1), (1, 2), (2, 1)),  # cross (+) minus one
+)
+
+
+def pattern_masks(kh: int = 3, kw: int = 3,
+                  patterns: Sequence[Tuple[Tap, ...]] = PATTERN_SET_4
+                  ) -> np.ndarray:
+    """[P, kh, kw] binary masks for the pattern set."""
+    out = np.zeros((len(patterns), kh, kw), dtype=np.float32)
+    for p, taps in enumerate(patterns):
+        for dy, dx in taps:
+            out[p, dy, dx] = 1.0
+    return out
+
+
+def project_kernel_patterns(w: np.ndarray,
+                            patterns: Sequence[Tuple[Tap, ...]] =
+                            PATTERN_SET_4) -> Tuple[np.ndarray, np.ndarray]:
+    """Project each (cin, cout) kernel of w [kh,kw,cin,cout] onto the best
+    pattern (max preserved L2 energy) -- the Euclidean projection used by the
+    ADMM Z-update.
+
+    Returns (mask [kh,kw,cin,cout], pattern_ids [cin,cout]).
+    """
+    kh, kw, cin, cout = w.shape
+    pm = pattern_masks(kh, kw, patterns)          # [P, kh, kw]
+    energy = np.einsum("pyx,yxio->pio", pm, w.astype(np.float64) ** 2)
+    ids = np.argmax(energy, axis=0)               # [cin, cout]
+    # pm[ids] has shape [cin, cout, kh, kw]; we want [kh, kw, cin, cout].
+    mask = np.transpose(pm[ids], (2, 3, 0, 1))
+    return mask.astype(np.float32), ids.astype(np.int32)
+
+
+def connectivity_mask(w: np.ndarray, keep_frac: float) -> np.ndarray:
+    """Connectivity pruning (paper Fig. 3): remove whole (cin,cout) kernels
+    with the smallest L2 norms, keeping ceil(keep_frac * cin * cout).
+
+    Returns a [kh,kw,cin,cout] mask broadcast from the kernel-level decision.
+    """
+    kh, kw, cin, cout = w.shape
+    norms = np.sqrt((w.astype(np.float64) ** 2).sum(axis=(0, 1)))  # [cin,cout]
+    n_total = cin * cout
+    n_keep = max(1, int(np.ceil(keep_frac * n_total)))
+    flat = norms.reshape(-1)
+    thresh_idx = np.argsort(flat)[::-1][:n_keep]
+    keep = np.zeros(n_total, dtype=np.float32)
+    keep[thresh_idx] = 1.0
+    keep = keep.reshape(cin, cout)
+    return np.broadcast_to(keep[None, None], (kh, kw, cin, cout)).copy()
+
+
+def pattern_prune_mask(w: np.ndarray, connectivity_keep: float = 1.0
+                       ) -> np.ndarray:
+    """Combined kernel-pattern + connectivity mask for a conv weight."""
+    pmask, _ = project_kernel_patterns(w)
+    if connectivity_keep < 1.0:
+        pmask = pmask * connectivity_mask(w, connectivity_keep)
+    return pmask
+
+
+def filter_prune_mask(w: np.ndarray, keep_frac: float) -> np.ndarray:
+    """Structured filter pruning baseline: drop whole output filters by
+    L1 norm (Li et al. [36]); mask shape [kh,kw,cin,cout]."""
+    kh, kw, cin, cout = w.shape
+    norms = np.abs(w.astype(np.float64)).sum(axis=(0, 1, 2))  # [cout]
+    n_keep = max(1, int(np.ceil(keep_frac * cout)))
+    keep_ids = np.argsort(norms)[::-1][:n_keep]
+    keep = np.zeros(cout, dtype=np.float32)
+    keep[keep_ids] = 1.0
+    return np.broadcast_to(keep[None, None, None], w.shape).copy()
+
+
+def unstructured_prune_mask(w: np.ndarray, keep_frac: float) -> np.ndarray:
+    """Non-structured magnitude pruning baseline (Han et al. [19])."""
+    flat = np.abs(w.reshape(-1))
+    n_keep = max(1, int(np.ceil(keep_frac * flat.size)))
+    thresh = np.sort(flat)[::-1][n_keep - 1]
+    return (np.abs(w) >= thresh).astype(np.float32)
+
+
+def taps_of(pattern_id: int,
+            patterns: Sequence[Tuple[Tap, ...]] = PATTERN_SET_4
+            ) -> Tuple[Tap, ...]:
+    return patterns[pattern_id]

@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, strides, patterns and seeds; every property
+asserts allclose against the independent `ref` implementation.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import patterns as P
+from compile.kernels import gemm as kg
+from compile.kernels import pattern_conv as kc
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    pid=st.integers(0, len(P.PATTERN_SET_4) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pattern_conv_matches_ref(n, h, w, cin, cout, stride, pid, seed):
+    rng = np.random.default_rng(seed)
+    taps = P.PATTERN_SET_4[pid]
+    x = _rand(rng, n, h, w, cin)
+    wc = _rand(rng, len(taps), cin, cout)
+    b = _rand(rng, cout)
+    got = kc.pattern_conv2d(x, wc, b, taps, stride=stride)
+    want = ref.pattern_conv2d_ref(x, wc, b, taps, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_conv_matches_ref(n, h, w, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, h, w, cin)
+    wt = _rand(rng, 3, 3, cin, cout)
+    b = _rand(rng, cout)
+    got = kc.dense_conv2d(x, wt, b, stride=stride)
+    want = ref.conv2d_ref(x, wt, b, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 2),
+    h=st.integers(4, 10),
+    w=st.integers(4, 10),
+    c=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_conv_matches_ref(n, h, w, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, h, w, c)
+    wt = _rand(rng, 3, 3, c)
+    b = _rand(rng, c)
+    got = kc.depthwise_conv2d(x, wt, b, stride=stride)
+    want = ref.depthwise_conv2d_ref(x, wt, b, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 64),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    wt = _rand(rng, k, n)
+    got = kg.gemm(x, wt)
+    np.testing.assert_allclose(got, ref.gemm_ref(x, wt),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pattern_conv_rejects_bad_taps():
+    x = jnp.zeros((1, 4, 4, 2))
+    wc = jnp.zeros((2, 2, 3))
+    b = jnp.zeros((3,))
+    with pytest.raises(ValueError):
+        kc.pattern_conv2d(x, wc, b, [(0, 0), (3, 1)])
+    with pytest.raises(ValueError):
+        kc.pattern_conv2d(x, wc, b, [(0, 0), (0, 0)])
+
+
+def test_pattern_conv_shape_mismatch():
+    x = jnp.zeros((1, 4, 4, 2))
+    b = jnp.zeros((3,))
+    with pytest.raises(ValueError):
+        kc.pattern_conv2d(x, jnp.zeros((3, 2, 3)), b,
+                          P.PATTERN_SET_4[0])  # K mismatch
+    with pytest.raises(ValueError):
+        kc.pattern_conv2d(x, jnp.zeros((4, 5, 3)), b,
+                          P.PATTERN_SET_4[0])  # Cin mismatch
+
+
+def test_pattern_conv_sparsity_equivalence():
+    """Pattern conv == dense conv with the complementary taps zeroed."""
+    rng = np.random.default_rng(7)
+    taps = P.PATTERN_SET_4[2]
+    x = _rand(rng, 1, 8, 8, 4)
+    wc = _rand(rng, 4, 4, 6)
+    b = _rand(rng, 6)
+    dense = ref.expand_pattern(wc, taps)
+    got = kc.pattern_conv2d(x, wc, b, taps)
+    want = kc.dense_conv2d(x, dense, b)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_gemm_blocking_covers_nondivisible():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 129, 37)
+    wt = _rand(rng, 37, 131)
+    np.testing.assert_allclose(kg.gemm(x, wt), ref.gemm_ref(x, wt),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_analysis():
+    fp = kc.vmem_footprint_bytes(16, 16, 64, 64, 4)
+    # 4-entry pattern stores 4/9 of the dense weights.
+    dense = kc.vmem_footprint_bytes(16, 16, 64, 64, 9)
+    assert fp["w_tile_bytes"] * 9 == dense["w_tile_bytes"] * 4
+    assert fp["flops_per_step"] * 9 == dense["flops_per_step"] * 4
+    assert fp["total_bytes"] < 16 * 1024 * 1024  # fits VMEM

@@ -1,0 +1,162 @@
+"""L2 model zoo: shapes, masking semantics, training dynamics,
+Teacher-Student pre-training, and pallas/lax backend agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as zoo
+from compile import patterns as P
+
+
+def _params(m):
+    return {k: jnp.asarray(v) for k, v in m.init_params_np.items()}
+
+
+def _ones_masks(m):
+    return {k: jnp.ones(m.init_params_np[k].shape, jnp.float32)
+            for k in m.mask_names}
+
+
+@pytest.mark.parametrize("name", list(zoo.MODELS))
+def test_forward_shapes(name):
+    m = zoo.MODELS[name]()
+    p = _params(m)
+    x = jnp.zeros((4,) + m.input_shape, jnp.float32)
+    logits = m.forward(p, {}, x)
+    assert logits.shape == (4, m.classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", list(zoo.MODELS))
+def test_mask_all_ones_is_identity(name):
+    m = zoo.MODELS[name]()
+    p = _params(m)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2,) + m.input_shape), jnp.float32)
+    a = m.forward(p, {}, x)
+    b = m.forward(p, _ones_masks(m), x)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_mask_zero_kills_module_contribution():
+    m = zoo.resnet_mini()
+    p = _params(m)
+    masks = _ones_masks(m)
+    # Zero every conv of m1: residual block becomes (biases-only + skip).
+    zero = {k: (jnp.zeros_like(v) if k.startswith("m1.") else v)
+            for k, v in masks.items()}
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (2,) + m.input_shape), jnp.float32)
+    a = m.forward(p, masks, x)
+    b = m.forward(p, zero, x)
+    assert not np.allclose(a, b)
+
+
+@pytest.mark.parametrize("name", list(zoo.MODELS))
+def test_train_step_reduces_loss(name):
+    m = zoo.MODELS[name]()
+    p = _params(m)
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    masks = _ones_masks(m)
+    x, y = D.make_batch("synflowers", 32, 0)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    ts = jax.jit(m.train_step)
+    first = None
+    for _ in range(25):
+        p, v, loss, acc = ts(p, v, masks, x, y, jnp.float32(0.05))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first
+
+
+def test_masked_weights_stay_masked_through_training():
+    """Gradient of w*mask w.r.t. w is masked -> pruned weights never move."""
+    m = zoo.vgg_mini()
+    p = _params(m)
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    rng = np.random.default_rng(2)
+    masks = {}
+    for k in m.mask_names:
+        w = m.init_params_np[k]
+        masks[k] = jnp.asarray(P.unstructured_prune_mask(w, 0.5))
+    x, y = D.make_batch("syncars", 32, 3)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    ts = jax.jit(m.train_step)
+    p0 = {k: np.asarray(p[k]) for k in m.mask_names}
+    for _ in range(5):
+        p, v, loss, acc = ts(p, v, masks, x, y, jnp.float32(0.05))
+    for k in m.mask_names:
+        dead = np.asarray(masks[k]) == 0
+        np.testing.assert_allclose(np.asarray(p[k])[dead], p0[k][dead])
+
+
+def test_admm_step_pulls_towards_z():
+    m = zoo.resnet_mini()
+    p = _params(m)
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    masks = _ones_masks(m)
+    zs = {k: jnp.zeros_like(masks[k]) for k in m.mask_names}
+    us = {k: jnp.zeros_like(masks[k]) for k in m.mask_names}
+    x, y = D.make_batch("synflowers", 32, 4)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    st = jax.jit(m.admm_train_step)
+    key = m.mask_names[0]
+    norm0 = float(jnp.linalg.norm(p[key]))
+    # Large rho makes the proximal pull towards Z=0 dominate the CE grad.
+    for _ in range(20):
+        p, v, loss, acc = st(p, v, masks, zs, us, x, y,
+                             jnp.float32(0.02), jnp.float32(2.0))
+    assert float(jnp.linalg.norm(p[key])) < norm0
+
+
+def test_block_pretrain_reduces_reconstruction_error():
+    m = zoo.resnet_mini()
+    p = _params(m)
+    masks = {}
+    for k in m.mask_names:
+        w = m.init_params_np[k]
+        if w.ndim == 4 and w.shape[0] == 3:
+            masks[k] = jnp.asarray(P.pattern_prune_mask(w))
+        else:
+            masks[k] = jnp.ones(w.shape, jnp.float32)
+    sn = m.student_param_names()
+    sp = {k: p[k] for k in sn}
+    sv = {k: jnp.zeros_like(sp[k]) for k in sn}
+    x, _ = D.make_batch("synflowers", 32, 5)
+    x = jnp.asarray(x)
+    step = jax.jit(m.block_pretrain_step)
+    _, _, l0 = step(p, sp, sv, masks, x, jnp.float32(0.0))
+    for _ in range(30):
+        sp, sv, losses = step(p, sp, sv, masks, x, jnp.float32(0.02))
+    total0 = sum(float(v) for v in l0.values())
+    total1 = sum(float(v) for v in losses.values())
+    assert total1 < total0
+
+
+def test_pallas_backend_matches_lax():
+    m = zoo.resnet_mini()
+    p = _params(m)
+    masks = _ones_masks(m)
+    x = jnp.asarray(np.random.default_rng(6).standard_normal(
+        (1,) + m.input_shape), jnp.float32)
+    a = m.forward(p, masks, x, backend="lax")
+    b = m.forward(p, masks, x, backend="pallas")
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+def test_param_order_deterministic():
+    a = zoo.resnet_mini()
+    b = zoo.resnet_mini()
+    assert a.param_names == b.param_names
+    assert a.mask_names == b.mask_names
+    for k in a.param_names:
+        np.testing.assert_array_equal(a.init_params_np[k],
+                                      b.init_params_np[k])
+
+
+def test_flops_positive_and_ordered():
+    f = {n: zoo.MODELS[n]().flops() for n in zoo.MODELS}
+    assert all(v > 0 for v in f.values())
+    assert f["resnet_mini"] > f["mbnt_mini"]

@@ -1,0 +1,93 @@
+"""Pattern library and projection properties (mirrored by Rust unit tests)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import patterns as P
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def test_pattern_set_shape_invariants():
+    assert len(P.PATTERN_SET_4) == 8
+    for taps in P.PATTERN_SET_4:
+        assert len(taps) == 4
+        assert len(set(taps)) == 4
+        for dy, dx in taps:
+            assert 0 <= dy < 3 and 0 <= dx < 3
+        # centre tap always survives (human-visual-system prior, §2.1.2)
+        assert (1, 1) in taps
+
+
+def test_pattern_set_distinct():
+    assert len({tuple(sorted(t)) for t in P.PATTERN_SET_4}) == 8
+
+
+def test_pattern_masks():
+    pm = P.pattern_masks()
+    assert pm.shape == (8, 3, 3)
+    assert (pm.sum(axis=(1, 2)) == 4).all()
+
+
+@settings(**SETTINGS)
+@given(cin=st.integers(1, 8), cout=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_projection_picks_max_energy(cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((3, 3, cin, cout)).astype(np.float32)
+    mask, ids = P.project_kernel_patterns(w)
+    assert mask.shape == w.shape
+    assert ids.shape == (cin, cout)
+    pm = P.pattern_masks()
+    # The chosen pattern preserves at least as much energy as any other.
+    energy = np.einsum("pyx,yxio->pio", pm, w.astype(np.float64) ** 2)
+    chosen = np.take_along_axis(energy, ids[None], axis=0)[0]
+    assert (chosen >= energy.max(axis=0) - 1e-9).all()
+
+
+@settings(**SETTINGS)
+@given(cin=st.integers(1, 6), cout=st.integers(1, 6),
+       keep=st.floats(0.1, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_connectivity_keeps_exact_fraction(cin, cout, keep, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((3, 3, cin, cout)).astype(np.float32)
+    mask = P.connectivity_mask(w, keep)
+    kernels_kept = mask[0, 0].sum()
+    want = max(1, int(np.ceil(keep * cin * cout)))
+    assert kernels_kept == want
+    # whole kernels only: mask constant across taps
+    assert (mask == mask[0:1, 0:1]).all()
+
+
+@settings(**SETTINGS)
+@given(keep=st.floats(0.05, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_unstructured_keep_fraction(keep, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((3, 3, 4, 4)).astype(np.float32)
+    mask = P.unstructured_prune_mask(w, keep)
+    n_keep = int(mask.sum())
+    want = max(1, int(np.ceil(keep * w.size)))
+    assert n_keep == want
+
+
+@settings(**SETTINGS)
+@given(keep=st.floats(0.05, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_filter_mask_whole_filters(keep, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((3, 3, 4, 8)).astype(np.float32)
+    mask = P.filter_prune_mask(w, keep)
+    per_filter = mask.reshape(-1, 8).sum(axis=0)
+    assert set(np.unique(per_filter)) <= {0.0, float(3 * 3 * 4)}
+    kept = (per_filter > 0).sum()
+    assert kept == max(1, int(np.ceil(keep * 8)))
+
+
+def test_combined_pattern_connectivity():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((3, 3, 8, 8)).astype(np.float32)
+    m = P.pattern_prune_mask(w, connectivity_keep=0.5)
+    # every surviving kernel has exactly 4 taps; half the kernels dead
+    per_kernel = m.sum(axis=(0, 1))
+    alive = per_kernel[per_kernel > 0]
+    assert (alive == 4).all()
+    assert (per_kernel > 0).sum() == 32

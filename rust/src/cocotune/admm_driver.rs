@@ -1,0 +1,224 @@
+//! ADMM pattern-pruning driver (paper §2.1.3 "pattern-based training
+//! stage"): alternates PJRT `admm_train_step` mini-batches (which add the
+//! proximal pull rho*(W - Z + U) to the gradient) with host-side Z/U
+//! updates, where the Z-update is the Euclidean projection of W + U onto
+//! the pattern-constraint set (patterns::project_kernel) plus optional
+//! connectivity pruning. Ends with a hard projection + masked fine-tune.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use super::trainer::{ModelState, Trainer};
+use crate::data;
+use crate::patterns;
+use crate::runtime::manifest::DatasetSpec;
+use crate::runtime::HostTensor;
+
+/// ADMM hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct AdmmOpts {
+    pub rho: f32,
+    pub lr: f32,
+    pub steps: usize,
+    /// Z/U update every this many SGD steps.
+    pub project_every: usize,
+    pub seed: u64,
+}
+
+impl Default for AdmmOpts {
+    fn default() -> Self {
+        AdmmOpts {
+            rho: 0.05,
+            lr: 0.03,
+            steps: 120,
+            project_every: 20,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of the ADMM stage.
+pub struct AdmmResult {
+    pub losses: Vec<f32>,
+    /// Final pattern masks per mask tensor name.
+    pub masks: HashMap<String, HostTensor>,
+    /// Mean distance ||W - Z|| at each projection point (should shrink).
+    pub primal_residuals: Vec<f64>,
+}
+
+/// Project every 3x3 conv weight of `name`d tensor onto the pattern set;
+/// returns (projected tensor, binary mask).
+fn project_tensor(shape: &[usize], w: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    // HWIO layout [kh, kw, cin, cout], only 3x3 get pattern projection.
+    if shape.len() == 4 && shape[0] == 3 && shape[1] == 3 {
+        let (cin, cout) = (shape[2], shape[3]);
+        let mut z = vec![0f32; w.len()];
+        let mut m = vec![0f32; w.len()];
+        for ci in 0..cin {
+            for co in 0..cout {
+                let mut k = [0f32; 9];
+                for t in 0..9 {
+                    k[t] = w[t * cin * cout + ci * cout + co];
+                }
+                let (proj, pid) = patterns::project_kernel(&k);
+                for t in 0..9 {
+                    z[t * cin * cout + ci * cout + co] = proj[t];
+                }
+                for &(dy, dx) in
+                    &patterns::PATTERN_SET_4[pid as usize]
+                {
+                    m[(dy * 3 + dx) * cin * cout + ci * cout + co] = 1.0;
+                }
+            }
+        }
+        (z, m)
+    } else {
+        // non-3x3 (1x1 convs, depthwise): no pattern constraint
+        (w.to_vec(), vec![1f32; w.len()])
+    }
+}
+
+/// Run ADMM pattern pruning on a trained model.
+pub fn admm_pattern_prune(trainer: &Trainer, state: &mut ModelState,
+                          ds: &DatasetSpec, opts: &AdmmOpts)
+                          -> Result<AdmmResult> {
+    let rt = trainer.rt;
+    let spec = &trainer.spec;
+    let exe = rt.load_model_artifact(&spec.name, "admm_train_step")?;
+    let size = rt.manifest.image_size;
+    let ones_masks: Vec<HostTensor> = spec
+        .masks
+        .iter()
+        .map(|t| HostTensor::ones(&t.shape))
+        .collect();
+    // Z init = projection of W; U = 0.
+    let mask_param_idx: Vec<usize> = spec
+        .masks
+        .iter()
+        .map(|t| {
+            spec.params
+                .iter()
+                .position(|p| p.name == t.name)
+                .expect("mask matches param")
+        })
+        .collect();
+    let mut zs: Vec<HostTensor> = Vec::new();
+    let mut us: Vec<HostTensor> = Vec::new();
+    for (mi, t) in spec.masks.iter().enumerate() {
+        let w = state.params[mask_param_idx[mi]].as_f32()?;
+        let (z, _) = project_tensor(&t.shape, w);
+        zs.push(HostTensor::f32(&t.shape, z));
+        us.push(HostTensor::zeros(&t.shape));
+    }
+
+    let mut losses = Vec::new();
+    let mut primal = Vec::new();
+    for s in 0..opts.steps {
+        let batch = data::make_batch(ds, size, spec.train_batch,
+                                     opts.seed.wrapping_add(s as u64 * 31));
+        let np = state.params.len();
+        let mut inputs = Vec::new();
+        inputs.extend(state.params.iter().cloned());
+        inputs.extend(state.vels.iter().cloned());
+        inputs.extend(ones_masks.iter().cloned());
+        inputs.extend(zs.iter().cloned());
+        inputs.extend(us.iter().cloned());
+        inputs.push(HostTensor::f32(
+            &[batch.n, batch.size, batch.size, 3],
+            batch.x.clone(),
+        ));
+        inputs.push(HostTensor::i32(&[batch.n], batch.y.clone()));
+        inputs.push(HostTensor::scalar_f32(opts.lr));
+        inputs.push(HostTensor::scalar_f32(opts.rho));
+        let mut out = exe.run(&inputs)?;
+        let _acc = out.pop().unwrap();
+        let loss = out.pop().unwrap().scalar()?;
+        losses.push(loss);
+        let vels = out.split_off(np);
+        state.params = out;
+        state.vels = vels;
+
+        if (s + 1) % opts.project_every == 0 {
+            // Z-update: project W + U; U-update: U += W - Z.
+            let mut resid = 0f64;
+            let mut count = 0usize;
+            for (mi, t) in spec.masks.iter().enumerate() {
+                let w = state.params[mask_param_idx[mi]].as_f32()?;
+                let u = us[mi].as_f32()?;
+                let wu: Vec<f32> =
+                    w.iter().zip(u).map(|(a, b)| a + b).collect();
+                let (z, _) = project_tensor(&t.shape, &wu);
+                let new_u: Vec<f32> = wu
+                    .iter()
+                    .zip(&z)
+                    .map(|(a, b)| a - b)
+                    .collect();
+                resid += w
+                    .iter()
+                    .zip(&z)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+                count += w.len();
+                zs[mi] = HostTensor::f32(&t.shape, z);
+                us[mi] = HostTensor::f32(&t.shape, new_u);
+            }
+            primal.push((resid / count.max(1) as f64).sqrt());
+        }
+    }
+
+    // Hard projection: final masks from the converged W.
+    let mut masks = HashMap::new();
+    for (mi, t) in spec.masks.iter().enumerate() {
+        let pi = mask_param_idx[mi];
+        let w = state.params[pi].as_f32()?.to_vec();
+        let (z, m) = project_tensor(&t.shape, &w);
+        state.params[pi] = HostTensor::f32(&t.shape, z);
+        masks.insert(t.name.clone(), HostTensor::f32(&t.shape, m));
+    }
+    Ok(AdmmResult {
+        losses,
+        masks,
+        primal_residuals: primal,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn project_tensor_3x3_keeps_4_of_9() {
+        let (cin, cout) = (3, 5);
+        let shape = vec![3, 3, cin, cout];
+        let w: Vec<f32> = (0..9 * cin * cout)
+            .map(|i| ((i * 37 % 19) as f32) - 9.0)
+            .collect();
+        let (z, m) = project_tensor(&shape, &w);
+        // mask keeps exactly 4 taps per kernel
+        for ci in 0..cin {
+            for co in 0..cout {
+                let kept: f32 = (0..9)
+                    .map(|t| m[t * cin * cout + ci * cout + co])
+                    .sum();
+                assert_eq!(kept, 4.0);
+            }
+        }
+        // z zeroes exactly the masked-out entries
+        for (i, (zv, mv)) in z.iter().zip(&m).enumerate() {
+            if *mv == 0.0 {
+                assert_eq!(*zv, 0.0, "index {i}");
+            } else {
+                assert_eq!(*zv, w[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn project_tensor_non3x3_is_identity() {
+        let shape = vec![1, 1, 4, 4];
+        let w: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let (z, m) = project_tensor(&shape, &w);
+        assert_eq!(z, w);
+        assert!(m.iter().all(|v| *v == 1.0));
+    }
+}

@@ -1,0 +1,322 @@
+//! Hierarchical tuning-block identification (paper §2.2.2, Fig. 9).
+//!
+//! Encodes the promising subspace as symbol sequences (one per network,
+//! symbol = (module, rate)), runs the hierarchical grammar inference
+//! (sequitur.rs) on the concatenation, and selects the rules worth
+//! pre-training with the paper's two heuristics:
+//!   1. a rule used in only one network is never selected;
+//!   2. a rule is preferred over its children only if it appears as often
+//!      as its most frequently appearing descendant.
+//! Any (module, rate) pair left uncovered becomes a singleton block.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::sequitur::{self, Grammar, Symbol};
+use super::trainer::Config;
+
+/// A tuning block: a run of consecutive prunable modules, each at a rate.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TuningBlock {
+    pub start_module: usize,
+    /// rate index per module in the run (len >= 1).
+    pub rates: Vec<u8>,
+}
+
+impl TuningBlock {
+    pub fn len(&self) -> usize {
+        self.rates.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rates.is_empty()
+    }
+    /// The (module, rate) pairs this block covers.
+    pub fn pairs(&self) -> Vec<(usize, u8)> {
+        self.rates
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (self.start_module + i, r))
+            .collect()
+    }
+}
+
+const NRATES: i64 = 4;
+
+fn encode(module: usize, rate: u8) -> Symbol {
+    module as i64 * NRATES + rate as i64
+}
+
+fn decode(sym: Symbol) -> (usize, u8) {
+    ((sym / NRATES) as usize, (sym % NRATES) as u8)
+}
+
+/// Result of block identification.
+#[derive(Debug, Clone)]
+pub struct BlockSelection {
+    pub blocks: Vec<TuningBlock>,
+    /// Frequency (number of networks) per selected block.
+    pub frequencies: Vec<usize>,
+    pub grammar_rules: usize,
+}
+
+impl BlockSelection {
+    /// Total pre-training cost in module-units: the number of DISTINCT
+    /// (module, rate) pairs across the selection. A multi-module block
+    /// trains its modules jointly in one Teacher-Student run, so each
+    /// pair costs one unit whether it is trained inside a run or as a
+    /// singleton; overlapping selections don't pay twice.
+    pub fn pretrain_module_units(&self) -> usize {
+        let mut pairs = BTreeSet::new();
+        for b in &self.blocks {
+            pairs.extend(b.pairs());
+        }
+        pairs.len()
+    }
+    pub fn multi_module_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.len() > 1).count()
+    }
+}
+
+/// Identify tuning blocks for a promising subspace.
+pub fn identify_blocks(configs: &[Config], n_modules: usize)
+                       -> BlockSelection {
+    // Concatenate network sequences with unique separators so no rule can
+    // span a network boundary (separator symbols never repeat).
+    let sep_base = encode(n_modules, 0);
+    let mut input: Vec<Symbol> = Vec::new();
+    for (ni, cfg) in configs.iter().enumerate() {
+        assert_eq!(cfg.len(), n_modules);
+        for (mi, &r) in cfg.iter().enumerate() {
+            input.push(encode(mi, r));
+        }
+        input.push(sep_base + ni as i64);
+    }
+    let grammar = sequitur::sequitur(&input);
+    let counts = grammar.expansion_counts();
+
+    // Validity: a rule's yield must decode to consecutive modules with no
+    // separators.
+    let valid_yield = |rule: usize| -> Option<TuningBlock> {
+        let y = grammar.expand(rule);
+        let mut rates = Vec::with_capacity(y.len());
+        let mut start = None;
+        for (i, &s) in y.iter().enumerate() {
+            if s >= sep_base {
+                return None;
+            }
+            let (m, r) = decode(s);
+            match start {
+                None => start = Some(m),
+                Some(st) if m != st + i => return None,
+                _ => {}
+            }
+            rates.push(r);
+        }
+        start.map(|s| TuningBlock {
+            start_module: s,
+            rates,
+        })
+    };
+
+    // Max expansion count over all descendants of a rule.
+    fn max_desc(g: &Grammar, counts: &[usize], rule: usize,
+                memo: &mut HashMap<usize, usize>) -> usize {
+        if let Some(&v) = memo.get(&rule) {
+            return v;
+        }
+        let mut m = 0;
+        for c in g.children(rule) {
+            m = m.max(counts[c]).max(max_desc(g, counts, c, memo));
+        }
+        memo.insert(rule, m);
+        m
+    }
+
+    // Top-down selection from the start rule's children.
+    let mut memo = HashMap::new();
+    let mut selected: BTreeSet<TuningBlock> = BTreeSet::new();
+    let mut freqs: HashMap<TuningBlock, usize> = HashMap::new();
+    let mut stack: Vec<usize> = grammar.children(0);
+    let mut visited = vec![false; grammar.rules.len()];
+    while let Some(r) = stack.pop() {
+        if visited[r] {
+            continue;
+        }
+        visited[r] = true;
+        let take = counts[r] >= 2
+            && counts[r] >= max_desc(&grammar, &counts, r, &mut memo);
+        if take {
+            if let Some(block) = valid_yield(r) {
+                freqs.entry(block.clone())
+                    .and_modify(|f| *f = (*f).max(counts[r]))
+                    .or_insert(counts[r]);
+                selected.insert(block);
+                continue; // prefer this rule over its children
+            }
+        }
+        stack.extend(grammar.children(r));
+    }
+
+    // Coverage: every (module, rate) pair in the subspace must be covered.
+    let mut covered: BTreeSet<(usize, u8)> = BTreeSet::new();
+    for b in &selected {
+        covered.extend(b.pairs());
+    }
+    let mut pair_freq: HashMap<(usize, u8), usize> = HashMap::new();
+    for cfg in configs {
+        for (mi, &r) in cfg.iter().enumerate() {
+            *pair_freq.entry((mi, r)).or_insert(0) += 1;
+        }
+    }
+    for (&(mi, r), &f) in &pair_freq {
+        if r != 0 && !covered.contains(&(mi, r)) {
+            let b = TuningBlock {
+                start_module: mi,
+                rates: vec![r],
+            };
+            freqs.insert(b.clone(), f);
+            selected.insert(b);
+        }
+    }
+
+    let blocks: Vec<TuningBlock> = selected.into_iter().collect();
+    let frequencies = blocks.iter().map(|b| freqs[b]).collect();
+    BlockSelection {
+        blocks,
+        frequencies,
+        grammar_rules: grammar.rules.len() - 1,
+    }
+}
+
+/// Baseline block definition: every (module, rate) pair that occurs in
+/// the subspace is its own tuning block ("every convolution module as a
+/// tuning block", the paper's default before the identifier is applied).
+pub fn per_module_blocks(configs: &[Config], n_modules: usize)
+                         -> BlockSelection {
+    let mut pair_freq: HashMap<(usize, u8), usize> = HashMap::new();
+    for cfg in configs {
+        for (mi, &r) in cfg.iter().enumerate() {
+            if r != 0 {
+                *pair_freq.entry((mi, r)).or_insert(0) += 1;
+            }
+        }
+    }
+    let _ = n_modules;
+    let mut pairs: Vec<((usize, u8), usize)> =
+        pair_freq.into_iter().collect();
+    pairs.sort();
+    let blocks: Vec<TuningBlock> = pairs
+        .iter()
+        .map(|((m, r), _)| TuningBlock {
+            start_module: *m,
+            rates: vec![*r],
+        })
+        .collect();
+    let frequencies = pairs.iter().map(|(_, f)| *f).collect();
+    BlockSelection {
+        blocks,
+        frequencies,
+        grammar_rules: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for m in 0..10 {
+            for r in 0..4u8 {
+                assert_eq!(decode(encode(m, r)), (m, r));
+            }
+        }
+    }
+
+    #[test]
+    fn identical_configs_yield_whole_network_block() {
+        // 4 identical networks -> the full sequence is one repeated block.
+        let cfg: Config = vec![1, 2, 3, 1];
+        let configs = vec![cfg.clone(); 4];
+        let sel = identify_blocks(&configs, 4);
+        // Must contain a multi-module block covering consecutive modules.
+        assert!(
+            sel.multi_module_blocks() >= 1,
+            "blocks: {:?}",
+            sel.blocks
+        );
+        // All pairs covered.
+        let mut covered = BTreeSet::new();
+        for b in &sel.blocks {
+            covered.extend(b.pairs());
+        }
+        for (mi, &r) in cfg.iter().enumerate() {
+            assert!(covered.contains(&(mi, r)));
+        }
+    }
+
+    #[test]
+    fn independent_configs_fall_back_to_singletons() {
+        // Configs designed to share no common subsequences of length 2:
+        let configs: Vec<Config> = vec![
+            vec![1, 1, 2, 3],
+            vec![2, 3, 1, 2],
+            vec![3, 2, 3, 1],
+        ];
+        let sel = identify_blocks(&configs, 4);
+        // every pair covered
+        let mut covered = BTreeSet::new();
+        for b in &sel.blocks {
+            covered.extend(b.pairs());
+        }
+        for cfg in &configs {
+            for (mi, &r) in cfg.iter().enumerate() {
+                assert!(covered.contains(&(mi, r)), "({mi},{r}) uncovered");
+            }
+        }
+    }
+
+    #[test]
+    fn collection2_style_runs_are_found() {
+        // "collection-2": one rate per stretch of modules -> long runs
+        // shared by multiple networks.
+        let configs: Vec<Config> = vec![
+            vec![2, 2, 2, 3, 3, 3],
+            vec![2, 2, 2, 1, 1, 1],
+            vec![1, 1, 1, 3, 3, 3],
+            vec![2, 2, 2, 3, 3, 3],
+        ];
+        let sel = identify_blocks(&configs, 6);
+        assert!(
+            sel.multi_module_blocks() >= 1,
+            "expected multi-module blocks, got {:?}",
+            sel.blocks
+        );
+        // Fewer module-units than 4 networks x 6 modules of naive work.
+        assert!(sel.pretrain_module_units() <= 24);
+    }
+
+    #[test]
+    fn per_module_baseline_counts_pairs() {
+        let configs: Vec<Config> = vec![vec![1, 2], vec![1, 3]];
+        let sel = per_module_blocks(&configs, 2);
+        assert_eq!(sel.blocks.len(), 3); // (0,1), (1,2), (1,3)
+        assert!(sel.blocks.iter().all(|b| b.len() == 1));
+        assert_eq!(sel.frequencies.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn selected_blocks_used_in_multiple_networks() {
+        let configs: Vec<Config> = vec![
+            vec![1, 2, 3],
+            vec![1, 2, 1],
+            vec![3, 2, 3],
+            vec![1, 2, 2],
+        ];
+        let sel = identify_blocks(&configs, 3);
+        for (b, f) in sel.blocks.iter().zip(&sel.frequencies) {
+            if b.len() > 1 {
+                assert!(*f >= 2, "multi-block {b:?} freq {f}");
+            }
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Calibration model for the scaled tier (Tables 3-5).
+//!
+//! The paper's headline numbers come from 500-config explorations of
+//! ResNet-50/Inception-V3 with hour-scale trainings on a GPU cluster —
+//! hardware we do not have. The quantities that drive those numbers are
+//! measured for real on the mini tier (explore.rs):
+//!
+//!   1. the accuracy-vs-pruning curve (convex: flat up to a kink, then
+//!      steep), with a per-dataset hardness scale;
+//!   2. the *recovery fraction*: block-trained networks recover a large
+//!      share of the pruning damage (paper Fig. 11(c,d): a 70%-pruned
+//!      default collapses while the block-trained one stays close to the
+//!      full model) — this, not a uniform boost, is what produces the
+//!      paper's 99.6% configuration savings;
+//!   3. the convergence-speed ratio (steps to reach the final level).
+//!
+//! `Calibration::from_runs` fits these from real ExploreOutcomes;
+//! `Calibration::paper_scale` provides paper-consistent defaults.
+//! cluster.rs replays the exploration protocol at full scale with these
+//! parameters. See DESIGN.md §2 (substitution table).
+
+use super::explore::ExploreOutcome;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Fitted behavioural model of pruned-network training.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Full-model test accuracy.
+    pub base_acc: f64,
+    /// Per-dataset hardness multiplier on the drop curve (Flowers-easy
+    /// ~0.8, CUB-hard ~6).
+    pub hardness: f64,
+    /// Shallow early slope of the drop curve.
+    pub s_early: f64,
+    /// Quadratic late coefficient past the kink.
+    pub s_late: f64,
+    /// Kink position (fraction pruned) where damage accelerates.
+    pub kink: f64,
+    /// Residual noise (std) around the curve.
+    pub acc_noise: f64,
+    /// Fraction of the pruning damage that block-trained init recovers
+    /// (paper Fig. 11: large; fitted from the mini tier).
+    pub recovery: f64,
+    /// Initial-accuracy advantage of block-trained init (absolute).
+    pub init_boost: f64,
+    /// Mean steps-to-converge for the default init.
+    pub default_steps: f64,
+    /// steps(block) / steps(default).
+    pub block_steps_ratio: f64,
+    /// Hours per training step at paper scale (~5.7 h per default config
+    /// on a K20X).
+    pub step_hours: f64,
+}
+
+impl Calibration {
+    /// The damage curve: accuracy drop at `frac` pruned (before recovery).
+    pub fn drop_at(&self, frac: f64) -> f64 {
+        let late = (frac - self.kink).max(0.0);
+        self.hardness * (self.s_early * frac + self.s_late * late * late)
+    }
+
+    /// Fit from real mini-tier runs (default + block explorations over
+    /// the same config set, trained WITHOUT early stop).
+    pub fn from_runs(base_acc: f64, default: &ExploreOutcome,
+                     block: &ExploreOutcome) -> Calibration {
+        let mut c = Calibration::paper_scale(base_acc);
+        let max_size = default
+            .results
+            .iter()
+            .map(|r| r.model_size)
+            .max()
+            .unwrap_or(1) as f64;
+        let mut hard_samples = Vec::new();
+        let mut recov_samples = Vec::new();
+        let mut init_d = Vec::new();
+        let mut init_b = Vec::new();
+        for rd in &default.results {
+            let Some(rb) =
+                block.results.iter().find(|r| r.config == rd.config)
+            else {
+                continue;
+            };
+            let frac = 1.0 - rd.model_size as f64 / max_size;
+            let drop_d = (base_acc - rd.final_acc).max(0.0);
+            // hardness: observed drop / unit-curve drop
+            let unit = {
+                let late = (frac - c.kink).max(0.0);
+                c.s_early * frac + c.s_late * late * late
+            };
+            if unit > 1e-6 && drop_d > 0.0 {
+                hard_samples.push(drop_d / unit);
+            }
+            if drop_d > 0.01 {
+                recov_samples
+                    .push(((rb.final_acc - rd.final_acc) / drop_d)
+                        .clamp(0.0, 0.95));
+            }
+            init_d.push(rd.initial_acc);
+            init_b.push(rb.initial_acc);
+        }
+        if !hard_samples.is_empty() {
+            c.hardness = stats::median(&hard_samples).clamp(0.2, 10.0);
+        }
+        if !recov_samples.is_empty() {
+            c.recovery = stats::median(&recov_samples);
+        }
+        c.init_boost =
+            (stats::mean(&init_b) - stats::mean(&init_d)).max(0.0);
+        // Convergence ratio from the accuracy curves: the step at which
+        // each run first crosses a common target (works for runs trained
+        // without early stop, where raw step counts are identical).
+        let mut ratio_samples = Vec::new();
+        let mut steps_d_all = Vec::new();
+        for rd in &default.results {
+            let Some(rb) =
+                block.results.iter().find(|r| r.config == rd.config)
+            else {
+                continue;
+            };
+            let target = rd.final_acc.min(rb.final_acc) - 0.005;
+            let cross = |init: f64, curve: &[(usize, f64)], cap: usize| {
+                if init >= target {
+                    return 0.0;
+                }
+                curve
+                    .iter()
+                    .find(|(_, a)| *a >= target)
+                    .map(|(s, _)| *s as f64)
+                    .unwrap_or(cap as f64)
+            };
+            let sd = cross(rd.initial_acc, &rd.acc_curve, rd.steps);
+            let sb = cross(rb.initial_acc, &rb.acc_curve, rb.steps);
+            steps_d_all.push(rd.steps as f64);
+            if sd > 0.0 {
+                ratio_samples.push((sb / sd).clamp(0.0, 1.5));
+            }
+        }
+        c.default_steps = stats::mean(&steps_d_all).max(1.0);
+        if !ratio_samples.is_empty() {
+            c.block_steps_ratio =
+                stats::median(&ratio_samples).clamp(0.05, 1.0);
+        }
+        c.step_hours = 5.7 / c.default_steps;
+        c.base_acc = base_acc;
+        c
+    }
+
+    /// Paper-consistent defaults (mid-points of the reported ranges:
+    /// 1-4% final boost at moderate pruning, 50-90% initial advantage,
+    /// 30-100% training-time saving, Fig. 11 damage-recovery behaviour).
+    pub fn paper_scale(base_acc: f64) -> Calibration {
+        Calibration {
+            base_acc,
+            hardness: 1.0,
+            s_early: 0.02,
+            s_late: 0.6,
+            kink: 0.55,
+            acc_noise: 0.006,
+            recovery: 0.75,
+            init_boost: 0.30,
+            default_steps: 200.0,
+            block_steps_ratio: 0.45,
+            step_hours: 5.7 / 200.0,
+        }
+    }
+
+    /// Per-dataset hardness presets matching the paper's Table 2 spread
+    /// (used when no real calibration for that dataset exists).
+    pub fn with_dataset(mut self, name: &str) -> Calibration {
+        self.hardness = match name {
+            n if n.contains("Flowers") => 0.8,
+            n if n.contains("CUB") => 6.0,
+            n if n.contains("Cars") => 2.5,
+            n if n.contains("Dogs") => 4.0,
+            _ => self.hardness,
+        };
+        self
+    }
+
+    fn noise_for(&self, config_id: u64, salt: u64) -> f64 {
+        let mut rng = Rng::seed_from(config_id ^ salt);
+        rng.normal() * self.acc_noise
+    }
+
+    /// Predicted FINAL accuracy of a config with `frac_pruned` removed.
+    pub fn predict_acc(&self, config_id: u64, frac_pruned: f64,
+                       block_trained: bool) -> f64 {
+        let drop = self.drop_at(frac_pruned);
+        let effective = if block_trained {
+            drop * (1.0 - self.recovery)
+        } else {
+            drop
+        };
+        (self.base_acc - effective + self.noise_for(config_id, 0x5EED))
+            .clamp(0.0, 1.0)
+    }
+
+    /// Predicted steps-to-converge. `quality` in [0,1] is the tuning-block
+    /// quality bonus (multi-module blocks give better inits -> fewer
+    /// fine-tuning steps; Table 5's mechanism).
+    pub fn predict_steps(&self, config_id: u64, block_trained: bool,
+                         quality: f64) -> f64 {
+        let mut rng = Rng::seed_from(config_id ^ 0x57E9);
+        let jitter = 1.0 + 0.15 * rng.normal().clamp(-2.0, 2.0);
+        let steps = self.default_steps * jitter;
+        if block_trained {
+            steps * self.block_steps_ratio
+                * (1.0 - 0.05 * quality.clamp(0.0, 1.0))
+        } else {
+            steps
+        }
+    }
+
+    /// Hours to train one config at paper scale.
+    pub fn config_hours(&self, config_id: u64, block_trained: bool,
+                        quality: f64) -> f64 {
+        self.predict_steps(config_id, block_trained, quality)
+            * self.step_hours
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn damage_curve_shape() {
+        let c = Calibration::paper_scale(0.9);
+        // convex: flat early, steep late
+        assert!(c.drop_at(0.2) < 0.01);
+        assert!(c.drop_at(0.75) > 3.0 * c.drop_at(0.4));
+        // monotone
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let d = c.drop_at(i as f64 / 20.0);
+            assert!(d >= prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn block_recovers_damage() {
+        let c = Calibration::paper_scale(0.85);
+        let d = c.predict_acc(2, 0.7, false);
+        let b = c.predict_acc(2, 0.7, true);
+        assert!(b > d);
+        // heavily pruned: recovery is large (Fig 11 c,d behaviour)
+        assert!(b - d > 0.5 * c.drop_at(0.7));
+        // and converges faster, more so with high-quality blocks
+        assert!(c.predict_steps(3, true, 0.0) < c.predict_steps(3, false, 0.0));
+        assert!(c.predict_steps(3, true, 1.0) < c.predict_steps(3, true, 0.0));
+    }
+
+    #[test]
+    fn dataset_hardness_ordering() {
+        let f = Calibration::paper_scale(0.97).with_dataset("Flowers102");
+        let cub = Calibration::paper_scale(0.77).with_dataset("CUB200");
+        assert!(cub.drop_at(0.5) > f.drop_at(0.5));
+    }
+
+    #[test]
+    fn predictions_deterministic() {
+        let c = Calibration::paper_scale(0.8);
+        assert_eq!(c.predict_acc(9, 0.3, true), c.predict_acc(9, 0.3, true));
+        assert_eq!(c.predict_steps(9, false, 0.0),
+                   c.predict_steps(9, false, 0.0));
+    }
+
+    #[test]
+    fn from_runs_fits_recovery_and_hardness() {
+        use crate::cocotune::explore::{ConfigResult, ExploreOutcome};
+        let mk = |acc: f64, steps: usize, init: f64, size: u64,
+                  cfg: Vec<u8>| ConfigResult {
+            config: cfg,
+            model_size: size,
+            final_acc: acc,
+            steps,
+            initial_acc: init,
+            acc_curve: vec![],
+        };
+        // base 0.9; config A frac 0.2 (size 80/100), config B frac 0.5
+        let default = ExploreOutcome {
+            results: vec![
+                mk(0.86, 200, 0.10, 80, vec![1]),
+                mk(0.80, 200, 0.08, 50, vec![2]),
+            ],
+            found: None,
+            total_steps: 400,
+        };
+        let block = ExploreOutcome {
+            results: vec![
+                mk(0.89, 100, 0.55, 80, vec![1]),
+                mk(0.88, 100, 0.50, 50, vec![2]),
+            ],
+            found: None,
+            total_steps: 200,
+        };
+        let c = Calibration::from_runs(0.9, &default, &block);
+        // recovery: (0.03/0.04 = .75, 0.08/0.10 = .8) -> median ~.775
+        assert!((c.recovery - 0.775).abs() < 1e-9);
+        assert!(c.hardness > 0.2);
+        assert!((c.block_steps_ratio - 0.5).abs() < 1e-9);
+        assert!(c.init_boost > 0.4);
+    }
+}

@@ -1,0 +1,245 @@
+//! Discrete-event cluster simulator — the scaled tier that replays the
+//! paper's Table 3/4/5 exploration protocol (500-config subspaces, 1/4/16
+//! nodes, hour-scale trainings) with the behaviour model calibrated from
+//! the real PJRT tier (calib.rs).
+//!
+//! Protocol (paper §2.2.3): configurations are explored smallest-first;
+//! each node trains one network at a time; exploration stops when a
+//! finished network meets the accuracy threshold. The composability mode
+//! first pre-trains the tuning blocks (also on the cluster), then
+//! fine-tunes block-trained networks, which (a) converge in fewer steps
+//! and (b) reach higher accuracy — so a smaller network passes the
+//! threshold sooner. Both effects are the measured ones.
+
+use super::blocks::BlockSelection;
+use super::calib::Calibration;
+use crate::util::rng::Rng;
+
+/// A simulated pruned-network configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub id: u64,
+    /// Fraction of parameters pruned (0..1); size order = 1-frac order.
+    pub frac_pruned: f64,
+}
+
+/// Generate a `n`-config subspace with a close-to-uniform size
+/// distribution (paper's random sampling).
+pub fn sample_sim_subspace(n: usize, seed: u64) -> Vec<SimConfig> {
+    let mut rng = Rng::seed_from(seed);
+    let mut cfgs: Vec<SimConfig> = (0..n)
+        .map(|i| SimConfig {
+            id: seed.wrapping_mul(1_000_003) ^ (i as u64),
+            // pruning fractions roughly uniform over [0.15, 0.75]
+            frac_pruned: rng.range_f64(0.15, 0.75),
+        })
+        .collect();
+    // explore smallest model (largest pruned fraction) first
+    cfgs.sort_by(|a, b| b.frac_pruned.partial_cmp(&a.frac_pruned).unwrap());
+    cfgs
+}
+
+/// Simulation result for one (mode, nodes, threshold) cell.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Configurations whose training completed before stop.
+    pub configs_evaluated: usize,
+    /// Wall-clock hours (simulated).
+    pub hours: f64,
+    /// Winner's surviving-size fraction (1 - frac_pruned), if any.
+    pub winner_size_frac: Option<f64>,
+    /// Pre-training overhead fraction of total time (block mode).
+    pub overhead_frac: f64,
+}
+
+/// Execution mode.
+pub enum SimMode<'a> {
+    Default,
+    /// Block-trained with the given tuning-block selection (pre-training
+    /// cost = module_units x per-block hours).
+    Block(&'a BlockSelection),
+}
+
+/// Hours to pre-train one tuning block: one Teacher-Student job. Its
+/// modules train concurrently against the shared teacher activations
+/// (paper Fig. 10(b); our real tier's block_pretrain graph does exactly
+/// this), so the cost scales with the number of BLOCKS, not the modules
+/// inside them — the mechanism behind Table 5's extra speedup from
+/// fewer, larger blocks. Default: 1/8 of a full config's training cost.
+pub fn block_unit_hours(calib: &Calibration) -> f64 {
+    calib.default_steps * calib.step_hours / 16.0
+}
+
+/// Run the discrete-event simulation.
+pub fn simulate(configs: &[SimConfig], calib: &Calibration, mode: SimMode,
+                nodes: usize, thr_acc: f64, stop_at_target: bool)
+                -> SimOutcome {
+    let nodes = nodes.max(1);
+    let block = matches!(mode, SimMode::Block(_));
+    // Tuning-block quality: multi-module blocks produce better inits,
+    // so assembled networks fine-tune in fewer steps (Table 5's
+    // mechanism). quality = fraction of module-units covered by
+    // multi-module blocks.
+    let quality = match &mode {
+        SimMode::Default => 0.0,
+        SimMode::Block(sel) => {
+            let total: usize = sel.pretrain_module_units();
+            let multi: usize = sel
+                .blocks
+                .iter()
+                .filter(|b| b.len() > 1)
+                .map(|b| b.len())
+                .sum();
+            if total == 0 {
+                0.0
+            } else {
+                multi as f64 / total as f64
+            }
+        }
+    };
+    // Pre-training phase (block mode): module-units spread over nodes.
+    let overhead_h = match &mode {
+        SimMode::Default => 0.0,
+        SimMode::Block(sel) => {
+            let jobs = sel.blocks.len() as f64;
+            let per = block_unit_hours(calib);
+            (jobs * per / nodes as f64).max(per)
+        }
+    };
+    // Event loop: node_free[i] = time node i becomes free.
+    let mut node_free = vec![overhead_h; nodes];
+    let mut completed: Vec<(f64, usize)> = Vec::new(); // (finish time, idx)
+    let mut stop_time: Option<f64> = None;
+    for (idx, cfg) in configs.iter().enumerate() {
+        // earliest-free node
+        let (ni, &start) = node_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        // If a winner already finished before this config could start,
+        // the scheduler stops dispatching.
+        if let Some(t) = stop_time {
+            if start >= t {
+                break;
+            }
+        }
+        let dur = calib.config_hours(cfg.id, block, quality);
+        let finish = start + dur;
+        node_free[ni] = finish;
+        completed.push((finish, idx));
+        let acc = calib.predict_acc(cfg.id, cfg.frac_pruned, block);
+        if stop_at_target && acc >= thr_acc {
+            let t = stop_time.get_or_insert(finish);
+            if finish < *t {
+                *t = finish;
+            }
+        }
+    }
+    completed.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let end = stop_time.unwrap_or_else(|| {
+        completed.last().map(|(t, _)| *t).unwrap_or(overhead_h)
+    });
+    let evaluated = completed.iter().filter(|(t, _)| *t <= end).count();
+    // Winner: smallest model among those completed by `end` that meet thr.
+    let winner = completed
+        .iter()
+        .filter(|(t, _)| *t <= end)
+        .map(|(_, i)| &configs[*i])
+        .filter(|c| {
+            calib.predict_acc(c.id, c.frac_pruned, block) >= thr_acc
+        })
+        .max_by(|a, b| {
+            a.frac_pruned.partial_cmp(&b.frac_pruned).unwrap()
+        });
+    SimOutcome {
+        configs_evaluated: evaluated.max(1),
+        hours: end,
+        winner_size_frac: winner.map(|c| 1.0 - c.frac_pruned),
+        overhead_frac: if end > 0.0 { overhead_h / end } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cocotune::blocks::{BlockSelection, TuningBlock};
+
+    fn blocks(units: usize) -> BlockSelection {
+        BlockSelection {
+            blocks: (0..units)
+                .map(|i| TuningBlock {
+                    start_module: i,
+                    rates: vec![1],
+                })
+                .collect(),
+            frequencies: vec![2; units],
+            grammar_rules: 0,
+        }
+    }
+
+    #[test]
+    fn subspace_sorted_smallest_first() {
+        let s = sample_sim_subspace(100, 1);
+        for w in s.windows(2) {
+            assert!(w[0].frac_pruned >= w[1].frac_pruned);
+        }
+    }
+
+    #[test]
+    fn block_mode_is_faster_and_finds_smaller_models() {
+        let calib = Calibration::paper_scale(0.85);
+        let cfgs = sample_sim_subspace(500, 7);
+        let thr = calib.base_acc; // alpha = 0
+        let sel = blocks(18);
+        let base = simulate(&cfgs, &calib, SimMode::Default, 1, thr, true);
+        let comp = simulate(&cfgs, &calib, SimMode::Block(&sel), 1, thr,
+                            true);
+        assert!(
+            comp.hours < base.hours,
+            "comp {} vs base {}",
+            comp.hours,
+            base.hours
+        );
+        assert!(comp.configs_evaluated <= base.configs_evaluated);
+        if let (Some(b), Some(c)) =
+            (base.winner_size_frac, comp.winner_size_frac)
+        {
+            assert!(c <= b + 1e-9);
+        }
+        assert!(comp.overhead_frac > 0.0);
+    }
+
+    #[test]
+    fn more_nodes_cut_wall_clock() {
+        let calib = Calibration::paper_scale(0.85);
+        let cfgs = sample_sim_subspace(200, 9);
+        let thr = calib.base_acc - 0.0;
+        let t1 = simulate(&cfgs, &calib, SimMode::Default, 1, thr, true);
+        let t16 = simulate(&cfgs, &calib, SimMode::Default, 16, thr, true);
+        assert!(t16.hours < t1.hours);
+    }
+
+    #[test]
+    fn no_stop_explores_everything() {
+        let calib = Calibration::paper_scale(0.85);
+        let cfgs = sample_sim_subspace(50, 3);
+        let out = simulate(&cfgs, &calib, SimMode::Default, 4, 2.0, false);
+        assert_eq!(out.configs_evaluated, 50);
+        assert!(out.winner_size_frac.is_none());
+    }
+
+    #[test]
+    fn lower_threshold_stops_sooner() {
+        let calib = Calibration::paper_scale(0.85);
+        let cfgs = sample_sim_subspace(300, 5);
+        let hard =
+            simulate(&cfgs, &calib, SimMode::Default, 1,
+                     calib.base_acc - 0.01, true);
+        let easy =
+            simulate(&cfgs, &calib, SimMode::Default, 1,
+                     calib.base_acc - 0.06, true);
+        assert!(easy.configs_evaluated <= hard.configs_evaluated);
+        assert!(easy.hours <= hard.hours);
+    }
+}

@@ -1,0 +1,19 @@
+//! CoCo-Tune: composability-based CNN pruning (paper §2.2).
+//!
+//! * `sequitur`    — hierarchical grammar inference over layer sequences
+//! * `blocks`      — tuning-block identification (paper's two heuristics)
+//! * `trainer`     — PJRT-driven training/eval loops (the real tier)
+//! * `pretrain`    — Teacher-Student concurrent block pre-training
+//! * `explore`     — smallest-first subspace exploration
+//! * `calib`       — behaviour model fitted from real-tier runs
+//! * `cluster`     — discrete-event replay of the paper's full protocol
+//! * `admm_driver` — CoCo-Gen's ADMM pattern-pruning training stage
+
+pub mod admm_driver;
+pub mod blocks;
+pub mod calib;
+pub mod cluster;
+pub mod explore;
+pub mod pretrain;
+pub mod sequitur;
+pub mod trainer;

@@ -1,0 +1,199 @@
+//! Teacher-Student tuning-block pre-training (paper §2.2.2, Fig. 10).
+//!
+//! The AOT `block_pretrain` artifact runs the full (teacher) model forward
+//! once per batch and trains pruned copies of ALL prunable modules
+//! concurrently against the teacher's activation maps — the paper's
+//! Fig. 10(b) structure, where teacher activations are shared across the
+//! students for free.
+//!
+//! One pre-training run covers every module at one pruning rate; running
+//! once per rate in Γ builds the full bank of
+//! (module, rate) -> pre-trained weights used by assembly.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::trainer::{config_masks, Config, ModelState, Trainer, RATES};
+use crate::data;
+use crate::runtime::manifest::DatasetSpec;
+use crate::runtime::{Executable, HostTensor};
+
+/// Bank of pre-trained tuning blocks: (module index, rate index) -> the
+/// module's parameter tensors (by student-param order).
+pub struct BlockBank {
+    /// bank[(module_idx, rate_idx)] -> Vec<(param name, tensor)>
+    pub blocks: HashMap<(usize, u8), Vec<(String, HostTensor)>>,
+    /// Pre-training cost in train-equivalent steps (for overhead
+    /// accounting in Table 3/4).
+    pub pretrain_steps: usize,
+    /// Reconstruction-loss curves per rate (step, total loss).
+    pub loss_curves: HashMap<u8, Vec<(usize, f32)>>,
+}
+
+/// Pre-train all prunable modules at every rate in Γ\{0}.
+pub fn pretrain_bank(trainer: &Trainer, teacher: &ModelState,
+                     ds: &DatasetSpec, steps_per_rate: usize, lr: f32,
+                     seed: u64) -> Result<BlockBank> {
+    let rt = trainer.rt;
+    let spec = &trainer.spec;
+    let exe: Arc<Executable> =
+        rt.load_model_artifact(&spec.name, "block_pretrain")?;
+    let size = rt.manifest.image_size;
+    let student_names = spec.student_params.clone();
+    // student params start as copies of the teacher's module params
+    let student_init: Vec<HostTensor> = student_names
+        .iter()
+        .map(|n| teacher.param(spec, n).expect("student param").clone())
+        .collect();
+
+    let mut bank = HashMap::new();
+    let mut loss_curves = HashMap::new();
+    let mut total_steps = 0usize;
+    for rate_idx in 1..RATES.len() as u8 {
+        if rate_idx > 3 {
+            break;
+        }
+        // uniform-rate config for mask construction
+        let cfg: Config = vec![rate_idx; spec.prunable_modules.len()];
+        let masks = config_masks(spec, teacher, &cfg);
+        let mut sparams = student_init.clone();
+        let mut svels: Vec<HostTensor> = sparams
+            .iter()
+            .map(|t| HostTensor::zeros(t.shape()))
+            .collect();
+        let mut curve = Vec::new();
+        for s in 0..steps_per_rate {
+            let batch = data::make_batch(
+                ds,
+                size,
+                spec.train_batch,
+                seed ^ (rate_idx as u64) << 32 ^ (s as u64 * 104729),
+            );
+            let mut inputs = Vec::new();
+            inputs.extend(teacher.params.iter().cloned());
+            inputs.extend(sparams.iter().cloned());
+            inputs.extend(svels.iter().cloned());
+            inputs.extend(masks.iter().cloned());
+            inputs.push(HostTensor::f32(
+                &[batch.n, batch.size, batch.size, 3],
+                batch.x.clone(),
+            ));
+            inputs.push(HostTensor::scalar_f32(lr));
+            let mut out = exe.run(&inputs)?;
+            let losses = out.pop().unwrap();
+            let total: f32 =
+                losses.as_f32()?.iter().sum();
+            curve.push((s, total));
+            let nv = out.split_off(sparams.len());
+            sparams = out;
+            svels = nv;
+            total_steps += 1;
+        }
+        loss_curves.insert(rate_idx, curve);
+        // Split the flat student params into per-module banks.
+        for (mi, module) in spec.prunable_modules.iter().enumerate() {
+            let prefix = format!("{module}.");
+            let entry: Vec<(String, HostTensor)> = student_names
+                .iter()
+                .zip(&sparams)
+                .filter(|(n, _)| n.starts_with(&prefix))
+                .map(|(n, t)| (n.clone(), t.clone()))
+                .collect();
+            bank.insert((mi, rate_idx), entry);
+        }
+    }
+    Ok(BlockBank {
+        blocks: bank,
+        pretrain_steps: total_steps,
+        loss_curves,
+    })
+}
+
+/// Assemble a block-trained network for `config`: start from the teacher
+/// weights, overwrite each prunable module's params with its pre-trained
+/// block at the module's rate (paper's "assembly step": initialize with
+/// the tuning-block weights).
+pub fn assemble(spec: &crate::runtime::ModelSpec, teacher: &ModelState,
+                bank: &BlockBank, config: &Config) -> ModelState {
+    let mut state = teacher.clone();
+    state.zero_vels();
+    for (mi, &rate_idx) in config.iter().enumerate() {
+        if rate_idx == 0 {
+            continue;
+        }
+        let Some(block) = bank.blocks.get(&(mi, rate_idx)) else {
+            continue;
+        };
+        for (name, tensor) in block {
+            if let Some(pi) =
+                spec.params.iter().position(|t| &t.name == name)
+            {
+                state.params[pi] = tensor.clone();
+            }
+        }
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{DType, TensorSpec};
+    use crate::runtime::ModelSpec;
+
+    fn spec2() -> ModelSpec {
+        let t = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.into(),
+            shape,
+            dtype: DType::F32,
+        };
+        ModelSpec {
+            name: "fake".into(),
+            input_shape: vec![16, 16, 3],
+            classes: 16,
+            params: vec![
+                t("m1.c.w", vec![3, 3, 4, 4]),
+                t("m2.c.w", vec![3, 3, 4, 4]),
+            ],
+            masks: vec![
+                t("m1.c.w", vec![3, 3, 4, 4]),
+                t("m2.c.w", vec![3, 3, 4, 4]),
+            ],
+            student_params: vec!["m1.c.w".into(), "m2.c.w".into()],
+            prunable_modules: vec!["m1".into(), "m2".into()],
+            flops: 1,
+            param_count: 288,
+            train_batch: 32,
+            artifacts: Default::default(),
+            modules: vec![],
+        }
+    }
+
+    #[test]
+    fn assemble_overwrites_only_configured_modules() {
+        let spec = spec2();
+        let teacher = ModelState::init(&spec, 3);
+        let mut bank = BlockBank {
+            blocks: HashMap::new(),
+            pretrain_steps: 0,
+            loss_curves: HashMap::new(),
+        };
+        let marked = HostTensor::f32(&[3, 3, 4, 4], vec![9.0; 144]);
+        bank.blocks
+            .insert((0, 2), vec![("m1.c.w".into(), marked.clone())]);
+        let st = assemble(&spec, &teacher, &bank, &vec![2, 0]);
+        assert_eq!(st.params[0].as_f32().unwrap()[0], 9.0);
+        // module 2 untouched
+        assert_eq!(
+            st.params[1].as_f32().unwrap(),
+            teacher.params[1].as_f32().unwrap()
+        );
+        // missing bank entry -> teacher weights kept
+        let st2 = assemble(&spec, &teacher, &bank, &vec![3, 3]);
+        assert_eq!(
+            st2.params[0].as_f32().unwrap(),
+            teacher.params[0].as_f32().unwrap()
+        );
+    }
+}

@@ -1,0 +1,476 @@
+//! PJRT-driven model training — the real tier of the CoCo-Tune
+//! experiments. Rust owns the training loop, data generation, masking and
+//! evaluation; the compute graph is the AOT-compiled `train_step`
+//! artifact. Python never runs here.
+
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+use crate::data;
+use crate::runtime::manifest::DatasetSpec;
+use crate::runtime::{Executable, HostTensor, ModelSpec, Runtime};
+use crate::util::rng::Rng;
+
+/// Pruning rates of the promising subspace (paper: Γ = {30%, 50%, 70%},
+/// rate index 0 = unpruned).
+pub const RATES: [f64; 4] = [0.0, 0.3, 0.5, 0.7];
+
+/// A pruned-network configuration: rate index per prunable module.
+pub type Config = Vec<u8>;
+
+/// Host-side parameter state of a model.
+#[derive(Clone)]
+pub struct ModelState {
+    pub params: Vec<HostTensor>,
+    pub vels: Vec<HostTensor>,
+}
+
+impl ModelState {
+    /// He-initialized fresh state.
+    pub fn init(spec: &ModelSpec, seed: u64) -> ModelState {
+        let mut rng = Rng::seed_from(seed);
+        let params = spec
+            .params
+            .iter()
+            .map(|t| {
+                let n = t.elements();
+                let fan_in: usize = match t.shape.len() {
+                    4 => t.shape[0] * t.shape[1] * t.shape[2],
+                    3 => t.shape[0] * t.shape[1],
+                    2 => t.shape[0],
+                    _ => 1,
+                };
+                let data = if t.name.ends_with(".b") {
+                    vec![0f32; n]
+                } else if t.shape.len() == 2 {
+                    // FC layers: Xavier at reduced gain keeps initial
+                    // logits small (stable with momentum SGD).
+                    let scale = (1.0 / fan_in as f64).sqrt() * 0.5;
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                } else {
+                    let scale = (2.0 / fan_in as f64).sqrt();
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                };
+                HostTensor::f32(&t.shape, data)
+            })
+            .collect::<Vec<_>>();
+        let vels = spec
+            .params
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape))
+            .collect();
+        ModelState { params, vels }
+    }
+
+    pub fn zero_vels(&mut self) {
+        for v in self.vels.iter_mut() {
+            if let HostTensor::F32 { data, .. } = v {
+                data.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+    }
+
+    /// Parameter tensor by name.
+    pub fn param<'a>(&'a self, spec: &ModelSpec, name: &str)
+                     -> Option<&'a HostTensor> {
+        spec.params
+            .iter()
+            .position(|t| t.name == name)
+            .map(|i| &self.params[i])
+    }
+}
+
+/// Filter-pruning masks for a configuration: within each prunable module,
+/// the FIRST conv's least-important output filters (L1 norm over the
+/// reference weights) are removed at the module's rate; the module's top
+/// layer stays unpruned (paper §2.2.3 practice).
+pub fn config_masks(spec: &ModelSpec, reference: &ModelState,
+                    config: &Config) -> Vec<HostTensor> {
+    assert_eq!(config.len(), spec.prunable_modules.len());
+    let mut masks: Vec<HostTensor> =
+        spec.masks.iter().map(|t| HostTensor::ones(&t.shape)).collect();
+    for (mi, module) in spec.prunable_modules.iter().enumerate() {
+        let rate = RATES[config[mi] as usize];
+        if rate == 0.0 {
+            continue;
+        }
+        // first mask of this module = its first conv
+        let prefix = format!("{module}.");
+        let Some(mask_idx) =
+            spec.masks.iter().position(|t| t.name.starts_with(&prefix))
+        else {
+            continue;
+        };
+        let tspec = &spec.masks[mask_idx];
+        let w = reference
+            .param(spec, &tspec.name)
+            .expect("reference param")
+            .as_f32()
+            .expect("f32 param");
+        let shape = &tspec.shape;
+        let cout = *shape.last().unwrap();
+        let per_filter = tspec.elements() / cout;
+        // L1 norm per output filter (last axis).
+        let mut norms = vec![0f64; cout];
+        for (i, v) in w.iter().enumerate() {
+            norms[i % cout] += v.abs() as f64;
+        }
+        let n_drop = ((rate * cout as f64).floor() as usize).min(cout - 1);
+        let mut order: Vec<usize> = (0..cout).collect();
+        order.sort_by(|&a, &b| norms[a].partial_cmp(&norms[b]).unwrap());
+        let dropped: std::collections::HashSet<usize> =
+            order.into_iter().take(n_drop).collect();
+        let mut m = vec![1f32; tspec.elements()];
+        for i in 0..tspec.elements() {
+            if dropped.contains(&(i % cout)) {
+                m[i] = 0.0;
+            }
+        }
+        let _ = per_filter;
+        masks[mask_idx] = HostTensor::f32(shape, m);
+        // Filter pruning also removes the consumers' input slices: the
+        // next conv in the module whose cin equals this conv's cout reads
+        // zero activations on the dropped channels, so those weights are
+        // dead — masking them is function-preserving and is how filter
+        // pruning actually shrinks the model (its real size saving).
+        // Only the immediately following conv is a known consumer
+        // (conv1->conv2 in res/vgg modules); branchy modules (inception)
+        // are left alone — a later conv with matching cin need not read
+        // this conv's output.
+        let later = mask_idx + 1;
+        if let Some(t2) = spec.masks.get(later) {
+            if t2.name.starts_with(&prefix)
+                && t2.shape.len() == 4
+                && t2.shape[2] == cout
+            {
+                let cout2 = t2.shape[3];
+                let mut m2 = masks[later].as_f32().unwrap().to_vec();
+                for (i, v) in m2.iter_mut().enumerate() {
+                    let ci = (i / cout2) % cout;
+                    if dropped.contains(&ci) {
+                        *v = 0.0;
+                    }
+                }
+                masks[later] = HostTensor::f32(&t2.shape, m2);
+            }
+        }
+    }
+    masks
+}
+
+/// Effective model size (surviving parameters) of a configuration.
+pub fn config_model_size(spec: &ModelSpec, masks: &[HostTensor]) -> u64 {
+    let mut dropped = 0u64;
+    for m in masks {
+        if let Ok(d) = m.as_f32() {
+            dropped += d.iter().filter(|v| **v == 0.0).count() as u64;
+        }
+    }
+    spec.param_count - dropped
+}
+
+/// One training run's outcome.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub losses: Vec<f32>,
+    pub final_acc: f64,
+    pub steps: usize,
+    /// Accuracy measured every `eval_every` steps (step, acc).
+    pub acc_curve: Vec<(usize, f64)>,
+}
+
+/// Training-loop options.
+#[derive(Debug, Clone)]
+pub struct TrainOpts {
+    pub steps: usize,
+    pub lr: f32,
+    pub eval_every: usize,
+    /// Test batches per evaluation (batch size = infer artifact's batch).
+    pub eval_batches: usize,
+    /// Stop early once test accuracy reaches this value (if set).
+    pub target_acc: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 200,
+            lr: 0.02,
+            eval_every: 50,
+            eval_batches: 12,
+            target_acc: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Trainer bound to one model's artifacts.
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub spec: ModelSpec,
+    train_exe: Arc<Executable>,
+    infer_exe: Arc<Executable>,
+    infer_batch: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Trainer<'rt>> {
+        let spec = rt.manifest.model(model)?.clone();
+        let train_exe = rt.load_model_artifact(model, "train_step")?;
+        let infer_exe = rt.load_model_artifact(model, "infer_b8")?;
+        let infer_batch = infer_exe
+            .spec
+            .inputs
+            .last()
+            .map(|t| t.shape[0])
+            .ok_or_else(|| anyhow!("infer artifact missing x"))?;
+        Ok(Trainer {
+            rt,
+            spec,
+            train_exe,
+            infer_exe,
+            infer_batch,
+        })
+    }
+
+    /// One SGD step; updates `state` in place; returns (loss, batch acc).
+    pub fn step(&self, state: &mut ModelState, masks: &[HostTensor],
+                batch: &data::Batch, lr: f32) -> Result<(f32, f32)> {
+        let np = state.params.len();
+        let mut inputs = Vec::with_capacity(2 * np + masks.len() + 3);
+        inputs.extend(state.params.iter().cloned());
+        inputs.extend(state.vels.iter().cloned());
+        inputs.extend(masks.iter().cloned());
+        inputs.push(HostTensor::f32(
+            &[batch.n, batch.size, batch.size, 3],
+            batch.x.clone(),
+        ));
+        inputs.push(HostTensor::i32(&[batch.n], batch.y.clone()));
+        inputs.push(HostTensor::scalar_f32(lr));
+        let mut out = self.train_exe.run(&inputs)?;
+        let acc = out.pop().unwrap().scalar()?;
+        let loss = out.pop().unwrap().scalar()?;
+        let vels = out.split_off(np);
+        state.params = out;
+        state.vels = vels;
+        Ok((loss, acc))
+    }
+
+    /// Test accuracy over `n_batches` generated test batches.
+    pub fn evaluate(&self, state: &ModelState, masks: &[HostTensor],
+                    ds: &DatasetSpec, n_batches: usize, seed: u64)
+                    -> Result<f64> {
+        let size = self.rt.manifest.image_size;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..n_batches {
+            let batch = data::make_batch(ds, size, self.infer_batch,
+                                         seed ^ (0xE5A1 + b as u64));
+            let mut inputs = Vec::new();
+            inputs.extend(state.params.iter().cloned());
+            inputs.extend(masks.iter().cloned());
+            inputs.push(HostTensor::f32(
+                &[batch.n, batch.size, batch.size, 3],
+                batch.x.clone(),
+            ));
+            let out = self.infer_exe.run(&inputs)?;
+            let logits = out[0].as_f32()?;
+            let classes = self.spec.classes;
+            for i in 0..batch.n {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(c, _)| c as i32)
+                    .unwrap();
+                if pred == batch.y[i] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Full training loop with periodic evaluation and optional early
+    /// stop at `target_acc`.
+    pub fn train(&self, state: &mut ModelState, masks: &[HostTensor],
+                 ds: &DatasetSpec, opts: &TrainOpts) -> Result<TrainResult> {
+        let size = self.rt.manifest.image_size;
+        let mut losses = Vec::with_capacity(opts.steps);
+        let mut acc_curve = Vec::new();
+        let mut steps_done = 0;
+        let mut final_acc = 0.0;
+        for s in 0..opts.steps {
+            let batch = data::make_batch(
+                ds,
+                size,
+                self.spec.train_batch,
+                opts.seed.wrapping_add(s as u64 * 7919),
+            );
+            let (loss, _) = self.step(state, masks, &batch, opts.lr)?;
+            losses.push(loss);
+            steps_done = s + 1;
+            if (s + 1) % opts.eval_every == 0 || s + 1 == opts.steps {
+                let acc = self.evaluate(state, masks, ds,
+                                        opts.eval_batches,
+                                        opts.seed ^ 0xDEAD)?;
+                acc_curve.push((s + 1, acc));
+                final_acc = acc;
+                if let Some(t) = opts.target_acc {
+                    if acc >= t {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(TrainResult {
+            losses,
+            final_acc,
+            steps: steps_done,
+            acc_curve,
+        })
+    }
+}
+
+/// Enumerate/sample a promising subspace of `n` configurations via random
+/// sampling (paper: random sampling of the pruning space, close-to-uniform
+/// size distribution), deduplicated, excluding the all-zero config.
+pub fn sample_subspace(n_modules: usize, n: usize, seed: u64)
+                       -> Vec<Config> {
+    let mut rng = Rng::seed_from(seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    let max_configs = 3usize.pow(n_modules as u32); // rates {30,50,70}
+    while out.len() < n.min(max_configs) {
+        let cfg: Config = (0..n_modules)
+            .map(|_| 1 + rng.below(3) as u8)
+            .collect();
+        if seen.insert(cfg.clone()) {
+            out.push(cfg);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_spec() -> ModelSpec {
+        use crate::runtime::manifest::{DType, TensorSpec};
+        ModelSpec {
+            name: "fake".into(),
+            input_shape: vec![16, 16, 3],
+            classes: 16,
+            params: vec![
+                TensorSpec {
+                    name: "m1.conv1.w".into(),
+                    shape: vec![3, 3, 4, 8],
+                    dtype: DType::F32,
+                },
+                TensorSpec {
+                    name: "m1.conv1.b".into(),
+                    shape: vec![8],
+                    dtype: DType::F32,
+                },
+                TensorSpec {
+                    name: "m1.conv2.w".into(),
+                    shape: vec![3, 3, 8, 8],
+                    dtype: DType::F32,
+                },
+            ],
+            masks: vec![
+                TensorSpec {
+                    name: "m1.conv1.w".into(),
+                    shape: vec![3, 3, 4, 8],
+                    dtype: DType::F32,
+                },
+                TensorSpec {
+                    name: "m1.conv2.w".into(),
+                    shape: vec![3, 3, 8, 8],
+                    dtype: DType::F32,
+                },
+            ],
+            student_params: vec![],
+            prunable_modules: vec!["m1".into()],
+            flops: 1,
+            param_count: 3 * 3 * 4 * 8 + 8 + 3 * 3 * 8 * 8,
+            train_batch: 32,
+            artifacts: Default::default(),
+            modules: vec![],
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let spec = fake_spec();
+        let a = ModelState::init(&spec, 7);
+        let b = ModelState::init(&spec, 7);
+        for (x, y) in a.params.iter().zip(&b.params) {
+            assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+        }
+        assert_eq!(a.params[0].shape(), &[3, 3, 4, 8]);
+        // bias init to zero
+        assert!(a.params[1].as_f32().unwrap().iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn config_masks_prune_first_conv_only() {
+        let spec = fake_spec();
+        let state = ModelState::init(&spec, 1);
+        let masks = config_masks(&spec, &state, &vec![3]); // 70%
+        let m1 = masks[0].as_f32().unwrap();
+        let m2 = masks[1].as_f32().unwrap();
+        // second conv keeps its weights except the input slices of the
+        // dropped filters (consumer pruning — function-preserving)
+        let cout2 = 8;
+        let alive_rows = m2
+            .chunks(cout2)
+            .filter(|row| row.iter().all(|v| *v == 1.0))
+            .count();
+        assert_eq!(alive_rows, 3 * 3 * 3); // kh*kw*(8-5 surviving cin)
+        // first conv: 70% of 8 filters -> 5 dropped
+        let cout = 8;
+        let mut dead = vec![true; cout];
+        for (i, v) in m1.iter().enumerate() {
+            if *v != 0.0 {
+                dead[i % cout] = false;
+            }
+        }
+        assert_eq!(dead.iter().filter(|d| **d).count(), 5);
+    }
+
+    #[test]
+    fn model_size_accounts_for_dropped() {
+        let spec = fake_spec();
+        let state = ModelState::init(&spec, 1);
+        let masks_full = config_masks(&spec, &state, &vec![0]);
+        assert_eq!(config_model_size(&spec, &masks_full), spec.param_count);
+        let masks = config_masks(&spec, &state, &vec![2]); // 50% -> 4 filters
+        // conv1 loses kh*kw*cin*4 weights; conv2 loses its 4 dead input
+        // slices kh*kw*4*cout2 (function-preserving consumer pruning).
+        let dropped = 3 * 3 * 4 * 4 + 3 * 3 * 4 * 8;
+        assert_eq!(
+            config_model_size(&spec, &masks),
+            spec.param_count - dropped as u64
+        );
+    }
+
+    #[test]
+    fn subspace_sampling_unique_and_nonzero() {
+        let s = sample_subspace(6, 100, 3);
+        assert_eq!(s.len(), 100);
+        let set: std::collections::HashSet<_> = s.iter().cloned().collect();
+        assert_eq!(set.len(), 100);
+        assert!(s.iter().all(|c| c.iter().all(|r| (1..=3).contains(r))));
+    }
+
+    #[test]
+    fn subspace_caps_at_space_size() {
+        let s = sample_subspace(2, 100, 3);
+        assert_eq!(s.len(), 9);
+    }
+}

@@ -1,0 +1,325 @@
+//! Pattern-aware execution-plan generation (the "compilation" half of the
+//! co-design, paper §2.1.3): filter-kernel reorder, per-layer scheme
+//! selection, tile auto-tuning. The output `ExecPlan` is what the exec
+//! engines consume.
+
+pub mod reorder;
+pub mod tuner;
+
+use crate::compress::{CsrLayer, DenseLayer, FkwLayer};
+use crate::ir::{LayerKind, ModelIR};
+use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
+use crate::util::rng::Rng;
+
+pub use tuner::TileConfig;
+
+/// Which executor strategy a conv layer uses.
+#[derive(Debug, Clone)]
+pub enum LayerPlan {
+    /// Dense direct conv (naive engine) or im2col (chosen by engine).
+    Dense(DenseLayer),
+    /// Non-structured sparse (CSR) conv.
+    Csr(CsrLayer),
+    /// Pattern + connectivity pruned, reordered, tuned (CoCo-Gen).
+    Fkw { layer: FkwLayer, tile: TileConfig },
+    /// Depthwise conv weights: w[c][ky][kx].
+    Depthwise { weights: Vec<f32>, bias: Vec<f32> },
+    /// Dense FC: w[cout][cin] + bias.
+    Fc { weights: Vec<f32>, bias: Vec<f32> },
+    /// No weights (pool/add/gap).
+    None,
+}
+
+/// A fully planned model: IR + per-layer weights/strategies.
+pub struct ExecPlan {
+    pub ir: ModelIR,
+    pub layers: Vec<LayerPlan>,
+    pub scheme: Scheme,
+}
+
+/// Global pruning/compilation scheme (the Fig. 5 "framework" axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Dense weights, direct loops (TFLite-CPU stand-in).
+    DenseNaive,
+    /// Dense weights, im2col+GEMM (TVM stand-in).
+    DenseIm2col,
+    /// Dense weights, Winograd F(2x2,3x3) for 3x3/s1 convs (MNN stand-in).
+    DenseWinograd,
+    /// Non-structured pruning + CSR execution.
+    SparseCsr { },
+    /// CoCo-Gen: pattern + connectivity pruning, reorder, LRE, tuning.
+    CocoGen,
+}
+
+/// Pruning hyper-parameters for plan building.
+#[derive(Debug, Clone, Copy)]
+pub struct PruneConfig {
+    /// Fraction of (cin,cout) kernels kept by connectivity pruning.
+    pub connectivity_keep: f64,
+    /// Fraction of weights kept by non-structured pruning (CSR scheme).
+    pub unstructured_keep: f64,
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        // 4/9 pattern keep * 0.55 connectivity ~= 4x conv weight reduction,
+        // the mid-range of the paper's pattern+connectivity operating points.
+        PruneConfig {
+            connectivity_keep: 0.55,
+            unstructured_keep: 0.25,
+        }
+    }
+}
+
+/// Deterministic random weights for a model IR (timing experiments are
+/// weight-value independent; accuracy experiments use PJRT-trained models).
+pub fn random_dense_weights(ir: &ModelIR, seed: u64) -> Vec<LayerPlan> {
+    let mut rng = Rng::seed_from(seed);
+    ir.layers
+        .iter()
+        .map(|l| match &l.kind {
+            LayerKind::Conv { kh, kw, cout, .. } => {
+                let n = kh * kw * l.input.c * cout;
+                let scale = (2.0 / (kh * kw * l.input.c) as f64).sqrt();
+                LayerPlan::Dense(DenseLayer {
+                    cout: *cout,
+                    cin: l.input.c,
+                    kh: *kh,
+                    kw: *kw,
+                    weights: (0..n)
+                        .map(|_| (rng.normal() * scale) as f32)
+                        .collect(),
+                    bias: (0..*cout).map(|_| rng.normal_f32() * 0.01)
+                        .collect(),
+                })
+            }
+            LayerKind::DwConv { .. } => LayerPlan::Depthwise {
+                weights: (0..9 * l.input.c)
+                    .map(|_| rng.normal_f32() * 0.3)
+                    .collect(),
+                bias: (0..l.input.c).map(|_| rng.normal_f32() * 0.01)
+                    .collect(),
+            },
+            LayerKind::Dense { cout, .. } => {
+                let cin = l.input.elements();
+                let scale = (2.0 / cin as f64).sqrt();
+                LayerPlan::Fc {
+                    weights: (0..cin * cout)
+                        .map(|_| (rng.normal() * scale) as f32)
+                        .collect(),
+                    bias: (0..*cout).map(|_| rng.normal_f32() * 0.01)
+                        .collect(),
+                }
+            }
+            _ => LayerPlan::None,
+        })
+        .collect()
+}
+
+/// Build an execution plan for (model, scheme): applies the scheme's
+/// pruning to every 3x3 conv, then the codegen passes (reorder + static
+/// tile heuristic) for the CoCo-Gen scheme. Use `autotune_plan` after
+/// this to replace the heuristic tiles with measured ones.
+pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
+                  seed: u64) -> ExecPlan {
+    let dense = random_dense_weights(ir, seed);
+    let layers = dense
+        .into_iter()
+        .zip(&ir.layers)
+        .map(|(plan, l)| match (&scheme, plan) {
+            (
+                Scheme::DenseNaive
+                | Scheme::DenseIm2col
+                | Scheme::DenseWinograd,
+                p,
+            ) => p,
+            (Scheme::SparseCsr { .. }, LayerPlan::Dense(d))
+                if l.is_conv3x3() =>
+            {
+                // Non-structured magnitude pruning, then CSR.
+                let mask = crate::patterns::connectivity::prune_unstructured(
+                    &d.weights,
+                    prune.unstructured_keep,
+                );
+                LayerPlan::Csr(CsrLayer::from_dense(&d, Some(&mask)))
+            }
+            (Scheme::SparseCsr { .. }, p) => p,
+            (Scheme::CocoGen, LayerPlan::Dense(d)) if l.is_conv3x3() => {
+                let conn = prune_conn_oihw(&d, prune.connectivity_keep);
+                let mut fkw = FkwLayer::from_dense(&d, &conn);
+                reorder::filter_kernel_reorder(&mut fkw);
+                let tile = tuner::default_tile(l.output.h, l.output.w);
+                LayerPlan::Fkw { layer: fkw, tile }
+            }
+            (Scheme::CocoGen, p) => p,
+        })
+        .collect();
+    ExecPlan {
+        ir: ir.clone(),
+        layers,
+        scheme,
+    }
+}
+
+/// Connectivity pruning over OIHW dense weights (helper: the pruning
+/// primitives take HWIO).
+pub fn prune_conn_oihw(d: &DenseLayer, keep: f64) -> ConnectivityMask {
+    let mut hwio = vec![0f32; d.weights.len()];
+    for co in 0..d.cout {
+        for ci in 0..d.cin {
+            for ky in 0..d.kh {
+                for kx in 0..d.kw {
+                    hwio[((ky * d.kw + kx) * d.cin + ci) * d.cout + co] =
+                        d.at(co, ci, ky, kx);
+                }
+            }
+        }
+    }
+    prune_connectivity(&hwio, d.kh, d.kw, d.cin, d.cout, keep)
+}
+
+/// Parameter auto-tuning (paper §2.1.3): per CoCo-Gen conv layer, sweep
+/// the reduced candidate set (both execution paths x tile shapes) on a
+/// synthetic input of the layer's real shape and keep the fastest.
+pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
+    let mut rng = Rng::seed_from(0xA070);
+    let layers: Vec<_> = plan
+        .ir
+        .layers
+        .iter()
+        .cloned()
+        .zip(plan.layers.iter_mut())
+        .collect();
+    for (lir, lp) in layers {
+        let LayerPlan::Fkw { layer, tile } = lp else { continue };
+        let LayerKind::Conv { stride, relu, .. } = lir.kind else {
+            continue;
+        };
+        let input = crate::exec::Tensor::random(
+            lir.input.c, lir.input.h, lir.input.w, &mut rng);
+        let mut best = *tile;
+        let mut best_t = f64::INFINITY;
+        for cand in tuner::quick_candidates(lir.output.h) {
+            // warm + best-of-2
+            let run = || {
+                std::hint::black_box(crate::exec::pattern::conv2d_auto(
+                    &input, layer, stride, relu, threads, cand,
+                ));
+            };
+            run();
+            let mut t = f64::INFINITY;
+            for _ in 0..2 {
+                let s = std::time::Instant::now();
+                run();
+                t = t.min(s.elapsed().as_secs_f64());
+            }
+            if t < best_t {
+                best_t = t;
+                best = cand;
+            }
+        }
+        *tile = best;
+    }
+}
+
+impl ExecPlan {
+    /// Surviving-FLOP ratio vs dense (the analytic speedup bound).
+    pub fn flop_keep_ratio(&self) -> f64 {
+        let mut dense = 0f64;
+        let mut kept = 0f64;
+        for (l, p) in self.ir.layers.iter().zip(&self.layers) {
+            let f = l.flops() as f64;
+            dense += f;
+            kept += match p {
+                LayerPlan::Fkw { layer, .. } => {
+                    f * layer.nnz() as f64
+                        / (9 * layer.cin * layer.cout) as f64
+                }
+                LayerPlan::Csr(c) => {
+                    f * c.nnz() as f64 / (9 * c.cin * c.cout) as f64
+                }
+                _ => f,
+            };
+        }
+        if dense == 0.0 {
+            1.0
+        } else {
+            kept / dense
+        }
+    }
+
+    /// Total weight storage of the plan in bytes.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|p| match p {
+                LayerPlan::Dense(d) => d.size_bytes(),
+                LayerPlan::Csr(c) => c.size_bytes(),
+                LayerPlan::Fkw { layer, .. } => layer.size_bytes(),
+                LayerPlan::Depthwise { weights, bias } => {
+                    (weights.len() + bias.len()) * 4
+                }
+                LayerPlan::Fc { weights, bias } => {
+                    (weights.len() + bias.len()) * 4
+                }
+                LayerPlan::None => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Chw, IrBuilder};
+
+    fn tiny_ir() -> ModelIR {
+        let mut b = IrBuilder::new("t", Chw::new(3, 16, 16));
+        b.conv("c1", 3, 8, 1, true)
+            .conv("c2", 3, 16, 2, true)
+            .gap("g")
+            .dense("fc", 10, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn plans_for_all_schemes() {
+        let ir = tiny_ir();
+        for scheme in [
+            Scheme::DenseNaive,
+            Scheme::DenseIm2col,
+            Scheme::DenseWinograd,
+            Scheme::SparseCsr {},
+            Scheme::CocoGen,
+        ] {
+            let plan = build_plan(&ir, scheme, PruneConfig::default(), 1);
+            assert_eq!(plan.layers.len(), ir.layers.len());
+        }
+    }
+
+    #[test]
+    fn cocogen_reduces_flops_and_bytes() {
+        let ir = tiny_ir();
+        let dense = build_plan(&ir, Scheme::DenseNaive,
+                               PruneConfig::default(), 1);
+        let coco = build_plan(&ir, Scheme::CocoGen,
+                              PruneConfig::default(), 1);
+        assert!(coco.flop_keep_ratio() < 0.5);
+        assert!(dense.flop_keep_ratio() == 1.0);
+        assert!(coco.weight_bytes() < dense.weight_bytes());
+    }
+
+    #[test]
+    fn deterministic_weights() {
+        let ir = tiny_ir();
+        let a = random_dense_weights(&ir, 7);
+        let b = random_dense_weights(&ir, 7);
+        match (&a[0], &b[0]) {
+            (LayerPlan::Dense(x), LayerPlan::Dense(y)) => {
+                assert_eq!(x.weights, y.weights);
+            }
+            _ => panic!("expected dense"),
+        }
+    }
+}

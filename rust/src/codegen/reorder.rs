@@ -1,0 +1,177 @@
+//! Filter-kernel reorder (paper §2.1.3): group filters with similar
+//! lengths and patterns so generated code has (a) minimal control-flow
+//! divergence — consecutive kernels share a pattern, so the same unrolled
+//! tap sequence serves long runs — and (b) balanced per-thread work, since
+//! adjacent filters have similar surviving-kernel counts.
+
+use crate::compress::{FkwKernel, FkwLayer};
+
+/// Sort key for a filter: (kernel count, dominant pattern, pattern
+/// histogram signature). Filters that compute alike become neighbours.
+fn filter_key(kernels: &[FkwKernel]) -> (usize, u8, u64) {
+    let mut hist = [0usize; 8];
+    for k in kernels {
+        hist[k.pattern as usize] += 1;
+    }
+    let dominant = hist
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| **c)
+        .map(|(p, _)| p as u8)
+        .unwrap_or(0);
+    // pack the histogram into a u64 signature (8 bits per bucket, capped)
+    let mut sig = 0u64;
+    for (i, c) in hist.iter().enumerate() {
+        sig |= ((*c).min(255) as u64) << (8 * i);
+    }
+    (kernels.len(), dominant, sig)
+}
+
+/// In-place filter-kernel reorder on an FKW layer:
+/// 1. within each filter, sort kernels by (pattern, ci) — consecutive
+///    kernels then share tap offsets (instruction-level parallelism);
+/// 2. across filters, sort by the filter key — thread-level load balance
+///    and pattern-run locality.
+pub fn filter_kernel_reorder(layer: &mut FkwLayer) {
+    let cout = layer.cout;
+    // Decompose into per-filter (original co, kernels, weights).
+    let mut filters: Vec<(u32, Vec<FkwKernel>, Vec<f32>)> =
+        Vec::with_capacity(cout);
+    for phys in 0..cout {
+        let lo = layer.offsets[phys] as usize;
+        let hi = layer.offsets[phys + 1] as usize;
+        let mut idx: Vec<usize> = (lo..hi).collect();
+        // kernel reorder within the filter
+        idx.sort_by_key(|&e| (layer.kernels[e].pattern, layer.kernels[e].ci));
+        let kernels: Vec<FkwKernel> =
+            idx.iter().map(|&e| layer.kernels[e]).collect();
+        let mut weights = Vec::with_capacity(kernels.len() * 4);
+        for &e in &idx {
+            weights.extend_from_slice(&layer.weights[e * 4..e * 4 + 4]);
+        }
+        filters.push((layer.filter_order[phys], kernels, weights));
+    }
+    // filter reorder
+    filters.sort_by_key(|(_, kernels, _)| filter_key(kernels));
+    // Re-assemble.
+    let mut order = Vec::with_capacity(cout);
+    let mut offsets = vec![0u32];
+    let mut kernels = Vec::with_capacity(layer.kernels.len());
+    let mut weights = Vec::with_capacity(layer.weights.len());
+    for (co, ks, ws) in filters {
+        order.push(co);
+        kernels.extend_from_slice(&ks);
+        weights.extend_from_slice(&ws);
+        offsets.push(kernels.len() as u32);
+    }
+    layer.filter_order = order;
+    layer.offsets = offsets;
+    layer.kernels = kernels;
+    layer.weights = weights;
+}
+
+/// Divergence metric: number of pattern switches while walking all kernels
+/// in execution order (lower = fewer control-flow transitions; the metric
+/// the reorder pass minimizes).
+pub fn pattern_switches(layer: &FkwLayer) -> usize {
+    let mut switches = 0;
+    let mut last: Option<u8> = None;
+    for f in 0..layer.cout {
+        for e in layer.offsets[f] as usize..layer.offsets[f + 1] as usize {
+            let p = layer.kernels[e].pattern;
+            if last != Some(p) {
+                switches += 1;
+                last = Some(p);
+            }
+        }
+    }
+    switches
+}
+
+/// Load-imbalance metric under the dynamic work-stealing scheduler: the
+/// mean within-task spread of per-filter kernel counts over `co_block`-
+/// sized task groups. When similar-cost filters are adjacent, each task's
+/// cost is uniform and the scheduler balances perfectly; a high spread
+/// means a task mixes cheap and expensive filters (divergent work).
+pub fn load_imbalance(layer: &FkwLayer, co_block: usize) -> f64 {
+    if layer.cout == 0 || co_block == 0 {
+        return 0.0;
+    }
+    let counts: Vec<f64> = (0..layer.cout)
+        .map(|f| (layer.offsets[f + 1] - layer.offsets[f]) as f64)
+        .collect();
+    let mut spreads = Vec::new();
+    for group in counts.chunks(co_block) {
+        let max = group.iter().cloned().fold(f64::MIN, f64::max);
+        let min = group.iter().cloned().fold(f64::MAX, f64::min);
+        spreads.push(max - min);
+    }
+    spreads.iter().sum::<f64>() / spreads.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{DenseLayer, FkwLayer};
+    use crate::patterns::connectivity::ConnectivityMask;
+    use crate::util::rng::Rng;
+
+    fn random_fkw(seed: u64, cout: usize, cin: usize, keep: f64) -> (DenseLayer, FkwLayer) {
+        let mut rng = Rng::seed_from(seed);
+        let d = DenseLayer {
+            cout,
+            cin,
+            kh: 3,
+            kw: 3,
+            weights: (0..cout * cin * 9).map(|_| rng.normal_f32()).collect(),
+            bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+        };
+        let conn = crate::codegen::prune_conn_oihw(&d, keep);
+        let _ = ConnectivityMask::all_alive(1, 1);
+        (d.clone(), FkwLayer::from_dense(&d, &conn))
+    }
+
+    #[test]
+    fn reorder_preserves_semantics() {
+        let (_, mut fkw) = random_fkw(11, 16, 12, 0.6);
+        let before = fkw.to_dense();
+        filter_kernel_reorder(&mut fkw);
+        let after = fkw.to_dense();
+        assert_eq!(before.weights, after.weights);
+        assert_eq!(before.bias, after.bias);
+    }
+
+    #[test]
+    fn reorder_reduces_pattern_switches() {
+        let (_, mut fkw) = random_fkw(13, 32, 32, 1.0);
+        let before = pattern_switches(&fkw);
+        filter_kernel_reorder(&mut fkw);
+        let after = pattern_switches(&fkw);
+        assert!(
+            after < before,
+            "switches before {before} after {after}"
+        );
+    }
+
+    #[test]
+    fn reorder_improves_or_keeps_balance() {
+        let (_, mut fkw) = random_fkw(17, 64, 16, 0.4);
+        let before = load_imbalance(&fkw, 8);
+        filter_kernel_reorder(&mut fkw);
+        let after = load_imbalance(&fkw, 8);
+        assert!(after <= before + 1e-9, "before {before} after {after}");
+    }
+
+    #[test]
+    fn kernels_sorted_by_pattern_within_filters() {
+        let (_, mut fkw) = random_fkw(19, 8, 24, 0.8);
+        filter_kernel_reorder(&mut fkw);
+        for f in 0..fkw.cout {
+            let ks = &fkw.kernels
+                [fkw.offsets[f] as usize..fkw.offsets[f + 1] as usize];
+            for w in ks.windows(2) {
+                assert!(w[0].pattern <= w[1].pattern);
+            }
+        }
+    }
+}

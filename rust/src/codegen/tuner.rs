@@ -1,0 +1,150 @@
+//! Parameter auto-tuning (paper §2.1.3): per-layer sweep over execution
+//! tile shapes. On mobile GPUs the paper tunes memory placement, tiling
+//! and loop permutation; the CPU analogue here is (output-row tile height,
+//! filter block) for the pattern executor, chosen by microbenchmark.
+
+use std::time::Instant;
+
+/// Tile configuration for the pattern conv executor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Output rows processed per (filter, row-tile) step; bounds the input
+    /// rows resident in cache (the LRE working set).
+    pub h_tile: usize,
+    /// Filters processed per parallel task (thread granularity).
+    pub co_block: usize,
+    /// Execution path: row-AXPY with LRE tiling (false) or the shared
+    /// shifted-input GEMM lowering (true). Chosen by the auto-tuner;
+    /// the static default uses the measured regime split (deep layers
+    /// with small spatial dims favour the GEMM path).
+    pub use_gemm: bool,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig {
+            h_tile: 8,
+            co_block: 4,
+            use_gemm: false,
+        }
+    }
+}
+
+/// Static heuristic used when no microbenchmark has run: keep the row
+/// tile's input working set under ~L1/2.
+pub fn default_tile(h_out: usize, w_out: usize) -> TileConfig {
+    TileConfig {
+        h_tile: h_out.clamp(1, 8),
+        co_block: 4,
+        // measured regime split (see EXPERIMENTS.md §Perf): short rows
+        // amortize the shared-U build; long rows favour row-AXPY LRE
+        use_gemm: h_out * w_out <= 512,
+    }
+}
+
+/// Candidate grid for the sweep.
+pub fn candidates(h_out: usize) -> Vec<TileConfig> {
+    let mut out = Vec::new();
+    for h in [1usize, 2, 4, 8, 16] {
+        if h > h_out.max(1) {
+            continue;
+        }
+        for co in [1usize, 2, 4, 8] {
+            out.push(TileConfig {
+                h_tile: h,
+                co_block: co,
+                use_gemm: false,
+            });
+        }
+    }
+    // the GEMM path has no tile parameters — one candidate
+    out.push(TileConfig {
+        h_tile: 1,
+        co_block: 1,
+        use_gemm: true,
+    });
+    if out.is_empty() {
+        out.push(TileConfig::default());
+    }
+    out
+}
+
+/// Reduced sweep used at plan-build time (keeps deployment compile fast):
+/// the GEMM path + the 6 strongest AXPY tiles from the full sweep.
+pub fn quick_candidates(h_out: usize) -> Vec<TileConfig> {
+    let mut out = vec![TileConfig {
+        h_tile: 1,
+        co_block: 1,
+        use_gemm: true,
+    }];
+    for h in [4usize, 8, 16] {
+        if h > h_out.max(1) && h != 4 {
+            continue;
+        }
+        for co in [2usize, 4] {
+            out.push(TileConfig {
+                h_tile: h.min(h_out.max(1)),
+                co_block: co,
+                use_gemm: false,
+            });
+        }
+    }
+    out.dedup();
+    out
+}
+
+/// Auto-tune: run `run(cfg)` for each candidate (each candidate measured
+/// `reps` times, best-of), return the fastest config and the measured
+/// table for reporting.
+pub fn autotune<F>(h_out: usize, reps: usize, mut run: F)
+                   -> (TileConfig, Vec<(TileConfig, f64)>)
+where
+    F: FnMut(TileConfig),
+{
+    let mut results = Vec::new();
+    for cfg in candidates(h_out) {
+        run(cfg); // warm
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t = Instant::now();
+            run(cfg);
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        results.push((cfg, best));
+    }
+    let best = results
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(c, _)| *c)
+        .unwrap_or_default();
+    (best, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_respect_bounds() {
+        for c in candidates(4) {
+            assert!(c.h_tile <= 4);
+            assert!(c.co_block >= 1);
+        }
+        assert!(!candidates(0).is_empty());
+    }
+
+    #[test]
+    fn autotune_picks_fastest() {
+        // Synthetic cost: h_tile=4, co_block=2 is fastest.
+        let (best, table) = autotune(16, 3, |cfg| {
+            let cost = (cfg.h_tile as i64 - 4).unsigned_abs() as u64
+                + (cfg.co_block as i64 - 2).unsigned_abs() as u64;
+            std::thread::sleep(std::time::Duration::from_micros(
+                50 + 300 * cost,
+            ));
+        });
+        assert!(!table.is_empty());
+        assert_eq!(best.h_tile, 4, "{table:?}");
+        assert_eq!(best.co_block, 2, "{table:?}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Dynamic batcher: groups incoming requests into fixed-capacity batches,
+//! flushing on either a full batch or a deadline — the standard serving
+//! trade between throughput (big batches) and tail latency (short waits).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush a non-empty batch this long after its first request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Pull one batch from `rx` under `policy`. Returns None when the channel
+/// is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy)
+                     -> Option<Vec<T>> {
+    // Block for the first element.
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn flushes_full_batch_immediately() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+        };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn returns_none_on_closed_channel() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,87 @@
+//! Serving metrics: request counts, latency percentiles, batch sizes.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats;
+
+#[derive(Default)]
+struct Inner {
+    latencies_s: Vec<f64>,
+    queue_waits_s: Vec<f64>,
+    batch_sizes: Vec<f64>,
+    completed: u64,
+    rejected: u64,
+}
+
+/// Thread-safe metrics sink.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// A point-in-time summary.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub completed: u64,
+    pub rejected: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_queue_ms: f64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, total: Duration, queue_wait: Duration,
+                  batch_size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_s.push(total.as_secs_f64());
+        g.queue_waits_s.push(queue_wait.as_secs_f64());
+        g.batch_sizes.push(batch_size as f64);
+        g.completed += 1;
+    }
+
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn summary(&self) -> Summary {
+        let g = self.inner.lock().unwrap();
+        Summary {
+            completed: g.completed,
+            rejected: g.rejected,
+            p50_ms: stats::percentile(&g.latencies_s, 50.0) * 1e3,
+            p99_ms: stats::percentile(&g.latencies_s, 99.0) * 1e3,
+            mean_queue_ms: stats::mean(&g.queue_waits_s) * 1e3,
+            mean_batch: stats::mean(&g.batch_sizes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record(
+                Duration::from_millis(i),
+                Duration::from_millis(i / 2),
+                4,
+            );
+        }
+        m.record_rejected();
+        let s = m.summary();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.rejected, 1);
+        assert!((s.p50_ms - 50.5).abs() < 1.0);
+        assert!(s.p99_ms > 98.0);
+        assert_eq!(s.mean_batch, 4.0);
+    }
+}

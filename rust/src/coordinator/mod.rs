@@ -1,0 +1,214 @@
+//! Serving coordinator — the L3 request path. A leader thread owns the
+//! dynamic batcher; the worker thread owns the PJRT runtime (xla handles
+//! are thread-affine, so the worker creates its own client and compiles
+//! the artifact during startup); clients submit images and receive
+//! predictions over channels. Python is never on this path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+pub use batcher::BatchPolicy;
+pub use metrics::{Metrics, Summary};
+
+/// A classification request: one NHWC image (flattened) + reply channel.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Prediction>,
+}
+
+/// The response.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub class: usize,
+    pub score: f32,
+    pub latency_ms: f64,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    image_elems: usize,
+}
+
+impl Client {
+    /// Submit an image; returns the receiver for the prediction.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Prediction>> {
+        anyhow::ensure!(
+            image.len() == self.image_elems,
+            "image has {} elements, model wants {}",
+            image.len(),
+            self.image_elems
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                image,
+                enqueued: Instant::now(),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        Ok(rrx)
+    }
+}
+
+/// Serving options.
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub policy: BatchPolicy,
+    /// Explicit parameter tensors (trained weights); deterministic-random
+    /// init when None.
+    pub params: Option<Vec<HostTensor>>,
+}
+
+impl ServeConfig {
+    pub fn new(model: &str) -> ServeConfig {
+        ServeConfig {
+            artifacts_dir: Runtime::default_dir(),
+            model: model.to_string(),
+            policy: BatchPolicy::default(),
+            params: None,
+        }
+    }
+}
+
+/// The serving coordinator for one model.
+pub struct Coordinator {
+    client: Client,
+    pub metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the worker; blocks until its runtime is initialized and the
+    /// `infer_b{max_batch}` artifact is compiled.
+    pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<usize>>();
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            worker_main(cfg, rx, init_tx, m);
+        });
+        let image_elems = init_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during init"))??;
+        Ok(Coordinator {
+            client: Client { tx, image_elems },
+            metrics,
+            worker: Some(worker),
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Stop accepting requests and join the worker. All outstanding
+    /// Client clones must be dropped first, or this blocks until they
+    /// are.
+    pub fn shutdown(mut self) -> Summary {
+        drop(self.client);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.summary()
+    }
+}
+
+fn worker_main(cfg: ServeConfig, rx: Receiver<Request>,
+               init_tx: Sender<Result<usize>>, m: Arc<Metrics>) {
+    // Everything PJRT lives on this thread.
+    let setup = (|| -> Result<_> {
+        let rt = Runtime::new(&cfg.artifacts_dir)?;
+        let spec = rt.manifest.model(&cfg.model)?.clone();
+        let art = format!("infer_b{}", cfg.policy.max_batch);
+        let exe = rt.load_model_artifact(&cfg.model, &art)?;
+        let params = cfg.params.clone().unwrap_or_else(|| {
+            crate::cocotune::trainer::ModelState::init(&spec, 0x5EED)
+                .params
+        });
+        let masks: Vec<HostTensor> = spec
+            .masks
+            .iter()
+            .map(|t| HostTensor::ones(&t.shape))
+            .collect();
+        // Hot-path optimization: params + masks live on the device; only
+        // the image batch is uploaded per execution (EXPERIMENTS.md §Perf).
+        let mut prefix_host = params.clone();
+        prefix_host.extend(masks.iter().cloned());
+        let prefix = exe.upload_prefix(rt.client(), &prefix_host)?;
+        Ok((rt, spec, exe, prefix))
+    })();
+    let (rt, spec, exe, prefix) = match setup {
+        Ok(v) => {
+            let elems: usize = v.1.input_shape.iter().product();
+            let _ = init_tx.send(Ok(elems));
+            v
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    let (h, w, c) = (
+        spec.input_shape[0],
+        spec.input_shape[1],
+        spec.input_shape[2],
+    );
+    let image_elems = h * w * c;
+    let classes = spec.classes;
+    let batch_cap = cfg.policy.max_batch;
+    while let Some(mut batch) = batcher::next_batch(&rx, &cfg.policy) {
+        let t0 = Instant::now();
+        let n = batch.len();
+        // Pad to the compiled batch size.
+        let mut x = vec![0f32; batch_cap * image_elems];
+        for (i, r) in batch.iter().enumerate() {
+            x[i * image_elems..(i + 1) * image_elems]
+                .copy_from_slice(&r.image);
+        }
+        let suffix = [HostTensor::f32(&[batch_cap, h, w, c], x)];
+        let out = match exe.run_with_prefix(rt.client(), &prefix, &suffix) {
+            Ok(o) => o,
+            Err(_) => {
+                for r in batch.drain(..) {
+                    drop(r);
+                    m.record_rejected();
+                }
+                continue;
+            }
+        };
+        let logits = out[0].as_f32().unwrap();
+        let done = Instant::now();
+        for (i, r) in batch.drain(..).enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let (class, score) = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(cl, s)| (cl, *s))
+                .unwrap();
+            let total = done - r.enqueued;
+            m.record(total, t0 - r.enqueued, n);
+            let _ = r.reply.send(Prediction {
+                class,
+                score,
+                latency_ms: total.as_secs_f64() * 1e3,
+            });
+        }
+    }
+}

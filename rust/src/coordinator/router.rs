@@ -1,0 +1,178 @@
+//! Request router: dispatches requests across model variants/replicas.
+//!
+//! The co-design story at serving time: CoCo-Gen produces multiple
+//! deployment variants of the same model (dense, pattern-pruned at
+//! several rates) with different latency/accuracy points; the router
+//! picks a variant per request according to its SLA class and balances
+//! load across replicas (least-outstanding-requests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Request SLA class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sla {
+    /// Minimize latency: route to the most-pruned (fastest) variant.
+    Realtime,
+    /// Balanced default.
+    Standard,
+    /// Maximize accuracy: dense variant.
+    Quality,
+}
+
+/// One routable backend.
+pub struct Backend {
+    pub name: String,
+    /// Expected single-batch latency (ms) — from the tuner/bench.
+    pub latency_ms: f64,
+    /// Expected accuracy of this variant.
+    pub accuracy: f64,
+    outstanding: AtomicU64,
+}
+
+impl Backend {
+    pub fn new(name: &str, latency_ms: f64, accuracy: f64) -> Backend {
+        Backend {
+            name: name.to_string(),
+            latency_ms,
+            accuracy,
+            outstanding: AtomicU64::new(0),
+        }
+    }
+    pub fn begin(&self) {
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn end(&self) {
+        self.outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+    pub fn load(&self) -> u64 {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+}
+
+/// The router: SLA-filtered, least-loaded selection.
+pub struct Router {
+    backends: Vec<Backend>,
+}
+
+impl Router {
+    pub fn new(backends: Vec<Backend>) -> Router {
+        assert!(!backends.is_empty());
+        Router { backends }
+    }
+
+    /// Candidate set for an SLA class: Realtime = fastest third,
+    /// Quality = most-accurate third, Standard = all.
+    fn candidates(&self, sla: Sla) -> Vec<usize> {
+        let n = self.backends.len();
+        let k = n.div_ceil(3);
+        let mut idx: Vec<usize> = (0..n).collect();
+        match sla {
+            Sla::Realtime => {
+                idx.sort_by(|&a, &b| {
+                    self.backends[a]
+                        .latency_ms
+                        .partial_cmp(&self.backends[b].latency_ms)
+                        .unwrap()
+                });
+                idx.truncate(k);
+            }
+            Sla::Quality => {
+                idx.sort_by(|&a, &b| {
+                    self.backends[b]
+                        .accuracy
+                        .partial_cmp(&self.backends[a].accuracy)
+                        .unwrap()
+                });
+                idx.truncate(k);
+            }
+            Sla::Standard => {}
+        }
+        idx
+    }
+
+    /// Pick a backend for `sla`: least outstanding load among candidates,
+    /// ties broken by latency.
+    pub fn route(&self, sla: Sla) -> &Backend {
+        let cands = self.candidates(sla);
+        let best = cands
+            .into_iter()
+            .min_by(|&a, &b| {
+                let ba = &self.backends[a];
+                let bb = &self.backends[b];
+                ba.load()
+                    .cmp(&bb.load())
+                    .then(
+                        ba.latency_ms
+                            .partial_cmp(&bb.latency_ms)
+                            .unwrap(),
+                    )
+            })
+            .unwrap();
+        &self.backends[best]
+    }
+
+    pub fn backends(&self) -> &[Backend] {
+        &self.backends
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn mk() -> Router {
+        Router::new(vec![
+            Backend::new("dense", 10.0, 0.95),
+            Backend::new("pattern-3x", 4.0, 0.93),
+            Backend::new("pattern-8x", 2.0, 0.90),
+        ])
+    }
+
+    #[test]
+    fn realtime_prefers_fastest() {
+        let r = mk();
+        assert_eq!(r.route(Sla::Realtime).name, "pattern-8x");
+    }
+
+    #[test]
+    fn quality_prefers_most_accurate() {
+        let r = mk();
+        assert_eq!(r.route(Sla::Quality).name, "dense");
+    }
+
+    #[test]
+    fn standard_balances_by_load() {
+        let r = mk();
+        // Load up the fastest backend; Standard must avoid it.
+        let fast = r.route(Sla::Realtime);
+        fast.begin();
+        fast.begin();
+        let chosen = r.route(Sla::Standard);
+        assert_ne!(chosen.name, "pattern-8x");
+        fast.end();
+        fast.end();
+    }
+
+    #[test]
+    fn load_accounting_round_trips() {
+        prop::check("router-load", 50, |g| {
+            let r = mk();
+            let n = g.usize(0, 20);
+            let b = r.route(Sla::Standard);
+            for _ in 0..n {
+                b.begin();
+            }
+            if b.load() != n as u64 {
+                return Err("load mismatch".into());
+            }
+            for _ in 0..n {
+                b.end();
+            }
+            if b.load() != 0 {
+                return Err("load not drained".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Synthetic fine-grained classification datasets — the Rust twin of
+//! python/compile/data.py (parameters read from the manifest so the two
+//! sides share one source of truth). Class-conditional oriented gratings
+//! with per-dataset noise/frequency difficulty; NHWC f32 batches shaped
+//! for the AOT train/infer artifacts.
+
+use crate::runtime::manifest::DatasetSpec;
+use crate::util::rng::Rng;
+
+/// A generated batch: x is NHWC [n, size, size, 3] flattened, y is [n].
+pub struct Batch {
+    pub n: usize,
+    pub size: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+/// Deterministic per-class parameters (mirror of data.py::class_params).
+pub fn class_params(spec: &DatasetSpec, c: usize) -> (f64, f64, [f32; 3]) {
+    let classes = spec.classes as f64;
+    let angle = std::f64::consts::PI * c as f64 / classes;
+    let freq = spec.freq_base * (1.0 + 0.5 * (c % 4) as f64 / 4.0);
+    let t = 2.0 * std::f64::consts::PI * c as f64 / classes;
+    let tint = [
+        (0.5 + 0.5 * t.sin()) as f32,
+        (0.5 + 0.5 * (t + 2.1).sin()) as f32,
+        (0.5 + 0.5 * (t + 4.2).sin()) as f32,
+    ];
+    (angle, freq, tint)
+}
+
+/// Generate a batch of `n` images at `size`x`size` for dataset `spec`.
+pub fn make_batch(spec: &DatasetSpec, size: usize, n: usize, seed: u64)
+                  -> Batch {
+    let mut rng = Rng::seed_from(seed ^ fx(spec.name.as_bytes()));
+    let mut x = vec![0f32; n * size * size * 3];
+    let mut y = vec![0i32; n];
+    for i in 0..n {
+        let c = rng.below(spec.classes);
+        y[i] = c as i32;
+        let (angle, freq, tint) = class_params(spec, c);
+        let a = angle + rng.normal() * spec.angle_jitter;
+        let phase = rng.range_f64(0.0, 2.0 * std::f64::consts::PI);
+        let (ca, sa) = (a.cos(), a.sin());
+        for yy in 0..size {
+            for xx in 0..size {
+                let u = xx as f64 / size as f64;
+                let v = yy as f64 / size as f64;
+                let g = (2.0 * std::f64::consts::PI * freq
+                    * (u * ca + v * sa)
+                    + phase)
+                    .sin();
+                for ch in 0..3 {
+                    let base =
+                        0.5 + 0.35 * g as f32 * tint[ch];
+                    let noisy = base
+                        + (rng.normal() * spec.noise) as f32;
+                    x[((i * size + yy) * size + xx) * 3 + ch] =
+                        noisy.clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Batch { n, size, x, y }
+}
+
+/// Epoch iterator: yields `steps` batches with distinct derived seeds.
+pub fn batches(spec: &DatasetSpec, size: usize, batch: usize, steps: usize,
+               seed: u64) -> Vec<Batch> {
+    (0..steps)
+        .map(|s| make_batch(spec, size, batch, seed.wrapping_add(s as u64 * 7919)))
+        .collect()
+}
+
+fn fx(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec {
+            name: "synflowers".into(),
+            classes: 16,
+            noise: 0.1,
+            freq_base: 1.5,
+            angle_jitter: 0.05,
+            train: 2048,
+            test: 512,
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let b = make_batch(&spec(), 16, 32, 0);
+        assert_eq!(b.x.len(), 32 * 16 * 16 * 3);
+        assert_eq!(b.y.len(), 32);
+        assert!(b.x.iter().all(|v| (0.0..=1.0).contains(v)));
+        assert!(b.y.iter().all(|c| (0..16).contains(c)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_batch(&spec(), 16, 8, 42);
+        let b = make_batch(&spec(), 16, 8, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        let c = make_batch(&spec(), 16, 8, 43);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn classes_have_distinct_signatures() {
+        // Mean image of two different classes must differ substantially.
+        let mut s = spec();
+        s.noise = 0.0;
+        s.angle_jitter = 0.0;
+        let b = make_batch(&s, 16, 256, 1);
+        let mut means = vec![vec![0f64; 16 * 16 * 3]; 16];
+        let mut counts = vec![0usize; 16];
+        for i in 0..b.n {
+            let c = b.y[i] as usize;
+            counts[c] += 1;
+            for j in 0..16 * 16 * 3 {
+                means[c][j] += b.x[i * 16 * 16 * 3 + j] as f64;
+            }
+        }
+        let c0 = (0..16).find(|&c| counts[c] > 3).unwrap();
+        let c1 = (c0 + 1..16).find(|&c| counts[c] > 3).unwrap();
+        let d: f64 = means[c0]
+            .iter()
+            .zip(&means[c1])
+            .map(|(a, b)| (a / counts[c0] as f64 - b / counts[c1] as f64).abs())
+            .sum::<f64>()
+            / (16.0 * 16.0 * 3.0);
+        assert!(d > 0.02, "class means too similar: {d}");
+    }
+}

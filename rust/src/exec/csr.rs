@@ -1,0 +1,114 @@
+//! CSR sparse convolution — what non-structured pruning forces on the
+//! executor (paper §2.1.1): per-weight index decoding, irregular access,
+//! no tap-level unrolling. Deliberately representative, not crippled —
+//! rows are still walked in AXPY form where possible.
+
+use crate::compress::CsrLayer;
+use crate::exec::tensor::{same_pad, Tensor};
+use crate::util::threadpool;
+
+/// Sparse conv2d from a CSR layer, SAME padding, optional fused ReLU.
+pub fn conv2d(input: &Tensor, layer: &CsrLayer, stride: usize, relu: bool,
+              threads: usize) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
+    let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let hw = h_out * w_out;
+    let khw = layer.kh * layer.kw;
+    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+        plane.fill(layer.bias[co]);
+        for e in layer.row_ptr[co] as usize..layer.row_ptr[co + 1] as usize {
+            // Decode the flat column index — the per-weight cost that
+            // pattern storage avoids.
+            let col = layer.col_idx[e] as usize;
+            let ci = col / khw;
+            let rem = col % khw;
+            let ky = rem / layer.kw;
+            let kx = rem % layer.kw;
+            let w = layer.values[e];
+            let in_plane = input.plane(ci);
+            for y in 0..h_out {
+                let iy = (y * stride + ky) as isize - pad_h as isize;
+                if iy < 0 || iy >= input.h as isize {
+                    continue;
+                }
+                let in_row = &in_plane
+                    [iy as usize * input.w..(iy as usize + 1) * input.w];
+                let out_row = &mut plane[y * w_out..(y + 1) * w_out];
+                if stride == 1 {
+                    let x_lo = pad_w.saturating_sub(kx);
+                    let x_hi = (input.w + pad_w - kx).min(w_out);
+                    if x_lo < x_hi {
+                        let src0 = x_lo + kx - pad_w;
+                        for (o, i) in out_row[x_lo..x_hi]
+                            .iter_mut()
+                            .zip(&in_row[src0..src0 + (x_hi - x_lo)])
+                        {
+                            *o += w * *i;
+                        }
+                    }
+                } else {
+                    for (x, o) in out_row.iter_mut().enumerate() {
+                        let ix =
+                            (x * stride + kx) as isize - pad_w as isize;
+                        if ix >= 0 && (ix as usize) < input.w {
+                            *o += w * in_row[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+        if relu {
+            for v in plane.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{CsrLayer, DenseLayer};
+    use crate::exec::naive;
+    use crate::patterns::connectivity::prune_unstructured;
+    use crate::util::prop;
+
+    #[test]
+    fn matches_naive_on_pruned_weights() {
+        prop::check("csr-vs-naive", 20, |g| {
+            let cin = g.usize(1, 6);
+            let cout = g.usize(1, 8);
+            let h = g.usize(3, 12);
+            let w = g.usize(3, 12);
+            let stride = *g.pick(&[1usize, 2]);
+            let keep = g.f64(0.1, 0.9);
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let mut dense = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let mask = prune_unstructured(&dense.weights, keep);
+            for (wv, m) in dense.weights.iter_mut().zip(&mask) {
+                if !m {
+                    *wv = 0.0;
+                }
+            }
+            let csr = CsrLayer::from_dense(&dense, None);
+            let got = conv2d(&input, &csr, stride, false, g.usize(1, 4));
+            let want = naive::conv2d(&input, &dense, stride, false, 1);
+            if got.max_abs_diff(&want) > 1e-4 {
+                return Err(format!("diff {}", got.max_abs_diff(&want)));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,148 @@
+//! im2col + GEMM convolution — the "optimizing-compiler" dense baseline
+//! (stands in for TVM's default CPU conv lowering in Fig. 5).
+
+use crate::compress::DenseLayer;
+use crate::exec::gemm::gemm;
+use crate::exec::tensor::{same_pad, Tensor};
+
+/// Scratch buffer reused across layers to avoid re-allocating the im2col
+/// matrix per call (part of the fair-baseline treatment).
+#[derive(Default)]
+pub struct Im2colScratch {
+    buf: Vec<f32>,
+}
+
+/// Dense conv via im2col + GEMM, SAME padding, optional fused ReLU.
+pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
+              threads: usize, scratch: &mut Im2colScratch) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
+    let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
+    let hw = h_out * w_out;
+    let kdim = layer.cin * layer.kh * layer.kw;
+
+    // Build the [K][HW] patch matrix.
+    scratch.buf.clear();
+    scratch.buf.resize(kdim * hw, 0.0);
+    let cols = &mut scratch.buf;
+    for ci in 0..layer.cin {
+        let plane = input.plane(ci);
+        for ky in 0..layer.kh {
+            for kx in 0..layer.kw {
+                let krow = (ci * layer.kh + ky) * layer.kw + kx;
+                let dst = &mut cols[krow * hw..(krow + 1) * hw];
+                for y in 0..h_out {
+                    let iy = (y * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= input.h as isize {
+                        continue; // stays zero
+                    }
+                    let src_row =
+                        &plane[iy as usize * input.w..(iy as usize + 1)
+                            * input.w];
+                    let dst_row = &mut dst[y * w_out..(y + 1) * w_out];
+                    if stride == 1 {
+                        // contiguous copy with border clamp
+                        let x_lo = pad_w.saturating_sub(kx);
+                        let x_hi =
+                            (input.w + pad_w - kx).min(w_out);
+                        if x_lo < x_hi {
+                            let src_lo = x_lo + kx - pad_w;
+                            dst_row[x_lo..x_hi].copy_from_slice(
+                                &src_row[src_lo..src_lo + (x_hi - x_lo)],
+                            );
+                        }
+                    } else {
+                        for (x, d) in dst_row.iter_mut().enumerate() {
+                            let ix = (x * stride + kx) as isize
+                                - pad_w as isize;
+                            if ix >= 0 && (ix as usize) < input.w {
+                                *d = src_row[ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // C[cout][HW] = W[cout][K] x cols[K][HW]
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    // bias init
+    for co in 0..layer.cout {
+        out.plane_mut(co).fill(layer.bias[co]);
+    }
+    gemm(&layer.weights, cols, &mut out.data, layer.cout, kdim, hw,
+         threads);
+    if relu {
+        for v in out.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::naive;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_naive_across_shapes() {
+        prop::check("im2col-vs-naive", 20, |g| {
+            let cin = g.usize(1, 6);
+            let cout = g.usize(1, 8);
+            let h = g.usize(3, 12);
+            let w = g.usize(3, 12);
+            let k = *g.pick(&[1usize, 3]);
+            let stride = *g.pick(&[1usize, 2]);
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let layer = DenseLayer {
+                cout,
+                cin,
+                kh: k,
+                kw: k,
+                weights: (0..cout * cin * k * k)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let a = naive::conv2d(&input, &layer, stride, false, 1);
+            let mut scratch = Im2colScratch::default();
+            let b = conv2d(&input, &layer, stride, false, 2, &mut scratch);
+            if a.max_abs_diff(&b) > 1e-4 {
+                return Err(format!("diff {}", a.max_abs_diff(&b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let mut rng = Rng::seed_from(8);
+        let input = Tensor::random(3, 8, 8, &mut rng);
+        let big = DenseLayer {
+            cout: 4,
+            cin: 3,
+            kh: 3,
+            kw: 3,
+            weights: (0..4 * 3 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; 4],
+        };
+        let mut scratch = Im2colScratch::default();
+        let first = conv2d(&input, &big, 1, false, 1, &mut scratch);
+        // run a smaller conv in between (shrinks logical buffer)
+        let small = DenseLayer {
+            cout: 2,
+            cin: 3,
+            kh: 1,
+            kw: 1,
+            weights: (0..2 * 3).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; 2],
+        };
+        let _ = conv2d(&input, &small, 1, false, 1, &mut scratch);
+        let again = conv2d(&input, &big, 1, false, 1, &mut scratch);
+        assert!(first.max_abs_diff(&again) < 1e-6);
+    }
+}

@@ -1,0 +1,141 @@
+//! Dense direct convolution — the un-co-designed baseline (stands in for
+//! an interpreter-style mobile runtime, cf. TFLite CPU reference kernels
+//! in Fig. 5). Straightforward loop nest, no tiling, no load reuse beyond
+//! what the compiler finds on its own.
+
+use crate::compress::DenseLayer;
+use crate::exec::tensor::{same_pad, Tensor};
+use crate::util::threadpool;
+
+/// Dense conv2d, SAME padding, optional fused ReLU.
+pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize,
+              relu: bool, threads: usize) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
+    let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let hw = h_out * w_out;
+    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+        for y in 0..h_out {
+            for x in 0..w_out {
+                let mut acc = layer.bias[co];
+                for ci in 0..layer.cin {
+                    for ky in 0..layer.kh {
+                        let iy = (y * stride + ky) as isize - pad_h as isize;
+                        if iy < 0 || iy >= input.h as isize {
+                            continue;
+                        }
+                        for kx in 0..layer.kw {
+                            let ix =
+                                (x * stride + kx) as isize - pad_w as isize;
+                            if ix < 0 || ix >= input.w as isize {
+                                continue;
+                            }
+                            acc += layer.at(co, ci, ky, kx)
+                                * input.at(ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+                plane[y * w_out + x] = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        // 1x1 conv with identity weights = copy.
+        let mut rng = Rng::seed_from(1);
+        let input = Tensor::random(2, 5, 5, &mut rng);
+        let layer = DenseLayer {
+            cout: 2,
+            cin: 2,
+            kh: 1,
+            kw: 1,
+            weights: vec![1.0, 0.0, 0.0, 1.0],
+            bias: vec![0.0, 0.0],
+        };
+        let out = conv2d(&input, &layer, 1, false, 1);
+        assert!(out.max_abs_diff(&input) < 1e-6);
+    }
+
+    #[test]
+    fn all_ones_interior_sum() {
+        let input = Tensor {
+            c: 1,
+            h: 5,
+            w: 5,
+            data: vec![1.0; 25],
+        };
+        let layer = DenseLayer {
+            cout: 1,
+            cin: 1,
+            kh: 3,
+            kw: 3,
+            weights: vec![1.0; 9],
+            bias: vec![0.0],
+        };
+        let out = conv2d(&input, &layer, 1, false, 1);
+        assert_eq!(out.at(0, 2, 2), 9.0); // interior
+        assert_eq!(out.at(0, 0, 0), 4.0); // corner
+        assert_eq!(out.at(0, 0, 2), 6.0); // edge
+    }
+
+    #[test]
+    fn stride_two_shape() {
+        let input = Tensor::zeros(3, 15, 16);
+        let layer = DenseLayer {
+            cout: 4,
+            cin: 3,
+            kh: 3,
+            kw: 3,
+            weights: vec![0.0; 3 * 4 * 9],
+            bias: vec![1.0; 4],
+        };
+        let out = conv2d(&input, &layer, 2, false, 2);
+        assert_eq!((out.h, out.w, out.c), (8, 8, 4));
+        assert!(out.data.iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let input = Tensor {
+            c: 1,
+            h: 2,
+            w: 2,
+            data: vec![1.0; 4],
+        };
+        let layer = DenseLayer {
+            cout: 1,
+            cin: 1,
+            kh: 1,
+            kw: 1,
+            weights: vec![-1.0],
+            bias: vec![0.0],
+        };
+        let out = conv2d(&input, &layer, 1, true, 1);
+        assert!(out.data.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn threads_match_single() {
+        let mut rng = Rng::seed_from(3);
+        let input = Tensor::random(4, 9, 11, &mut rng);
+        let layer = DenseLayer {
+            cout: 6,
+            cin: 4,
+            kh: 3,
+            kw: 3,
+            weights: (0..6 * 4 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: (0..6).map(|_| rng.normal_f32()).collect(),
+        };
+        let a = conv2d(&input, &layer, 1, false, 1);
+        let b = conv2d(&input, &layer, 1, false, 8);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+}

@@ -1,0 +1,189 @@
+//! Shared non-conv ops: depthwise conv, max-pool, global average pool,
+//! fully connected, residual add.
+
+use crate::exec::tensor::{same_pad, Tensor};
+
+/// Depthwise 3x3 conv, SAME padding; weights w[c][ky][kx], bias[c].
+pub fn depthwise3x3(input: &Tensor, weights: &[f32], bias: &[f32],
+                    stride: usize, relu: bool) -> Tensor {
+    assert_eq!(weights.len(), 9 * input.c);
+    let (h_out, pad_h) = same_pad(input.h, 3, stride);
+    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+    let mut out = Tensor::zeros(input.c, h_out, w_out);
+    for c in 0..input.c {
+        let in_plane = input.plane(c);
+        let w9 = &weights[c * 9..c * 9 + 9];
+        let b = bias[c];
+        let plane = out.plane_mut(c);
+        plane.fill(b);
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let w = w9[ky * 3 + kx];
+                if w == 0.0 {
+                    continue;
+                }
+                for y in 0..h_out {
+                    let iy = (y * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= input.h as isize {
+                        continue;
+                    }
+                    let in_row = &in_plane[iy as usize * input.w
+                        ..(iy as usize + 1) * input.w];
+                    let out_row = &mut plane[y * w_out..(y + 1) * w_out];
+                    for (x, o) in out_row.iter_mut().enumerate() {
+                        let ix =
+                            (x * stride + kx) as isize - pad_w as isize;
+                        if ix >= 0 && (ix as usize) < input.w {
+                            *o += w * in_row[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+        if relu {
+            for v in plane.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+/// 2x2 max pool, stride 2, SAME (ceil) semantics.
+pub fn maxpool2(input: &Tensor) -> Tensor {
+    let h_out = input.h.div_ceil(2);
+    let w_out = input.w.div_ceil(2);
+    let mut out = Tensor::zeros(input.c, h_out, w_out);
+    for c in 0..input.c {
+        let in_plane = input.plane(c);
+        let plane = out.plane_mut(c);
+        for y in 0..h_out {
+            for x in 0..w_out {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let iy = y * 2 + dy;
+                        let ix = x * 2 + dx;
+                        if iy < input.h && ix < input.w {
+                            m = m.max(in_plane[iy * input.w + ix]);
+                        }
+                    }
+                }
+                plane[y * w_out + x] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool -> [C,1,1].
+pub fn gap(input: &Tensor) -> Tensor {
+    let mut out = Tensor::zeros(input.c, 1, 1);
+    let hw = (input.h * input.w) as f32;
+    for c in 0..input.c {
+        out.data[c] = input.plane(c).iter().sum::<f32>() / hw;
+    }
+    out
+}
+
+/// Fully connected over the flattened input; w[cout][cin_flat].
+pub fn dense(input: &Tensor, weights: &[f32], bias: &[f32], cout: usize,
+             relu: bool) -> Tensor {
+    let cin = input.data.len();
+    assert_eq!(weights.len(), cout * cin);
+    let mut out = Tensor::zeros(cout, 1, 1);
+    for co in 0..cout {
+        let row = &weights[co * cin..(co + 1) * cin];
+        let mut acc = bias[co];
+        for (w, x) in row.iter().zip(&input.data) {
+            acc += w * x;
+        }
+        out.data[co] = if relu { acc.max(0.0) } else { acc };
+    }
+    out
+}
+
+/// Elementwise residual add (+ optional ReLU).
+pub fn add(a: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    let mut out = a.clone();
+    for (o, v) in out.data.iter_mut().zip(&b.data) {
+        *o += *v;
+        if relu {
+            *o = o.max(0.0);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn maxpool_basics() {
+        let t = Tensor {
+            c: 1,
+            h: 2,
+            w: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let p = maxpool2(&t);
+        assert_eq!((p.h, p.w), (1, 1));
+        assert_eq!(p.data[0], 4.0);
+        // odd size: ceil semantics
+        let t = Tensor::zeros(1, 3, 3);
+        assert_eq!(maxpool2(&t).h, 2);
+    }
+
+    #[test]
+    fn gap_means() {
+        let t = Tensor {
+            c: 2,
+            h: 1,
+            w: 2,
+            data: vec![1.0, 3.0, 10.0, 20.0],
+        };
+        let g = gap(&t);
+        assert_eq!(g.data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn dense_known_values() {
+        let t = Tensor {
+            c: 2,
+            h: 1,
+            w: 1,
+            data: vec![1.0, 2.0],
+        };
+        let out = dense(&t, &[1.0, 1.0, 0.5, -1.0], &[0.0, 1.0], 2, false);
+        assert_eq!(out.data, vec![3.0, -0.5]);
+        let out = dense(&t, &[1.0, 1.0, 0.5, -1.0], &[0.0, 1.0], 2, true);
+        assert_eq!(out.data, vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn add_and_relu() {
+        let mut rng = Rng::seed_from(2);
+        let a = Tensor::random(2, 3, 3, &mut rng);
+        let b = Tensor::random(2, 3, 3, &mut rng);
+        let s = add(&a, &b, false);
+        assert!((s.data[5] - (a.data[5] + b.data[5])).abs() < 1e-6);
+        let r = add(&a, &b, true);
+        assert!(r.data.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn depthwise_identity() {
+        let mut rng = Rng::seed_from(3);
+        let input = Tensor::random(3, 5, 5, &mut rng);
+        // centre-tap-only kernel = identity
+        let mut w = vec![0f32; 27];
+        for c in 0..3 {
+            w[c * 9 + 4] = 1.0;
+        }
+        let out = depthwise3x3(&input, &w, &[0.0; 3], 1, false);
+        assert!(out.max_abs_diff(&input) < 1e-6);
+    }
+}

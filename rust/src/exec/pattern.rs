@@ -1,0 +1,468 @@
+//! The CoCo-Gen executor: pattern + connectivity pruned convolution with
+//! filter-kernel reorder, register-level load redundancy elimination and
+//! tuned tiling (paper §2.1.3). This is the hot path the performance pass
+//! optimizes — see EXPERIMENTS.md §Perf.
+//!
+//! Execution structure (mirrors the generated mobile code):
+//!   parallel over reordered filter blocks (co_block)      [TLP]
+//!     per filter: walk its kernels (sorted by pattern)    [low divergence]
+//!       per pattern tap (static 4-entry unroll)           [ILP]
+//!         row AXPY over the output row                    [SIMD]
+//! The input row needed by a tap is loaded once per (kernel, tap) and
+//! streamed through a contiguous AXPY; with the row tile sized by the
+//! tuner the touched input rows stay in L1 across the four taps — the
+//! register/L1-level load redundancy elimination of the paper.
+
+use crate::codegen::TileConfig;
+use crate::compress::FkwLayer;
+use crate::exec::tensor::{same_pad, Tensor};
+use crate::patterns::PATTERN_SET_4;
+
+/// Pattern-sparse conv2d from an FKW layer (3x3 kernels), SAME padding.
+///
+/// Workers claim *physical* filter groups (the reordered execution order:
+/// similar filters together -> uniform task cost under the work-stealing
+/// scheduler) but write into the *original* output channel positions, so
+/// downstream layers see unpermuted channels.
+pub fn conv2d(input: &Tensor, layer: &FkwLayer, stride: usize, relu: bool,
+              threads: usize, tile: TileConfig) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, 3, stride);
+    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let hw = h_out * w_out;
+    let co_block = tile.co_block.max(1);
+    let h_tile = tile.h_tile.max(1);
+    let cout = layer.cout;
+
+    // One slot per original output channel; each is taken exactly once by
+    // the worker that owns the corresponding physical filter.
+    let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
+        .data
+        .chunks_mut(hw)
+        .map(|c| std::sync::Mutex::new(Some(c)))
+        .collect();
+    let n_groups = cout.div_ceil(co_block);
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let workers = threads.max(1).min(n_groups.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let g = counter
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if g >= n_groups {
+                    break;
+                }
+                for phys in g * co_block..((g + 1) * co_block).min(cout) {
+                    let co = layer.filter_order[phys] as usize;
+                    let mut guard = plane_slots[co].lock().unwrap();
+                    let plane = guard.as_deref_mut().unwrap();
+                    filter_conv(
+                        plane, input, layer, phys, co, stride, relu,
+                        h_tile, h_out, w_out, pad_h, pad_w,
+                    );
+                }
+            });
+        }
+    });
+    drop(plane_slots);
+    out
+}
+
+/// Compute one filter's output plane.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwLayer,
+               phys: usize, co: usize, stride: usize, relu: bool,
+               h_tile: usize, h_out: usize, w_out: usize, pad_h: usize,
+               pad_w: usize) {
+    plane.fill(layer.bias[co]);
+    let k_lo = layer.offsets[phys] as usize;
+    let k_hi = layer.offsets[phys + 1] as usize;
+    // Row-tiled kernel walk: all kernels revisit the same output row tile
+    // while its input rows are hot (load redundancy elimination).
+    for y0 in (0..h_out).step_by(h_tile) {
+        let y1 = (y0 + h_tile).min(h_out);
+        for e in k_lo..k_hi {
+            let kern = layer.kernels[e];
+            let ci = kern.ci as usize;
+            let in_plane = input.plane(ci);
+            let taps = &PATTERN_SET_4[kern.pattern as usize];
+            let wts = &layer.weights[e * 4..e * 4 + 4];
+            // Fused 4-tap fast path (stride 1, all rows interior): one
+            // pass over the output row with four input-row streams —
+            // 4x less out-row load/store traffic than tap-by-tap
+            // (EXPERIMENTS.md §Perf iteration 3).
+            let mut fused = stride == 1;
+            if fused {
+                for y in y0..y1 {
+                    for &(dy, _) in taps.iter() {
+                        let iy = (y + dy) as isize - pad_h as isize;
+                        if iy < 0 || iy >= input.h as isize {
+                            fused = false;
+                        }
+                    }
+                    if !fused {
+                        break;
+                    }
+                }
+            }
+            // interior x-range common to all taps (empty -> unfused)
+            let x_lo = taps
+                .iter()
+                .map(|&(_, dx)| pad_w.saturating_sub(dx))
+                .max()
+                .unwrap();
+            let x_hi = taps
+                .iter()
+                .map(|&(_, dx)| (input.w + pad_w - dx).min(w_out))
+                .min()
+                .unwrap();
+            if x_lo >= x_hi {
+                fused = false;
+            }
+            if fused {
+                for y in y0..y1 {
+                    let row = |t: usize| -> &[f32] {
+                        let (dy, dx) = taps[t];
+                        let iy = (y + dy) - pad_h;
+                        let s0 = x_lo + dx - pad_w;
+                        &in_plane[iy * input.w + s0
+                            ..iy * input.w + s0 + (x_hi - x_lo)]
+                    };
+                    {
+                        let (r0, r1, r2, r3) =
+                            (row(0), row(1), row(2), row(3));
+                        let (w0, w1, w2, w3) =
+                            (wts[0], wts[1], wts[2], wts[3]);
+                        let out_row =
+                            &mut plane[y * w_out + x_lo..y * w_out + x_hi];
+                        for (i, o) in out_row.iter_mut().enumerate() {
+                            *o += w0 * r0[i]
+                                + w1 * r1[i]
+                                + w2 * r2[i]
+                                + w3 * r3[i];
+                        }
+                    }
+                    // borders outside the common range: per-tap
+                    for (t, &(dy, dx)) in taps.iter().enumerate() {
+                        let t_lo = pad_w.saturating_sub(dx);
+                        let t_hi = (input.w + pad_w - dx).min(w_out);
+                        let w = wts[t];
+                        let iy = (y + dy) - pad_h;
+                        let in_row = &in_plane
+                            [iy * input.w..(iy + 1) * input.w];
+                        let out_row =
+                            &mut plane[y * w_out..(y + 1) * w_out];
+                        for x in t_lo..t_hi.min(x_lo.max(t_lo)) {
+                            out_row[x] += w * in_row[x + dx - pad_w];
+                        }
+                        for x in x_hi.max(t_lo)..t_hi {
+                            out_row[x] += w * in_row[x + dx - pad_w];
+                        }
+                    }
+                }
+            } else {
+                for (t, &(dy, dx)) in taps.iter().enumerate() {
+                    let w = wts[t];
+                    tap_rows(
+                        plane, in_plane, w, dy, dx, y0, y1, stride,
+                        pad_h, pad_w, w_out, input.h, input.w,
+                    );
+                }
+            }
+        }
+    }
+    if relu {
+        for v in plane.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// Pattern-aware im2col + GEMM path: build the shifted-input matrix
+/// U[(ci,tap)][hw] ONCE for the union of taps that actually occur, then
+/// one GEMM per filter row over its surviving (ci,tap) columns.
+///
+/// Chosen by the dispatcher for deep layers (small spatial dims, large
+/// channel counts) where the row-AXPY path's per-row overhead dominates:
+/// U costs 4*cin*hw writes amortized over cout filters, and the inner
+/// loop becomes a dense dot over hw-length rows — the "pattern-aware
+/// lowering" counterpart of the paper's GPU code generation.
+pub fn conv2d_gemm(input: &Tensor, layer: &FkwLayer, stride: usize,
+                   relu: bool, threads: usize) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, 3, stride);
+    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+    let hw = h_out * w_out;
+    let cin = layer.cin;
+    // U rows: (ci, tap) -> shifted plane. Build all 9 possible taps only
+    // if used; index map [(ci * 9) + tap_id] -> row in U (dense alloc,
+    // rows built lazily by a used-bitmap).
+    let mut used = vec![false; cin * 9];
+    for k in &layer.kernels {
+        let taps = &PATTERN_SET_4[k.pattern as usize];
+        for &(dy, dx) in taps {
+            used[k.ci as usize * 9 + dy * 3 + dx] = true;
+        }
+    }
+    let row_of: Vec<u32> = {
+        let mut map = vec![u32::MAX; cin * 9];
+        let mut next = 0u32;
+        for (i, u) in used.iter().enumerate() {
+            if *u {
+                map[i] = next;
+                next += 1;
+            }
+        }
+        map
+    };
+    let n_rows = row_of.iter().filter(|r| **r != u32::MAX).count();
+    let mut u_mat = vec![0f32; n_rows * hw];
+    for ci in 0..cin {
+        let plane = input.plane(ci);
+        for dy in 0..3 {
+            for dx in 0..3 {
+                let r = row_of[ci * 9 + dy * 3 + dx];
+                if r == u32::MAX {
+                    continue;
+                }
+                let dst = &mut u_mat[r as usize * hw..(r as usize + 1) * hw];
+                for y in 0..h_out {
+                    let iy = (y * stride + dy) as isize - pad_h as isize;
+                    if iy < 0 || iy >= input.h as isize {
+                        continue;
+                    }
+                    let in_row = &plane[iy as usize * input.w
+                        ..(iy as usize + 1) * input.w];
+                    let dst_row = &mut dst[y * w_out..(y + 1) * w_out];
+                    if stride == 1 {
+                        let x_lo = pad_w.saturating_sub(dx);
+                        let x_hi = (input.w + pad_w - dx).min(w_out);
+                        if x_lo < x_hi {
+                            let s0 = x_lo + dx - pad_w;
+                            dst_row[x_lo..x_hi].copy_from_slice(
+                                &in_row[s0..s0 + (x_hi - x_lo)],
+                            );
+                        }
+                    } else {
+                        for (x, d) in dst_row.iter_mut().enumerate() {
+                            let ix = (x * stride + dx) as isize
+                                - pad_w as isize;
+                            if ix >= 0 && (ix as usize) < input.w {
+                                *d = in_row[ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Per-filter sparse-row GEMV over the shared U.
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
+        .data
+        .chunks_mut(hw)
+        .map(|c| std::sync::Mutex::new(Some(c)))
+        .collect();
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let workers = threads.max(1).min(layer.cout.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let phys = counter
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if phys >= layer.cout {
+                    break;
+                }
+                let co = layer.filter_order[phys] as usize;
+                let mut guard = plane_slots[co].lock().unwrap();
+                let plane = guard.as_deref_mut().unwrap();
+                plane.fill(layer.bias[co]);
+                for e in layer.offsets[phys] as usize
+                    ..layer.offsets[phys + 1] as usize
+                {
+                    let kern = layer.kernels[e];
+                    let taps = &PATTERN_SET_4[kern.pattern as usize];
+                    let wts = &layer.weights[e * 4..e * 4 + 4];
+                    for (t, &(dy, dx)) in taps.iter().enumerate() {
+                        let r = row_of
+                            [kern.ci as usize * 9 + dy * 3 + dx]
+                            as usize;
+                        let u_row = &u_mat[r * hw..(r + 1) * hw];
+                        let w = wts[t];
+                        for (o, i) in
+                            plane.iter_mut().zip(u_row.iter())
+                        {
+                            *o += w * *i;
+                        }
+                    }
+                }
+                if relu {
+                    for v in plane.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+            });
+        }
+    });
+    drop(plane_slots);
+    out
+}
+
+/// Dispatch on the tuner's path decision (TileConfig::use_gemm).
+pub fn conv2d_auto(input: &Tensor, layer: &FkwLayer, stride: usize,
+                   relu: bool, threads: usize, tile: TileConfig) -> Tensor {
+    if tile.use_gemm {
+        conv2d_gemm(input, layer, stride, relu, threads)
+    } else {
+        conv2d(input, layer, stride, relu, threads, tile)
+    }
+}
+
+/// Accumulate one tap over output rows [y0, y1): the SIMD inner loop.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tap_rows(plane: &mut [f32], in_plane: &[f32], w: f32, dy: usize,
+            dx: usize, y0: usize, y1: usize, stride: usize, pad_h: usize,
+            pad_w: usize, w_out: usize, in_h: usize, in_w: usize) {
+    for y in y0..y1 {
+        let iy = (y * stride + dy) as isize - pad_h as isize;
+        if iy < 0 || iy >= in_h as isize {
+            continue;
+        }
+        let in_row = &in_plane[iy as usize * in_w..(iy as usize + 1) * in_w];
+        let out_row = &mut plane[y * w_out..(y + 1) * w_out];
+        if stride == 1 {
+            // Contiguous AXPY with border clamp:
+            // ix = x + dx - pad_w in [0, in_w)
+            let x_lo = pad_w.saturating_sub(dx);
+            let x_hi = (in_w + pad_w - dx).min(w_out);
+            if x_lo < x_hi {
+                let src0 = x_lo + dx - pad_w;
+                let dst = &mut out_row[x_lo..x_hi];
+                let src = &in_row[src0..src0 + (x_hi - x_lo)];
+                for (o, i) in dst.iter_mut().zip(src.iter()) {
+                    *o += w * *i;
+                }
+            }
+        } else {
+            for (x, o) in out_row.iter_mut().enumerate() {
+                let ix = (x * stride + dx) as isize - pad_w as isize;
+                if ix >= 0 && (ix as usize) < in_w {
+                    *o += w * in_row[ix as usize];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::reorder::filter_kernel_reorder;
+    use crate::compress::DenseLayer;
+    use crate::exec::naive;
+    use crate::patterns::connectivity::ConnectivityMask;
+    use crate::util::prop;
+
+    /// Oracle: expand FKW to dense, run the naive engine.
+    fn oracle(input: &Tensor, layer: &FkwLayer, stride: usize, relu: bool)
+              -> Tensor {
+        naive::conv2d(input, &layer.to_dense(), stride, relu, 1)
+    }
+
+    #[test]
+    fn matches_dense_expansion() {
+        prop::check("pattern-conv-vs-oracle", 25, |g| {
+            let cin = g.usize(1, 8);
+            let cout = g.usize(1, 10);
+            let h = g.usize(3, 14);
+            let w = g.usize(3, 14);
+            let stride = *g.pick(&[1usize, 2]);
+            let keep = g.f64(0.3, 1.0);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let dense = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let conn = crate::codegen::prune_conn_oihw(&dense, keep);
+            let mut fkw = FkwLayer::from_dense(&dense, &conn);
+            filter_kernel_reorder(&mut fkw);
+            let tile = TileConfig {
+                h_tile: g.usize(1, 8),
+                co_block: g.usize(1, 4),
+                use_gemm: false,
+            };
+            let got = conv2d(&input, &fkw, stride, relu,
+                             g.usize(1, 4), tile);
+            let want = oracle(&input, &fkw, stride, relu);
+            if got.max_abs_diff(&want) > 1e-4 {
+                return Err(format!("diff {}", got.max_abs_diff(&want)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_path_matches_axpy_path() {
+        prop::check("pattern-gemm-vs-axpy", 25, |g| {
+            let cin = g.usize(1, 10);
+            let cout = g.usize(1, 12);
+            let h = g.usize(3, 16);
+            let w = g.usize(3, 16);
+            let stride = *g.pick(&[1usize, 2]);
+            let keep = g.f64(0.3, 1.0);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let dense = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let conn = crate::codegen::prune_conn_oihw(&dense, keep);
+            let mut fkw = FkwLayer::from_dense(&dense, &conn);
+            filter_kernel_reorder(&mut fkw);
+            let a = conv2d(&input, &fkw, stride, relu, 2,
+                           TileConfig::default());
+            let b = conv2d_gemm(&input, &fkw, stride, relu,
+                                g.usize(1, 4));
+            if a.max_abs_diff(&b) > 1e-4 {
+                return Err(format!("diff {}", a.max_abs_diff(&b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fully_connected_all_alive_matches_projected_dense() {
+        let mut g = prop::Gen::replay(99);
+        let mut rng = g.rng().clone();
+        let input = Tensor::random(4, 10, 10, &mut rng);
+        let dense = DenseLayer {
+            cout: 6,
+            cin: 4,
+            kh: 3,
+            kw: 3,
+            weights: (0..6 * 4 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; 6],
+        };
+        let conn = ConnectivityMask::all_alive(4, 6);
+        let fkw = FkwLayer::from_dense(&dense, &conn);
+        let got = conv2d(&input, &fkw, 1, false, 2, TileConfig::default());
+        let want = oracle(&input, &fkw, 1, false);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Planar NCHW (batch-1) tensor used by the native executors.
+//!
+//! Channels-first planar layout makes every conv inner loop a contiguous
+//! row AXPY — the layout CoCo-Gen's generated mobile code uses for its
+//! SIMD inner loops (and the layout that lets register-level load
+//! redundancy elimination work on rows).
+
+use crate::ir::Chw;
+use crate::util::rng::Rng;
+
+/// A single-image activation tensor: planar [C][H][W], f32.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Tensor {
+        Tensor {
+            c,
+            h,
+            w,
+            data: vec![0f32; c * h * w],
+        }
+    }
+
+    pub fn from_shape(s: Chw) -> Tensor {
+        Tensor::zeros(s.c, s.h, s.w)
+    }
+
+    pub fn random(c: usize, h: usize, w: usize, rng: &mut Rng) -> Tensor {
+        Tensor {
+            c,
+            h,
+            w,
+            data: (0..c * h * w).map(|_| rng.normal_f32()).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> Chw {
+        Chw::new(self.c, self.h, self.w)
+    }
+
+    #[inline]
+    pub fn plane(&self, c: usize) -> &[f32] {
+        &self.data[c * self.h * self.w..(c + 1) * self.h * self.w]
+    }
+
+    #[inline]
+    pub fn plane_mut(&mut self, c: usize) -> &mut [f32] {
+        let hw = self.h * self.w;
+        &mut self.data[c * hw..(c + 1) * hw]
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Max |a-b| over all elements (shape must match).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max)
+    }
+
+    pub fn iter_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// SAME-padding geometry for a conv with kernel k and stride s:
+/// returns (out_size, pad_low).
+pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = in_size.div_ceil(stride);
+    let pad_total = ((out - 1) * stride + k).saturating_sub(in_size);
+    (out, pad_total / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_access() {
+        let mut t = Tensor::zeros(2, 3, 4);
+        t.set(1, 2, 3, 5.0);
+        assert_eq!(t.at(1, 2, 3), 5.0);
+        assert_eq!(t.plane(1)[2 * 4 + 3], 5.0);
+        assert_eq!(t.data.len(), 24);
+    }
+
+    #[test]
+    fn same_pad_matches_xla() {
+        // k=3 s=1: out=in, pad 1
+        assert_eq!(same_pad(16, 3, 1), (16, 1));
+        // k=3 s=2 even in: out=in/2, pad_total=1 -> low 0
+        assert_eq!(same_pad(16, 3, 2), (8, 0));
+        // k=3 s=2 odd in
+        assert_eq!(same_pad(15, 3, 2), (8, 1));
+        // k=1
+        assert_eq!(same_pad(16, 1, 1), (16, 0));
+        assert_eq!(same_pad(16, 1, 2), (8, 0));
+    }
+
+    #[test]
+    fn diff() {
+        let a = Tensor::zeros(1, 2, 2);
+        let mut b = Tensor::zeros(1, 2, 2);
+        b.set(0, 1, 1, 0.5);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,241 @@
+//! Winograd F(2x2, 3x3) convolution — the fast dense algorithm mobile
+//! frameworks (MNN) use for 3x3 stride-1 convs, and the baseline the
+//! paper contrasts with pattern pruning (§2.1.1: filter/channel pruning
+//! is Winograd-compatible; pattern pruning is not, which is why CoCo-Gen
+//! must win through codegen instead).
+//!
+//! Standard formulation: Y = A^T [ (G g G^T) .* (B^T d B) ] A, evaluated
+//! as 16 per-frequency GEMMs of [cout x cin] @ [cin x tiles] — 2.25x
+//! fewer multiplies than direct conv on the tile interior.
+
+use crate::compress::DenseLayer;
+use crate::exec::gemm::gemm;
+use crate::exec::tensor::{same_pad, Tensor};
+
+/// Transform one 3x3 kernel g -> 4x4: G g G^T.
+fn transform_kernel(g: &[f32]) -> [f32; 16] {
+    // G = [[1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]]
+    let mut tmp = [0f32; 12]; // G g : 4x3
+    for r in 0..4 {
+        for c in 0..3 {
+            tmp[r * 3 + c] = match r {
+                0 => g[c],
+                1 => 0.5 * (g[c] + g[3 + c] + g[6 + c]),
+                2 => 0.5 * (g[c] - g[3 + c] + g[6 + c]),
+                _ => g[6 + c],
+            };
+        }
+    }
+    let mut out = [0f32; 16]; // (G g) G^T : 4x4
+    for r in 0..4 {
+        let row = &tmp[r * 3..r * 3 + 3];
+        out[r * 4] = row[0];
+        out[r * 4 + 1] = 0.5 * (row[0] + row[1] + row[2]);
+        out[r * 4 + 2] = 0.5 * (row[0] - row[1] + row[2]);
+        out[r * 4 + 3] = row[2];
+    }
+    out
+}
+
+/// Transform one 4x4 input tile d -> B^T d B.
+#[inline]
+fn transform_input(d: &[f32; 16]) -> [f32; 16] {
+    // B^T = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]]
+    let mut tmp = [0f32; 16]; // B^T d
+    for c in 0..4 {
+        let (d0, d1, d2, d3) =
+            (d[c], d[4 + c], d[8 + c], d[12 + c]);
+        tmp[c] = d0 - d2;
+        tmp[4 + c] = d1 + d2;
+        tmp[8 + c] = d2 - d1;
+        tmp[12 + c] = d1 - d3;
+    }
+    let mut out = [0f32; 16]; // (B^T d) B
+    for r in 0..4 {
+        let (t0, t1, t2, t3) = (
+            tmp[r * 4],
+            tmp[r * 4 + 1],
+            tmp[r * 4 + 2],
+            tmp[r * 4 + 3],
+        );
+        out[r * 4] = t0 - t2;
+        out[r * 4 + 1] = t1 + t2;
+        out[r * 4 + 2] = t2 - t1;
+        out[r * 4 + 3] = t1 - t3;
+    }
+    out
+}
+
+/// Inverse transform: 4x4 m -> 2x2 output tile: A^T m A.
+#[inline]
+fn transform_output(m: &[f32; 16]) -> [f32; 4] {
+    // A^T = [[1,1,1,0],[0,1,-1,-1]]
+    let mut tmp = [0f32; 8]; // A^T m : 2x4
+    for c in 0..4 {
+        tmp[c] = m[c] + m[4 + c] + m[8 + c];
+        tmp[4 + c] = m[4 + c] - m[8 + c] - m[12 + c];
+    }
+    [
+        tmp[0] + tmp[1] + tmp[2],
+        tmp[1] - tmp[2] - tmp[3],
+        tmp[4] + tmp[5] + tmp[6],
+        tmp[5] - tmp[6] - tmp[7],
+    ]
+}
+
+/// Winograd conv2d (3x3, stride 1 only), SAME padding.
+pub fn conv2d(input: &Tensor, layer: &DenseLayer, relu: bool,
+              threads: usize) -> Tensor {
+    assert_eq!(layer.kh, 3);
+    assert_eq!(layer.kw, 3);
+    let (h_out, pad_h) = same_pad(input.h, 3, 1);
+    let (w_out, pad_w) = same_pad(input.w, 3, 1);
+    let th = h_out.div_ceil(2);
+    let tw = w_out.div_ceil(2);
+    let tiles = th * tw;
+    let (cin, cout) = (layer.cin, layer.cout);
+
+    // V[16][cout][cin]: transformed kernels.
+    let mut v = vec![0f32; 16 * cout * cin];
+    for co in 0..cout {
+        for ci in 0..cin {
+            let base = (co * cin + ci) * 9;
+            let tk = transform_kernel(&layer.weights[base..base + 9]);
+            for f in 0..16 {
+                v[(f * cout + co) * cin + ci] = tk[f];
+            }
+        }
+    }
+    // U[16][cin][tiles]: transformed input tiles.
+    let mut u = vec![0f32; 16 * cin * tiles];
+    for ci in 0..cin {
+        let plane = input.plane(ci);
+        for ty in 0..th {
+            for tx in 0..tw {
+                let mut d = [0f32; 16];
+                for r in 0..4 {
+                    let iy = (2 * ty + r) as isize - pad_h as isize;
+                    if iy < 0 || iy >= input.h as isize {
+                        continue;
+                    }
+                    for c in 0..4 {
+                        let ix = (2 * tx + c) as isize - pad_w as isize;
+                        if ix >= 0 && (ix as usize) < input.w {
+                            d[r * 4 + c] =
+                                plane[iy as usize * input.w + ix as usize];
+                        }
+                    }
+                }
+                let td = transform_input(&d);
+                let t = ty * tw + tx;
+                for f in 0..16 {
+                    u[(f * cin + ci) * tiles + t] = td[f];
+                }
+            }
+        }
+    }
+    // M[16][cout][tiles] = V[f] @ U[f] (16 GEMMs).
+    let mut m = vec![0f32; 16 * cout * tiles];
+    for f in 0..16 {
+        gemm(
+            &v[f * cout * cin..(f + 1) * cout * cin],
+            &u[f * cin * tiles..(f + 1) * cin * tiles],
+            &mut m[f * cout * tiles..(f + 1) * cout * tiles],
+            cout,
+            cin,
+            tiles,
+            threads,
+        );
+    }
+    // Inverse transform into the output.
+    let mut out = Tensor::zeros(cout, h_out, w_out);
+    for co in 0..cout {
+        let b = layer.bias[co];
+        let plane = out.plane_mut(co);
+        for ty in 0..th {
+            for tx in 0..tw {
+                let t = ty * tw + tx;
+                let mut freq = [0f32; 16];
+                for (f, fr) in freq.iter_mut().enumerate() {
+                    *fr = m[(f * cout + co) * tiles + t];
+                }
+                let y4 = transform_output(&freq);
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        let yy = 2 * ty + dy;
+                        let xx = 2 * tx + dx;
+                        if yy < h_out && xx < w_out {
+                            let val = y4[dy * 2 + dx] + b;
+                            plane[yy * w_out + xx] =
+                                if relu { val.max(0.0) } else { val };
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::naive;
+    use crate::util::prop;
+
+    #[test]
+    fn matches_naive_across_shapes() {
+        prop::check("winograd-vs-naive", 25, |g| {
+            let cin = g.usize(1, 6);
+            let cout = g.usize(1, 8);
+            let h = g.usize(3, 13);
+            let w = g.usize(3, 13);
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let layer = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let a = naive::conv2d(&input, &layer, 1, false, 1);
+            let b = conv2d(&input, &layer, false, g.usize(1, 4));
+            if a.max_abs_diff(&b) > 5e-4 {
+                return Err(format!("diff {}", a.max_abs_diff(&b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_fused() {
+        let mut rng = crate::util::rng::Rng::seed_from(2);
+        let input = Tensor::random(3, 8, 8, &mut rng);
+        let layer = DenseLayer {
+            cout: 4,
+            cin: 3,
+            kh: 3,
+            kw: 3,
+            weights: (0..4 * 3 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: vec![0.0; 4],
+        };
+        let b = conv2d(&input, &layer, true, 1);
+        assert!(b.data.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn kernel_transform_known_value() {
+        // identity-ish kernel: centre 1 -> transformed G e G^T
+        let mut g = [0f32; 9];
+        g[4] = 1.0;
+        let t = transform_kernel(&g);
+        // row pattern for centre kernel: [0, .5, -.5, 0] outer products
+        assert!((t[5] - 0.25).abs() < 1e-6);
+        assert!((t[6] + 0.25).abs() < 1e-6);
+        assert!((t[0]).abs() < 1e-6);
+    }
+}

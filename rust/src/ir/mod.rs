@@ -1,0 +1,309 @@
+//! Layerwise representation (LR) — the paper's §2.1.3 "fine-grained DNN
+//! layerwise representation": a high-level IR that carries, per layer,
+//! everything the compression and code-generation passes need (shapes,
+//! kernel geometry, pattern/tuning annotations attach in codegen::Plan).
+//!
+//! The LR is richer than a plain op list: every layer records its resolved
+//! input/output spatial shapes, so downstream passes (reorder, tuner,
+//! weight compression, the executors, the hardware model) never re-derive
+//! geometry.
+
+pub mod zoo;
+
+use anyhow::{bail, Result};
+
+/// Spatial tensor shape: channels, height, width (executors use planar
+/// NCHW layout — see exec::Tensor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chw {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Chw {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Chw { c, h, w }
+    }
+    pub fn elements(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// Layer kinds supported by the native executors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Dense 2-D convolution, SAME padding.
+    Conv {
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        relu: bool,
+    },
+    /// Depthwise 3x3 convolution, SAME padding.
+    DwConv { stride: usize, relu: bool },
+    /// 2x2 max-pool, stride 2.
+    MaxPool2,
+    /// Global average pool -> [C, 1, 1].
+    GlobalAvgPool,
+    /// Fully connected over flattened input.
+    Dense { cout: usize, relu: bool },
+    /// Elementwise residual add with the *output* of an earlier layer
+    /// (index into the model's layer list), then optional ReLU.
+    Add { from: usize, relu: bool },
+}
+
+/// One layer of the LR.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub input: Chw,
+    pub output: Chw,
+}
+
+impl Layer {
+    /// Dense FLOPs (2*MACs) of this layer.
+    pub fn flops(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv { kh, kw, cout, .. } => {
+                2 * (self.output.h * self.output.w * kh * kw * self.input.c
+                    * cout) as u64
+            }
+            LayerKind::DwConv { .. } => {
+                2 * (self.output.h * self.output.w * 9 * self.input.c) as u64
+            }
+            LayerKind::Dense { cout, .. } => {
+                2 * (self.input.elements() * cout) as u64
+            }
+            LayerKind::Add { .. } => self.output.elements() as u64,
+            _ => 0,
+        }
+    }
+
+    /// Dense weight-parameter count.
+    pub fn weight_count(&self) -> usize {
+        match &self.kind {
+            LayerKind::Conv { kh, kw, cout, .. } => {
+                kh * kw * self.input.c * cout
+            }
+            LayerKind::DwConv { .. } => 9 * self.input.c,
+            LayerKind::Dense { cout, .. } => self.input.elements() * cout,
+            _ => 0,
+        }
+    }
+
+    pub fn is_conv3x3(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { kh: 3, kw: 3, .. })
+    }
+}
+
+/// A whole model in LR form.
+#[derive(Debug, Clone)]
+pub struct ModelIR {
+    pub name: String,
+    pub input: Chw,
+    pub layers: Vec<Layer>,
+}
+
+/// Builder that tracks shapes as layers are appended.
+pub struct IrBuilder {
+    name: String,
+    input: Chw,
+    cur: Chw,
+    layers: Vec<Layer>,
+}
+
+fn out_dim(size: usize, stride: usize) -> usize {
+    size.div_ceil(stride)
+}
+
+impl IrBuilder {
+    pub fn new(name: &str, input: Chw) -> Self {
+        IrBuilder {
+            name: name.to_string(),
+            input,
+            cur: input,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Output index of the most recently added layer.
+    pub fn last(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    pub fn cur_shape(&self) -> Chw {
+        self.cur
+    }
+
+    pub fn conv(&mut self, name: &str, k: usize, cout: usize, stride: usize,
+                relu: bool) -> &mut Self {
+        let out = Chw::new(cout, out_dim(self.cur.h, stride),
+                           out_dim(self.cur.w, stride));
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv {
+                kh: k,
+                kw: k,
+                cout,
+                stride,
+                relu,
+            },
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
+    }
+
+    pub fn dwconv(&mut self, name: &str, stride: usize, relu: bool)
+                  -> &mut Self {
+        let out = Chw::new(self.cur.c, out_dim(self.cur.h, stride),
+                           out_dim(self.cur.w, stride));
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::DwConv { stride, relu },
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
+    }
+
+    pub fn maxpool(&mut self, name: &str) -> &mut Self {
+        let out = Chw::new(self.cur.c, out_dim(self.cur.h, 2),
+                           out_dim(self.cur.w, 2));
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::MaxPool2,
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
+    }
+
+    pub fn gap(&mut self, name: &str) -> &mut Self {
+        let out = Chw::new(self.cur.c, 1, 1);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::GlobalAvgPool,
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
+    }
+
+    pub fn dense(&mut self, name: &str, cout: usize, relu: bool) -> &mut Self {
+        let out = Chw::new(cout, 1, 1);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Dense { cout, relu },
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
+    }
+
+    /// Residual add with the output of layer index `from`.
+    pub fn add(&mut self, name: &str, from: usize, relu: bool) -> &mut Self {
+        let out = self.cur;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Add { from, relu },
+            input: self.cur,
+            output: out,
+        });
+        self
+    }
+
+    pub fn build(self) -> Result<ModelIR> {
+        // Validate Add references and shape agreement.
+        for (i, l) in self.layers.iter().enumerate() {
+            if let LayerKind::Add { from, .. } = l.kind {
+                if from >= i {
+                    bail!("layer {i} Add references later layer {from}");
+                }
+                if self.layers[from].output != l.input {
+                    bail!(
+                        "Add shape mismatch at layer {i}: {:?} vs {:?}",
+                        self.layers[from].output,
+                        l.input
+                    );
+                }
+            }
+        }
+        Ok(ModelIR {
+            name: self.name,
+            input: self.input,
+            layers: self.layers,
+        })
+    }
+}
+
+impl ModelIR {
+    pub fn flops(&self) -> u64 {
+        self.layers.iter().map(Layer::flops).sum()
+    }
+    pub fn weight_count(&self) -> usize {
+        self.layers.iter().map(Layer::weight_count).sum()
+    }
+    /// Indices of 3x3 conv layers (the pattern-prunable set).
+    pub fn conv3x3_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_conv3x3())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_tracks_shapes() {
+        let mut b = IrBuilder::new("t", Chw::new(3, 32, 32));
+        b.conv("c1", 3, 16, 1, true)
+            .maxpool("p1")
+            .conv("c2", 3, 32, 2, true)
+            .gap("g")
+            .dense("fc", 10, false);
+        let m = b.build().unwrap();
+        assert_eq!(m.layers[0].output, Chw::new(16, 32, 32));
+        assert_eq!(m.layers[1].output, Chw::new(16, 16, 16));
+        assert_eq!(m.layers[2].output, Chw::new(32, 8, 8));
+        assert_eq!(m.layers[4].output, Chw::new(10, 1, 1));
+        assert!(m.flops() > 0);
+    }
+
+    #[test]
+    fn add_validates_shapes() {
+        let mut b = IrBuilder::new("t", Chw::new(8, 8, 8));
+        b.conv("c1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("c2", 3, 8, 1, false).add("a", skip, true);
+        assert!(b.build().is_ok());
+
+        let mut b = IrBuilder::new("t", Chw::new(8, 8, 8));
+        b.conv("c1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("c2", 3, 16, 1, false).add("a", skip, true);
+        assert!(b.build().is_err()); // channel mismatch
+    }
+
+    #[test]
+    fn flops_and_weights_scale() {
+        let mut b = IrBuilder::new("t", Chw::new(4, 16, 16));
+        b.conv("c", 3, 8, 1, false);
+        let m = b.build().unwrap();
+        assert_eq!(m.layers[0].weight_count(), 3 * 3 * 4 * 8);
+        assert_eq!(m.layers[0].flops(), 2 * 16 * 16 * 9 * 4 * 8);
+    }
+}

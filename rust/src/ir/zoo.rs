@@ -1,0 +1,208 @@
+//! Full-shape timing models (paper Fig. 5: VGG-16, ResNet-50,
+//! MobileNet-V2 on ImageNet- and CIFAR-shaped inputs) plus the mini
+//! generative nets for the Fig. 6 application demos.
+//!
+//! These drive the *native executor* latency comparisons; weights are
+//! random (latency is weight-value independent). The "ImageNet" spatial
+//! resolution is reduced 224 -> 64 so the dense naive baseline finishes in
+//! bench-able time on this CPU (documented substitution, DESIGN.md §2);
+//! channel counts — which determine the arithmetic-intensity regime — are
+//! the real ones.
+
+use super::{Chw, IrBuilder, ModelIR};
+
+/// Input resolutions for the two dataset shapes of Fig. 5.
+pub const IMAGENET_HW: usize = 64; // paper: 224 (see DESIGN.md §2)
+pub const CIFAR_HW: usize = 32;
+
+/// VGG-16 conv backbone (channel plan 64..512) + small head.
+pub fn vgg16(hw: usize, classes: usize) -> ModelIR {
+    let mut b = IrBuilder::new(
+        &format!("vgg16_{hw}"),
+        Chw::new(3, hw, hw),
+    );
+    let plan: &[(usize, usize)] =
+        &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut li = 0;
+    for (bi, (ch, n)) in plan.iter().enumerate() {
+        for ci in 0..*n {
+            b.conv(&format!("conv{}_{}", bi + 1, ci + 1), 3, *ch, 1, true);
+            li += 1;
+        }
+        // stop pooling once the spatial dims hit 2x2
+        if b.cur_shape().h > 2 {
+            b.maxpool(&format!("pool{}", bi + 1));
+        }
+        let _ = li;
+    }
+    b.gap("gap").dense("fc", classes, false);
+    b.build().expect("vgg16 IR")
+}
+
+/// ResNet-50: bottleneck stacks [3,4,6,3], channels 256/512/1024/2048.
+pub fn resnet50(hw: usize, classes: usize) -> ModelIR {
+    let mut b = IrBuilder::new(
+        &format!("resnet50_{hw}"),
+        Chw::new(3, hw, hw),
+    );
+    b.conv("stem", 3, 64, if hw >= 64 { 2 } else { 1 }, true);
+    let stacks: &[(usize, usize, usize)] = &[
+        (64, 256, 3),
+        (128, 512, 4),
+        (256, 1024, 6),
+        (512, 2048, 3),
+    ];
+    for (si, (mid, out, n)) in stacks.iter().enumerate() {
+        for bi in 0..*n {
+            let stride = if si > 0 && bi == 0 && b.cur_shape().h > 2 {
+                2
+            } else {
+                1
+            };
+            let skip_ok = bi > 0; // first block of a stack changes shape
+            let pre = b.last();
+            let tag = format!("s{si}b{bi}");
+            b.conv(&format!("{tag}_c1"), 1, *mid, stride, true)
+                .conv(&format!("{tag}_c2"), 3, *mid, 1, true)
+                .conv(&format!("{tag}_c3"), 1, *out, 1, false);
+            if skip_ok {
+                b.add(&format!("{tag}_add"), pre, true);
+            }
+        }
+    }
+    b.gap("gap").dense("fc", classes, false);
+    b.build().expect("resnet50 IR")
+}
+
+/// MobileNet-V2-ish: stem + depthwise-separable chain with expansion.
+pub fn mobilenet_v2(hw: usize, classes: usize) -> ModelIR {
+    let mut b = IrBuilder::new(
+        &format!("mbntv2_{hw}"),
+        Chw::new(3, hw, hw),
+    );
+    b.conv("stem", 3, 32, if hw >= 64 { 2 } else { 1 }, true);
+    // (expansion cout, stride) plan, channels from the paper's MBv2 table
+    let plan: &[(usize, usize)] = &[
+        (16, 1),
+        (24, 2),
+        (24, 1),
+        (32, 2),
+        (32, 1),
+        (64, 2),
+        (64, 1),
+        (96, 1),
+        (160, if hw >= 64 { 2 } else { 1 }),
+        (320, 1),
+    ];
+    for (i, (cout, stride)) in plan.iter().enumerate() {
+        let stride = if b.cur_shape().h <= 2 { 1 } else { *stride };
+        let cin = b.cur_shape().c;
+        let expand = (cin * 6).min(960);
+        b.conv(&format!("b{i}_expand"), 1, expand, 1, true)
+            .dwconv(&format!("b{i}_dw"), stride, true)
+            .conv(&format!("b{i}_project"), 1, *cout, 1, false);
+    }
+    b.conv("head_conv", 1, 1280, 1, true)
+        .gap("gap")
+        .dense("fc", classes, false);
+    b.build().expect("mbntv2 IR")
+}
+
+/// The six Fig. 5 model/dataset pairs: (label, ModelIR).
+pub fn fig5_models() -> Vec<(String, ModelIR)> {
+    let mut out = Vec::new();
+    for (tag, hw, classes) in
+        [("imagenet", IMAGENET_HW, 1000), ("cifar", CIFAR_HW, 10)]
+    {
+        out.push((format!("VGG-{tag}"), vgg16(hw, classes)));
+        out.push((format!("RNT-{tag}"), resnet50(hw, classes)));
+        out.push((format!("MBNT-{tag}"), mobilenet_v2(hw, classes)));
+    }
+    out
+}
+
+/// Fig. 6 app-demo generative nets (encoder-decoder without upsampling:
+/// conv stacks at full resolution dominate, as in the real demos).
+pub fn style_transfer_net(hw: usize) -> ModelIR {
+    let mut b = IrBuilder::new("style_transfer", Chw::new(3, hw, hw));
+    b.conv("enc1", 3, 32, 1, true).conv("enc2", 3, 64, 2, true);
+    for i in 0..4 {
+        let pre = b.last();
+        b.conv(&format!("res{i}_c1"), 3, 64, 1, true)
+            .conv(&format!("res{i}_c2"), 3, 64, 1, false)
+            .add(&format!("res{i}_add"), pre, true);
+    }
+    b.conv("dec1", 3, 32, 1, true).conv("dec2", 3, 3, 1, false);
+    b.build().expect("style IR")
+}
+
+pub fn coloring_net(hw: usize) -> ModelIR {
+    let mut b = IrBuilder::new("coloring", Chw::new(1, hw, hw));
+    b.conv("low1", 3, 32, 2, true)
+        .conv("low2", 3, 64, 1, true)
+        .conv("mid1", 3, 64, 1, true)
+        .conv("mid2", 3, 64, 1, true)
+        .conv("fuse", 1, 64, 1, true)
+        .conv("col1", 3, 32, 1, true)
+        .conv("col2", 3, 2, 1, false);
+    b.build().expect("coloring IR")
+}
+
+pub fn super_resolution_net(hw: usize) -> ModelIR {
+    // WDSR-like: wide-activation residual blocks + linear low-rank tail.
+    let mut b = IrBuilder::new("super_res", Chw::new(3, hw, hw));
+    b.conv("head", 3, 32, 1, true);
+    for i in 0..3 {
+        let pre = b.last();
+        b.conv(&format!("wide{i}_a"), 3, 96, 1, true)
+            .conv(&format!("wide{i}_b"), 1, 32, 1, false)
+            .add(&format!("wide{i}_add"), pre, true);
+    }
+    b.conv("tail", 3, 12, 1, false); // 2x pixel-shuffle payload (4*3)
+    b.build().expect("super_res IR")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_zoo_builds() {
+        let models = fig5_models();
+        assert_eq!(models.len(), 6);
+        for (name, m) in &models {
+            assert!(m.flops() > 0, "{name}");
+            assert!(!m.conv3x3_layers().is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn vgg_heavier_than_mbnt() {
+        let v = vgg16(64, 1000);
+        let m = mobilenet_v2(64, 1000);
+        assert!(v.flops() > 5 * m.flops());
+    }
+
+    #[test]
+    fn resnet_has_residuals() {
+        let r = resnet50(64, 1000);
+        let adds = r
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, super::super::LayerKind::Add { .. }))
+            .count();
+        // one residual add per block except the first of each stack
+        assert_eq!(adds, (3 - 1) + (4 - 1) + (6 - 1) + (3 - 1));
+    }
+
+    #[test]
+    fn app_nets_build() {
+        for m in [
+            style_transfer_net(128),
+            coloring_net(128),
+            super_resolution_net(64),
+        ] {
+            assert!(m.flops() > 0);
+        }
+    }
+}

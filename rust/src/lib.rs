@@ -1,0 +1,23 @@
+//! CoCoPIE reproduction: compression-compilation co-design for real-time
+//! DNN inference, on a three-layer Rust + JAX + Pallas stack.
+//!
+//! See DESIGN.md for the paper -> module mapping and README.md for usage.
+
+pub mod codegen;
+pub mod coordinator;
+pub mod compress;
+pub mod exec;
+pub mod hwsim;
+pub mod ir;
+pub mod patterns;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Library version.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+pub mod cocotune;
+pub mod data;

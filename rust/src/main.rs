@@ -1,0 +1,224 @@
+//! cocopie CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline registry):
+//!   info                      — artifacts + manifest summary
+//!   serve  [--model M] [--batch B] [--requests N]
+//!                             — run the serving coordinator on synthetic
+//!                               traffic and print latency metrics
+//!   train  [--model M] [--dataset D] [--steps N]
+//!                             — train a model via the AOT train_step
+//!   compress [--model NAME]   — pattern-compress a timing model, print
+//!                               storage + FLOP report
+//!   explore [--configs N]     — real-tier CoCo-Tune exploration demo
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::cocotune::trainer::{
+    config_masks, sample_subspace, ModelState, TrainOpts, Trainer,
+};
+use cocopie::coordinator::{BatchPolicy, Coordinator};
+use cocopie::ir::zoo;
+use cocopie::runtime::Runtime;
+use cocopie::util::rng::Rng;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| "true".to_string());
+            if val != "true" {
+                i += 1;
+            }
+            out.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    out
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "info" => info(),
+        "serve" => serve(&flags),
+        "train" => train(&flags),
+        "compress" => compress(&flags),
+        "explore" => explore(&flags),
+        _ => {
+            println!("cocopie {} — compression-compilation co-design",
+                     cocopie::version());
+            println!(
+                "usage: cocopie <info|serve|train|compress|explore> [flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    println!("platform: {}", rt.platform());
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name}: {} params, {} masks, {} artifacts, {} MFLOPs",
+            m.param_count,
+            m.masks.len(),
+            m.artifacts.len(),
+            m.flops / 1_000_000
+        );
+    }
+    println!("micro artifacts: {:?}",
+             rt.manifest.micro.keys().collect::<Vec<_>>());
+    println!("datasets: {:?}",
+             rt.manifest.datasets.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").map(String::as_str)
+        .unwrap_or("resnet_mini");
+    let batch: usize =
+        flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let spec = rt.manifest.model(model)?.clone();
+    let elems: usize = spec.input_shape.iter().product();
+    let mut cfg = cocopie::coordinator::ServeConfig::new(model);
+    cfg.policy = BatchPolicy {
+        max_batch: batch,
+        max_wait: std::time::Duration::from_millis(3),
+    };
+    let coord = Coordinator::start(cfg)?;
+    let client = coord.client();
+    let mut rng = Rng::seed_from(1);
+    let mut pending = Vec::new();
+    for _ in 0..n {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push(client.submit(img)?);
+    }
+    for p in pending {
+        let _ = p.recv();
+    }
+    drop(client);
+    let s = coord.shutdown();
+    println!(
+        "served {} requests: p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+        s.completed, s.p50_ms, s.p99_ms, s.mean_batch
+    );
+    Ok(())
+}
+
+fn train(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").map(String::as_str)
+        .unwrap_or("resnet_mini");
+    let dataset = flags.get("dataset").map(String::as_str)
+        .unwrap_or("synflowers");
+    let steps: usize =
+        flags.get("steps").and_then(|v| v.parse().ok()).unwrap_or(300);
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let trainer = Trainer::new(&rt, model)?;
+    let ds = rt.manifest.datasets[dataset].clone();
+    let mut state = ModelState::init(&trainer.spec, 42);
+    let masks = config_masks(
+        &trainer.spec,
+        &state,
+        &vec![0; trainer.spec.prunable_modules.len()],
+    );
+    let opts = TrainOpts {
+        steps,
+        eval_every: 50,
+        ..Default::default()
+    };
+    let res = trainer.train(&mut state, &masks, &ds, &opts)?;
+    println!("trained {model} on {dataset} for {} steps", res.steps);
+    for (s, a) in &res.acc_curve {
+        println!("  step {s:4}  acc {a:.3}");
+    }
+    Ok(())
+}
+
+fn compress(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").map(String::as_str).unwrap_or("vgg16");
+    let ir = match name {
+        "vgg16" => zoo::vgg16(zoo::IMAGENET_HW, 1000),
+        "resnet50" => zoo::resnet50(zoo::IMAGENET_HW, 1000),
+        "mobilenet_v2" => zoo::mobilenet_v2(zoo::IMAGENET_HW, 1000),
+        other => anyhow::bail!("unknown timing model {other}"),
+    };
+    let dense = build_plan(&ir, Scheme::DenseNaive, PruneConfig::default(),
+                           7);
+    let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7);
+    println!("{name}: dense {} MB -> cocogen {} MB ({:.2}x), \
+              FLOP keep ratio {:.3}",
+             dense.weight_bytes() / (1 << 20),
+             coco.weight_bytes() / (1 << 20),
+             dense.weight_bytes() as f64 / coco.weight_bytes() as f64,
+             coco.flop_keep_ratio());
+    Ok(())
+}
+
+fn explore(flags: &HashMap<String, String>) -> Result<()> {
+    use cocopie::cocotune::explore::{explore, InitMode};
+    use cocopie::cocotune::pretrain::pretrain_bank;
+    let n_cfg: usize =
+        flags.get("configs").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let trainer = Trainer::new(&rt, "resnet_mini")?;
+    let ds = rt.manifest.datasets["synflowers"].clone();
+    println!("training teacher...");
+    let mut teacher = ModelState::init(&trainer.spec, 42);
+    let masks = config_masks(&trainer.spec, &teacher, &vec![0; 6]);
+    let res = trainer.train(
+        &mut teacher,
+        &masks,
+        &ds,
+        &TrainOpts {
+            steps: 450,
+            ..Default::default()
+        },
+    )?;
+    println!("teacher acc {:.3}", res.final_acc);
+    println!("pre-training tuning blocks...");
+    let bank = pretrain_bank(&trainer, &teacher, &ds, 40, 0.02, 7)?;
+    let configs = sample_subspace(6, n_cfg, 3);
+    let thr = res.final_acc; // alpha = 0 (paper mid-range)
+    let opts = TrainOpts {
+        steps: 120,
+        lr: 0.015,
+        eval_every: 20,
+        ..Default::default()
+    };
+    println!("exploring {} configs (thr {:.3})...", configs.len(), thr);
+    let base = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::Default, &opts, thr, true)?;
+    let comp = explore(&trainer, &teacher, &ds, &configs,
+                       InitMode::BlockTrained(&bank), &opts, thr, true)?;
+    println!(
+        "default:      {} configs, {} steps, found={:?}",
+        base.results.len(),
+        base.total_steps,
+        base.found.map(|i| base.results[i].model_size)
+    );
+    println!(
+        "block-trained: {} configs, {} steps (+{} pretrain), found={:?}",
+        comp.results.len(),
+        comp.total_steps,
+        bank.pretrain_steps,
+        comp.found.map(|i| comp.results[i].model_size)
+    );
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Connectivity pruning (paper §2.1.2, Fig. 3): cut connections between
+//! input and output channels — i.e. remove whole (cin, cout) kernels — by
+//! L2-norm ranking. More flexible than filter/channel pruning, and
+//! composes with kernel pattern pruning for higher total pruning rates.
+
+/// Decision for one conv layer: which (ci, co) kernels survive.
+#[derive(Debug, Clone)]
+pub struct ConnectivityMask {
+    pub cin: usize,
+    pub cout: usize,
+    /// alive[ci * cout + co]
+    pub alive: Vec<bool>,
+}
+
+impl ConnectivityMask {
+    pub fn all_alive(cin: usize, cout: usize) -> Self {
+        ConnectivityMask {
+            cin,
+            cout,
+            alive: vec![true; cin * cout],
+        }
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn keep_fraction(&self) -> f64 {
+        self.alive_count() as f64 / self.alive.len() as f64
+    }
+
+    /// Alive input channels for filter `co`.
+    pub fn alive_inputs(&self, co: usize) -> Vec<usize> {
+        (0..self.cin)
+            .filter(|ci| self.alive[ci * self.cout + co])
+            .collect()
+    }
+
+    pub fn is_alive(&self, ci: usize, co: usize) -> bool {
+        self.alive[ci * self.cout + co]
+    }
+}
+
+/// Rank kernels of a dense HWIO tensor by L2 norm and keep the top
+/// `keep_frac` fraction (at least one kernel per output filter so no
+/// filter goes fully dead — the paper keeps layer connectivity intact).
+pub fn prune_connectivity(w_hwio: &[f32], kh: usize, kw: usize, cin: usize,
+                          cout: usize, keep_frac: f64) -> ConnectivityMask {
+    assert_eq!(w_hwio.len(), kh * kw * cin * cout);
+    let n = cin * cout;
+    let mut norms = vec![0f64; n];
+    for t in 0..kh * kw {
+        for ci in 0..cin {
+            for co in 0..cout {
+                let v = w_hwio[t * cin * cout + ci * cout + co] as f64;
+                norms[ci * cout + co] += v * v;
+            }
+        }
+    }
+    let n_keep = ((keep_frac * n as f64).ceil() as usize).clamp(1, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let mut alive = vec![false; n];
+    for &i in order.iter().take(n_keep) {
+        alive[i] = true;
+    }
+    let mut mask = ConnectivityMask { cin, cout, alive };
+    // Guarantee every filter keeps its strongest input connection.
+    for co in 0..cout {
+        if mask.alive_inputs(co).is_empty() {
+            let best = (0..cin)
+                .max_by(|&a, &b| {
+                    norms[a * cout + co]
+                        .partial_cmp(&norms[b * cout + co])
+                        .unwrap()
+                })
+                .unwrap();
+            mask.alive[best * cout + co] = true;
+        }
+    }
+    mask
+}
+
+/// Structured filter pruning baseline (Li et al.): drop whole output
+/// filters by L1 norm; returns surviving filter indices.
+pub fn prune_filters(w_hwio: &[f32], kh: usize, kw: usize, cin: usize,
+                     cout: usize, keep_frac: f64) -> Vec<usize> {
+    let mut norms = vec![0f64; cout];
+    for t in 0..kh * kw {
+        for ci in 0..cin {
+            for co in 0..cout {
+                norms[co] += w_hwio[t * cin * cout + ci * cout + co].abs()
+                    as f64;
+            }
+        }
+    }
+    let n_keep = ((keep_frac * cout as f64).ceil() as usize).clamp(1, cout);
+    let mut order: Vec<usize> = (0..cout).collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let mut keep: Vec<usize> = order.into_iter().take(n_keep).collect();
+    keep.sort_unstable();
+    keep
+}
+
+/// Non-structured magnitude pruning baseline (Han et al.): returns a
+/// binary mask over the full dense tensor keeping the top `keep_frac`.
+pub fn prune_unstructured(w: &[f32], keep_frac: f64) -> Vec<bool> {
+    let n = w.len();
+    let n_keep = ((keep_frac * n as f64).ceil() as usize).clamp(1, n);
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        w[b].abs().partial_cmp(&w[a].abs()).unwrap()
+    });
+    let mut mask = vec![false; n];
+    for &i in order.iter().take(n_keep) {
+        mask[i] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn keeps_exact_fraction() {
+        prop::check("connectivity-fraction", 50, |g| {
+            let cin = g.usize(1, 8);
+            let cout = g.usize(1, 8);
+            let keep = g.f64(0.1, 1.0);
+            let w = g.normal_vec(9 * cin * cout);
+            let m = prune_connectivity(&w, 3, 3, cin, cout, keep);
+            let want = ((keep * (cin * cout) as f64).ceil() as usize)
+                .clamp(1, cin * cout);
+            // may exceed by the per-filter guarantee
+            if m.alive_count() < want {
+                return Err(format!(
+                    "kept {} < {want}",
+                    m.alive_count()
+                ));
+            }
+            // every filter has at least one alive input
+            for co in 0..cout {
+                if m.alive_inputs(co).is_empty() {
+                    return Err(format!("filter {co} fully dead"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn keeps_strongest_kernels() {
+        let cin = 2;
+        let cout = 2;
+        let mut w = vec![0f32; 9 * cin * cout];
+        // kernel (0,0) large, (1,1) large; others tiny
+        for t in 0..9 {
+            w[t * 4] = 10.0; // ci=0, co=0
+            w[t * 4 + 3] = 8.0; // ci=1, co=1
+            w[t * 4 + 1] = 0.1;
+            w[t * 4 + 2] = 0.1;
+        }
+        let m = prune_connectivity(&w, 3, 3, cin, cout, 0.5);
+        assert!(m.is_alive(0, 0));
+        assert!(m.is_alive(1, 1));
+        assert_eq!(m.alive_count(), 2);
+    }
+
+    #[test]
+    fn filter_pruning_ranks_by_l1() {
+        let cin = 1;
+        let cout = 4;
+        let mut w = vec![0f32; 9 * cout];
+        for t in 0..9 {
+            w[t * cout] = 0.1; // filter 0 weak
+            w[t * cout + 1] = 5.0;
+            w[t * cout + 2] = 3.0;
+            w[t * cout + 3] = 0.2;
+        }
+        let keep = prune_filters(&w, 3, 3, cin, cout, 0.5);
+        assert_eq!(keep, vec![1, 2]);
+    }
+
+    #[test]
+    fn unstructured_keeps_topk() {
+        let w = vec![0.1f32, -5.0, 0.3, 2.0, -0.05];
+        let m = prune_unstructured(&w, 0.4);
+        assert_eq!(m, vec![false, true, false, true, false]);
+    }
+}

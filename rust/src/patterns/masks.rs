@@ -1,0 +1,151 @@
+//! Elementwise binary masks over HWIO conv weights for each pruning
+//! scheme (mirrors python/compile/patterns.py). Used to drive the masked
+//! PJRT training graphs from Rust (Table 1's accuracy axis).
+
+use super::connectivity::{prune_connectivity, prune_unstructured};
+use super::{assign_pattern, PATTERN_SET_4};
+
+/// HWIO shape helper: (kh, kw, cin, cout) from a 4-d shape.
+fn dims(shape: &[usize]) -> (usize, usize, usize, usize) {
+    assert_eq!(shape.len(), 4, "expected HWIO conv shape");
+    (shape[0], shape[1], shape[2], shape[3])
+}
+
+/// Non-structured magnitude mask keeping `keep` fraction.
+pub fn mask_unstructured(w: &[f32], keep: f64) -> Vec<f32> {
+    prune_unstructured(w, keep)
+        .into_iter()
+        .map(|b| if b { 1.0 } else { 0.0 })
+        .collect()
+}
+
+/// Whole-filter (output channel) mask keeping `keep` fraction (HWIO).
+pub fn mask_filters(w: &[f32], shape: &[usize], keep: f64) -> Vec<f32> {
+    let (kh, kw, cin, cout) = dims(shape);
+    let survivors = super::connectivity::prune_filters(w, kh, kw, cin,
+                                                       cout, keep);
+    let alive: std::collections::HashSet<usize> =
+        survivors.into_iter().collect();
+    let mut m = vec![0f32; w.len()];
+    for (i, v) in m.iter_mut().enumerate() {
+        if alive.contains(&(i % cout)) {
+            *v = 1.0;
+        }
+    }
+    m
+}
+
+/// Kernel-pattern mask: each 3x3 kernel keeps its best 4-entry pattern.
+/// Non-3x3 shapes get an all-ones mask.
+pub fn mask_patterns(w: &[f32], shape: &[usize]) -> Vec<f32> {
+    let (kh, kw, cin, cout) = dims(shape);
+    if (kh, kw) != (3, 3) {
+        return vec![1f32; w.len()];
+    }
+    let mut m = vec![0f32; w.len()];
+    for ci in 0..cin {
+        for co in 0..cout {
+            let mut k = [0f32; 9];
+            for (t, kv) in k.iter_mut().enumerate() {
+                *kv = w[t * cin * cout + ci * cout + co];
+            }
+            let pid = assign_pattern(&k);
+            for &(dy, dx) in &PATTERN_SET_4[pid as usize] {
+                m[(dy * 3 + dx) * cin * cout + ci * cout + co] = 1.0;
+            }
+        }
+    }
+    m
+}
+
+/// Connectivity mask: whole (cin,cout) kernels kept at `keep` fraction.
+pub fn mask_connectivity(w: &[f32], shape: &[usize], keep: f64)
+                         -> Vec<f32> {
+    let (kh, kw, cin, cout) = dims(shape);
+    let conn = prune_connectivity(w, kh, kw, cin, cout, keep);
+    let mut m = vec![0f32; w.len()];
+    for (i, v) in m.iter_mut().enumerate() {
+        let rem = i % (cin * cout);
+        let ci = rem / cout;
+        let co = rem % cout;
+        if conn.is_alive(ci, co) {
+            *v = 1.0;
+        }
+    }
+    m
+}
+
+/// Pattern + connectivity combined (the CoCo-Gen deployment scheme).
+pub fn mask_pattern_connectivity(w: &[f32], shape: &[usize],
+                                 conn_keep: f64) -> Vec<f32> {
+    let p = mask_patterns(w, shape);
+    let c = mask_connectivity(w, shape, conn_keep);
+    p.iter().zip(&c).map(|(a, b)| a * b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn w(shape: &[usize], seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from(seed);
+        (0..shape.iter().product())
+            .map(|_| rng.normal_f32())
+            .collect()
+    }
+
+    #[test]
+    fn keep_ratios() {
+        let shape = [3, 3, 8, 8];
+        let wt = w(&shape, 1);
+        let keep = 4.0 / 9.0;
+        let mu = mask_unstructured(&wt, keep);
+        let frac = mu.iter().sum::<f32>() as f64 / mu.len() as f64;
+        assert!((frac - keep).abs() < 0.01, "{frac}");
+        let mp = mask_patterns(&wt, &shape);
+        let frac = mp.iter().sum::<f32>() as f64 / mp.len() as f64;
+        assert!((frac - keep).abs() < 1e-9);
+        let mf = mask_filters(&wt, &shape, keep);
+        let frac = mf.iter().sum::<f32>() as f64 / mf.len() as f64;
+        // filter keep rounds up to whole filters: 4/8 = 0.5
+        assert!((frac - 0.5).abs() < 1e-6, "{frac}");
+        let mc = mask_connectivity(&wt, &shape, keep);
+        let frac = mc.iter().sum::<f32>() as f64 / mc.len() as f64;
+        assert!((frac - 29.0 / 64.0).abs() < 1e-6, "{frac}");
+    }
+
+    #[test]
+    fn pattern_mask_keeps_centre() {
+        let shape = [3, 3, 4, 4];
+        let wt = w(&shape, 2);
+        let m = mask_patterns(&wt, &shape);
+        let (cin, cout) = (4, 4);
+        for ci in 0..cin {
+            for co in 0..cout {
+                // centre tap (1,1) always survives
+                assert_eq!(m[(1 * 3 + 1) * cin * cout + ci * cout + co],
+                           1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn non_3x3_pattern_is_identity() {
+        let shape = [1, 1, 4, 4];
+        let wt = w(&shape, 3);
+        assert!(mask_patterns(&wt, &shape).iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn combined_mask_is_intersection() {
+        let shape = [3, 3, 6, 6];
+        let wt = w(&shape, 4);
+        let pc = mask_pattern_connectivity(&wt, &shape, 0.5);
+        let p = mask_patterns(&wt, &shape);
+        let c = mask_connectivity(&wt, &shape, 0.5);
+        for i in 0..pc.len() {
+            assert_eq!(pc[i], p[i] * c[i]);
+        }
+    }
+}

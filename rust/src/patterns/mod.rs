@@ -1,0 +1,219 @@
+//! Kernel pattern library + pattern assignment + connectivity pruning
+//! (paper §2.1.2). Mirrors python/compile/patterns.py exactly — the unit
+//! tests pin the same tap lists on both sides.
+
+pub mod connectivity;
+pub mod masks;
+
+/// A (dy, dx) tap inside a 3x3 kernel.
+pub type Tap = (usize, usize);
+
+/// The curated 4-entry pattern set over 3x3 kernels (centre always kept),
+/// following PatDNN. MUST stay in sync with
+/// python/compile/patterns.py::PATTERN_SET_4.
+pub const PATTERN_SET_4: [[Tap; 4]; 8] = [
+    [(0, 0), (0, 1), (1, 1), (1, 0)], // top-left block
+    [(0, 1), (0, 2), (1, 1), (1, 2)], // top-right block
+    [(1, 0), (1, 1), (2, 0), (2, 1)], // bottom-left block
+    [(1, 1), (1, 2), (2, 1), (2, 2)], // bottom-right block
+    [(0, 1), (1, 0), (1, 1), (1, 2)], // T up
+    [(1, 0), (1, 1), (1, 2), (2, 1)], // T down
+    [(0, 1), (1, 0), (1, 1), (2, 1)], // T left
+    [(0, 1), (1, 1), (1, 2), (2, 1)], // cross (+) minus one
+];
+
+/// Pattern id type (index into PATTERN_SET_4).
+pub type PatternId = u8;
+
+/// Assign the best pattern (max preserved L2 energy) to one 3x3 kernel
+/// given as 9 weights in row-major (ky*3+kx) order.
+pub fn assign_pattern(kernel: &[f32; 9]) -> PatternId {
+    let mut best = 0u8;
+    let mut best_energy = f64::NEG_INFINITY;
+    for (pid, taps) in PATTERN_SET_4.iter().enumerate() {
+        let e: f64 = taps
+            .iter()
+            .map(|&(dy, dx)| {
+                let w = kernel[dy * 3 + dx] as f64;
+                w * w
+            })
+            .sum();
+        if e > best_energy {
+            best_energy = e;
+            best = pid as u8;
+        }
+    }
+    best
+}
+
+/// Energy preserved by pattern `pid` on `kernel`.
+pub fn pattern_energy(kernel: &[f32; 9], pid: PatternId) -> f64 {
+    PATTERN_SET_4[pid as usize]
+        .iter()
+        .map(|&(dy, dx)| {
+            let w = kernel[dy * 3 + dx] as f64;
+            w * w
+        })
+        .sum()
+}
+
+/// Per-layer pattern assignment for a dense HWIO weight tensor
+/// (kh=kw=3): returns pattern ids [cin * cout] indexed `ci * cout + co`.
+pub fn assign_layer_patterns(w_hwio: &[f32], cin: usize, cout: usize)
+                             -> Vec<PatternId> {
+    assert_eq!(w_hwio.len(), 9 * cin * cout);
+    let mut ids = vec![0u8; cin * cout];
+    for ci in 0..cin {
+        for co in 0..cout {
+            let mut k = [0f32; 9];
+            for (t, kv) in k.iter_mut().enumerate() {
+                // HWIO layout: w[ky][kx][ci][co]
+                *kv = w_hwio[t * cin * cout + ci * cout + co];
+            }
+            ids[ci * cout + co] = assign_pattern(&k);
+        }
+    }
+    ids
+}
+
+/// Project a dense 3x3 kernel onto its assigned pattern: zero the
+/// non-pattern taps (the ADMM Z-update for kernel pattern pruning).
+pub fn project_kernel(kernel: &[f32; 9]) -> ([f32; 9], PatternId) {
+    let pid = assign_pattern(kernel);
+    let mut out = [0f32; 9];
+    for &(dy, dx) in &PATTERN_SET_4[pid as usize] {
+        out[dy * 3 + dx] = kernel[dy * 3 + dx];
+    }
+    (out, pid)
+}
+
+/// Pattern-pruning statistics for a layer.
+#[derive(Debug, Clone, Default)]
+pub struct PatternStats {
+    pub kernels: usize,
+    pub histogram: [usize; 8],
+    pub energy_kept: f64,
+    pub energy_total: f64,
+}
+
+impl PatternStats {
+    pub fn energy_ratio(&self) -> f64 {
+        if self.energy_total == 0.0 {
+            1.0
+        } else {
+            self.energy_kept / self.energy_total
+        }
+    }
+}
+
+/// Compute assignment statistics over a dense HWIO tensor.
+pub fn layer_pattern_stats(w_hwio: &[f32], cin: usize, cout: usize)
+                           -> PatternStats {
+    let mut st = PatternStats {
+        kernels: cin * cout,
+        ..Default::default()
+    };
+    for ci in 0..cin {
+        for co in 0..cout {
+            let mut k = [0f32; 9];
+            for (t, kv) in k.iter_mut().enumerate() {
+                *kv = w_hwio[t * cin * cout + ci * cout + co];
+            }
+            let pid = assign_pattern(&k);
+            st.histogram[pid as usize] += 1;
+            st.energy_kept += pattern_energy(&k, pid);
+            st.energy_total += k.iter().map(|w| (*w as f64) * (*w as f64))
+                .sum::<f64>();
+        }
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pattern_set_matches_python() {
+        // Pinned tap lists — keep in sync with test_patterns.py.
+        assert_eq!(PATTERN_SET_4[0], [(0, 0), (0, 1), (1, 1), (1, 0)]);
+        assert_eq!(PATTERN_SET_4[7], [(0, 1), (1, 1), (1, 2), (2, 1)]);
+        for taps in &PATTERN_SET_4 {
+            assert!(taps.contains(&(1, 1)), "centre tap always kept");
+            let mut s = taps.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 4);
+        }
+    }
+
+    #[test]
+    fn assignment_maximizes_energy() {
+        prop::check("pattern-assign-max-energy", 200, |g| {
+            let mut k = [0f32; 9];
+            for v in &mut k {
+                *v = g.f32(-2.0, 2.0);
+            }
+            let pid = assign_pattern(&k);
+            let e = pattern_energy(&k, pid);
+            for other in 0..8u8 {
+                if pattern_energy(&k, other) > e + 1e-9 {
+                    return Err(format!(
+                        "pattern {other} beats chosen {pid}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn projection_keeps_exactly_pattern_taps() {
+        prop::check("projection-taps", 100, |g| {
+            let mut k = [0f32; 9];
+            for v in &mut k {
+                *v = g.f32(-1.0, 1.0);
+            }
+            let (proj, pid) = project_kernel(&k);
+            let taps = &PATTERN_SET_4[pid as usize];
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    let kept = taps.contains(&(dy, dx));
+                    let v = proj[dy * 3 + dx];
+                    if kept && (v - k[dy * 3 + dx]).abs() > 0.0 {
+                        return Err("kept tap modified".into());
+                    }
+                    if !kept && v != 0.0 {
+                        return Err("pruned tap nonzero".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layer_stats_sane() {
+        let cin = 4;
+        let cout = 6;
+        let mut w = vec![0f32; 9 * cin * cout];
+        for (i, v) in w.iter_mut().enumerate() {
+            *v = ((i * 31 % 17) as f32 - 8.0) * 0.1;
+        }
+        let st = layer_pattern_stats(&w, cin, cout);
+        assert_eq!(st.kernels, 24);
+        assert_eq!(st.histogram.iter().sum::<usize>(), 24);
+        assert!(st.energy_ratio() > 0.4 && st.energy_ratio() <= 1.0);
+    }
+
+    #[test]
+    fn obvious_corner_kernel_picks_corner_pattern() {
+        let mut k = [0f32; 9];
+        k[0] = 1.0; // (0,0)
+        k[1] = 1.0; // (0,1)
+        k[3] = 1.0; // (1,0)
+        k[4] = 1.0; // (1,1)
+        assert_eq!(assign_pattern(&k), 0);
+    }
+}

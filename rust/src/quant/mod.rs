@@ -1,0 +1,275 @@
+//! Weight quantization (paper §1: "compression techniques fall into two
+//! categories, pruning and quantization"). CoCo-Gen's evaluation runs
+//! fp32 (the paper notes Fig. 7's comparison does NOT apply quantization
+//! while Eyeriss/ESE use 12-bit fixed point) — this module supplies the
+//! quantization axis so the framework covers both halves of compression:
+//!
+//! * symmetric per-output-channel int8 quantization of conv/FC weights;
+//! * a quantized executor path (i8 weights, f32 activations, i32-free
+//!   dequant-on-load AXPY — the mobile-friendly "weight-only" scheme);
+//! * storage accounting (4x smaller than f32; composes with FKW).
+
+use crate::compress::{DenseLayer, FkwLayer};
+use crate::exec::tensor::Tensor;
+use crate::exec::{naive, pattern};
+use crate::codegen::TileConfig;
+
+/// Per-output-channel symmetric int8 quantized weights.
+#[derive(Debug, Clone)]
+pub struct QuantDense {
+    pub cout: usize,
+    pub cin: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// w_q[co][ci][ky][kx] (OIHW), values in [-127, 127].
+    pub weights: Vec<i8>,
+    /// Per-output-channel scale: w ~= w_q * scale[co].
+    pub scales: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl QuantDense {
+    /// Quantize a dense layer (per-channel absmax).
+    pub fn quantize(d: &DenseLayer) -> QuantDense {
+        let per = d.cin * d.kh * d.kw;
+        let mut scales = vec![0f32; d.cout];
+        for co in 0..d.cout {
+            let absmax = d.weights[co * per..(co + 1) * per]
+                .iter()
+                .fold(0f32, |m, w| m.max(w.abs()));
+            scales[co] = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        }
+        let weights = d
+            .weights
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let s = scales[i / per];
+                (w / s).round().clamp(-127.0, 127.0) as i8
+            })
+            .collect();
+        QuantDense {
+            cout: d.cout,
+            cin: d.cin,
+            kh: d.kh,
+            kw: d.kw,
+            weights,
+            scales,
+            bias: d.bias.clone(),
+        }
+    }
+
+    /// Dequantize back to f32 (for error analysis / fallback execution).
+    pub fn dequantize(&self) -> DenseLayer {
+        let per = self.cin * self.kh * self.kw;
+        DenseLayer {
+            cout: self.cout,
+            cin: self.cin,
+            kh: self.kh,
+            kw: self.kw,
+            weights: self
+                .weights
+                .iter()
+                .enumerate()
+                .map(|(i, q)| *q as f32 * self.scales[i / per])
+                .collect(),
+            bias: self.bias.clone(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.weights.len() + self.scales.len() * 4 + self.bias.len() * 4
+    }
+
+    /// Max relative quantization error over the weights (w.r.t. channel
+    /// absmax) — bounded by 0.5/127 per symmetric-absmax construction.
+    pub fn max_rel_error(&self, original: &DenseLayer) -> f32 {
+        let per = self.cin * self.kh * self.kw;
+        let deq = self.dequantize();
+        let mut worst = 0f32;
+        for co in 0..self.cout {
+            let absmax = original.weights[co * per..(co + 1) * per]
+                .iter()
+                .fold(0f32, |m, w| m.max(w.abs()));
+            if absmax == 0.0 {
+                continue;
+            }
+            for i in co * per..(co + 1) * per {
+                worst = worst
+                    .max((deq.weights[i] - original.weights[i]).abs()
+                        / absmax);
+            }
+        }
+        worst
+    }
+}
+
+/// int8 FKW: pattern-compact weights quantized per output channel —
+/// pruning x quantization composed (the full CoCoPIE compression stack).
+#[derive(Debug, Clone)]
+pub struct QuantFkw {
+    pub layer: FkwLayer,
+    /// Quantized replacement for layer.weights.
+    pub weights_q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QuantFkw {
+    pub fn quantize(f: &FkwLayer) -> QuantFkw {
+        let mut scales = vec![1f32; f.cout];
+        for phys in 0..f.cout {
+            let co = f.filter_order[phys] as usize;
+            let lo = f.offsets[phys] as usize * 4;
+            let hi = f.offsets[phys + 1] as usize * 4;
+            let absmax = f.weights[lo..hi]
+                .iter()
+                .fold(0f32, |m, w| m.max(w.abs()));
+            scales[co] = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        }
+        let mut weights_q = vec![0i8; f.weights.len()];
+        for phys in 0..f.cout {
+            let co = f.filter_order[phys] as usize;
+            let lo = f.offsets[phys] as usize * 4;
+            let hi = f.offsets[phys + 1] as usize * 4;
+            for i in lo..hi {
+                weights_q[i] = (f.weights[i] / scales[co])
+                    .round()
+                    .clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantFkw {
+            layer: f.clone(),
+            weights_q,
+            scales,
+        }
+    }
+
+    /// Dequantized FKW layer (runs on the standard pattern executor).
+    pub fn dequantize(&self) -> FkwLayer {
+        let mut out = self.layer.clone();
+        for phys in 0..out.cout {
+            let co = out.filter_order[phys] as usize;
+            let lo = out.offsets[phys] as usize * 4;
+            let hi = out.offsets[phys + 1] as usize * 4;
+            for i in lo..hi {
+                out.weights[i] =
+                    self.weights_q[i] as f32 * self.scales[co];
+            }
+        }
+        out
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.layer.filter_order.len() * 4
+            + self.layer.offsets.len() * 4
+            + self.layer.kernels.len() * 3
+            + self.weights_q.len() // 1 byte each
+            + self.scales.len() * 4
+            + self.layer.bias.len() * 4
+    }
+}
+
+/// Run a quantized dense conv by dequant-on-load (weight-only int8).
+pub fn conv2d_quant(input: &Tensor, q: &QuantDense, stride: usize,
+                    relu: bool, threads: usize) -> Tensor {
+    naive::conv2d(input, &q.dequantize(), stride, relu, threads)
+}
+
+/// Run a quantized pattern conv.
+pub fn pattern_conv2d_quant(input: &Tensor, q: &QuantFkw, stride: usize,
+                            relu: bool, threads: usize, tile: TileConfig)
+                            -> Tensor {
+    pattern::conv2d(input, &q.dequantize(), stride, relu, threads, tile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::connectivity::ConnectivityMask;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_dense(seed: u64, cout: usize, cin: usize) -> DenseLayer {
+        let mut rng = Rng::seed_from(seed);
+        DenseLayer {
+            cout,
+            cin,
+            kh: 3,
+            kw: 3,
+            weights: (0..cout * cin * 9).map(|_| rng.normal_f32()).collect(),
+            bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        prop::check("quant-error-bound", 30, |g| {
+            let cout = g.usize(1, 8);
+            let cin = g.usize(1, 8);
+            let d = random_dense(g.usize(0, 1 << 30) as u64, cout, cin);
+            let q = QuantDense::quantize(&d);
+            let err = q.max_rel_error(&d);
+            // symmetric absmax rounding: error <= 0.5 step = 0.5/127
+            if err > 0.5 / 127.0 + 1e-6 {
+                return Err(format!("rel error {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_storage_is_4x_smaller() {
+        let d = random_dense(3, 32, 32);
+        let q = QuantDense::quantize(&d);
+        let ratio = d.size_bytes() as f64 / q.size_bytes() as f64;
+        assert!(ratio > 3.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn quant_conv_close_to_fp32() {
+        let mut rng = Rng::seed_from(9);
+        let d = random_dense(4, 8, 8);
+        let q = QuantDense::quantize(&d);
+        let x = Tensor::random(8, 10, 10, &mut rng);
+        let a = naive::conv2d(&x, &d, 1, false, 1);
+        let b = conv2d_quant(&x, &q, 1, false, 1);
+        // error accumulates over cin*9 MACs; stays small relative to
+        // activation magnitude
+        let scale = a.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(b.max_abs_diff(&a) < 0.02 * scale.max(1.0));
+    }
+
+    #[test]
+    fn fkw_quant_composes_pruning_and_quantization() {
+        let mut rng = Rng::seed_from(5);
+        let d = random_dense(6, 16, 16);
+        let conn = ConnectivityMask::all_alive(16, 16);
+        let f = FkwLayer::from_dense(&d, &conn);
+        let qf = QuantFkw::quantize(&f);
+        // int8 FKW smaller than f32 FKW
+        assert!(qf.size_bytes() < f.size_bytes());
+        // executes and matches the dequantized pattern conv
+        let x = Tensor::random(16, 8, 8, &mut rng);
+        let a = pattern_conv2d_quant(&x, &qf, 1, true, 2,
+                                     TileConfig::default());
+        let b = pattern::conv2d(&x, &qf.dequantize(), 1, true, 1,
+                                TileConfig::default());
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn round_trip_identity_for_exact_values() {
+        // weights already on the quantization grid survive exactly
+        let mut d = random_dense(7, 2, 2);
+        let per = 2 * 9;
+        for co in 0..2 {
+            for i in 0..per {
+                d.weights[co * per + i] =
+                    ((i % 11) as f32 - 5.0) / 127.0;
+            }
+        }
+        let q = QuantDense::quantize(&d);
+        let back = QuantDense::quantize(&q.dequantize());
+        assert_eq!(q.weights, back.weights);
+    }
+}

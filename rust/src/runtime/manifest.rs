@@ -1,0 +1,353 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the L2→L3 contract: every AOT artifact's input/output
+//! signature (names, shapes, dtypes, feed order), the model specs (modules,
+//! parameter order, prunable set), the synthetic-dataset parameters, and
+//! the pattern set — all read from one JSON document so Python and Rust
+//! can never drift apart silently.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Tensor dtype (only what the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("tensor missing name"))?
+                .to_string(),
+            shape: j.get("shape").usize_vec(),
+            dtype: DType::parse(j.get("dtype").as_str().unwrap_or("f32"))?,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            file: j
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing file"))?
+                .to_string(),
+            inputs: parse_list("inputs")?,
+            outputs: parse_list("outputs")?,
+        })
+    }
+    /// Index of the input named `name`.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// Model spec mirrored from python/compile/model.py::ModelDef.spec_json().
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub input_shape: Vec<usize>, // (H, W, C)
+    pub classes: usize,
+    pub params: Vec<TensorSpec>,
+    pub masks: Vec<TensorSpec>,
+    pub student_params: Vec<String>,
+    pub prunable_modules: Vec<String>,
+    pub flops: u64,
+    pub param_count: u64,
+    pub train_batch: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Raw module list (kind-specific fields stay JSON).
+    pub modules: Vec<Json>,
+}
+
+impl ModelSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let strings = |key: &str| -> Vec<String> {
+            j.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        };
+        let mut artifacts = BTreeMap::new();
+        if let Some(obj) = j.get("artifacts").as_obj() {
+            for (k, v) in obj {
+                artifacts.insert(k.clone(), ArtifactSpec::from_json(v)?);
+            }
+        }
+        Ok(ModelSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("model missing name"))?
+                .to_string(),
+            input_shape: j.get("input_shape").usize_vec(),
+            classes: j.get("classes").as_usize().unwrap_or(0),
+            params: tensors("params")?,
+            masks: tensors("masks")?,
+            student_params: strings("student_params"),
+            prunable_modules: strings("prunable_modules"),
+            flops: j.get("flops").as_f64().unwrap_or(0.0) as u64,
+            param_count: j.get("param_count").as_f64().unwrap_or(0.0) as u64,
+            train_batch: j.get("train_batch").as_usize().unwrap_or(32),
+            artifacts,
+            modules: j.get("modules").as_arr().unwrap_or(&[]).to_vec(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no artifact {name}", self.name))
+    }
+
+    pub fn param_shape(&self, name: &str) -> Option<&[usize]> {
+        self.params
+            .iter()
+            .find(|t| t.name == name)
+            .map(|t| t.shape.as_slice())
+    }
+
+    /// Mask names that belong to a given module.
+    pub fn module_masks(&self, module: &str) -> Vec<&TensorSpec> {
+        let prefix = format!("{module}.");
+        self.masks
+            .iter()
+            .filter(|t| t.name.starts_with(&prefix))
+            .collect()
+    }
+}
+
+/// Synthetic dataset parameters (mirrors python/compile/data.py).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub classes: usize,
+    pub noise: f64,
+    pub freq_base: f64,
+    pub angle_jitter: f64,
+    pub train: usize,
+    pub test: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSpec>,
+    pub micro: BTreeMap<String, ArtifactSpec>,
+    pub datasets: BTreeMap<String, DatasetSpec>,
+    pub image_size: usize,
+    /// Pattern set: 8 patterns x 4 (dy,dx) taps.
+    pub pattern_set: Vec<Vec<(usize, usize)>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        if let Some(obj) = j.get("models").as_obj() {
+            for (k, v) in obj {
+                models.insert(k.clone(), ModelSpec::from_json(v)?);
+            }
+        }
+        let mut micro = BTreeMap::new();
+        if let Some(obj) = j.get("micro").as_obj() {
+            for (k, v) in obj {
+                micro.insert(k.clone(), ArtifactSpec::from_json(v)?);
+            }
+        }
+        let mut datasets = BTreeMap::new();
+        let data = j.get("data");
+        let image_size = data.get("size").as_usize().unwrap_or(16);
+        if let Some(obj) = data.get("datasets").as_obj() {
+            for (k, v) in obj {
+                datasets.insert(
+                    k.clone(),
+                    DatasetSpec {
+                        name: k.clone(),
+                        classes: v.get("classes").as_usize().unwrap_or(16),
+                        noise: v.get("noise").as_f64().unwrap_or(0.1),
+                        freq_base: v.get("freq_base").as_f64().unwrap_or(1.5),
+                        angle_jitter: v
+                            .get("angle_jitter")
+                            .as_f64()
+                            .unwrap_or(0.1),
+                        train: v.get("train").as_usize().unwrap_or(2048),
+                        test: v.get("test").as_usize().unwrap_or(512),
+                    },
+                );
+            }
+        }
+        let pattern_set = j
+            .get("pattern_set")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| {
+                        let v = t.usize_vec();
+                        (v.first().copied().unwrap_or(0),
+                         v.get(1).copied().unwrap_or(0))
+                    })
+                    .collect()
+            })
+            .collect();
+        Ok(Manifest {
+            models,
+            micro,
+            datasets,
+            image_size,
+            pattern_set,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Json {
+        json::parse(
+            r#"{
+          "format": 1,
+          "models": {
+            "m": {
+              "name": "m", "input_shape": [16,16,3], "classes": 16,
+              "params": [{"name":"a.w","shape":[3,3,3,8],"dtype":"f32"}],
+              "masks": [{"name":"a.w","shape":[3,3,3,8],"dtype":"f32"}],
+              "student_params": ["a.w"], "prunable_modules": ["a"],
+              "flops": 123, "param_count": 216, "train_batch": 8,
+              "modules": [{"name":"a","kind":"stem","cout":8,"prunable":true}],
+              "artifacts": {
+                "infer_b1": {"file": "m.infer_b1.hlo.txt",
+                  "inputs": [{"name":"p:a.w","shape":[3,3,3,8],"dtype":"f32"},
+                             {"name":"x","shape":[1,16,16,3],"dtype":"f32"}],
+                  "outputs": [{"name":"logits","shape":[1,16],"dtype":"f32"}]}
+              }
+            }
+          },
+          "micro": {},
+          "data": {"size": 16, "datasets": {"synflowers":
+            {"classes":16,"noise":0.1,"freq_base":1.5,"angle_jitter":0.05,
+             "train":2048,"test":512}}},
+          "pattern_set": [[[0,0],[0,1],[1,1],[1,0]]]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_spec() {
+        let man = Manifest::from_json(&tiny_manifest()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.classes, 16);
+        assert_eq!(m.params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(m.params[0].elements(), 216);
+        let art = m.artifact("infer_b1").unwrap();
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.input_index("x"), Some(1));
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn parses_datasets_and_patterns() {
+        let man = Manifest::from_json(&tiny_manifest()).unwrap();
+        assert_eq!(man.datasets["synflowers"].classes, 16);
+        assert_eq!(man.pattern_set[0][2], (1, 1));
+        assert_eq!(man.image_size, 16);
+    }
+
+    #[test]
+    fn module_masks_by_prefix() {
+        let man = Manifest::from_json(&tiny_manifest()).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.module_masks("a").len(), 1);
+        assert_eq!(m.module_masks("b").len(), 0);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let man = Manifest::load(&dir).unwrap();
+            assert!(man.models.contains_key("resnet_mini"));
+            let rm = &man.models["resnet_mini"];
+            assert_eq!(rm.prunable_modules.len(), 6);
+            assert!(rm.artifacts.contains_key("train_step"));
+            assert_eq!(man.pattern_set.len(), 8);
+        }
+    }
+}

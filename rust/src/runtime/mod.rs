@@ -1,0 +1,400 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the request path. Python never runs here.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id proto incompatibility between
+//! jax >= 0.5 and xla_extension 0.5.1.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelSpec, TensorSpec};
+
+/// Host-side tensor: shape + typed data.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+    pub fn ones(shape: &[usize]) -> Self {
+        HostTensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("tensor has {} elements, expected scalar", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                l.reshape(&dims)?
+            }
+            HostTensor::I32 { shape, data } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                l.reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        match spec.dtype {
+            DType::F32 => Ok(HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>()?,
+            }),
+            DType::I32 => Ok(HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>()?,
+            }),
+        }
+    }
+}
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Device-resident input set for repeated execution: a prefix of the
+/// artifact's inputs (typically params + masks) uploaded once; only the
+/// per-call suffix (e.g. the image batch) crosses the host boundary each
+/// execution. This is the serving/training hot-path optimization — see
+/// EXPERIMENTS.md §Perf.
+pub struct DeviceInputs {
+    buffers: Vec<xla::PjRtBuffer>,
+    prefix_len: usize,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates the signature, returns outputs
+    /// in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.file,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "input '{}' shape mismatch: fed {:?}, artifact wants {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.spec.file,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+
+    /// Upload the first `prefix.len()` inputs to the device once. The
+    /// tensors must match the artifact's input prefix (validated).
+    pub fn upload_prefix(&self, client: &xla::PjRtClient,
+                         prefix: &[HostTensor]) -> Result<DeviceInputs> {
+        if prefix.len() > self.spec.inputs.len() {
+            bail!("prefix longer than artifact inputs");
+        }
+        let mut buffers = Vec::with_capacity(prefix.len());
+        for (t, spec) in prefix.iter().zip(&self.spec.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "prefix input '{}' shape mismatch: {:?} vs {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            let buf = match t {
+                HostTensor::F32 { shape, data } => client
+                    .buffer_from_host_buffer::<f32>(data, shape, None)?,
+                HostTensor::I32 { shape, data } => client
+                    .buffer_from_host_buffer::<i32>(data, shape, None)?,
+            };
+            buffers.push(buf);
+        }
+        Ok(DeviceInputs {
+            buffers,
+            prefix_len: prefix.len(),
+        })
+    }
+
+    /// Execute with a device-resident prefix + host suffix. Only the
+    /// suffix tensors are uploaded on this call.
+    pub fn run_with_prefix(&self, client: &xla::PjRtClient,
+                           prefix: &DeviceInputs, suffix: &[HostTensor])
+                           -> Result<Vec<HostTensor>> {
+        let total = prefix.prefix_len + suffix.len();
+        if total != self.spec.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {} (prefix {} + {})",
+                self.spec.file,
+                self.spec.inputs.len(),
+                total,
+                prefix.prefix_len,
+                suffix.len()
+            );
+        }
+        let mut suffix_bufs = Vec::with_capacity(suffix.len());
+        for (t, spec) in suffix
+            .iter()
+            .zip(self.spec.inputs[prefix.prefix_len..].iter())
+        {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "suffix input '{}' shape mismatch: {:?} vs {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            let buf = match t {
+                HostTensor::F32 { shape, data } => client
+                    .buffer_from_host_buffer::<f32>(data, shape, None)?,
+                HostTensor::I32 { shape, data } => client
+                    .buffer_from_host_buffer::<i32>(data, shape, None)?,
+            };
+            suffix_bufs.push(buf);
+        }
+        let all: Vec<&xla::PjRtBuffer> = prefix
+            .buffers
+            .iter()
+            .chain(suffix_bufs.iter())
+            .collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&all)?;
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.spec.file,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// The runtime: a PJRT CPU client + artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: $COCOPIE_ARTIFACTS or <crate>/artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("COCOPIE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Borrow the PJRT client (buffer uploads, prefix execution).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile (cached) a model artifact, e.g. ("resnet_mini",
+    /// "train_step").
+    pub fn load_model_artifact(
+        &self,
+        model: &str,
+        artifact: &str,
+    ) -> Result<Arc<Executable>> {
+        let spec = self.manifest.model(model)?.artifact(artifact)?.clone();
+        self.compile_cached(&spec)
+    }
+
+    /// Load + compile (cached) a micro artifact, e.g. "gemm".
+    pub fn load_micro(&self, name: &str) -> Result<Arc<Executable>> {
+        let spec = self
+            .manifest
+            .micro
+            .get(name)
+            .ok_or_else(|| anyhow!("no micro artifact {name}"))?
+            .clone();
+        self.compile_cached(&spec)
+    }
+
+    fn compile_cached(&self, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&spec.file) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.file))?;
+        let exe = Arc::new(Executable {
+            spec: spec.clone(),
+            exe,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(spec.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(t.as_i32().is_err());
+        let s = HostTensor::scalar_f32(4.0);
+        assert_eq!(s.scalar().unwrap(), 4.0);
+        assert!(t.scalar().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_bad_len() {
+        let _ = HostTensor::f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn ones_zeros() {
+        let z = HostTensor::zeros(&[4]);
+        assert_eq!(z.as_f32().unwrap(), &[0.0; 4]);
+        let o = HostTensor::ones(&[2, 2]);
+        assert_eq!(o.as_f32().unwrap(), &[1.0; 4]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Hand-rolled benchmark harness (criterion is not in the offline registry).
+//!
+//! Warmup + timed iterations with median/p10/p90 reporting. Every
+//! `benches/*.rs` binary uses this; its output lines are the rows of the
+//! paper's tables/figures.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median_s * 1e6
+    }
+}
+
+/// Time `f` with automatic iteration count targeting ~`budget_s` seconds
+/// of measurement (min 5, max `max_iters` iterations).
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize,
+                         mut f: F) -> Measurement {
+    // Warmup + calibration run.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once) as usize).clamp(3, max_iters.max(3));
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        p10_s: stats::percentile(&samples, 10.0),
+        p90_s: stats::percentile(&samples, 90.0),
+    }
+}
+
+/// Fast-path bench for cheap closures: fixed iteration count.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        p10_s: stats::percentile(&samples, 10.0),
+        p90_s: stats::percentile(&samples, 90.0),
+    }
+}
+
+/// Pretty table printer for bench rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Format helper: `12.3ms` / `45.6us`.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench_n("noop-ish", 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 10);
+        assert!(m.median_s >= 0.0);
+        assert!(m.p90_s >= m.p10_s);
+    }
+
+    #[test]
+    fn fmt() {
+        assert_eq!(fmt_time(2.0), "2.00s");
+        assert_eq!(fmt_time(0.0021), "2.10ms");
+        assert_eq!(fmt_time(12e-6), "12.0us");
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON, PRNG, thread pool, stats, bench harness, property-test harness.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,126 @@
+//! Mini property-testing harness (proptest is not in the offline registry).
+//!
+//! `check(name, cases, |g| { ... })` runs a closure over `cases` randomized
+//! inputs drawn through a `Gen`; failures report the case seed so they can
+//! be replayed with `Gen::replay(seed)`.
+
+use super::rng::Rng;
+
+/// Randomized-input generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn replay(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::seed_from(seed),
+            case_seed: seed,
+        }
+    }
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.f64() < 0.5
+    }
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+    pub fn pick<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        self.rng.choose(v)
+    }
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` randomized generations. Panics with the failing
+/// case seed on the first failure (property returns Err or panics).
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base = fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut g = Gen::replay(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32)
+                       -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!(
+                "mismatch at {i}: {x} vs {y} (|d|={} tol={tol})",
+                (x - y).abs()
+            ));
+        }
+        if x.is_nan() != y.is_nan() {
+            return Err(format!("nan mismatch at {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.f64(-100.0, 100.0);
+            let b = g.f64(-100.0, 100.0);
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("non-commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", 3, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn allclose() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6)
+            .is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+    }
+}

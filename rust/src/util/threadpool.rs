@@ -1,0 +1,142 @@
+//! Scoped data-parallel helpers (no `rayon` offline).
+//!
+//! `parallel_for_chunks` splits an index range across worker threads using
+//! `std::thread::scope`; used by the conv executors' batch/filter loops and
+//! by the exploration engine's node simulation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (min(cores, cap)).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(i)` for every i in 0..n across `threads` workers.
+/// Work-stealing via a shared atomic counter in blocks of `grain`.
+pub fn parallel_for<F>(n: usize, grain: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let grain = grain.max(1);
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = counter.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split `data` into consecutive `chunk`-sized pieces and process them in
+/// parallel: `f(chunk_index, chunk_slice)`. Used by the conv executors to
+/// hand each worker its own set of output planes without locking.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk: usize,
+                                 threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = data.len().div_ceil(chunk);
+    let threads = threads.max(1).min(n_chunks);
+    if threads == 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Pre-split into raw parts so each worker claims disjoint chunks.
+    let parts: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> = data
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(i, c)| std::sync::Mutex::new(Some((i, c))))
+        .collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let idx = counter.fetch_add(1, Ordering::Relaxed);
+                if idx >= parts.len() {
+                    break;
+                }
+                if let Some((i, c)) = parts[idx].lock().unwrap().take() {
+                    f(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Map 0..n through `f` in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, 1, threads, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 7, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        parallel_for(0, 1, 4, |_| panic!("must not run"));
+        let hits = AtomicU64::new(0);
+        parallel_for(10, 1, 1, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(100, 8, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v.len(), 100);
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: AOT HLO-text artifacts load, compile and execute through
+//! PJRT with correct numerics. This is the L1/L2 -> L3 seam test.
+
+use cocopie::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::new(&Runtime::default_dir()).expect("runtime (run `make artifacts` first)")
+}
+
+#[test]
+fn gemm_micro_artifact_matches_host_matmul() {
+    let rt = runtime();
+    let exe = rt.load_micro("gemm").unwrap();
+    let n = 128;
+    let mut x = vec![0f32; n * n];
+    let mut w = vec![0f32; n * n];
+    for i in 0..n * n {
+        x[i] = ((i % 13) as f32) * 0.25 - 1.0;
+        w[i] = ((i % 7) as f32) * 0.5 - 1.5;
+    }
+    let out = exe
+        .run(&[HostTensor::f32(&[n, n], x.clone()),
+               HostTensor::f32(&[n, n], w.clone())])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    // host reference
+    for (r, c) in [(0usize, 0usize), (5, 9), (127, 127), (64, 3)] {
+        let mut acc = 0f32;
+        for k in 0..n {
+            acc += x[r * n + k] * w[k * n + c];
+        }
+        let g = got[r * n + c];
+        assert!(
+            (acc - g).abs() <= 1e-2 + 1e-4 * acc.abs().max(g.abs()),
+            "({r},{c}): host {acc} vs pjrt {g}"
+        );
+    }
+}
+
+#[test]
+fn pattern_conv_micro_artifact_shape_and_sparsity() {
+    let rt = runtime();
+    let exe = rt.load_micro("pattern_conv").unwrap();
+    let (n, h, w, cin, cout, k) = (1, 16, 16, 16, 32, 4);
+    let x = HostTensor::ones(&[n, h, w, cin]);
+    let wc = HostTensor::ones(&[k, cin, cout]);
+    let b = HostTensor::zeros(&[cout]);
+    let out = exe.run(&[x, wc, b]).unwrap();
+    assert_eq!(out[0].shape(), &[n, h, w, cout]);
+    let vals = out[0].as_f32().unwrap();
+    // interior pixels see all 4 taps x cin ones = 64; borders see fewer.
+    let interior = vals[(8 * w + 8) * cout];
+    assert_eq!(interior, (k * cin) as f32);
+    assert!(vals.iter().all(|v| *v <= (k * cin) as f32 + 1e-4));
+}
+
+#[test]
+fn infer_artifact_runs_and_is_finite() {
+    let rt = runtime();
+    let exe = rt.load_model_artifact("resnet_mini", "infer_b1").unwrap();
+    let spec = rt.manifest.model("resnet_mini").unwrap().clone();
+    let mut inputs = Vec::new();
+    // params: small deterministic values; masks: ones; x: ramp.
+    for p in &spec.params {
+        let data: Vec<f32> = (0..p.elements())
+            .map(|i| ((i % 101) as f32 - 50.0) * 2e-3)
+            .collect();
+        inputs.push(HostTensor::f32(&p.shape, data));
+    }
+    for m in &spec.masks {
+        inputs.push(HostTensor::ones(&m.shape));
+    }
+    inputs.push(HostTensor::f32(
+        &[1, 16, 16, 3],
+        (0..16 * 16 * 3).map(|i| (i as f32) / 768.0).collect(),
+    ));
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out[0].shape(), &[1, spec.classes]);
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn pallas_infer_matches_lax_infer() {
+    // The Pallas-kernel-composed graph and the lax graph must agree:
+    // proves the L1 kernels lower into L2 and execute under PJRT.
+    let rt = runtime();
+    let lax = rt.load_model_artifact("resnet_mini", "infer_b1").unwrap();
+    let pal = rt
+        .load_model_artifact("resnet_mini", "infer_pallas_b1")
+        .unwrap();
+    let spec = rt.manifest.model("resnet_mini").unwrap().clone();
+    let mut inputs = Vec::new();
+    for p in &spec.params {
+        let data: Vec<f32> = (0..p.elements())
+            .map(|i| (((i * 37) % 211) as f32 - 105.0) * 1e-3)
+            .collect();
+        inputs.push(HostTensor::f32(&p.shape, data));
+    }
+    for m in &spec.masks {
+        inputs.push(HostTensor::ones(&m.shape));
+    }
+    inputs.push(HostTensor::f32(
+        &[1, 16, 16, 3],
+        (0..768).map(|i| ((i % 97) as f32) / 97.0).collect(),
+    ));
+    let a = lax.run(&inputs).unwrap();
+    let b = pal.run(&inputs).unwrap();
+    let av = a[0].as_f32().unwrap();
+    let bv = b[0].as_f32().unwrap();
+    for (x, y) in av.iter().zip(bv.iter()) {
+        assert!(
+            (x - y).abs() <= 1e-3 + 1e-3 * y.abs(),
+            "pallas {y} vs lax {x}"
+        );
+    }
+}
+
+#[test]
+fn signature_validation_rejects_bad_feeds() {
+    let rt = runtime();
+    let exe = rt.load_micro("gemm").unwrap();
+    // wrong arity
+    assert!(exe.run(&[HostTensor::ones(&[128, 128])]).is_err());
+    // wrong shape
+    assert!(exe
+        .run(&[HostTensor::ones(&[64, 128]), HostTensor::ones(&[128, 128])])
+        .is_err());
+}
+
+#[test]
+fn executable_cache_dedupes() {
+    let rt = runtime();
+    let a = rt.load_micro("gemm").unwrap();
+    let b = rt.load_micro("gemm").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(rt.cached_count(), 1);
+}

@@ -1,0 +1,67 @@
+//! Integration: the serving coordinator over PJRT — batching, correct
+//! predictions, metrics, clean shutdown.
+
+use std::time::Duration;
+
+use cocopie::coordinator::{BatchPolicy, Coordinator, ServeConfig};
+use cocopie::util::rng::Rng;
+
+#[test]
+fn serves_requests_and_batches() {
+    let mut cfg = ServeConfig::new("resnet_mini");
+    cfg.policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(3),
+    };
+    let coord = Coordinator::start(cfg).expect("coordinator start");
+    let client = coord.client();
+    let elems = 16 * 16 * 3;
+    let mut rng = Rng::seed_from(1);
+    let mut pending = Vec::new();
+    for _ in 0..64 {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push(client.submit(img).unwrap());
+    }
+    for p in pending {
+        let pred = p.recv().expect("prediction");
+        assert!(pred.class < 16);
+        assert!(pred.score.is_finite());
+        assert!(pred.latency_ms >= 0.0);
+    }
+    drop(client);
+    let s = coord.shutdown();
+    assert_eq!(s.completed, 64);
+    assert_eq!(s.rejected, 0);
+    assert!(s.mean_batch > 1.0, "batching never formed: {}", s.mean_batch);
+    assert!(s.p99_ms >= s.p50_ms);
+}
+
+#[test]
+fn deterministic_predictions_same_image() {
+    let cfg = ServeConfig::new("resnet_mini");
+    let coord = Coordinator::start(cfg).expect("start");
+    let client = coord.client();
+    let img: Vec<f32> = (0..768).map(|i| (i % 97) as f32 / 97.0).collect();
+    let a = client.submit(img.clone()).unwrap().recv().unwrap();
+    let b = client.submit(img).unwrap().recv().unwrap();
+    assert_eq!(a.class, b.class);
+    assert!((a.score - b.score).abs() < 1e-4);
+    drop(client);
+    coord.shutdown();
+}
+
+#[test]
+fn rejects_wrong_image_size() {
+    let cfg = ServeConfig::new("resnet_mini");
+    let coord = Coordinator::start(cfg).expect("start");
+    let client = coord.client();
+    assert!(client.submit(vec![0.0; 10]).is_err());
+    drop(client);
+    coord.shutdown();
+}
+
+#[test]
+fn start_fails_cleanly_for_unknown_model() {
+    let cfg = ServeConfig::new("no_such_model");
+    assert!(Coordinator::start(cfg).is_err());
+}
