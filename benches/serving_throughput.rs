@@ -1,0 +1,140 @@
+//! Serving-path benchmark: requests/sec and p50/p99 latency per backend,
+//! measured through the full coordinator (batcher -> router -> backend
+//! worker). This is the serving edition of the paper's real-time claim:
+//! the co-designed native path must hold its kernel-level advantage once
+//! dynamic batching and routing sit in front of it.
+//!
+//! Rows: native CoCo-Gen pool, native dense-im2col pool, a 50/50 split
+//! across both, and — when a real runtime + artifacts exist — PJRT.
+//! Offline the PJRT row reports why it was skipped.
+//!
+//! Run: `cargo bench --bench serving_throughput`
+//! (COCOPIE_QUICK=1 shrinks the request count for smoke runs.)
+
+use std::time::{Duration, Instant};
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::coordinator::{
+    BatchPolicy, Coordinator, NativeBackend, RouterPolicy, ServeConfig,
+};
+use cocopie::ir::zoo;
+use cocopie::util::bench::Table;
+use cocopie::util::rng::Rng;
+
+/// Closed-loop-ish load: keep `window` requests in flight until `total`
+/// have been submitted, then drain. Keeping the pipe full measures the
+/// service rate rather than the arrival process. Returns wall seconds.
+fn drive(coord: &Coordinator, elems: usize, total: usize, window: usize)
+         -> f64 {
+    let client = coord.client();
+    let mut rng = Rng::seed_from(11);
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::new();
+    for _ in 0..total {
+        if pending.len() >= window {
+            let p: std::sync::mpsc::Receiver<_> =
+                pending.pop_front().unwrap();
+            let _ = p.recv();
+        }
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push_back(client.submit(img).expect("submit"));
+    }
+    while let Some(p) = pending.pop_front() {
+        let _ = p.recv();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// One table row from the shutdown summary + measured wall time.
+fn row(table: &mut Table, name: &str, s: &cocopie::coordinator::Summary,
+       wall: f64) {
+    table.row(&[
+        name.to_string(),
+        format!("{:.0}", s.completed as f64 / wall),
+        format!("{:.2}", s.p50_ms),
+        format!("{:.2}", s.p99_ms),
+        format!("{:.1}", s.mean_batch),
+        format!("{}", s.completed),
+    ]);
+}
+
+fn main() {
+    let quick = std::env::var("COCOPIE_QUICK").is_ok();
+    let total = if quick { 128 } else { 512 };
+    let window = 32;
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
+    let ir = zoo::mobilenet_v2(zoo::CIFAR_HW, 10);
+    let elems = ir.input.c * ir.input.h * ir.input.w;
+    println!(
+        "serving throughput: {} ({}x{}x{}), {} requests, window {}, \
+         batch cap {}",
+        ir.name, ir.input.c, ir.input.h, ir.input.w, total, window,
+        policy.max_batch
+    );
+
+    let mut table = Table::new(&[
+        "backend", "req/s", "p50 ms", "p99 ms", "mean batch", "served",
+    ]);
+
+    // Native pools: the co-designed plan and the dense compiler baseline.
+    let scenarios: &[(&str, Scheme)] = &[
+        ("native-cocogen", Scheme::CocoGen),
+        ("native-dense", Scheme::DenseIm2col),
+    ];
+    for (name, scheme) in scenarios {
+        let plan = build_plan(&ir, *scheme, PruneConfig::default(), 7)
+            .into_shared();
+        let coord = Coordinator::start_with(
+            vec![Box::new(NativeBackend::new(name, plan))],
+            policy,
+            RouterPolicy::Failover,
+        )
+        .expect("native coordinator");
+        let wall = drive(&coord, elems, total, window);
+        let s = coord.shutdown();
+        row(&mut table, name, &s, wall);
+    }
+
+    // 50/50 split across both native variants.
+    {
+        let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              7)
+            .into_shared();
+        let dense = build_plan(&ir, Scheme::DenseIm2col,
+                               PruneConfig::default(), 7)
+            .into_shared();
+        let coord = Coordinator::start_with(
+            vec![
+                Box::new(NativeBackend::new("split-cocogen", coco)),
+                Box::new(NativeBackend::new("split-dense", dense)),
+            ],
+            policy,
+            RouterPolicy::Split(vec![1.0, 1.0]),
+        )
+        .expect("split coordinator");
+        let wall = drive(&coord, elems, total, window);
+        let report = coord.shutdown_report();
+        row(&mut table, "split 50/50", &report.overall, wall);
+        for (name, s) in &report.per_backend {
+            println!("  split detail {name}: {} reqs, p50 {:.2} ms",
+                     s.completed, s.p50_ms);
+        }
+    }
+
+    // PJRT, when available.
+    let mut cfg = ServeConfig::new("resnet_mini");
+    cfg.policy = policy;
+    match Coordinator::start(cfg) {
+        Ok(coord) => {
+            let wall = drive(&coord, 16 * 16 * 3, total, window);
+            let s = coord.shutdown();
+            row(&mut table, "pjrt:resnet_mini", &s, wall);
+        }
+        Err(e) => println!("pjrt row skipped: {e:#}"),
+    }
+
+    table.print();
+}

@@ -7,7 +7,9 @@
 //!    pattern executor against the dense baseline, and print the
 //!    storage/FLOPs/latency story.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (steps 1-2 need `make artifacts` + real PJRT bindings; offline they
+//! report why they were skipped and step 3 still runs)
 
 use std::time::Instant;
 
@@ -18,7 +20,7 @@ use cocopie::exec::{naive, pattern, Tensor};
 use cocopie::runtime::{HostTensor, Runtime};
 use cocopie::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn pjrt_steps() -> anyhow::Result<()> {
     // --- 1. PJRT runtime + AOT artifacts --------------------------------
     let rt = Runtime::new(&Runtime::default_dir())?;
     println!("PJRT platform: {}", rt.platform());
@@ -36,6 +38,13 @@ fn main() -> anyhow::Result<()> {
         out[0].shape(),
         out[0].as_f32()?[(8 * w + 8) * cout]
     );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    if let Err(e) = pjrt_steps() {
+        println!("pjrt steps skipped: {e:#}");
+    }
 
     // --- 3. CoCo-Gen on the Rust side ------------------------------------
     let mut rng = Rng::seed_from(0);

@@ -1,69 +1,116 @@
-//! Serving demo: the L3 coordinator under open-loop synthetic traffic,
-//! plus the SLA router choosing among deployment variants.
+//! Serving demo: the L3 coordinator under open-loop synthetic traffic.
 //!
-//! Run: `make artifacts && cargo run --release --example serve`
+//! Three scenes:
+//!  1. the SLA router choosing among deployment variants,
+//!  2. live serving on the *native* backend pool — the co-designed
+//!     pattern-pruned engines behind the `Backend` seam, split across a
+//!     CoCo-Gen variant and a dense baseline,
+//!  3. the PJRT backend, when a real runtime + artifacts are present
+//!     (`make artifacts`); offline it reports why it was skipped.
+//!
+//! Run: `cargo run --release --example serve`
 
 use std::time::{Duration, Instant};
 
-use cocopie::coordinator::router::{Backend, Router, Sla};
-use cocopie::coordinator::{BatchPolicy, Coordinator, ServeConfig};
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::coordinator::router::{Router, Sla, Variant};
+use cocopie::coordinator::{
+    BatchPolicy, Coordinator, NativeBackend, RouterPolicy, ServeConfig,
+};
+use cocopie::ir::zoo;
 use cocopie::util::rng::Rng;
 
+fn drive(coord: &Coordinator, elems: usize, n_requests: usize,
+         seed: u64) -> f64 {
+    let client = coord.client();
+    let mut rng = Rng::seed_from(seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push(client.submit(img).expect("submit"));
+        if i % 8 == 0 {
+            // open-loop pacing below the service rate so queues stay
+            // bounded
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    for p in pending {
+        let _ = p.recv();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
 fn main() -> anyhow::Result<()> {
-    // --- router across CoCo-Gen deployment variants ----------------------
+    // --- 1. router across CoCo-Gen deployment variants --------------------
     // latency/accuracy operating points come from the Fig.5/Table1 benches
     let router = Router::new(vec![
-        Backend::new("dense", 9.8, 0.95),
-        Backend::new("pattern-2.5x", 4.1, 0.94),
-        Backend::new("pattern-7x", 1.6, 0.91),
+        Variant::new("dense", 9.8, 0.95),
+        Variant::new("pattern-2.5x", 4.1, 0.94),
+        Variant::new("pattern-7x", 1.6, 0.91),
     ]);
     for sla in [Sla::Realtime, Sla::Standard, Sla::Quality] {
         println!("router {:?} -> {}", sla, router.route(sla).name);
     }
 
-    // --- live serving through PJRT ---------------------------------------
-    let mut cfg = ServeConfig::new("resnet_mini");
-    cfg.policy = BatchPolicy {
+    // --- 2. native serving: executor pool behind the Backend seam ---------
+    let ir = zoo::mobilenet_v2(zoo::CIFAR_HW, 10);
+    let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7)
+        .into_shared();
+    let dense = build_plan(&ir, Scheme::DenseIm2col, PruneConfig::default(),
+                           7)
+        .into_shared();
+    let elems = ir.input.c * ir.input.h * ir.input.w;
+    let policy = BatchPolicy {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
     };
-    let coord = Coordinator::start(cfg)?;
-    let client = coord.client();
-    let elems = 16 * 16 * 3;
-    let mut rng = Rng::seed_from(3);
-    let n_requests = 512;
-    let t0 = Instant::now();
-    // open-loop arrivals at ~2000 rps
-    let mut pending = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
-        pending.push(client.submit(img)?);
-        if i % 2 == 0 {
-            // open-loop pacing below the service rate so queues stay
-            // bounded (see EXPERIMENTS.md §Perf for the buffer-upload
-            // optimization that raises the service rate)
-            std::thread::sleep(Duration::from_millis(1));
-        }
-    }
-    let mut classes = vec![0usize; 16];
-    for p in pending {
-        let pred = p.recv()?;
-        classes[pred.class] += 1;
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    drop(client);
-    let s = coord.shutdown();
+    let coord = Coordinator::start_with(
+        vec![
+            Box::new(NativeBackend::new("native-cocogen", coco)),
+            Box::new(NativeBackend::new("native-dense", dense)),
+        ],
+        policy,
+        // 3:1 in favor of the pruned variant, like a canaried rollout.
+        RouterPolicy::Split(vec![3.0, 1.0]),
+    )?;
+    let wall = drive(&coord, elems, 256, 3);
+    let report = coord.shutdown_report();
     println!(
-        "served {} requests in {:.2}s ({:.0} rps)",
-        s.completed,
+        "\nnative pool: served {} requests in {:.2}s ({:.0} rps), \
+         {} failovers",
+        report.overall.completed,
         wall,
-        s.completed as f64 / wall
+        report.overall.completed as f64 / wall,
+        report.overall.failovers,
     );
-    println!(
-        "latency p50 {:.2} ms, p99 {:.2} ms; mean queue {:.2} ms; \
-         mean batch {:.1}",
-        s.p50_ms, s.p99_ms, s.mean_queue_ms, s.mean_batch
-    );
-    println!("class histogram: {classes:?}");
+    for (name, s) in &report.per_backend {
+        println!(
+            "  {name:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms  \
+             mean batch {:.1}",
+            s.completed, s.p50_ms, s.p99_ms, s.mean_batch
+        );
+    }
+
+    // --- 3. PJRT serving (requires real runtime + artifacts) --------------
+    let mut cfg = ServeConfig::new("resnet_mini");
+    cfg.policy = policy;
+    match Coordinator::start(cfg) {
+        Ok(coord) => {
+            let wall = drive(&coord, 16 * 16 * 3, 256, 5);
+            let s = coord.shutdown();
+            println!(
+                "\npjrt: served {} requests in {:.2}s ({:.0} rps), \
+                 p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
+                s.completed,
+                wall,
+                s.completed as f64 / wall,
+                s.p50_ms,
+                s.p99_ms,
+                s.mean_batch
+            );
+        }
+        Err(e) => println!("\npjrt backend skipped: {e:#}"),
+    }
     Ok(())
 }

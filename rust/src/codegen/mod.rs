@@ -6,6 +6,8 @@
 pub mod reorder;
 pub mod tuner;
 
+use std::sync::Arc;
+
 use crate::compress::{CsrLayer, DenseLayer, FkwLayer};
 use crate::ir::{LayerKind, ModelIR};
 use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
@@ -224,6 +226,15 @@ pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
 }
 
 impl ExecPlan {
+    /// Wrap the plan for sharing: one `Arc<ExecPlan>` feeds every
+    /// executor in an `exec::ExecutorPool` (and the serving
+    /// `coordinator::NativeBackend` built on it), so the compressed
+    /// weights exist once per process no matter how many workers serve
+    /// them.
+    pub fn into_shared(self) -> Arc<ExecPlan> {
+        Arc::new(self)
+    }
+
     /// Surviving-FLOP ratio vs dense (the analytic speedup bound).
     pub fn flop_keep_ratio(&self) -> f64 {
         let mut dense = 0f64;

@@ -1,0 +1,408 @@
+//! The `Backend` seam: anything that can compile a model once and then
+//! serve `HostTensor` batches can sit behind the coordinator.
+//!
+//! Two implementations ship today: [`PjrtBackend`] (the AOT-compiled
+//! XLA/PJRT runtime path) and [`NativeBackend`] (the co-designed path
+//! this repo is about — a pattern-pruned `ExecPlan` served by a pool of
+//! native `ModelExecutor` workers). The coordinator treats them
+//! identically: batches in, logits out, failures rerouted by the batch
+//! router. Every future scaling PR (sharding, admission control, more
+//! backends) plugs in at this trait.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::codegen::ExecPlan;
+use crate::exec::{ExecutorPool, Tensor};
+use crate::runtime::{DeviceInputs, Executable, HostTensor, Runtime};
+use crate::util::threadpool;
+
+use super::ServeConfig;
+
+/// What the coordinator needs to know about a compiled model: the
+/// per-image feed shape and the logit width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSignature {
+    /// Per-image input shape `[h, w, c]` — images are submitted as
+    /// flattened NHWC rows, matching the AOT artifacts' feed layout.
+    pub input_shape: Vec<usize>,
+    /// Number of output classes (logits per image).
+    pub classes: usize,
+}
+
+impl ModelSignature {
+    /// Flattened elements per image.
+    pub fn image_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// A serving engine the coordinator can route batches to.
+///
+/// Lifecycle: the coordinator moves each backend onto a dedicated worker
+/// thread, calls [`Backend::compile`] there exactly once (PJRT handles
+/// are thread-affine, so compilation must happen on the owning thread),
+/// then feeds it [`Backend::infer_batch`] calls until shutdown. A
+/// returned error marks the backend unhealthy and the batch fails over
+/// to the next backend in the router's rotation.
+///
+/// ```
+/// use anyhow::Result;
+/// use cocopie::coordinator::{Backend, ModelSignature};
+/// use cocopie::runtime::HostTensor;
+///
+/// /// A backend that scores every image as class 0.
+/// struct Constant;
+///
+/// impl Backend for Constant {
+///     fn name(&self) -> &str {
+///         "constant"
+///     }
+///     fn compile(&mut self, _max_batch: usize) -> Result<ModelSignature> {
+///         Ok(ModelSignature { input_shape: vec![4, 4, 1], classes: 2 })
+///     }
+///     fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor> {
+///         let n = images.shape()[0];
+///         Ok(HostTensor::f32(&[n, 2], [1.0f32, 0.0].repeat(n)))
+///     }
+/// }
+///
+/// let mut be = Constant;
+/// let sig = be.compile(8).unwrap();
+/// let logits = be
+///     .infer_batch(&HostTensor::zeros(&[3, 4, 4, 1]))
+///     .unwrap();
+/// assert_eq!(logits.shape(), &[3, sig.classes]);
+/// ```
+pub trait Backend: Send {
+    /// Stable display name (metrics labels, `Prediction::backend`).
+    fn name(&self) -> &str;
+
+    /// Prepare to serve batches of up to `max_batch` images. Called once
+    /// on the worker thread that owns this backend, before any traffic.
+    fn compile(&mut self, max_batch: usize) -> Result<ModelSignature>;
+
+    /// Run one batch: `images` is `[n, h, w, c]` (NHWC, `n <= max_batch`,
+    /// unpadded); returns logits `[n, classes]`. Backends that compiled
+    /// for a fixed batch (PJRT) pad internally and slice the result.
+    fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor>;
+}
+
+/// Convert one flattened NHWC image into the planar CHW [`Tensor`] the
+/// native engines consume.
+pub fn nhwc_to_chw(img: &[f32], h: usize, w: usize, c: usize) -> Tensor {
+    assert_eq!(img.len(), h * w * c, "image length mismatch");
+    let mut t = Tensor::zeros(c, h, w);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                t.set(ch, y, x, img[(y * w + x) * c + ch]);
+            }
+        }
+    }
+    t
+}
+
+/// The co-designed native path: a pattern-pruned [`ExecPlan`] served by
+/// an [`ExecutorPool`] — one single-threaded `ModelExecutor` per core —
+/// so live traffic runs on the FKW/CSR/Winograd engines with no PJRT (or
+/// Python) anywhere on the request path. Numerics are bit-identical to a
+/// direct `ModelExecutor::run` on the same image.
+pub struct NativeBackend {
+    name: String,
+    plan: Arc<ExecPlan>,
+    workers: usize,
+    classes: usize,
+    pool: Option<ExecutorPool>,
+}
+
+impl NativeBackend {
+    /// Backend over a shared plan with one pool worker per core.
+    pub fn new(name: &str, plan: Arc<ExecPlan>) -> NativeBackend {
+        Self::with_workers(name, plan, threadpool::default_threads())
+    }
+
+    /// Backend with an explicit pool width (clamped to at least 1).
+    pub fn with_workers(name: &str, plan: Arc<ExecPlan>, workers: usize)
+                        -> NativeBackend {
+        NativeBackend {
+            name: name.to_string(),
+            plan,
+            workers: workers.max(1),
+            classes: 0,
+            pool: None,
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compile(&mut self, _max_batch: usize) -> Result<ModelSignature> {
+        let last = self
+            .plan
+            .ir
+            .layers
+            .last()
+            .ok_or_else(|| anyhow!("native backend: empty model"))?;
+        ensure!(
+            last.output.h == 1 && last.output.w == 1,
+            "native backend: model must end in a classifier head, got \
+             output {:?}",
+            last.output
+        );
+        self.classes = last.output.c;
+        self.pool = Some(ExecutorPool::new(self.plan.clone(), self.workers));
+        let inp = self.plan.ir.input;
+        Ok(ModelSignature {
+            input_shape: vec![inp.h, inp.w, inp.c],
+            classes: self.classes,
+        })
+    }
+
+    fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor> {
+        let pool = self
+            .pool
+            .as_ref()
+            .ok_or_else(|| anyhow!("native backend: compile() not called"))?;
+        let shape = images.shape();
+        ensure!(shape.len() == 4, "expected [n,h,w,c], got {shape:?}");
+        let (n, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
+        let inp = self.plan.ir.input;
+        ensure!(
+            h == inp.h && w == inp.w && c == inp.c,
+            "image shape [{h},{w},{c}] does not match model input {inp:?}"
+        );
+        let data = images.as_f32()?;
+        let elems = h * w * c;
+        // Layout conversion happens on the claiming pool worker, in
+        // parallel with inference, not serially up front.
+        let outs = pool.run_batch_map(n, |i| {
+            nhwc_to_chw(&data[i * elems..(i + 1) * elems], h, w, c)
+        });
+        let mut logits = Vec::with_capacity(n * self.classes);
+        for t in &outs {
+            ensure!(
+                t.data.len() == self.classes,
+                "head produced {} values, expected {}",
+                t.data.len(),
+                self.classes
+            );
+            logits.extend_from_slice(&t.data);
+        }
+        Ok(HostTensor::f32(&[n, self.classes], logits))
+    }
+}
+
+/// PJRT-compiled state, created on the worker thread (handles are
+/// thread-affine and never move again).
+struct PjrtCompiled {
+    rt: Runtime,
+    exe: Arc<Executable>,
+    prefix: DeviceInputs,
+    sig: ModelSignature,
+    max_batch: usize,
+}
+
+/// The AOT XLA/PJRT runtime path behind the `Backend` seam: loads the
+/// `infer_b{max_batch}` HLO artifact, keeps params + masks device-
+/// resident, and uploads only the image batch per call (the hot-path
+/// optimization from EXPERIMENTS.md §Perf).
+///
+/// In the offline build the vendored `xla` stub makes `compile` return
+/// an error, which the coordinator handles like any unhealthy backend —
+/// see `rust/vendor/xla/README.md`.
+pub struct PjrtBackend {
+    name: String,
+    cfg: ServeConfig,
+    compiled: Option<PjrtCompiled>,
+}
+
+impl PjrtBackend {
+    /// Backend for `cfg.model`, reading artifacts from
+    /// `cfg.artifacts_dir`. (`cfg.policy` is ignored here: the batch cap
+    /// arrives via [`Backend::compile`].)
+    pub fn new(cfg: ServeConfig) -> PjrtBackend {
+        PjrtBackend {
+            name: format!("pjrt:{}", cfg.model),
+            cfg,
+            compiled: None,
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn compile(&mut self, max_batch: usize) -> Result<ModelSignature> {
+        let rt = Runtime::new(&self.cfg.artifacts_dir)?;
+        let spec = rt.manifest.model(&self.cfg.model)?.clone();
+        let art = format!("infer_b{max_batch}");
+        let exe = rt.load_model_artifact(&self.cfg.model, &art)?;
+        let params = self.cfg.params.clone().unwrap_or_else(|| {
+            crate::cocotune::trainer::ModelState::init(&spec, 0x5EED).params
+        });
+        let masks: Vec<HostTensor> = spec
+            .masks
+            .iter()
+            .map(|t| HostTensor::ones(&t.shape))
+            .collect();
+        // Params + masks live on the device; only the image batch is
+        // uploaded per execution.
+        let mut prefix_host = params;
+        prefix_host.extend(masks);
+        let prefix = exe.upload_prefix(rt.client(), &prefix_host)?;
+        ensure!(
+            spec.input_shape.len() == 3,
+            "model input_shape must be [h,w,c], got {:?}",
+            spec.input_shape
+        );
+        let sig = ModelSignature {
+            input_shape: spec.input_shape.clone(),
+            classes: spec.classes,
+        };
+        self.compiled = Some(PjrtCompiled {
+            rt,
+            exe,
+            prefix,
+            sig: sig.clone(),
+            max_batch,
+        });
+        Ok(sig)
+    }
+
+    fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor> {
+        let cpl = self
+            .compiled
+            .as_ref()
+            .ok_or_else(|| anyhow!("pjrt backend: compile() not called"))?;
+        let shape = images.shape();
+        ensure!(shape.len() == 4, "expected [n,h,w,c], got {shape:?}");
+        let n = shape[0];
+        ensure!(
+            n <= cpl.max_batch,
+            "batch of {n} exceeds compiled cap {}",
+            cpl.max_batch
+        );
+        let (h, w, c) = (
+            cpl.sig.input_shape[0],
+            cpl.sig.input_shape[1],
+            cpl.sig.input_shape[2],
+        );
+        ensure!(
+            shape[1..] == [h, w, c],
+            "image shape {:?} does not match model input [{h},{w},{c}]",
+            &shape[1..]
+        );
+        // Pad to the compiled batch size; the artifact's shape is fixed.
+        let elems = h * w * c;
+        let mut x = vec![0f32; cpl.max_batch * elems];
+        x[..n * elems].copy_from_slice(images.as_f32()?);
+        let suffix = [HostTensor::f32(&[cpl.max_batch, h, w, c], x)];
+        let out = cpl.exe.run_with_prefix(cpl.rt.client(), &cpl.prefix,
+                                          &suffix)?;
+        let logits = out[0].as_f32()?;
+        let classes = cpl.sig.classes;
+        ensure!(
+            logits.len() >= n * classes,
+            "artifact returned {} logits, expected at least {}",
+            logits.len(),
+            n * classes
+        );
+        Ok(HostTensor::f32(&[n, classes],
+                           logits[..n * classes].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{build_plan, PruneConfig, Scheme};
+    use crate::exec::ModelExecutor;
+    use crate::ir::{Chw, IrBuilder};
+    use crate::util::rng::Rng;
+
+    fn tiny_plan() -> Arc<ExecPlan> {
+        let mut b = IrBuilder::new("t", Chw::new(3, 8, 8));
+        b.conv("c1", 3, 8, 1, true)
+            .conv("c2", 3, 8, 2, true)
+            .gap("g")
+            .dense("fc", 5, false);
+        build_plan(&b.build().unwrap(), Scheme::CocoGen,
+                   PruneConfig::default(), 42)
+            .into_shared()
+    }
+
+    #[test]
+    fn nhwc_to_chw_layout() {
+        // 2x2x2 image: value encodes (y, x, ch).
+        let img: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        let t = nhwc_to_chw(&img, 2, 2, 2);
+        // NHWC index (y*2 + x)*2 + ch must land at CHW (ch, y, x).
+        assert_eq!(t.at(0, 0, 0), 0.0);
+        assert_eq!(t.at(1, 0, 0), 1.0);
+        assert_eq!(t.at(0, 0, 1), 2.0);
+        assert_eq!(t.at(0, 1, 0), 4.0);
+        assert_eq!(t.at(1, 1, 1), 7.0);
+    }
+
+    #[test]
+    fn native_backend_matches_direct_executor() {
+        let plan = tiny_plan();
+        let mut be = NativeBackend::with_workers("native", plan.clone(), 3);
+        let sig = be.compile(8).unwrap();
+        assert_eq!(sig.input_shape, vec![8, 8, 3]);
+        assert_eq!(sig.classes, 5);
+        let mut rng = Rng::seed_from(2);
+        let n = 7;
+        let elems = sig.image_elems();
+        let data: Vec<f32> =
+            (0..n * elems).map(|_| rng.normal_f32()).collect();
+        let images = HostTensor::f32(&[n, 8, 8, 3], data.clone());
+        let logits = be.infer_batch(&images).unwrap();
+        assert_eq!(logits.shape(), &[n, 5]);
+        let lv = logits.as_f32().unwrap();
+        let mut exec = ModelExecutor::new(&plan, 1);
+        for i in 0..n {
+            let t = nhwc_to_chw(&data[i * elems..(i + 1) * elems], 8, 8, 3);
+            let want = exec.run(&t);
+            assert_eq!(&lv[i * 5..(i + 1) * 5], want.data.as_slice(),
+                       "image {i} diverged");
+        }
+    }
+
+    #[test]
+    fn native_backend_validates_input() {
+        let plan = tiny_plan();
+        let mut be = NativeBackend::new("native", plan);
+        // infer before compile
+        assert!(be.infer_batch(&HostTensor::zeros(&[1, 8, 8, 3])).is_err());
+        be.compile(4).unwrap();
+        // wrong rank / wrong spatial shape
+        assert!(be.infer_batch(&HostTensor::zeros(&[8, 8, 3])).is_err());
+        assert!(be.infer_batch(&HostTensor::zeros(&[1, 4, 4, 3])).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_runtime() {
+        // Offline build: the xla stub (or a missing artifacts dir) makes
+        // compile error out instead of panicking — the property failover
+        // relies on.
+        let mut be = PjrtBackend::new(ServeConfig::new("resnet_mini"));
+        assert_eq!(be.name(), "pjrt:resnet_mini");
+        if be.compile(8).is_ok() {
+            // Real runtime present: serving a batch must work too.
+            let sig = be.compile(8).unwrap();
+            let images =
+                HostTensor::zeros(&[1, sig.input_shape[0],
+                                    sig.input_shape[1],
+                                    sig.input_shape[2]]);
+            assert!(be.infer_batch(&images).is_ok());
+        }
+    }
+}

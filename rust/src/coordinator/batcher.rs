@@ -5,7 +5,17 @@
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-/// Batching policy.
+/// Batching policy: when the dynamic batcher flushes a batch to a
+/// backend.
+///
+/// ```
+/// use std::time::Duration;
+/// use cocopie::coordinator::BatchPolicy;
+///
+/// // Throughput-leaning: big batches, a little extra queueing latency.
+/// let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(10) };
+/// assert!(policy.max_batch > BatchPolicy::default().max_batch);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Flush when this many requests are pending.
@@ -23,12 +33,42 @@ impl Default for BatchPolicy {
     }
 }
 
+/// One step of a polling batch loop (see [`next_batch_step`]).
+pub enum BatchStep<T> {
+    /// A batch formed under the policy.
+    Batch(Vec<T>),
+    /// No request arrived within the idle window; the caller can service
+    /// other work (e.g. failover retries) and poll again.
+    Idle,
+    /// The channel is closed and drained.
+    Closed,
+}
+
 /// Pull one batch from `rx` under `policy`. Returns None when the channel
 /// is closed and drained.
 pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy)
                      -> Option<Vec<T>> {
     // Block for the first element.
     let first = rx.recv().ok()?;
+    Some(fill_batch(rx, policy, first))
+}
+
+/// Like [`next_batch`], but waits at most `idle` for the first request so
+/// the caller's loop can interleave other work. The serving leader uses
+/// this to service failover retries while the request queue is quiet.
+pub fn next_batch_step<T>(rx: &Receiver<T>, policy: &BatchPolicy,
+                          idle: Duration) -> BatchStep<T> {
+    let first = match rx.recv_timeout(idle) {
+        Ok(item) => item,
+        Err(RecvTimeoutError::Timeout) => return BatchStep::Idle,
+        Err(RecvTimeoutError::Disconnected) => return BatchStep::Closed,
+    };
+    BatchStep::Batch(fill_batch(rx, policy, first))
+}
+
+/// Accumulate onto `first` until the batch is full or the deadline hits.
+fn fill_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy, first: T)
+                 -> Vec<T> {
     let mut batch = vec![first];
     let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch {
@@ -42,7 +82,7 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy)
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
+    batch
 }
 
 #[cfg(test)]
@@ -85,6 +125,27 @@ mod tests {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn step_reports_idle_then_batch_then_closed() {
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        };
+        let idle = Duration::from_millis(5);
+        assert!(matches!(next_batch_step(&rx, &policy, idle),
+                         BatchStep::Idle));
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        match next_batch_step(&rx, &policy, idle) {
+            BatchStep::Batch(b) => assert_eq!(b, vec![1, 2]),
+            _ => panic!("expected a batch"),
+        }
+        drop(tx);
+        assert!(matches!(next_batch_step(&rx, &policy, idle),
+                         BatchStep::Closed));
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Serving metrics: request counts, latency percentiles, batch sizes.
+//! Serving metrics: request counts, latency percentiles, batch sizes,
+//! failovers. The coordinator keeps one global [`Metrics`] plus one per
+//! backend, so a [`ServeReport`] can attribute latency and load to the
+//! backend that actually served each request.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -12,6 +15,7 @@ struct Inner {
     batch_sizes: Vec<f64>,
     completed: u64,
     rejected: u64,
+    failovers: u64,
 }
 
 /// Thread-safe metrics sink.
@@ -25,10 +29,25 @@ pub struct Metrics {
 pub struct Summary {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests re-routed to another backend after an infer failure.
+    pub failovers: u64,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_queue_ms: f64,
     pub mean_batch: f64,
+}
+
+/// Shutdown report: the aggregate view plus one summary per backend, in
+/// backend declaration order.
+///
+/// `overall.rejected` can exceed the per-backend sum: requests the
+/// leader rejects before any backend accepted them (every worker
+/// thread gone) are counted globally only, since no backend served or
+/// failed them.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub overall: Summary,
+    pub per_backend: Vec<(String, Summary)>,
 }
 
 impl Metrics {
@@ -49,11 +68,17 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// One request handed to another backend after this one failed.
+    pub fn record_failover(&self) {
+        self.inner.lock().unwrap().failovers += 1;
+    }
+
     pub fn summary(&self) -> Summary {
         let g = self.inner.lock().unwrap();
         Summary {
             completed: g.completed,
             rejected: g.rejected,
+            failovers: g.failovers,
             p50_ms: stats::percentile(&g.latencies_s, 50.0) * 1e3,
             p99_ms: stats::percentile(&g.latencies_s, 99.0) * 1e3,
             mean_queue_ms: stats::mean(&g.queue_waits_s) * 1e3,
@@ -80,8 +105,21 @@ mod tests {
         let s = m.summary();
         assert_eq!(s.completed, 100);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.failovers, 0);
         assert!((s.p50_ms - 50.5).abs() < 1.0);
         assert!(s.p99_ms > 98.0);
         assert_eq!(s.mean_batch, 4.0);
+    }
+
+    #[test]
+    fn failovers_count_independently_of_completion() {
+        let m = Metrics::new();
+        m.record_failover();
+        m.record_failover();
+        m.record(Duration::from_millis(3), Duration::from_millis(1), 1);
+        let s = m.summary();
+        assert_eq!(s.failovers, 2);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.rejected, 0);
     }
 }

@@ -1,30 +1,59 @@
-//! Serving coordinator — the L3 request path. A leader thread owns the
-//! dynamic batcher; the worker thread owns the PJRT runtime (xla handles
-//! are thread-affine, so the worker creates its own client and compiles
-//! the artifact during startup); clients submit images and receive
-//! predictions over channels. Python is never on this path.
+//! Serving coordinator — the L3 request path, multi-backend edition.
+//!
+//! A leader thread owns the dynamic batcher and the batch router; each
+//! [`Backend`] (PJRT runtime, native executor pool, ...) lives on its own
+//! worker thread, which compiles the model during startup and then
+//! executes the batches routed to it. Clients submit images over
+//! channels and receive [`Prediction`]s; Python is never on this path.
+//!
+//! ```text
+//!  Client::submit ──► leader: batcher ──► BatchRouter ──┬─► worker[0]: Backend (pjrt)
+//!                        ▲                              └─► worker[1]: Backend (native pool)
+//!                        │         failover retry                 │
+//!                        └────────────────────────────────────────┘
+//! ```
+//!
+//! Failure handling: a worker whose `infer_batch` errors logs the
+//! cause, puts its backend into a routing cooldown (a half-open circuit
+//! breaker, not a permanent removal), and hands the batch back to the
+//! leader, which re-routes it to the next healthy backend (counted in
+//! `Summary::failovers`). A request that has failed on every backend is
+//! rejected — its reply channel drops, so the client sees a recv error.
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{HostTensor, Runtime};
-pub use batcher::BatchPolicy;
-pub use metrics::{Metrics, Summary};
+pub use backend::{Backend, ModelSignature, NativeBackend, PjrtBackend};
+pub use batcher::{BatchPolicy, BatchStep};
+pub use metrics::{Metrics, ServeReport, Summary};
+pub use router::{BackendState, BatchRouter, RouterPolicy};
 
 /// A classification request: one NHWC image (flattened) + reply channel.
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
     reply: Sender<Prediction>,
+    /// Bitmask of backend indices that have failed this request — the
+    /// exhaustion test ("failed on every backend") uses this, so a
+    /// degraded-mode re-pick of the same backend doesn't burn a
+    /// distinct-backend credit.
+    failed: u64,
+    /// Total failover hops; a hard bound that guarantees termination
+    /// even when routing can only reach already-failed backends (e.g.
+    /// the others' worker threads are gone).
+    tries: usize,
 }
 
 /// The response.
@@ -33,6 +62,8 @@ pub struct Prediction {
     pub class: usize,
     pub score: f32,
     pub latency_ms: f64,
+    /// Name of the backend that served this request.
+    pub backend: String,
 }
 
 /// Handle for submitting requests.
@@ -57,13 +88,15 @@ impl Client {
                 image,
                 enqueued: Instant::now(),
                 reply: rtx,
+                failed: 0,
+                tries: 0,
             })
             .map_err(|_| anyhow!("coordinator stopped"))?;
         Ok(rrx)
     }
 }
 
-/// Serving options.
+/// Serving options for the PJRT path (see [`Coordinator::start`]).
 #[derive(Clone)]
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
@@ -85,31 +118,130 @@ impl ServeConfig {
     }
 }
 
-/// The serving coordinator for one model.
+/// A batch of requests dispatched to one backend worker.
+struct Job {
+    reqs: Vec<Request>,
+}
+
+/// The serving coordinator for one model (one or more backends).
 pub struct Coordinator {
     client: Client,
+    /// Aggregate metrics across all backends.
     pub metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<()>>,
+    backend_metrics: Vec<(String, Arc<Metrics>)>,
+    leader: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the worker; blocks until its runtime is initialized and the
-    /// `infer_b{max_batch}` artifact is compiled.
+    /// Start serving `cfg.model` on the PJRT runtime alone — the
+    /// pre-`Backend`-seam entry point, kept for callers that only want
+    /// the AOT path. Equivalent to [`Coordinator::start_with`] over one
+    /// [`PjrtBackend`].
     pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
-        let metrics = Arc::new(Metrics::new());
+        let policy = cfg.policy;
+        Coordinator::start_with(
+            vec![Box::new(PjrtBackend::new(cfg))],
+            policy,
+            RouterPolicy::Failover,
+        )
+    }
+
+    /// Start serving across `backends` under `policy`, routing each
+    /// formed batch per `router`. Blocks until every backend has
+    /// compiled on its worker thread; fails if any compile fails or the
+    /// backends disagree on the model signature.
+    pub fn start_with(backends: Vec<Box<dyn Backend>>, policy: BatchPolicy,
+                      router: RouterPolicy) -> Result<Coordinator> {
+        ensure!(!backends.is_empty(), "need at least one backend");
+        ensure!(
+            backends.len() <= 64,
+            "at most 64 backends (failed-backend tracking is a u64 \
+             bitmask)"
+        );
+        ensure!(policy.max_batch > 0, "max_batch must be positive");
+        let n_backends = backends.len();
+        let global = Arc::new(Metrics::new());
+        let pending = Arc::new(AtomicUsize::new(0));
+        let (retry_tx, retry_rx) = mpsc::channel::<Vec<Request>>();
+
+        // Spawn every worker first so the backends compile in parallel,
+        // then collect their signatures: startup costs the slowest
+        // compile, not the sum.
+        let mut init_rxs = Vec::with_capacity(n_backends);
+        let mut job_txs = Vec::with_capacity(n_backends);
+        let mut states = Vec::with_capacity(n_backends);
+        let mut backend_metrics = Vec::with_capacity(n_backends);
+        let mut workers = Vec::with_capacity(n_backends);
+        for (index, be) in backends.into_iter().enumerate() {
+            let name = be.name().to_string();
+            let state = BackendState::new(&name);
+            let bm = Arc::new(Metrics::new());
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let (init_tx, init_rx) =
+                mpsc::channel::<Result<ModelSignature>>();
+            let ctx = WorkerCtx {
+                index,
+                max_batch: policy.max_batch,
+                jobs: job_rx,
+                init_tx,
+                state: state.clone(),
+                metrics: bm.clone(),
+                global: global.clone(),
+                retry: retry_tx.clone(),
+                pending: pending.clone(),
+                n_backends,
+            };
+            let handle = std::thread::spawn(move || backend_worker(be, ctx));
+            init_rxs.push((name.clone(), init_rx));
+            job_txs.push(job_tx);
+            states.push(state);
+            backend_metrics.push((name, bm));
+            workers.push(handle);
+        }
+        // Only workers hold retry senders from here on, so the retry
+        // channel drains exactly when the workers are done.
+        drop(retry_tx);
+
+        let mut sigs: Vec<ModelSignature> = Vec::with_capacity(n_backends);
+        for (name, init_rx) in init_rxs {
+            let sig = init_rx
+                .recv()
+                .map_err(|_| anyhow!("backend '{name}' died during \
+                                      compile"))??;
+            sigs.push(sig);
+        }
+
+        for (i, sig) in sigs.iter().enumerate().skip(1) {
+            ensure!(
+                *sig == sigs[0],
+                "backend '{}' signature {:?} disagrees with '{}' ({:?})",
+                backend_metrics[i].0,
+                sig,
+                backend_metrics[0].0,
+                sigs[0]
+            );
+        }
+        let image_elems = sigs[0].image_elems();
+
+        let router = BatchRouter::new(router, n_backends)?;
         let (tx, rx) = mpsc::channel::<Request>();
-        let (init_tx, init_rx) = mpsc::channel::<Result<usize>>();
-        let m = metrics.clone();
-        let worker = std::thread::spawn(move || {
-            worker_main(cfg, rx, init_tx, m);
-        });
-        let image_elems = init_rx
-            .recv()
-            .map_err(|_| anyhow!("worker died during init"))??;
+        let ctx = LeaderCtx {
+            rx,
+            retry_rx,
+            jobs: job_txs,
+            states,
+            router,
+            policy,
+            global: global.clone(),
+            pending,
+            workers,
+        };
+        let leader = std::thread::spawn(move || leader_main(ctx));
         Ok(Coordinator {
             client: Client { tx, image_elems },
-            metrics,
-            worker: Some(worker),
+            metrics: global,
+            backend_metrics,
+            leader: Some(leader),
         })
     }
 
@@ -117,98 +249,301 @@ impl Coordinator {
         self.client.clone()
     }
 
-    /// Stop accepting requests and join the worker. All outstanding
+    /// Submit an image through the coordinator's own client handle;
+    /// returns the receiver for the prediction.
+    ///
+    /// ```
+    /// use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+    /// use cocopie::coordinator::{
+    ///     BatchPolicy, Coordinator, NativeBackend, RouterPolicy,
+    /// };
+    /// use cocopie::ir::{Chw, IrBuilder};
+    ///
+    /// let mut b = IrBuilder::new("doc", Chw::new(3, 8, 8));
+    /// b.conv("c1", 3, 4, 1, true).gap("g").dense("fc", 3, false);
+    /// let plan = build_plan(&b.build().unwrap(), Scheme::CocoGen,
+    ///                       PruneConfig::default(), 7)
+    ///     .into_shared();
+    /// let coord = Coordinator::start_with(
+    ///     vec![Box::new(NativeBackend::new("native", plan))],
+    ///     BatchPolicy::default(),
+    ///     RouterPolicy::Failover,
+    /// )
+    /// .unwrap();
+    /// let pred = coord.submit(vec![0.5; 8 * 8 * 3]).unwrap()
+    ///     .recv().unwrap();
+    /// assert!(pred.class < 3);
+    /// assert_eq!(pred.backend, "native");
+    /// coord.shutdown();
+    /// ```
+    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Prediction>> {
+        self.client.submit(image)
+    }
+
+    /// Stop accepting requests and join the workers. All outstanding
     /// Client clones must be dropped first, or this blocks until they
-    /// are.
-    pub fn shutdown(mut self) -> Summary {
+    /// are. Returns the aggregate summary; use
+    /// [`Coordinator::shutdown_report`] for the per-backend view.
+    pub fn shutdown(self) -> Summary {
+        self.shutdown_report().overall
+    }
+
+    /// Like [`Coordinator::shutdown`], with per-backend summaries.
+    pub fn shutdown_report(mut self) -> ServeReport {
         drop(self.client);
-        if let Some(h) = self.worker.take() {
+        if let Some(h) = self.leader.take() {
             let _ = h.join();
         }
-        self.metrics.summary()
+        ServeReport {
+            overall: self.metrics.summary(),
+            per_backend: self
+                .backend_metrics
+                .iter()
+                .map(|(n, m)| (n.clone(), m.summary()))
+                .collect(),
+        }
     }
 }
 
-fn worker_main(cfg: ServeConfig, rx: Receiver<Request>,
-               init_tx: Sender<Result<usize>>, m: Arc<Metrics>) {
-    // Everything PJRT lives on this thread.
-    let setup = (|| -> Result<_> {
-        let rt = Runtime::new(&cfg.artifacts_dir)?;
-        let spec = rt.manifest.model(&cfg.model)?.clone();
-        let art = format!("infer_b{}", cfg.policy.max_batch);
-        let exe = rt.load_model_artifact(&cfg.model, &art)?;
-        let params = cfg.params.clone().unwrap_or_else(|| {
-            crate::cocotune::trainer::ModelState::init(&spec, 0x5EED)
-                .params
-        });
-        let masks: Vec<HostTensor> = spec
-            .masks
-            .iter()
-            .map(|t| HostTensor::ones(&t.shape))
-            .collect();
-        // Hot-path optimization: params + masks live on the device; only
-        // the image batch is uploaded per execution (EXPERIMENTS.md §Perf).
-        let mut prefix_host = params.clone();
-        prefix_host.extend(masks.iter().cloned());
-        let prefix = exe.upload_prefix(rt.client(), &prefix_host)?;
-        Ok((rt, spec, exe, prefix))
-    })();
-    let (rt, spec, exe, prefix) = match setup {
-        Ok(v) => {
-            let elems: usize = v.1.input_shape.iter().product();
-            let _ = init_tx.send(Ok(elems));
-            v
+/// Everything a backend worker thread owns besides the backend itself.
+struct WorkerCtx {
+    /// This backend's index (bit position in `Request::failed`).
+    index: usize,
+    max_batch: usize,
+    jobs: Receiver<Job>,
+    init_tx: Sender<Result<ModelSignature>>,
+    state: Arc<BackendState>,
+    metrics: Arc<Metrics>,
+    global: Arc<Metrics>,
+    retry: Sender<Vec<Request>>,
+    pending: Arc<AtomicUsize>,
+    n_backends: usize,
+}
+
+fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
+    // Compile on this thread: PJRT handles are thread-affine.
+    let sig = match be.compile(ctx.max_batch) {
+        Ok(s) => {
+            let _ = ctx.init_tx.send(Ok(s.clone()));
+            s
         }
         Err(e) => {
-            let _ = init_tx.send(Err(e));
+            let _ = ctx.init_tx.send(Err(e));
             return;
         }
     };
-    let (h, w, c) = (
-        spec.input_shape[0],
-        spec.input_shape[1],
-        spec.input_shape[2],
-    );
-    let image_elems = h * w * c;
-    let classes = spec.classes;
-    let batch_cap = cfg.policy.max_batch;
-    while let Some(mut batch) = batcher::next_batch(&rx, &cfg.policy) {
+    let (h, w, c) =
+        (sig.input_shape[0], sig.input_shape[1], sig.input_shape[2]);
+    let elems = sig.image_elems();
+    let classes = sig.classes;
+    let name = be.name().to_string();
+    while let Ok(mut job) = ctx.jobs.recv() {
         let t0 = Instant::now();
-        let n = batch.len();
-        // Pad to the compiled batch size.
-        let mut x = vec![0f32; batch_cap * image_elems];
-        for (i, r) in batch.iter().enumerate() {
-            x[i * image_elems..(i + 1) * image_elems]
-                .copy_from_slice(&r.image);
+        let n = job.reqs.len();
+        let mut x = vec![0f32; n * elems];
+        for (i, r) in job.reqs.iter().enumerate() {
+            x[i * elems..(i + 1) * elems].copy_from_slice(&r.image);
         }
-        let suffix = [HostTensor::f32(&[batch_cap, h, w, c], x)];
-        let out = match exe.run_with_prefix(rt.client(), &prefix, &suffix) {
-            Ok(o) => o,
-            Err(_) => {
-                for r in batch.drain(..) {
-                    drop(r);
-                    m.record_rejected();
+        let images = HostTensor::f32(&[n, h, w, c], x);
+        // `Backend` is a public extension seam: a panicking
+        // `infer_batch` must become a failed batch (failover path), not
+        // a dead worker thread — a dead worker would leak the batch's
+        // `pending` count and hang shutdown.
+        let infer = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| be.infer_batch(&images)),
+        );
+        // Either a validated logits row per request, or the reason this
+        // batch failed (kept for the operator: metrics alone can't say
+        // *why* a backend started failing over).
+        let failure: Option<String> = match infer {
+            Err(_) => Some("infer_batch panicked".to_string()),
+            Ok(Err(e)) => Some(format!("{e:#}")),
+            Ok(Ok(t)) => match t.as_f32() {
+                Err(e) => Some(format!("{e:#}")),
+                Ok(lv) if lv.len() < n * classes => Some(format!(
+                    "returned {} logits for {n} images x {classes} classes",
+                    lv.len()
+                )),
+                Ok(lv) => {
+                    let done = Instant::now();
+                    for (i, r) in job.reqs.drain(..).enumerate() {
+                        let row = &lv[i * classes..(i + 1) * classes];
+                        // total_cmp: a NaN logit must not panic the
+                        // worker (a panic here would leak `pending` and
+                        // hang shutdown).
+                        let (class, score) = row
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(cl, s)| (cl, *s))
+                            .unwrap();
+                        let total = done - r.enqueued;
+                        ctx.metrics.record(total, t0 - r.enqueued, n);
+                        ctx.global.record(total, t0 - r.enqueued, n);
+                        let _ = r.reply.send(Prediction {
+                            class,
+                            score,
+                            latency_ms: total.as_secs_f64() * 1e3,
+                            backend: name.clone(),
+                        });
+                    }
+                    ctx.pending.fetch_sub(n, Ordering::SeqCst);
+                    None
                 }
-                continue;
-            }
+            },
         };
-        let logits = out[0].as_f32().unwrap();
-        let done = Instant::now();
-        for (i, r) in batch.drain(..).enumerate() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let (class, score) = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(cl, s)| (cl, *s))
-                .unwrap();
-            let total = done - r.enqueued;
-            m.record(total, t0 - r.enqueued, n);
-            let _ = r.reply.send(Prediction {
-                class,
-                score,
-                latency_ms: total.as_secs_f64() * 1e3,
-            });
+        if let Some(err) = failure {
+            eprintln!(
+                "coordinator: backend '{name}' failed a batch of {n}: {err}"
+            );
+            // Cool this backend down; requests that still have untried
+            // backends go back to the leader.
+            ctx.state.mark_unhealthy();
+            let all_failed = if ctx.n_backends >= 64 {
+                u64::MAX
+            } else {
+                (1u64 << ctx.n_backends) - 1
+            };
+            let mut forward = Vec::new();
+            let mut exhausted = 0usize;
+            for mut r in job.reqs.drain(..) {
+                r.failed |= 1u64 << ctx.index;
+                r.tries += 1;
+                // Rejected once it failed on every backend — or, as a
+                // termination bound when routing can only reach
+                // already-failed backends (the others' threads are
+                // gone), after 2x n_backends hops.
+                if r.failed == all_failed || r.tries >= 2 * ctx.n_backends {
+                    exhausted += 1;
+                    ctx.metrics.record_rejected();
+                    ctx.global.record_rejected();
+                } else {
+                    ctx.metrics.record_failover();
+                    ctx.global.record_failover();
+                    forward.push(r);
+                }
+            }
+            ctx.pending.fetch_sub(exhausted, Ordering::SeqCst);
+            if !forward.is_empty() {
+                let fwd_len = forward.len();
+                if ctx.retry.send(forward).is_err() {
+                    // Leader already gone; nothing can serve these.
+                    for _ in 0..fwd_len {
+                        ctx.metrics.record_rejected();
+                        ctx.global.record_rejected();
+                    }
+                    ctx.pending.fetch_sub(fwd_len, Ordering::SeqCst);
+                }
+            }
+        }
+        ctx.state.end();
+    }
+}
+
+/// Everything the leader thread owns.
+struct LeaderCtx {
+    rx: Receiver<Request>,
+    retry_rx: Receiver<Vec<Request>>,
+    jobs: Vec<Sender<Job>>,
+    states: Vec<Arc<BackendState>>,
+    router: BatchRouter,
+    policy: BatchPolicy,
+    global: Arc<Metrics>,
+    pending: Arc<AtomicUsize>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+fn leader_main(mut ctx: LeaderCtx) {
+    // Short enough that failover retries are picked up promptly, long
+    // enough that an idle coordinator barely wakes.
+    let idle = Duration::from_millis(20);
+    let mut open = true;
+    while open || ctx.pending.load(Ordering::SeqCst) > 0 {
+        while let Ok(reqs) = ctx.retry_rx.try_recv() {
+            dispatch(&mut ctx, reqs);
+        }
+        if open {
+            match batcher::next_batch_step(&ctx.rx, &ctx.policy, idle) {
+                BatchStep::Batch(batch) => {
+                    ctx.pending.fetch_add(batch.len(), Ordering::SeqCst);
+                    dispatch(&mut ctx, batch);
+                }
+                BatchStep::Idle => {}
+                BatchStep::Closed => open = false,
+            }
+        } else {
+            // Request channel closed: drain in-flight work + retries.
+            if let Ok(reqs) = ctx.retry_rx.recv_timeout(idle) {
+                dispatch(&mut ctx, reqs);
+            }
         }
     }
+    // Close the job channels so workers exit, then join them.
+    ctx.jobs.clear();
+    for h in ctx.workers.drain(..) {
+        let _ = h.join();
+    }
+}
+
+/// Route one batch (every request already counted in `pending`). The
+/// router always yields a backend (degraded mode falls back to
+/// unhealthy ones); rejection happens either in the worker once a
+/// request has failed on every backend, or here when *every* worker
+/// thread is gone.
+fn dispatch(ctx: &mut LeaderCtx, reqs: Vec<Request>) {
+    let mut first = ctx.router.pick(&ctx.states);
+    // Backends every request in this batch has already failed on
+    // (non-zero only for failover retries). Steering the retry away
+    // from them is what makes "rejected only after failing on every
+    // backend" hold even when the router is in degraded mode.
+    let avoid: u64 = reqs.iter().fold(u64::MAX, |m, r| m & r.failed);
+    if avoid & (1u64 << first) != 0 {
+        let fresh = (0..ctx.jobs.len())
+            .filter(|&k| avoid & (1u64 << k) == 0)
+            .min_by_key(|&k| (!ctx.states[k].healthy(), k));
+        if let Some(k) = fresh {
+            first = k;
+        }
+    }
+    let mut job = Job { reqs };
+    ctx.states[first].begin();
+    match ctx.jobs[first].send(job) {
+        Ok(()) => return,
+        Err(mpsc::SendError(j)) => {
+            // This worker's thread is gone (panic) — not a request
+            // failure. Cool it down and scan the others, healthy
+            // first, before giving up on the batch.
+            ctx.states[first].mark_unhealthy();
+            ctx.states[first].end();
+            job = j;
+        }
+    }
+    let mut order: Vec<usize> =
+        (0..ctx.jobs.len()).filter(|&k| k != first).collect();
+    // Untried-by-this-batch first, then healthy, then declaration order.
+    order.sort_by_key(|&k| {
+        (avoid & (1u64 << k) != 0, !ctx.states[k].healthy())
+    });
+    for k in order {
+        ctx.states[k].begin();
+        match ctx.jobs[k].send(job) {
+            Ok(()) => return,
+            Err(mpsc::SendError(j)) => {
+                ctx.states[k].mark_unhealthy();
+                ctx.states[k].end();
+                job = j;
+            }
+        }
+    }
+    reject(ctx, job.reqs);
+}
+
+fn reject(ctx: &LeaderCtx, reqs: Vec<Request>) {
+    let n = reqs.len();
+    for r in reqs {
+        // Dropping the reply sender signals the client with a recv error.
+        drop(r);
+        ctx.global.record_rejected();
+    }
+    ctx.pending.fetch_sub(n, Ordering::SeqCst);
 }

@@ -1,12 +1,25 @@
-//! Request router: dispatches requests across model variants/replicas.
+//! Request routing, at two granularities.
 //!
-//! The co-design story at serving time: CoCo-Gen produces multiple
-//! deployment variants of the same model (dense, pattern-pruned at
-//! several rates) with different latency/accuracy points; the router
-//! picks a variant per request according to its SLA class and balances
-//! load across replicas (least-outstanding-requests).
+//! **Variant routing** (the co-design story at serving time): CoCo-Gen
+//! produces multiple deployment variants of the same model (dense,
+//! pattern-pruned at several rates) with different latency/accuracy
+//! points; [`Router`] picks a [`Variant`] per request according to its
+//! SLA class and balances load across replicas
+//! (least-outstanding-requests).
+//!
+//! **Batch routing** (the `Backend` seam): once the dynamic batcher has
+//! formed a batch, [`BatchRouter`] decides which live backend executes
+//! it — always-primary with hot standbys ([`RouterPolicy::Failover`]),
+//! a weighted traffic split ([`RouterPolicy::Split`]), or least
+//! outstanding batches ([`RouterPolicy::LeastLoaded`]). Health is
+//! tracked per backend in [`BackendState`]: a backend whose
+//! `infer_batch` fails is marked unhealthy and drops out of the
+//! candidate set, which is what makes failover work.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
 
 /// Request SLA class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,8 +32,8 @@ pub enum Sla {
     Quality,
 }
 
-/// One routable backend.
-pub struct Backend {
+/// One routable deployment variant.
+pub struct Variant {
     pub name: String,
     /// Expected single-batch latency (ms) — from the tuner/bench.
     pub latency_ms: f64,
@@ -29,9 +42,9 @@ pub struct Backend {
     outstanding: AtomicU64,
 }
 
-impl Backend {
-    pub fn new(name: &str, latency_ms: f64, accuracy: f64) -> Backend {
-        Backend {
+impl Variant {
+    pub fn new(name: &str, latency_ms: f64, accuracy: f64) -> Variant {
+        Variant {
             name: name.to_string(),
             latency_ms,
             accuracy,
@@ -49,38 +62,38 @@ impl Backend {
     }
 }
 
-/// The router: SLA-filtered, least-loaded selection.
+/// The per-request variant router: SLA-filtered, least-loaded selection.
 pub struct Router {
-    backends: Vec<Backend>,
+    variants: Vec<Variant>,
 }
 
 impl Router {
-    pub fn new(backends: Vec<Backend>) -> Router {
-        assert!(!backends.is_empty());
-        Router { backends }
+    pub fn new(variants: Vec<Variant>) -> Router {
+        assert!(!variants.is_empty());
+        Router { variants }
     }
 
     /// Candidate set for an SLA class: Realtime = fastest third,
     /// Quality = most-accurate third, Standard = all.
     fn candidates(&self, sla: Sla) -> Vec<usize> {
-        let n = self.backends.len();
+        let n = self.variants.len();
         let k = n.div_ceil(3);
         let mut idx: Vec<usize> = (0..n).collect();
         match sla {
             Sla::Realtime => {
                 idx.sort_by(|&a, &b| {
-                    self.backends[a]
+                    self.variants[a]
                         .latency_ms
-                        .partial_cmp(&self.backends[b].latency_ms)
+                        .partial_cmp(&self.variants[b].latency_ms)
                         .unwrap()
                 });
                 idx.truncate(k);
             }
             Sla::Quality => {
                 idx.sort_by(|&a, &b| {
-                    self.backends[b]
+                    self.variants[b]
                         .accuracy
-                        .partial_cmp(&self.backends[a].accuracy)
+                        .partial_cmp(&self.variants[a].accuracy)
                         .unwrap()
                 });
                 idx.truncate(k);
@@ -90,29 +103,189 @@ impl Router {
         idx
     }
 
-    /// Pick a backend for `sla`: least outstanding load among candidates,
+    /// Pick a variant for `sla`: least outstanding load among candidates,
     /// ties broken by latency.
-    pub fn route(&self, sla: Sla) -> &Backend {
+    pub fn route(&self, sla: Sla) -> &Variant {
         let cands = self.candidates(sla);
         let best = cands
             .into_iter()
             .min_by(|&a, &b| {
-                let ba = &self.backends[a];
-                let bb = &self.backends[b];
-                ba.load()
-                    .cmp(&bb.load())
+                let va = &self.variants[a];
+                let vb = &self.variants[b];
+                va.load()
+                    .cmp(&vb.load())
                     .then(
-                        ba.latency_ms
-                            .partial_cmp(&bb.latency_ms)
+                        va.latency_ms
+                            .partial_cmp(&vb.latency_ms)
                             .unwrap(),
                     )
             })
             .unwrap();
-        &self.backends[best]
+        &self.variants[best]
     }
 
-    pub fn backends(&self) -> &[Backend] {
-        &self.backends
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+}
+
+/// Cooldown after an infer failure, in routing decisions: the backend
+/// re-enters the candidate set after this many picks (a half-open
+/// circuit breaker — a flaky backend gets probed again instead of being
+/// removed forever, and a transient error does not brick a
+/// single-backend coordinator).
+const UNHEALTHY_COOLDOWN: u64 = 32;
+
+/// Live health/load state of one serving backend, shared between the
+/// leader (which routes batches) and the backend's worker thread (which
+/// reports failures).
+pub struct BackendState {
+    pub name: String,
+    /// 0 = healthy; otherwise routing decisions left until recovery.
+    penalty: AtomicU64,
+    outstanding: AtomicU64,
+    dispatched: AtomicU64,
+}
+
+impl BackendState {
+    pub fn new(name: &str) -> Arc<BackendState> {
+        Arc::new(BackendState {
+            name: name.to_string(),
+            penalty: AtomicU64::new(0),
+            outstanding: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+        })
+    }
+    pub fn healthy(&self) -> bool {
+        self.penalty.load(Ordering::SeqCst) == 0
+    }
+    /// An infer failure takes the backend out of rotation for
+    /// [`UNHEALTHY_COOLDOWN`] routing decisions.
+    pub fn mark_unhealthy(&self) {
+        self.penalty.store(UNHEALTHY_COOLDOWN, Ordering::SeqCst);
+    }
+    /// One routing decision elapsed; unhealthy backends creep back
+    /// toward rotation.
+    fn decay(&self) {
+        let _ = self.penalty.fetch_update(
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+            |p| if p > 0 { Some(p - 1) } else { None },
+        );
+    }
+    /// A batch was dispatched to this backend.
+    pub fn begin(&self) {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+        self.dispatched.fetch_add(1, Ordering::SeqCst);
+    }
+    /// The batch finished (successfully or not).
+    pub fn end(&self) {
+        self.outstanding.fetch_sub(1, Ordering::SeqCst);
+    }
+    /// Batches dispatched and not yet finished.
+    pub fn load(&self) -> u64 {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+    /// Total batches ever dispatched to this backend.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::SeqCst)
+    }
+}
+
+/// How the leader spreads batches across backends.
+#[derive(Debug, Clone)]
+pub enum RouterPolicy {
+    /// All traffic to the first *healthy* backend in declaration order;
+    /// later backends are hot standbys that take over on failure.
+    Failover,
+    /// Split traffic across healthy backends proportionally to the given
+    /// weights (deficit round-robin; one weight per backend, all > 0).
+    Split(Vec<f64>),
+    /// Send each batch to the healthy backend with the fewest
+    /// outstanding batches, ties broken by declaration order.
+    LeastLoaded,
+}
+
+/// Stateful batch router implementing a [`RouterPolicy`] over the
+/// backends' shared [`BackendState`]s.
+pub struct BatchRouter {
+    policy: RouterPolicy,
+    /// Deficit counters for `Split`.
+    credit: Vec<f64>,
+}
+
+impl BatchRouter {
+    pub fn new(policy: RouterPolicy, n_backends: usize)
+               -> Result<BatchRouter> {
+        ensure!(n_backends > 0, "router needs at least one backend");
+        if let RouterPolicy::Split(w) = &policy {
+            ensure!(
+                w.len() == n_backends,
+                "split weights ({}) must match backend count ({})",
+                w.len(),
+                n_backends
+            );
+            ensure!(
+                w.iter().all(|x| *x > 0.0 && x.is_finite()),
+                "split weights must be positive and finite"
+            );
+        }
+        Ok(BatchRouter {
+            policy,
+            credit: vec![0.0; n_backends],
+        })
+    }
+
+    /// Pick the backend for the next batch. Unhealthy backends are
+    /// skipped while any healthy one remains; when none does, the
+    /// policy runs over the full set ordered by ascending cooldown
+    /// (degraded mode: attempting the least-recently-failed backend
+    /// beats dropping traffic on the floor, and is what lets a sole
+    /// backend recover from a transient error). Each call also ticks
+    /// every backend's cooldown.
+    pub fn pick(&mut self, states: &[Arc<BackendState>]) -> usize {
+        for s in states {
+            s.decay();
+        }
+        let mut healthy: Vec<usize> = (0..states.len())
+            .filter(|&i| states[i].healthy())
+            .collect();
+        if healthy.is_empty() {
+            healthy = (0..states.len()).collect();
+            healthy.sort_by_key(|&i| {
+                states[i].penalty.load(Ordering::SeqCst)
+            });
+        }
+        match &self.policy {
+            RouterPolicy::Failover => healthy[0],
+            RouterPolicy::LeastLoaded => healthy
+                .iter()
+                .copied()
+                .min_by_key(|&i| (states[i].load(), i))
+                .unwrap(),
+            RouterPolicy::Split(w) => {
+                // Deficit round-robin: healthy backends accrue credit at
+                // their weight; the richest one serves and pays the
+                // round's total, giving a `w`-proportional long-run
+                // split that adapts when backends drop out.
+                let total: f64 = healthy.iter().map(|&i| w[i]).sum();
+                for &i in &healthy {
+                    self.credit[i] += w[i];
+                }
+                let pick = healthy
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| {
+                        self.credit[a]
+                            .partial_cmp(&self.credit[b])
+                            .unwrap()
+                            .then(b.cmp(&a))
+                    })
+                    .unwrap();
+                self.credit[pick] -= total;
+                pick
+            }
+        }
     }
 }
 
@@ -123,9 +296,9 @@ mod tests {
 
     fn mk() -> Router {
         Router::new(vec![
-            Backend::new("dense", 10.0, 0.95),
-            Backend::new("pattern-3x", 4.0, 0.93),
-            Backend::new("pattern-8x", 2.0, 0.90),
+            Variant::new("dense", 10.0, 0.95),
+            Variant::new("pattern-3x", 4.0, 0.93),
+            Variant::new("pattern-8x", 2.0, 0.90),
         ])
     }
 
@@ -144,7 +317,7 @@ mod tests {
     #[test]
     fn standard_balances_by_load() {
         let r = mk();
-        // Load up the fastest backend; Standard must avoid it.
+        // Load up the fastest variant; Standard must avoid it.
         let fast = r.route(Sla::Realtime);
         fast.begin();
         fast.begin();
@@ -159,20 +332,110 @@ mod tests {
         prop::check("router-load", 50, |g| {
             let r = mk();
             let n = g.usize(0, 20);
-            let b = r.route(Sla::Standard);
+            let v = r.route(Sla::Standard);
             for _ in 0..n {
-                b.begin();
+                v.begin();
             }
-            if b.load() != n as u64 {
+            if v.load() != n as u64 {
                 return Err("load mismatch".into());
             }
             for _ in 0..n {
-                b.end();
+                v.end();
             }
-            if b.load() != 0 {
+            if v.load() != 0 {
                 return Err("load not drained".into());
             }
             Ok(())
         });
+    }
+
+    fn states(n: usize) -> Vec<Arc<BackendState>> {
+        (0..n).map(|i| BackendState::new(&format!("b{i}"))).collect()
+    }
+
+    #[test]
+    fn failover_skips_unhealthy() {
+        let st = states(3);
+        let mut r = BatchRouter::new(RouterPolicy::Failover, 3).unwrap();
+        assert_eq!(r.pick(&st), 0);
+        st[0].mark_unhealthy();
+        assert_eq!(r.pick(&st), 1);
+        st[1].mark_unhealthy();
+        assert_eq!(r.pick(&st), 2);
+        // All unhealthy: degraded mode falls back to declaration order
+        // rather than dropping traffic.
+        st[2].mark_unhealthy();
+        assert_eq!(r.pick(&st), 0);
+    }
+
+    #[test]
+    fn unhealthy_backend_recovers_after_cooldown() {
+        let st = states(2);
+        let mut r = BatchRouter::new(RouterPolicy::Failover, 2).unwrap();
+        st[0].mark_unhealthy();
+        assert_eq!(r.pick(&st), 1);
+        // Each pick ticks the cooldown; eventually the primary is probed
+        // again (half-open circuit breaker).
+        let mut recovered = false;
+        for _ in 0..UNHEALTHY_COOLDOWN + 1 {
+            if r.pick(&st) == 0 {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "backend never re-entered rotation");
+    }
+
+    #[test]
+    fn split_tracks_weights() {
+        let st = states(2);
+        let mut r =
+            BatchRouter::new(RouterPolicy::Split(vec![3.0, 1.0]), 2)
+                .unwrap();
+        let mut counts = [0usize; 2];
+        for _ in 0..400 {
+            counts[r.pick(&st)] += 1;
+        }
+        assert_eq!(counts[0] + counts[1], 400);
+        assert!(
+            (counts[0] as f64 / 400.0 - 0.75).abs() < 0.05,
+            "split drifted: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn split_redirects_when_backend_dies() {
+        let st = states(2);
+        let mut r =
+            BatchRouter::new(RouterPolicy::Split(vec![1.0, 1.0]), 2)
+                .unwrap();
+        st[0].mark_unhealthy();
+        for _ in 0..10 {
+            assert_eq!(r.pick(&st), 1);
+        }
+    }
+
+    #[test]
+    fn least_loaded_avoids_busy_backend() {
+        let st = states(2);
+        let mut r = BatchRouter::new(RouterPolicy::LeastLoaded, 2).unwrap();
+        st[0].begin();
+        st[0].begin();
+        assert_eq!(r.pick(&st), 1);
+        st[1].begin();
+        st[1].begin();
+        st[1].begin();
+        assert_eq!(r.pick(&st), 0);
+    }
+
+    #[test]
+    fn split_weights_validated() {
+        assert!(BatchRouter::new(RouterPolicy::Split(vec![1.0]), 2)
+            .is_err());
+        assert!(
+            BatchRouter::new(RouterPolicy::Split(vec![1.0, 0.0]), 2)
+                .is_err()
+        );
+        assert!(BatchRouter::new(RouterPolicy::Failover, 0).is_err());
     }
 }

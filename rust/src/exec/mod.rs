@@ -11,56 +11,99 @@ pub mod pattern;
 pub mod tensor;
 pub mod winograd;
 
+use std::sync::{Arc, Mutex, TryLockError};
+
 use crate::codegen::{ExecPlan, LayerPlan, Scheme};
 use crate::ir::LayerKind;
+use crate::util::threadpool;
 pub use tensor::Tensor;
+
+/// How an executor holds its plan: borrowed for one-shot benchmark runs,
+/// shared (`Arc`) for long-lived serving workers that must be `Send`.
+enum PlanRef<'a> {
+    Borrowed(&'a ExecPlan),
+    Shared(Arc<ExecPlan>),
+}
+
+impl<'a> PlanRef<'a> {
+    fn get(&self) -> &ExecPlan {
+        match self {
+            PlanRef::Borrowed(p) => p,
+            PlanRef::Shared(a) => a,
+        }
+    }
+}
 
 /// Stateful model executor (owns im2col scratch).
 pub struct ModelExecutor<'a> {
-    pub plan: &'a ExecPlan,
+    plan: PlanRef<'a>,
     pub threads: usize,
     scratch: im2col::Im2colScratch,
+}
+
+impl ModelExecutor<'static> {
+    /// Executor over a shared plan. The result is `Send` and borrows
+    /// nothing, so serving workers can own one across threads while the
+    /// weights stay in a single `Arc<ExecPlan>`.
+    pub fn shared(plan: Arc<ExecPlan>, threads: usize) -> ModelExecutor<'static> {
+        ModelExecutor {
+            plan: PlanRef::Shared(plan),
+            threads,
+            scratch: im2col::Im2colScratch::default(),
+        }
+    }
 }
 
 impl<'a> ModelExecutor<'a> {
     pub fn new(plan: &'a ExecPlan, threads: usize) -> Self {
         ModelExecutor {
-            plan,
+            plan: PlanRef::Borrowed(plan),
             threads,
             scratch: im2col::Im2colScratch::default(),
         }
     }
 
+    /// The execution plan this executor runs.
+    pub fn plan(&self) -> &ExecPlan {
+        self.plan.get()
+    }
+
+    /// Run a batch of inputs sequentially on this executor, preserving
+    /// order. For parallel fan-out across cores use [`ExecutorPool`].
+    pub fn run_batch(&mut self, inputs: &[Tensor]) -> Vec<Tensor> {
+        inputs.iter().map(|x| self.run(x)).collect()
+    }
+
     /// Run one input through the model; returns the final tensor.
     pub fn run(&mut self, input: &Tensor) -> Tensor {
-        assert_eq!(input.shape(), self.plan.ir.input,
+        let plan = self.plan.get();
+        assert_eq!(input.shape(), plan.ir.input,
                    "input shape mismatch");
-        let n = self.plan.ir.layers.len();
+        let n = plan.ir.layers.len();
         // Keep outputs that later Add layers reference.
         let mut needed = vec![false; n];
-        for l in &self.plan.ir.layers {
+        for l in &plan.ir.layers {
             if let LayerKind::Add { from, .. } = l.kind {
                 needed[from] = true;
             }
         }
         let mut saved: Vec<Option<Tensor>> = vec![None; n];
         let mut cur = input.clone();
-        for (i, (layer, plan)) in self
-            .plan
+        for (i, (layer, lplan)) in plan
             .ir
             .layers
             .iter()
-            .zip(&self.plan.layers)
+            .zip(&plan.layers)
             .enumerate()
         {
-            let out = match (&layer.kind, plan) {
+            let out = match (&layer.kind, lplan) {
                 (LayerKind::Conv { stride, relu, .. }, LayerPlan::Dense(d)) => {
                     // Dense layers inside non-naive schemes (1x1 convs the
                     // pattern pass leaves dense, CSR scheme's non-3x3
                     // layers) use the strong im2col lowering; only the
                     // DenseNaive baseline is interpreter-style throughout.
                     // The Winograd scheme applies F(2x2,3x3) where legal.
-                    match self.plan.scheme {
+                    match plan.scheme {
                         Scheme::DenseNaive => naive::conv2d(
                             &cur, d, *stride, *relu, self.threads,
                         ),
@@ -110,6 +153,82 @@ impl<'a> ModelExecutor<'a> {
             cur = out;
         }
         cur
+    }
+}
+
+/// A fixed pool of [`ModelExecutor`] workers sharing one `Arc<ExecPlan>`.
+///
+/// Each slot owns its executor (and thus its im2col scratch), so a batch
+/// fans out across cores without cloning weights or re-allocating
+/// scratch buffers. Executors run single-threaded (`threads = 1`):
+/// parallelism comes from running pool slots concurrently, which keeps
+/// per-image numerics bit-identical to a sequential
+/// `ModelExecutor::run` — the property the serving tests assert.
+pub struct ExecutorPool {
+    slots: Vec<Mutex<ModelExecutor<'static>>>,
+}
+
+impl ExecutorPool {
+    /// Pool with `workers` executor slots (clamped to at least 1) over a
+    /// shared plan. Serving backends size this to one slot per core via
+    /// `util::threadpool::default_threads`.
+    pub fn new(plan: Arc<ExecPlan>, workers: usize) -> ExecutorPool {
+        let workers = workers.max(1);
+        ExecutorPool {
+            slots: (0..workers)
+                .map(|_| Mutex::new(ModelExecutor::shared(plan.clone(), 1)))
+                .collect(),
+        }
+    }
+
+    /// Number of executor slots.
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Claim a free executor slot, spinning briefly if all are busy.
+    /// With concurrency capped at `workers()` by `parallel_map`, a free
+    /// slot always exists for a claiming worker.
+    fn claim(&self) -> std::sync::MutexGuard<'_, ModelExecutor<'static>> {
+        loop {
+            let free = self.slots.iter().find_map(|s| match s.try_lock() {
+                Ok(g) => Some(g),
+                Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+                Err(TryLockError::WouldBlock) => None,
+            });
+            match free {
+                Some(g) => return g,
+                None => std::thread::yield_now(),
+            }
+        }
+    }
+
+    /// Run every input through the model, fanning items out across the
+    /// pool via `util::threadpool`. Outputs are in input order.
+    pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        threadpool::parallel_map(inputs.len(), self.slots.len(), |i| {
+            Some(self.claim().run(&inputs[i]))
+        })
+        .into_iter()
+        .map(|t| t.expect("pool worker produced no output"))
+        .collect()
+    }
+
+    /// Like [`ExecutorPool::run_batch`], but item `i`'s input tensor is
+    /// produced by `make(i)` on the claiming worker — so per-item prep
+    /// (e.g. the serving path's NHWC→CHW layout conversion) runs in
+    /// parallel with inference instead of serially before it.
+    pub fn run_batch_map<F>(&self, n: usize, make: F) -> Vec<Tensor>
+    where
+        F: Fn(usize) -> Tensor + Sync,
+    {
+        threadpool::parallel_map(n, self.slots.len(), |i| {
+            let input = make(i);
+            Some(self.claim().run(&input))
+        })
+        .into_iter()
+        .map(|t| t.expect("pool worker produced no output"))
+        .collect()
     }
 }
 
@@ -169,6 +288,53 @@ mod tests {
         let out = ModelExecutor::new(&p, 2).run(&x);
         assert_eq!(out.c, 5);
         assert!(out.iter_finite());
+    }
+
+    #[test]
+    fn pool_matches_sequential_bitwise() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42)
+            .into_shared();
+        let pool = ExecutorPool::new(plan.clone(), 4);
+        let mut rng = Rng::seed_from(9);
+        let inputs: Vec<Tensor> = (0..10)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let outs = pool.run_batch(&inputs);
+        let mut seq = ModelExecutor::new(&plan, 1);
+        for (x, got) in inputs.iter().zip(&outs) {
+            let want = seq.run(x);
+            assert_eq!(want.data, got.data, "pool diverged from sequential");
+        }
+    }
+
+    #[test]
+    fn shared_executor_is_send() {
+        fn assert_send<T: Send>(_: &T) {}
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 1)
+            .into_shared();
+        let exec = ModelExecutor::shared(plan, 2);
+        assert_send(&exec);
+    }
+
+    #[test]
+    fn run_batch_preserves_order() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 5);
+        let mut rng = Rng::seed_from(4);
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let mut exec = ModelExecutor::new(&plan, 2);
+        let batch = exec.run_batch(&inputs);
+        for (x, got) in inputs.iter().zip(&batch) {
+            let want = ModelExecutor::new(&plan, 2).run(x);
+            assert_eq!(want.data, got.data);
+        }
     }
 
     #[test]

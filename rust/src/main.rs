@@ -2,9 +2,12 @@
 //!
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   info                      — artifacts + manifest summary
-//!   serve  [--model M] [--batch B] [--requests N]
+//!   serve  [--model M] [--batch B] [--requests N] [--backend pjrt|native]
 //!                             — run the serving coordinator on synthetic
-//!                               traffic and print latency metrics
+//!                               traffic and print latency metrics;
+//!                               `--backend native` serves a zoo timing
+//!                               model on the executor pool (no PJRT or
+//!                               artifacts needed)
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -86,23 +89,53 @@ fn info() -> Result<()> {
 }
 
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
-    let model = flags.get("model").map(String::as_str)
-        .unwrap_or("resnet_mini");
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("pjrt");
     let batch: usize =
         flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
     let n: usize = flags
         .get("requests")
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let rt = Runtime::new(&Runtime::default_dir())?;
-    let spec = rt.manifest.model(model)?.clone();
-    let elems: usize = spec.input_shape.iter().product();
-    let mut cfg = cocopie::coordinator::ServeConfig::new(model);
-    cfg.policy = BatchPolicy {
+    let policy = BatchPolicy {
         max_batch: batch,
         max_wait: std::time::Duration::from_millis(3),
     };
-    let coord = Coordinator::start(cfg)?;
+    let (coord, elems) = match backend {
+        "pjrt" => {
+            let model = flags.get("model").map(String::as_str)
+                .unwrap_or("resnet_mini");
+            let rt = Runtime::new(&Runtime::default_dir())?;
+            let spec = rt.manifest.model(model)?.clone();
+            let elems: usize = spec.input_shape.iter().product();
+            let mut cfg = cocopie::coordinator::ServeConfig::new(model);
+            cfg.policy = policy;
+            (Coordinator::start(cfg)?, elems)
+        }
+        "native" => {
+            let model = flags.get("model").map(String::as_str)
+                .unwrap_or("mobilenet_v2");
+            let ir = match model {
+                "vgg16" => zoo::vgg16(zoo::CIFAR_HW, 10),
+                "resnet50" => zoo::resnet50(zoo::CIFAR_HW, 10),
+                "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
+                other => anyhow::bail!("unknown timing model {other}"),
+            };
+            let elems = ir.input.c * ir.input.h * ir.input.w;
+            let plan = build_plan(&ir, Scheme::CocoGen,
+                                  PruneConfig::default(), 7)
+                .into_shared();
+            let coord = Coordinator::start_with(
+                vec![Box::new(cocopie::coordinator::NativeBackend::new(
+                    "native-cocogen",
+                    plan,
+                ))],
+                policy,
+                cocopie::coordinator::RouterPolicy::Failover,
+            )?;
+            (coord, elems)
+        }
+        other => anyhow::bail!("unknown backend {other} (pjrt|native)"),
+    };
     let client = coord.client();
     let mut rng = Rng::seed_from(1);
     let mut pending = Vec::new();
@@ -114,11 +147,16 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         let _ = p.recv();
     }
     drop(client);
-    let s = coord.shutdown();
+    let report = coord.shutdown_report();
+    let s = &report.overall;
     println!(
         "served {} requests: p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
         s.completed, s.p50_ms, s.p99_ms, s.mean_batch
     );
+    for (name, b) in &report.per_backend {
+        println!("  {name}: {} requests, p50 {:.2} ms", b.completed,
+                 b.p50_ms);
+    }
     Ok(())
 }
 

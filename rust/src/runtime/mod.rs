@@ -5,6 +5,13 @@
 //! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
 //! instruction ids, avoiding the 64-bit-id proto incompatibility between
 //! jax >= 0.5 and xla_extension 0.5.1.
+//!
+//! Offline builds link the vendored `xla` stub (rust/vendor/xla), so
+//! everything here compiles everywhere but [`Runtime::new`] returns an
+//! error at runtime until the real bindings are swapped in. Callers —
+//! the serving coordinator's `PjrtBackend`, the trainer, the PJRT
+//! integration tests — already treat that error like a missing artifacts
+//! directory: fail over to the native backend, or skip.
 
 pub mod manifest;
 
