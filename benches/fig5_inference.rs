@@ -37,7 +37,7 @@ fn main() {
             Scheme::DenseNaive,
             Scheme::DenseIm2col,
             Scheme::DenseWinograd,
-            Scheme::SparseCsr {},
+            Scheme::SparseCsr,
             Scheme::CocoGen,
         ] {
             let mut plan = build_plan(ir, scheme, PruneConfig::default(), 42);

@@ -1,0 +1,122 @@
+//! Quantization-path benchmark: resident weight bytes + serving req/s +
+//! p50/p99 latency for fp32 vs weight-only int8 on the zoo models,
+//! measured through the full coordinator (batcher -> router -> native
+//! executor pool).
+//!
+//! The claims under test (ISSUE 2 acceptance):
+//!   * int8 resident weight bytes <= 0.3x the fp32 dense plan — real,
+//!     because `QuantFkw`/`QuantDense` hold i8 weights only (no retained
+//!     f32 copy);
+//!   * int8 throughput >= 0.8x fp32 on the pattern engine — dequant
+//!     happens on load (a per-kernel register fill), not per call, so
+//!     the serving rate stays at the fp32 plan's level.
+//!
+//! Run: `cargo bench --bench quant_path`
+//! (COCOPIE_QUICK=1 shrinks the request count and model set.)
+
+use std::time::{Duration, Instant};
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::coordinator::{
+    BatchPolicy, Coordinator, NativeBackend, RouterPolicy,
+};
+use cocopie::ir::zoo;
+use cocopie::util::bench::Table;
+use cocopie::util::rng::Rng;
+
+/// Closed-loop-ish load: keep `window` requests in flight until `total`
+/// have been submitted, then drain. Returns wall seconds.
+fn drive(coord: &Coordinator, elems: usize, total: usize, window: usize)
+         -> f64 {
+    let client = coord.client();
+    let mut rng = Rng::seed_from(23);
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::new();
+    for _ in 0..total {
+        if pending.len() >= window {
+            let p: std::sync::mpsc::Receiver<_> =
+                pending.pop_front().unwrap();
+            let _ = p.recv();
+        }
+        let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+        pending.push_back(client.submit(img).expect("submit"));
+    }
+    while let Some(p) = pending.pop_front() {
+        let _ = p.recv();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let quick = std::env::var("COCOPIE_QUICK").is_ok();
+    let total = if quick { 96 } else { 384 };
+    let window = 32;
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
+    let models: Vec<(&str, cocopie::ir::ModelIR)> = if quick {
+        vec![("mobilenet_v2", zoo::mobilenet_v2(zoo::CIFAR_HW, 10))]
+    } else {
+        vec![
+            ("mobilenet_v2", zoo::mobilenet_v2(zoo::CIFAR_HW, 10)),
+            ("vgg16", zoo::vgg16(zoo::CIFAR_HW, 10)),
+            ("resnet50", zoo::resnet50(zoo::CIFAR_HW, 10)),
+        ]
+    };
+    println!(
+        "quant path: {} requests per row, window {}, batch cap {}",
+        total, window, policy.max_batch
+    );
+    let mut table = Table::new(&[
+        "model", "scheme", "weights KB", "vs fp32 dense", "req/s",
+        "p50 ms", "p99 ms",
+    ]);
+
+    let schemes: &[(&str, Scheme)] = &[
+        ("fp32 dense", Scheme::DenseIm2col),
+        ("fp32 cocogen", Scheme::CocoGen),
+        ("int8 cocogen", Scheme::CocoGenQuant),
+    ];
+    for (mname, ir) in &models {
+        let elems = ir.input.c * ir.input.h * ir.input.w;
+        let dense_bytes =
+            build_plan(ir, Scheme::DenseIm2col, PruneConfig::default(), 7)
+                .weight_bytes();
+        let mut rates: Vec<(String, f64, usize)> = Vec::new();
+        for (label, scheme) in schemes {
+            let plan = build_plan(ir, *scheme, PruneConfig::default(), 7)
+                .into_shared();
+            let bytes = plan.weight_bytes();
+            let coord = Coordinator::start_with(
+                vec![Box::new(NativeBackend::new(label, plan))],
+                policy,
+                RouterPolicy::Failover,
+            )
+            .expect("coordinator");
+            let wall = drive(&coord, elems, total, window);
+            let s = coord.shutdown();
+            let rps = s.completed as f64 / wall;
+            table.row(&[
+                mname.to_string(),
+                label.to_string(),
+                format!("{}", bytes / 1024),
+                format!("{:.3}x", bytes as f64 / dense_bytes as f64),
+                format!("{rps:.0}"),
+                format!("{:.2}", s.p50_ms),
+                format!("{:.2}", s.p99_ms),
+            ]);
+            rates.push((label.to_string(), rps, bytes));
+        }
+        // acceptance summary for this model
+        let fp32 = rates.iter().find(|r| r.0 == "fp32 cocogen").unwrap();
+        let int8 = rates.iter().find(|r| r.0 == "int8 cocogen").unwrap();
+        println!(
+            "{mname}: int8 weights {:.3}x fp32 dense (target <= 0.3), \
+             int8 req/s {:.2}x fp32 cocogen (target >= 0.8)",
+            int8.2 as f64 / dense_bytes as f64,
+            int8.1 / fp32.1,
+        );
+    }
+    table.print();
+}

@@ -4,11 +4,13 @@
 //!  1. the SLA router choosing among deployment variants,
 //!  2. live serving on the *native* backend pool — the co-designed
 //!     pattern-pruned engines behind the `Backend` seam, split across a
-//!     CoCo-Gen variant and a dense baseline,
+//!     CoCo-Gen variant and a dense baseline; with `--quant` the split
+//!     canaries the weight-only int8 plan (`Scheme::CocoGenQuant`) next
+//!     to the fp32 CoCo-Gen one and prints the resident weight bytes,
 //!  3. the PJRT backend, when a real runtime + artifacts are present
 //!     (`make artifacts`); offline it reports why it was skipped.
 //!
-//! Run: `cargo run --release --example serve`
+//! Run: `cargo run --release --example serve [-- --quant]`
 
 use std::time::{Duration, Instant};
 
@@ -54,12 +56,28 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- 2. native serving: executor pool behind the Backend seam ---------
+    // `--quant` canaries the weight-only int8 plan next to fp32 CoCo-Gen.
+    let quant = std::env::args().any(|a| a == "--quant");
     let ir = zoo::mobilenet_v2(zoo::CIFAR_HW, 10);
     let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7)
         .into_shared();
-    let dense = build_plan(&ir, Scheme::DenseIm2col, PruneConfig::default(),
-                           7)
+    let second_scheme = if quant {
+        Scheme::CocoGenQuant
+    } else {
+        Scheme::DenseIm2col
+    };
+    let second = build_plan(&ir, second_scheme, PruneConfig::default(), 7)
         .into_shared();
+    let second_name = if quant { "native-int8" } else { "native-dense" };
+    if quant {
+        println!(
+            "\nweight bytes: fp32 cocogen {} KB, int8 cocogen {} KB \
+             ({:.2}x)",
+            coco.weight_bytes() / 1024,
+            second.weight_bytes() / 1024,
+            coco.weight_bytes() as f64 / second.weight_bytes() as f64,
+        );
+    }
     let elems = ir.input.c * ir.input.h * ir.input.w;
     let policy = BatchPolicy {
         max_batch: 8,
@@ -68,10 +86,10 @@ fn main() -> anyhow::Result<()> {
     let coord = Coordinator::start_with(
         vec![
             Box::new(NativeBackend::new("native-cocogen", coco)),
-            Box::new(NativeBackend::new("native-dense", dense)),
+            Box::new(NativeBackend::new(second_name, second)),
         ],
         policy,
-        // 3:1 in favor of the pruned variant, like a canaried rollout.
+        // 3:1 in favor of the first variant, like a canaried rollout.
         RouterPolicy::Split(vec![3.0, 1.0]),
     )?;
     let wall = drive(&coord, elems, 256, 3);

@@ -11,6 +11,7 @@ use std::sync::Arc;
 use crate::compress::{CsrLayer, DenseLayer, FkwLayer};
 use crate::ir::{LayerKind, ModelIR};
 use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
+use crate::quant::{QuantDense, QuantFkw};
 use crate::util::rng::Rng;
 
 pub use tuner::TileConfig;
@@ -24,6 +25,12 @@ pub enum LayerPlan {
     Csr(CsrLayer),
     /// Pattern + connectivity pruned, reordered, tuned (CoCo-Gen).
     Fkw { layer: FkwLayer, tile: TileConfig },
+    /// Weight-only per-channel int8 dense conv (i8 weights resident, no
+    /// f32 copy); runs on the im2col quant kernel.
+    QuantDense(QuantDense),
+    /// Pattern + connectivity pruned AND int8-quantized (CoCoGenQuant):
+    /// both halves of the paper's compression, dequantized on load.
+    QuantFkw { layer: QuantFkw, tile: TileConfig },
     /// Depthwise conv weights: w[c][ky][kx].
     Depthwise { weights: Vec<f32>, bias: Vec<f32> },
     /// Dense FC: w[cout][cin] + bias.
@@ -49,9 +56,15 @@ pub enum Scheme {
     /// Dense weights, Winograd F(2x2,3x3) for 3x3/s1 convs (MNN stand-in).
     DenseWinograd,
     /// Non-structured pruning + CSR execution.
-    SparseCsr { },
+    SparseCsr,
     /// CoCo-Gen: pattern + connectivity pruning, reorder, LRE, tuning.
     CocoGen,
+    /// CoCo-Gen composed with weight-only per-channel int8: the pruned
+    /// pattern layers store i8 weights (`QuantFkw`), the remaining dense
+    /// convs become `QuantDense` — both halves of compression (§1
+    /// "pruning and quantization") pushed through the same compiler
+    /// passes and executors.
+    CocoGenQuant,
 }
 
 /// Pruning hyper-parameters for plan building.
@@ -136,7 +149,7 @@ pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
                 | Scheme::DenseWinograd,
                 p,
             ) => p,
-            (Scheme::SparseCsr { .. }, LayerPlan::Dense(d))
+            (Scheme::SparseCsr, LayerPlan::Dense(d))
                 if l.is_conv3x3() =>
             {
                 // Non-structured magnitude pruning, then CSR.
@@ -146,7 +159,7 @@ pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
                 );
                 LayerPlan::Csr(CsrLayer::from_dense(&d, Some(&mask)))
             }
-            (Scheme::SparseCsr { .. }, p) => p,
+            (Scheme::SparseCsr, p) => p,
             (Scheme::CocoGen, LayerPlan::Dense(d)) if l.is_conv3x3() => {
                 let conn = prune_conn_oihw(&d, prune.connectivity_keep);
                 let mut fkw = FkwLayer::from_dense(&d, &conn);
@@ -155,6 +168,26 @@ pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
                 LayerPlan::Fkw { layer: fkw, tile }
             }
             (Scheme::CocoGen, p) => p,
+            (Scheme::CocoGenQuant, LayerPlan::Dense(d))
+                if l.is_conv3x3() =>
+            {
+                // Same pruning + codegen passes as CoCo-Gen, then the
+                // weights (and only the weights) drop to int8.
+                let conn = prune_conn_oihw(&d, prune.connectivity_keep);
+                let mut fkw = FkwLayer::from_dense(&d, &conn);
+                reorder::filter_kernel_reorder(&mut fkw);
+                let tile = tuner::default_tile(l.output.h, l.output.w);
+                LayerPlan::QuantFkw {
+                    layer: QuantFkw::quantize(&fkw),
+                    tile,
+                }
+            }
+            (Scheme::CocoGenQuant, LayerPlan::Dense(d)) => {
+                // Convs the pattern pass leaves dense (e.g. 1x1): still
+                // weight-only int8.
+                LayerPlan::QuantDense(QuantDense::quantize(&d))
+            }
+            (Scheme::CocoGenQuant, p) => p,
         })
         .collect();
     ExecPlan {
@@ -181,9 +214,10 @@ pub fn prune_conn_oihw(d: &DenseLayer, keep: f64) -> ConnectivityMask {
     prune_connectivity(&hwio, d.kh, d.kw, d.cin, d.cout, keep)
 }
 
-/// Parameter auto-tuning (paper §2.1.3): per CoCo-Gen conv layer, sweep
-/// the reduced candidate set (both execution paths x tile shapes) on a
-/// synthetic input of the layer's real shape and keep the fastest.
+/// Parameter auto-tuning (paper §2.1.3): per pattern conv layer (f32
+/// `Fkw` or int8 `QuantFkw`), sweep the reduced candidate set (both
+/// execution paths x tile shapes) on a synthetic input of the layer's
+/// real shape and keep the fastest.
 pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
     let mut rng = Rng::seed_from(0xA070);
     let layers: Vec<_> = plan
@@ -194,35 +228,56 @@ pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
         .zip(plan.layers.iter_mut())
         .collect();
     for (lir, lp) in layers {
-        let LayerPlan::Fkw { layer, tile } = lp else { continue };
         let LayerKind::Conv { stride, relu, .. } = lir.kind else {
             continue;
         };
-        let input = crate::exec::Tensor::random(
-            lir.input.c, lir.input.h, lir.input.w, &mut rng);
-        let mut best = *tile;
-        let mut best_t = f64::INFINITY;
-        for cand in tuner::quick_candidates(lir.output.h) {
-            // warm + best-of-2
-            let run = || {
-                std::hint::black_box(crate::exec::pattern::conv2d_auto(
-                    &input, layer, stride, relu, threads, cand,
-                ));
-            };
-            run();
-            let mut t = f64::INFINITY;
-            for _ in 0..2 {
-                let s = std::time::Instant::now();
-                run();
-                t = t.min(s.elapsed().as_secs_f64());
+        match lp {
+            LayerPlan::Fkw { layer, tile } => {
+                let input = crate::exec::Tensor::random(
+                    lir.input.c, lir.input.h, lir.input.w, &mut rng);
+                *tile = tune_tile(*tile, lir.output.h, &mut |cand| {
+                    std::hint::black_box(
+                        crate::exec::pattern::conv2d_auto(
+                            &input, layer, stride, relu, threads, cand,
+                        ),
+                    );
+                });
             }
-            if t < best_t {
-                best_t = t;
-                best = cand;
+            LayerPlan::QuantFkw { layer, tile } => {
+                let input = crate::exec::Tensor::random(
+                    lir.input.c, lir.input.h, lir.input.w, &mut rng);
+                *tile = tune_tile(*tile, lir.output.h, &mut |cand| {
+                    std::hint::black_box(
+                        crate::exec::pattern::conv2d_quant_auto(
+                            &input, layer, stride, relu, threads, cand,
+                        ),
+                    );
+                });
             }
+            _ => continue,
         }
-        *tile = best;
     }
+}
+
+/// One layer's sweep: warm + best-of-2 per candidate, keep the fastest.
+fn tune_tile(current: TileConfig, h_out: usize,
+             run: &mut dyn FnMut(TileConfig)) -> TileConfig {
+    let mut best = current;
+    let mut best_t = f64::INFINITY;
+    for cand in tuner::quick_candidates(h_out) {
+        run(cand); // warm
+        let mut t = f64::INFINITY;
+        for _ in 0..2 {
+            let s = std::time::Instant::now();
+            run(cand);
+            t = t.min(s.elapsed().as_secs_f64());
+        }
+        if t < best_t {
+            best_t = t;
+            best = cand;
+        }
+    }
+    best
 }
 
 impl ExecPlan {
@@ -247,6 +302,10 @@ impl ExecPlan {
                     f * layer.nnz() as f64
                         / (9 * layer.cin * layer.cout) as f64
                 }
+                LayerPlan::QuantFkw { layer, .. } => {
+                    f * layer.nnz() as f64
+                        / (9 * layer.cin * layer.cout) as f64
+                }
                 LayerPlan::Csr(c) => {
                     f * c.nnz() as f64 / (9 * c.cin * c.cout) as f64
                 }
@@ -268,6 +327,8 @@ impl ExecPlan {
                 LayerPlan::Dense(d) => d.size_bytes(),
                 LayerPlan::Csr(c) => c.size_bytes(),
                 LayerPlan::Fkw { layer, .. } => layer.size_bytes(),
+                LayerPlan::QuantDense(q) => q.size_bytes(),
+                LayerPlan::QuantFkw { layer, .. } => layer.size_bytes(),
                 LayerPlan::Depthwise { weights, bias } => {
                     (weights.len() + bias.len()) * 4
                 }
@@ -301,8 +362,9 @@ mod tests {
             Scheme::DenseNaive,
             Scheme::DenseIm2col,
             Scheme::DenseWinograd,
-            Scheme::SparseCsr {},
+            Scheme::SparseCsr,
             Scheme::CocoGen,
+            Scheme::CocoGenQuant,
         ] {
             let plan = build_plan(&ir, scheme, PruneConfig::default(), 1);
             assert_eq!(plan.layers.len(), ir.layers.len());
@@ -319,6 +381,30 @@ mod tests {
         assert!(coco.flop_keep_ratio() < 0.5);
         assert!(dense.flop_keep_ratio() == 1.0);
         assert!(coco.weight_bytes() < dense.weight_bytes());
+    }
+
+    #[test]
+    fn cocogen_quant_shrinks_bytes_further() {
+        let ir = tiny_ir();
+        let dense = build_plan(&ir, Scheme::DenseNaive,
+                               PruneConfig::default(), 1);
+        let coco = build_plan(&ir, Scheme::CocoGen,
+                              PruneConfig::default(), 1);
+        let quant = build_plan(&ir, Scheme::CocoGenQuant,
+                               PruneConfig::default(), 1);
+        // int8 on top of pruning strictly shrinks the plan, and the
+        // FLOP reduction of pruning is preserved (weight-only quant
+        // does not change the op count).
+        assert!(quant.weight_bytes() < coco.weight_bytes());
+        assert!(quant.weight_bytes() < dense.weight_bytes());
+        assert!((quant.flop_keep_ratio() - coco.flop_keep_ratio()).abs()
+            < 1e-12);
+        // every 3x3 conv became QuantFkw, remaining convs QuantDense
+        for (l, p) in quant.ir.layers.iter().zip(&quant.layers) {
+            if l.is_conv3x3() {
+                assert!(matches!(p, LayerPlan::QuantFkw { .. }));
+            }
+        }
     }
 
     #[test]

@@ -2,20 +2,88 @@
 //! failovers. The coordinator keeps one global [`Metrics`] plus one per
 //! backend, so a [`ServeReport`] can attribute latency and load to the
 //! backend that actually served each request.
+//!
+//! Memory is bounded under sustained traffic: latencies go into a
+//! fixed-capacity uniform reservoir (Vitter's Algorithm R) instead of an
+//! ever-growing `Vec`, and queue-wait / batch-size means are running
+//! sums — a coordinator serving millions of requests holds a few KB of
+//! metric state, and `summary()` sorts one bounded sample (once, for
+//! every percentile) rather than re-sorting the full request history.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::util::rng::Rng;
 use crate::util::stats;
 
-#[derive(Default)]
+/// Latency sample capacity. 4096 points give sub-millisecond-stable
+/// p50/p99 estimates while capping summary() work and resident memory.
+const LATENCY_RESERVOIR: usize = 4096;
+
+/// Fixed-capacity uniform sample over an unbounded stream (Algorithm R):
+/// after `seen` pushes every value has had probability cap/seen of being
+/// in the sample. Deterministic via the library RNG.
+struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            cap: cap.max(1),
+            seen: 0,
+            samples: Vec::new(),
+            rng: Rng::seed_from(seed),
+        }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            // Replace a random slot with probability cap/seen.
+            let j = (self.rng.f64() * self.seen as f64) as u64;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    /// Percentiles (p in [0,100]) from ONE sort of the bounded sample.
+    fn percentiles<const N: usize>(&self, ps: [f64; N]) -> [f64; N] {
+        if self.samples.is_empty() {
+            return [0.0; N];
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.map(|p| stats::percentile_sorted(&v, p))
+    }
+}
+
 struct Inner {
-    latencies_s: Vec<f64>,
-    queue_waits_s: Vec<f64>,
-    batch_sizes: Vec<f64>,
+    latencies_s: Reservoir,
+    queue_wait_sum_s: f64,
+    batch_size_sum: f64,
     completed: u64,
     rejected: u64,
     failovers: u64,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            latencies_s: Reservoir::new(LATENCY_RESERVOIR, 0x4C41_54),
+            queue_wait_sum_s: 0.0,
+            batch_size_sum: 0.0,
+            completed: 0,
+            rejected: 0,
+            failovers: 0,
+        }
+    }
 }
 
 /// Thread-safe metrics sink.
@@ -59,8 +127,8 @@ impl Metrics {
                   batch_size: usize) {
         let mut g = self.inner.lock().unwrap();
         g.latencies_s.push(total.as_secs_f64());
-        g.queue_waits_s.push(queue_wait.as_secs_f64());
-        g.batch_sizes.push(batch_size as f64);
+        g.queue_wait_sum_s += queue_wait.as_secs_f64();
+        g.batch_size_sum += batch_size as f64;
         g.completed += 1;
     }
 
@@ -75,14 +143,24 @@ impl Metrics {
 
     pub fn summary(&self) -> Summary {
         let g = self.inner.lock().unwrap();
+        let [p50, p99] = g.latencies_s.percentiles([50.0, 99.0]);
+        let denom = g.completed.max(1) as f64;
         Summary {
             completed: g.completed,
             rejected: g.rejected,
             failovers: g.failovers,
-            p50_ms: stats::percentile(&g.latencies_s, 50.0) * 1e3,
-            p99_ms: stats::percentile(&g.latencies_s, 99.0) * 1e3,
-            mean_queue_ms: stats::mean(&g.queue_waits_s) * 1e3,
-            mean_batch: stats::mean(&g.batch_sizes),
+            p50_ms: p50 * 1e3,
+            p99_ms: p99 * 1e3,
+            mean_queue_ms: if g.completed == 0 {
+                0.0
+            } else {
+                g.queue_wait_sum_s / denom * 1e3
+            },
+            mean_batch: if g.completed == 0 {
+                0.0
+            } else {
+                g.batch_size_sum / denom
+            },
         }
     }
 }
@@ -121,5 +199,46 @@ mod tests {
         assert_eq!(s.failovers, 2);
         assert_eq!(s.completed, 1);
         assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn memory_stays_bounded_under_sustained_traffic() {
+        let m = Metrics::new();
+        let n = 200_000u64;
+        for i in 0..n {
+            // latencies uniform in [0, 100) ms
+            m.record(
+                Duration::from_micros((i % 100) * 1000),
+                Duration::from_micros(500),
+                8,
+            );
+        }
+        {
+            let g = m.inner.lock().unwrap();
+            assert_eq!(g.latencies_s.seen, n);
+            assert!(g.latencies_s.samples.len() <= LATENCY_RESERVOIR,
+                    "reservoir grew past its cap: {}",
+                    g.latencies_s.samples.len());
+        }
+        let s = m.summary();
+        assert_eq!(s.completed, n);
+        // means are exact (running sums over the full stream)
+        assert!((s.mean_queue_ms - 0.5).abs() < 1e-6);
+        assert_eq!(s.mean_batch, 8.0);
+        // sampled percentiles track the true uniform distribution
+        assert!((s.p50_ms - 50.0).abs() < 5.0, "p50 {}", s.p50_ms);
+        assert!(s.p99_ms > 90.0, "p99 {}", s.p99_ms);
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = Reservoir::new(16, 1);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples.len(), 10);
+        let [p0, p100] = r.percentiles([0.0, 100.0]);
+        assert_eq!(p0, 0.0);
+        assert_eq!(p100, 9.0);
     }
 }

@@ -4,6 +4,8 @@
 use crate::compress::DenseLayer;
 use crate::exec::gemm::gemm;
 use crate::exec::tensor::{same_pad, Tensor};
+use crate::quant::QuantDense;
+use crate::util::threadpool;
 
 /// Scratch buffer reused across layers to avoid re-allocating the im2col
 /// matrix per call (part of the fair-baseline treatment).
@@ -12,23 +14,24 @@ pub struct Im2colScratch {
     buf: Vec<f32>,
 }
 
-/// Dense conv via im2col + GEMM, SAME padding, optional fused ReLU.
-pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
-              threads: usize, scratch: &mut Im2colScratch) -> Tensor {
-    let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
-    let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
+/// Fill `scratch` with the [K][HW] patch matrix for a (kh, kw, cin)
+/// kernel over `input`; returns the output geometry. Shared by the f32
+/// and the weight-only-int8 GEMM paths.
+fn im2col_patches(input: &Tensor, kh: usize, kw: usize, cin: usize,
+                  stride: usize, scratch: &mut Im2colScratch)
+                  -> (usize, usize) {
+    let (h_out, pad_h) = same_pad(input.h, kh, stride);
+    let (w_out, pad_w) = same_pad(input.w, kw, stride);
     let hw = h_out * w_out;
-    let kdim = layer.cin * layer.kh * layer.kw;
-
-    // Build the [K][HW] patch matrix.
+    let kdim = cin * kh * kw;
     scratch.buf.clear();
     scratch.buf.resize(kdim * hw, 0.0);
     let cols = &mut scratch.buf;
-    for ci in 0..layer.cin {
+    for ci in 0..cin {
         let plane = input.plane(ci);
-        for ky in 0..layer.kh {
-            for kx in 0..layer.kw {
-                let krow = (ci * layer.kh + ky) * layer.kw + kx;
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let krow = (ci * kh + ky) * kw + kx;
                 let dst = &mut cols[krow * hw..(krow + 1) * hw];
                 for y in 0..h_out {
                     let iy = (y * stride + ky) as isize - pad_h as isize;
@@ -63,6 +66,17 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
             }
         }
     }
+    (h_out, w_out)
+}
+
+/// Dense conv via im2col + GEMM, SAME padding, optional fused ReLU.
+pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
+              threads: usize, scratch: &mut Im2colScratch) -> Tensor {
+    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
+                                        layer.cin, stride, scratch);
+    let hw = h_out * w_out;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    let cols = &scratch.buf;
 
     // C[cout][HW] = W[cout][K] x cols[K][HW]
     let mut out = Tensor::zeros(layer.cout, h_out, w_out);
@@ -77,6 +91,43 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
             *v = v.max(0.0);
         }
     }
+    out
+}
+
+/// Weight-only int8 conv via im2col: the f32 patch matrix is shared with
+/// the dense path, but each filter row stays i8 — every weight is loaded
+/// as an integer, widened in-register, and streamed through an AXPY over
+/// the patch rows; the per-channel scale and bias are fused in one final
+/// pass per plane. No f32 weight materialization, no allocation beyond
+/// the (reused) scratch and the output tensor.
+pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
+                    relu: bool, threads: usize,
+                    scratch: &mut Im2colScratch) -> Tensor {
+    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
+                                        layer.cin, stride, scratch);
+    let hw = h_out * w_out;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    let cols: &[f32] = &scratch.buf;
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+        let wrow = &layer.weights[co * kdim..(co + 1) * kdim];
+        for (k, &qw) in wrow.iter().enumerate() {
+            if qw == 0 {
+                continue;
+            }
+            let w = qw as f32;
+            let src = &cols[k * hw..(k + 1) * hw];
+            for (o, i) in plane.iter_mut().zip(src.iter()) {
+                *o += w * *i;
+            }
+        }
+        let scale = layer.scales[co];
+        let bias = layer.bias[co];
+        for v in plane.iter_mut() {
+            let x = scale * *v + bias;
+            *v = if relu { x.max(0.0) } else { x };
+        }
+    });
     out
 }
 
@@ -144,5 +195,41 @@ mod tests {
         let _ = conv2d(&input, &small, 1, false, 1, &mut scratch);
         let again = conv2d(&input, &big, 1, false, 1, &mut scratch);
         assert!(first.max_abs_diff(&again) < 1e-6);
+    }
+
+    #[test]
+    fn quant_matches_naive_quant_across_shapes() {
+        // Both engines compute s*sum(q*x)+b; only f32 summation order
+        // differs, so the agreement tolerance is tight.
+        prop::check("im2col-quant-vs-naive-quant", 20, |g| {
+            let cin = g.usize(1, 6);
+            let cout = g.usize(1, 8);
+            let h = g.usize(3, 12);
+            let w = g.usize(3, 12);
+            let k = *g.pick(&[1usize, 3]);
+            let stride = *g.pick(&[1usize, 2]);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let layer = DenseLayer {
+                cout,
+                cin,
+                kh: k,
+                kw: k,
+                weights: (0..cout * cin * k * k)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let q = crate::quant::QuantDense::quantize(&layer);
+            let a = naive::conv2d_quant(&input, &q, stride, relu, 1);
+            let mut scratch = Im2colScratch::default();
+            let b = conv2d_quant(&input, &q, stride, relu, 2, &mut scratch);
+            let scale = a.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+            if a.max_abs_diff(&b) > 1e-3 * scale.max(1.0) {
+                return Err(format!("diff {}", a.max_abs_diff(&b)));
+            }
+            Ok(())
+        });
     }
 }

@@ -11,7 +11,9 @@ pub mod pattern;
 pub mod tensor;
 pub mod winograd;
 
-use std::sync::{Arc, Mutex, TryLockError};
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::codegen::{ExecPlan, LayerPlan, Scheme};
 use crate::ir::LayerKind;
@@ -127,6 +129,23 @@ impl<'a> ModelExecutor<'a> {
                 ) => pattern::conv2d_auto(&cur, f, *stride, *relu,
                                           self.threads, *tile),
                 (
+                    LayerKind::Conv { stride, relu, .. },
+                    LayerPlan::QuantDense(q),
+                ) => {
+                    // Weight-only int8 dense conv (the layers the pattern
+                    // pass leaves dense under CocoGenQuant, e.g. 1x1):
+                    // always the im2col lowering with i8 weight rows.
+                    im2col::conv2d_quant(
+                        &cur, q, *stride, *relu, self.threads,
+                        &mut self.scratch,
+                    )
+                }
+                (
+                    LayerKind::Conv { stride, relu, .. },
+                    LayerPlan::QuantFkw { layer: q, tile },
+                ) => pattern::conv2d_quant_auto(&cur, q, *stride, *relu,
+                                                self.threads, *tile),
+                (
                     LayerKind::DwConv { stride, relu },
                     LayerPlan::Depthwise { weights, bias },
                 ) => ops::depthwise3x3(&cur, weights, bias, *stride, *relu),
@@ -164,8 +183,49 @@ impl<'a> ModelExecutor<'a> {
 /// parallelism comes from running pool slots concurrently, which keeps
 /// per-image numerics bit-identical to a sequential
 /// `ModelExecutor::run` — the property the serving tests assert.
+///
+/// Free slots live in a Condvar-blocked index queue: a claimer with no
+/// free slot *parks* until one is released instead of burning a core in
+/// a yield loop — pools shared across concurrent `run_batch` callers
+/// (several serving coordinators, tests) routinely oversubscribe.
 pub struct ExecutorPool {
     slots: Vec<Mutex<ModelExecutor<'static>>>,
+    /// Indices of currently-free slots.
+    free: Mutex<Vec<usize>>,
+    available: Condvar,
+    /// Diagnostic: times a claimer had to park on the condvar (each
+    /// increment is one blocking wait, not a spin iteration).
+    waits: AtomicUsize,
+}
+
+/// An exclusively-claimed pool slot; releases its index (and wakes one
+/// parked claimer) on drop.
+struct PoolSlot<'a> {
+    exec: Option<MutexGuard<'a, ModelExecutor<'static>>>,
+    index: usize,
+    pool: &'a ExecutorPool,
+}
+
+impl Deref for PoolSlot<'_> {
+    type Target = ModelExecutor<'static>;
+    fn deref(&self) -> &Self::Target {
+        self.exec.as_ref().unwrap()
+    }
+}
+
+impl DerefMut for PoolSlot<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.exec.as_mut().unwrap()
+    }
+}
+
+impl Drop for PoolSlot<'_> {
+    fn drop(&mut self) {
+        // Unlock the slot before its index becomes claimable again.
+        self.exec.take();
+        self.pool.free.lock().unwrap().push(self.index);
+        self.pool.available.notify_one();
+    }
 }
 
 impl ExecutorPool {
@@ -178,6 +238,9 @@ impl ExecutorPool {
             slots: (0..workers)
                 .map(|_| Mutex::new(ModelExecutor::shared(plan.clone(), 1)))
                 .collect(),
+            free: Mutex::new((0..workers).collect()),
+            available: Condvar::new(),
+            waits: AtomicUsize::new(0),
         }
     }
 
@@ -186,20 +249,39 @@ impl ExecutorPool {
         self.slots.len()
     }
 
-    /// Claim a free executor slot, spinning briefly if all are busy.
-    /// With concurrency capped at `workers()` by `parallel_map`, a free
-    /// slot always exists for a claiming worker.
-    fn claim(&self) -> std::sync::MutexGuard<'_, ModelExecutor<'static>> {
-        loop {
-            let free = self.slots.iter().find_map(|s| match s.try_lock() {
-                Ok(g) => Some(g),
-                Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
-                Err(TryLockError::WouldBlock) => None,
-            });
-            match free {
-                Some(g) => return g,
-                None => std::thread::yield_now(),
+    /// How many times a claimer has blocked waiting for a slot. Bounded
+    /// by the number of oversubscribed claims (plus spurious wakeups) —
+    /// the regression guard against reintroducing a spin loop, whose
+    /// equivalent count grows with *wait time*, not claim count.
+    pub fn wait_count(&self) -> usize {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    /// Claim a free executor slot, parking on the condvar while all are
+    /// busy. Within one `run_batch` call concurrency is capped at
+    /// `workers()`, so waiting only happens when multiple callers share
+    /// the pool.
+    fn claim(&self) -> PoolSlot<'_> {
+        let mut free = self.free.lock().unwrap();
+        let index = loop {
+            if let Some(i) = free.pop() {
+                break i;
             }
+            self.waits.fetch_add(1, Ordering::Relaxed);
+            free = self.available.wait(free).unwrap();
+        };
+        drop(free);
+        // The index is exclusively ours, so the slot mutex is free (a
+        // dropping PoolSlot unlocks before returning its index); lock()
+        // only recovers a poisoned guard after a panicked run.
+        let exec = match self.slots[index].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        PoolSlot {
+            exec: Some(exec),
+            index,
+            pool: self,
         }
     }
 
@@ -281,7 +363,7 @@ mod tests {
     #[test]
     fn csr_scheme_runs() {
         let ir = tiny_ir();
-        let p = build_plan(&ir, Scheme::SparseCsr {},
+        let p = build_plan(&ir, Scheme::SparseCsr,
                            PruneConfig::default(), 42);
         let mut rng = Rng::seed_from(2);
         let x = Tensor::random(3, 12, 12, &mut rng);
@@ -346,5 +428,85 @@ mod tests {
         let out = ModelExecutor::new(&p, 4).run(&x);
         assert_eq!(out.c, 10);
         assert!(out.iter_finite());
+    }
+
+    #[test]
+    fn cocogen_quant_scheme_runs_and_tracks_fp32() {
+        let ir = tiny_ir();
+        let fp32 = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42);
+        let quant = build_plan(&ir, Scheme::CocoGenQuant,
+                               PruneConfig::default(), 42);
+        let mut rng = Rng::seed_from(6);
+        let x = Tensor::random(3, 12, 12, &mut rng);
+        let a = ModelExecutor::new(&fp32, 2).run(&x);
+        let b = ModelExecutor::new(&quant, 2).run(&x);
+        assert_eq!(b.c, 5);
+        assert!(b.iter_finite());
+        // weight-only int8: output stays close to the fp32 plan built
+        // from the identical seed (same masks, same reorder).
+        let scale = a.data.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert!(
+            a.max_abs_diff(&b) < 0.05 * scale.max(1.0),
+            "quant diverged: {} vs scale {}",
+            a.max_abs_diff(&b),
+            scale
+        );
+    }
+
+    #[test]
+    fn quant_pool_matches_sequential_bitwise() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGenQuant,
+                              PruneConfig::default(), 42)
+            .into_shared();
+        let pool = ExecutorPool::new(plan.clone(), 4);
+        let mut rng = Rng::seed_from(10);
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let outs = pool.run_batch(&inputs);
+        let mut seq = ModelExecutor::new(&plan, 1);
+        for (x, got) in inputs.iter().zip(&outs) {
+            let want = seq.run(x);
+            assert_eq!(want.data, got.data,
+                       "quant pool diverged from sequential");
+        }
+    }
+
+    #[test]
+    fn oversubscribed_claims_block_instead_of_spinning() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42)
+            .into_shared();
+        // 2 slots, 8 concurrent run_batch callers: up to 16 live claims.
+        let pool = ExecutorPool::new(plan.clone(), 2);
+        let mut rng = Rng::seed_from(5);
+        let inputs: Vec<Tensor> = (0..6)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let mut seq = ModelExecutor::new(&plan, 1);
+        let want: Vec<Tensor> = inputs.iter().map(|x| seq.run(x)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let outs = pool.run_batch(&inputs);
+                    for (got, w) in outs.iter().zip(&want) {
+                        assert_eq!(got.data, w.data);
+                    }
+                });
+            }
+        });
+        // Every block is one condvar park. A yield-spin would register
+        // (wait-time x core-speed) iterations here — orders of magnitude
+        // beyond the claim count.
+        let claims = 8 * inputs.len();
+        assert!(
+            pool.wait_count() <= claims * 100,
+            "claim path spun: {} waits for {} claims",
+            pool.wait_count(),
+            claims
+        );
     }
 }

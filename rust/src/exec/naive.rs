@@ -5,6 +5,7 @@
 
 use crate::compress::DenseLayer;
 use crate::exec::tensor::{same_pad, Tensor};
+use crate::quant::QuantDense;
 use crate::util::threadpool;
 
 /// Dense conv2d, SAME padding, optional fused ReLU.
@@ -36,6 +37,53 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize,
                     }
                 }
                 plane[y * w_out + x] = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    });
+    out
+}
+
+/// Weight-only int8 dense conv, SAME padding, optional fused ReLU.
+///
+/// The i8 weights stream through the same loop nest as [`conv2d`] and are
+/// dequantized in-register: the integer taps accumulate in f32 and the
+/// per-channel scale is fused once per output pixel — no f32 weight
+/// materialization, no allocation beyond the output tensor.
+pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
+                    relu: bool, threads: usize) -> Tensor {
+    let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
+    let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let hw = h_out * w_out;
+    let per = layer.cin * layer.kh * layer.kw;
+    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+        let wrow = &layer.weights[co * per..(co + 1) * per];
+        let scale = layer.scales[co];
+        let bias = layer.bias[co];
+        for y in 0..h_out {
+            for x in 0..w_out {
+                let mut acc = 0f32;
+                for ci in 0..layer.cin {
+                    for ky in 0..layer.kh {
+                        let iy = (y * stride + ky) as isize - pad_h as isize;
+                        if iy < 0 || iy >= input.h as isize {
+                            continue;
+                        }
+                        for kx in 0..layer.kw {
+                            let ix =
+                                (x * stride + kx) as isize - pad_w as isize;
+                            if ix < 0 || ix >= input.w as isize {
+                                continue;
+                            }
+                            let w = wrow
+                                [(ci * layer.kh + ky) * layer.kw + kx];
+                            acc += w as f32
+                                * input.at(ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+                let v = scale * acc + bias;
+                plane[y * w_out + x] = if relu { v.max(0.0) } else { v };
             }
         }
     });
@@ -137,5 +185,38 @@ mod tests {
         let a = conv2d(&input, &layer, 1, false, 1);
         let b = conv2d(&input, &layer, 1, false, 8);
         assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn quant_matches_dequantized_oracle() {
+        // The scale-fused path computes s*sum(q*x)+b; the oracle runs the
+        // dequantized f32 weights sum((q*s)*x)+b — same value up to f32
+        // association, so only a tiny tolerance is allowed.
+        let mut rng = Rng::seed_from(17);
+        let input = Tensor::random(5, 9, 9, &mut rng);
+        let layer = DenseLayer {
+            cout: 7,
+            cin: 5,
+            kh: 3,
+            kw: 3,
+            weights: (0..7 * 5 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: (0..7).map(|_| rng.normal_f32()).collect(),
+        };
+        let q = QuantDense::quantize(&layer);
+        for stride in [1usize, 2] {
+            for relu in [false, true] {
+                let want = conv2d(&input, &q.dequantize(), stride, relu, 1);
+                let got = conv2d_quant(&input, &q, stride, relu, 3);
+                let scale = want
+                    .data
+                    .iter()
+                    .fold(0f32, |m, v| m.max(v.abs()));
+                assert!(
+                    got.max_abs_diff(&want) < 1e-4 * scale.max(1.0),
+                    "stride {stride} relu {relu}: diff {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
     }
 }

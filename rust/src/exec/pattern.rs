@@ -12,11 +12,90 @@
 //! streamed through a contiguous AXPY; with the row tile sized by the
 //! tuner the touched input rows stay in L1 across the four taps — the
 //! register/L1-level load redundancy elimination of the paper.
+//!
+//! Every kernel here is generic over the weight store via [`FkwView`]:
+//! f32 weights ([`FkwLayer`]) or weight-only int8 ([`QuantFkw`]), where
+//! the 4 tap weights of a kernel are dequantized in-register on load
+//! (one scale multiply per tap) — no f32 weight materialization, no
+//! per-call allocation. `conv2d_quant*` are the int8 entry points.
 
 use crate::codegen::TileConfig;
-use crate::compress::FkwLayer;
+use crate::compress::{FkwKernel, FkwLayer};
 use crate::exec::tensor::{same_pad, Tensor};
 use crate::patterns::PATTERN_SET_4;
+use crate::quant::QuantFkw;
+
+/// Borrowed structural view of a pattern-compact layer, generic over the
+/// weight store (f32 or dequant-on-load int8). The executors run one
+/// code path for both; the only difference is how a kernel's 4 tap
+/// weights materialize into registers.
+#[derive(Clone, Copy)]
+pub struct FkwView<'a> {
+    cout: usize,
+    cin: usize,
+    filter_order: &'a [u32],
+    offsets: &'a [u32],
+    kernels: &'a [FkwKernel],
+    bias: &'a [f32],
+    weights: FkwWeights<'a>,
+}
+
+#[derive(Clone, Copy)]
+enum FkwWeights<'a> {
+    F32(&'a [f32]),
+    /// Int8 weights + per-original-output-channel scales.
+    I8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl<'a> FkwView<'a> {
+    pub fn from_f32(l: &'a FkwLayer) -> FkwView<'a> {
+        FkwView {
+            cout: l.cout,
+            cin: l.cin,
+            filter_order: &l.filter_order,
+            offsets: &l.offsets,
+            kernels: &l.kernels,
+            bias: &l.bias,
+            weights: FkwWeights::F32(&l.weights),
+        }
+    }
+
+    pub fn from_quant(l: &'a QuantFkw) -> FkwView<'a> {
+        FkwView {
+            cout: l.cout,
+            cin: l.cin,
+            filter_order: &l.filter_order,
+            offsets: &l.offsets,
+            kernels: &l.kernels,
+            bias: &l.bias,
+            weights: FkwWeights::I8 {
+                q: &l.weights_q,
+                scales: &l.scales,
+            },
+        }
+    }
+
+    /// The 4 tap weights of kernel entry `e` (whose filter's original
+    /// output channel is `co`), dequantized in-register for the int8
+    /// store — a stack array, never a heap allocation.
+    #[inline]
+    fn wts(&self, e: usize, co: usize) -> [f32; 4] {
+        match self.weights {
+            FkwWeights::F32(w) => {
+                [w[e * 4], w[e * 4 + 1], w[e * 4 + 2], w[e * 4 + 3]]
+            }
+            FkwWeights::I8 { q, scales } => {
+                let s = scales[co];
+                [
+                    q[e * 4] as f32 * s,
+                    q[e * 4 + 1] as f32 * s,
+                    q[e * 4 + 2] as f32 * s,
+                    q[e * 4 + 3] as f32 * s,
+                ]
+            }
+        }
+    }
+}
 
 /// Pattern-sparse conv2d from an FKW layer (3x3 kernels), SAME padding.
 ///
@@ -26,6 +105,20 @@ use crate::patterns::PATTERN_SET_4;
 /// downstream layers see unpermuted channels.
 pub fn conv2d(input: &Tensor, layer: &FkwLayer, stride: usize, relu: bool,
               threads: usize, tile: TileConfig) -> Tensor {
+    conv2d_view(input, &FkwView::from_f32(layer), stride, relu, threads,
+                tile)
+}
+
+/// [`conv2d`] over weight-only int8 weights (dequant-on-load).
+pub fn conv2d_quant(input: &Tensor, layer: &QuantFkw, stride: usize,
+                    relu: bool, threads: usize, tile: TileConfig)
+                    -> Tensor {
+    conv2d_view(input, &FkwView::from_quant(layer), stride, relu, threads,
+                tile)
+}
+
+fn conv2d_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
+               relu: bool, threads: usize, tile: TileConfig) -> Tensor {
     let (h_out, pad_h) = same_pad(input.h, 3, stride);
     let (w_out, pad_w) = same_pad(input.w, 3, stride);
     let mut out = Tensor::zeros(layer.cout, h_out, w_out);
@@ -71,7 +164,7 @@ pub fn conv2d(input: &Tensor, layer: &FkwLayer, stride: usize, relu: bool,
 /// Compute one filter's output plane.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwLayer,
+fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwView<'_>,
                phys: usize, co: usize, stride: usize, relu: bool,
                h_tile: usize, h_out: usize, w_out: usize, pad_h: usize,
                pad_w: usize) {
@@ -87,7 +180,7 @@ fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwLayer,
             let ci = kern.ci as usize;
             let in_plane = input.plane(ci);
             let taps = &PATTERN_SET_4[kern.pattern as usize];
-            let wts = &layer.weights[e * 4..e * 4 + 4];
+            let wts = layer.wts(e, co);
             // Fused 4-tap fast path (stride 1, all rows interior): one
             // pass over the output row with four input-row streams —
             // 4x less out-row load/store traffic than tap-by-tap
@@ -190,6 +283,19 @@ fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwLayer,
 /// lowering" counterpart of the paper's GPU code generation.
 pub fn conv2d_gemm(input: &Tensor, layer: &FkwLayer, stride: usize,
                    relu: bool, threads: usize) -> Tensor {
+    conv2d_gemm_view(input, &FkwView::from_f32(layer), stride, relu,
+                     threads)
+}
+
+/// [`conv2d_gemm`] over weight-only int8 weights (dequant-on-load).
+pub fn conv2d_gemm_quant(input: &Tensor, layer: &QuantFkw, stride: usize,
+                         relu: bool, threads: usize) -> Tensor {
+    conv2d_gemm_view(input, &FkwView::from_quant(layer), stride, relu,
+                     threads)
+}
+
+fn conv2d_gemm_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
+                    relu: bool, threads: usize) -> Tensor {
     let (h_out, pad_h) = same_pad(input.h, 3, stride);
     let (w_out, pad_w) = same_pad(input.w, 3, stride);
     let hw = h_out * w_out;
@@ -198,7 +304,7 @@ pub fn conv2d_gemm(input: &Tensor, layer: &FkwLayer, stride: usize,
     // if used; index map [(ci * 9) + tap_id] -> row in U (dense alloc,
     // rows built lazily by a used-bitmap).
     let mut used = vec![false; cin * 9];
-    for k in &layer.kernels {
+    for k in layer.kernels {
         let taps = &PATTERN_SET_4[k.pattern as usize];
         for &(dy, dx) in taps {
             used[k.ci as usize * 9 + dy * 3 + dx] = true;
@@ -282,7 +388,7 @@ pub fn conv2d_gemm(input: &Tensor, layer: &FkwLayer, stride: usize,
                 {
                     let kern = layer.kernels[e];
                     let taps = &PATTERN_SET_4[kern.pattern as usize];
-                    let wts = &layer.weights[e * 4..e * 4 + 4];
+                    let wts = layer.wts(e, co);
                     for (t, &(dy, dx)) in taps.iter().enumerate() {
                         let r = row_of
                             [kern.ci as usize * 9 + dy * 3 + dx]
@@ -315,6 +421,17 @@ pub fn conv2d_auto(input: &Tensor, layer: &FkwLayer, stride: usize,
         conv2d_gemm(input, layer, stride, relu, threads)
     } else {
         conv2d(input, layer, stride, relu, threads, tile)
+    }
+}
+
+/// [`conv2d_auto`] over weight-only int8 weights (dequant-on-load).
+pub fn conv2d_quant_auto(input: &Tensor, layer: &QuantFkw, stride: usize,
+                         relu: bool, threads: usize, tile: TileConfig)
+                         -> Tensor {
+    if tile.use_gemm {
+        conv2d_gemm_quant(input, layer, stride, relu, threads)
+    } else {
+        conv2d_quant(input, layer, stride, relu, threads, tile)
     }
 }
 
@@ -464,5 +581,86 @@ mod tests {
         let got = conv2d(&input, &fkw, 1, false, 2, TileConfig::default());
         let want = oracle(&input, &fkw, 1, false);
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn quant_paths_match_dequantized_layer_bitwise() {
+        // Dequant-on-load materializes the exact same f32 tap weights the
+        // dequantized layer stores, through the same loop structure, so
+        // AXPY and GEMM quant paths are bit-identical to running the
+        // dequantized f32 layer on the corresponding f32 path.
+        prop::check("pattern-quant-vs-dequantized", 20, |g| {
+            let cin = g.usize(1, 8);
+            let cout = g.usize(1, 10);
+            let h = g.usize(3, 14);
+            let w = g.usize(3, 14);
+            let stride = *g.pick(&[1usize, 2]);
+            let keep = g.f64(0.3, 1.0);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let input = Tensor::random(cin, h, w, &mut rng);
+            let dense = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let conn = crate::codegen::prune_conn_oihw(&dense, keep);
+            let mut fkw = FkwLayer::from_dense(&dense, &conn);
+            filter_kernel_reorder(&mut fkw);
+            let qf = QuantFkw::quantize(&fkw);
+            let deq = qf.dequantize();
+            let tile = TileConfig {
+                h_tile: g.usize(1, 8),
+                co_block: g.usize(1, 4),
+                use_gemm: false,
+            };
+            let a = conv2d_quant(&input, &qf, stride, relu,
+                                 g.usize(1, 4), tile);
+            let b = conv2d(&input, &deq, stride, relu, 1, tile);
+            if a.data != b.data {
+                return Err(format!("axpy diff {}", a.max_abs_diff(&b)));
+            }
+            let c = conv2d_gemm_quant(&input, &qf, stride, relu, 2);
+            let d = conv2d_gemm(&input, &deq, stride, relu, 1);
+            if c.data != d.data {
+                return Err(format!("gemm diff {}", c.max_abs_diff(&d)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_auto_dispatches_both_paths() {
+        let mut g = prop::Gen::replay(123);
+        let mut rng = g.rng().clone();
+        let input = Tensor::random(6, 12, 12, &mut rng);
+        let dense = DenseLayer {
+            cout: 8,
+            cin: 6,
+            kh: 3,
+            kw: 3,
+            weights: (0..8 * 6 * 9).map(|_| rng.normal_f32()).collect(),
+            bias: (0..8).map(|_| rng.normal_f32()).collect(),
+        };
+        let conn = ConnectivityMask::all_alive(6, 8);
+        let mut fkw = FkwLayer::from_dense(&dense, &conn);
+        filter_kernel_reorder(&mut fkw);
+        let qf = QuantFkw::quantize(&fkw);
+        let axpy = conv2d_quant_auto(&input, &qf, 1, true, 2, TileConfig {
+            h_tile: 4,
+            co_block: 2,
+            use_gemm: false,
+        });
+        let gemm = conv2d_quant_auto(&input, &qf, 1, true, 2, TileConfig {
+            h_tile: 1,
+            co_block: 1,
+            use_gemm: true,
+        });
+        assert!(axpy.max_abs_diff(&gemm) < 1e-4);
     }
 }

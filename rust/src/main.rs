@@ -3,11 +3,14 @@
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   info                      — artifacts + manifest summary
 //!   serve  [--model M] [--batch B] [--requests N] [--backend pjrt|native]
+//!          [--scheme cocogen|cocogen-quant|dense]
 //!                             — run the serving coordinator on synthetic
 //!                               traffic and print latency metrics;
 //!                               `--backend native` serves a zoo timing
 //!                               model on the executor pool (no PJRT or
-//!                               artifacts needed)
+//!                               artifacts needed); `--scheme
+//!                               cocogen-quant` serves the weight-only
+//!                               int8 plan
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -102,6 +105,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let (coord, elems) = match backend {
         "pjrt" => {
+            anyhow::ensure!(
+                flags.get("scheme").is_none(),
+                "--scheme applies to --backend native only (the PJRT \
+                 path serves the compiled AOT artifact as-is)"
+            );
             let model = flags.get("model").map(String::as_str)
                 .unwrap_or("resnet_mini");
             let rt = Runtime::new(&Runtime::default_dir())?;
@@ -120,14 +128,28 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
                 other => anyhow::bail!("unknown timing model {other}"),
             };
+            let scheme_flag = flags.get("scheme").map(String::as_str)
+                .unwrap_or("cocogen");
+            let (scheme, name) = match scheme_flag {
+                "cocogen" => (Scheme::CocoGen, "native-cocogen"),
+                "cocogen-quant" | "quant" | "int8" => {
+                    (Scheme::CocoGenQuant, "native-int8")
+                }
+                "dense" => (Scheme::DenseIm2col, "native-dense"),
+                other => anyhow::bail!(
+                    "unknown scheme {other} (cocogen|cocogen-quant|dense)"
+                ),
+            };
             let elems = ir.input.c * ir.input.h * ir.input.w;
-            let plan = build_plan(&ir, Scheme::CocoGen,
-                                  PruneConfig::default(), 7)
+            let plan = build_plan(&ir, scheme, PruneConfig::default(), 7)
                 .into_shared();
+            println!(
+                "serving {model} via {name}: {} KB resident weights",
+                plan.weight_bytes() / 1024
+            );
             let coord = Coordinator::start_with(
                 vec![Box::new(cocopie::coordinator::NativeBackend::new(
-                    "native-cocogen",
-                    plan,
+                    name, plan,
                 ))],
                 policy,
                 cocopie::coordinator::RouterPolicy::Failover,

@@ -4,15 +4,22 @@
 //! while Eyeriss/ESE use 12-bit fixed point) — this module supplies the
 //! quantization axis so the framework covers both halves of compression:
 //!
-//! * symmetric per-output-channel int8 quantization of conv/FC weights;
-//! * a quantized executor path (i8 weights, f32 activations, i32-free
-//!   dequant-on-load AXPY — the mobile-friendly "weight-only" scheme);
-//! * storage accounting (4x smaller than f32; composes with FKW).
+//! * symmetric per-output-channel int8 quantization of conv/FC weights
+//!   ([`QuantDense`]) and of pattern-compact FKW weights ([`QuantFkw`]:
+//!   pruning x quantization composed);
+//! * storage only — the structs here hold i8 weights and scales, never a
+//!   retained f32 copy, so the 4x weight shrink is real resident memory;
+//! * execution lives in `exec`: `exec::naive::conv2d_quant`,
+//!   `exec::im2col::conv2d_quant` and `exec::pattern::conv2d_quant[_auto]`
+//!   load i8 weights and dequantize in-register (scale-fused AXPY), with
+//!   no per-call f32 weight materialization and no allocation beyond the
+//!   output tensor. `codegen::Scheme::CocoGenQuant` builds plans on these
+//!   formats end-to-end.
+//!
+//! `dequantize()` on both structs reconstructs an f32 layer for error
+//! analysis and oracle tests only; it is never on the inference path.
 
-use crate::compress::{DenseLayer, FkwLayer};
-use crate::exec::tensor::Tensor;
-use crate::exec::{naive, pattern};
-use crate::codegen::TileConfig;
+use crate::compress::{DenseLayer, FkwKernel, FkwLayer};
 
 /// Per-output-channel symmetric int8 quantized weights.
 #[derive(Debug, Clone)]
@@ -59,7 +66,8 @@ impl QuantDense {
         }
     }
 
-    /// Dequantize back to f32 (for error analysis / fallback execution).
+    /// Dequantize back to f32 (for error analysis / oracle tests only —
+    /// the executors in `exec` consume the i8 weights directly).
     pub fn dequantize(&self) -> DenseLayer {
         let per = self.cin * self.kh * self.kw;
         DenseLayer {
@@ -106,15 +114,34 @@ impl QuantDense {
 
 /// int8 FKW: pattern-compact weights quantized per output channel —
 /// pruning x quantization composed (the full CoCoPIE compression stack).
+///
+/// Holds the FKW *structure* (filter order, offsets, kernel descriptors,
+/// f32 bias) plus i8 weights and per-channel scales; there is no retained
+/// f32 weight copy, so `size_bytes()` is the real resident footprint.
 #[derive(Debug, Clone)]
 pub struct QuantFkw {
-    pub layer: FkwLayer,
-    /// Quantized replacement for layer.weights.
+    pub cout: usize,
+    pub cin: usize,
+    /// Physical filter order (after filter-kernel reorder); maps physical
+    /// position -> original output-channel index.
+    pub filter_order: Vec<u32>,
+    /// Per physical filter: [offsets[f], offsets[f+1]) indexes
+    /// kernels/weights.
+    pub offsets: Vec<u32>,
+    /// Per surviving kernel: input channel + pattern id.
+    pub kernels: Vec<FkwKernel>,
+    /// 4 int8 weights per kernel (pattern tap order), same indexing as
+    /// `FkwLayer::weights`.
     pub weights_q: Vec<i8>,
+    /// Per *original* output-channel scale: w ~= w_q * scales[co].
     pub scales: Vec<f32>,
+    pub bias: Vec<f32>,
 }
 
 impl QuantFkw {
+    /// Quantize an FKW layer (per-channel absmax over its surviving
+    /// weights). The f32 weights are left behind; only the structure is
+    /// carried over.
     pub fn quantize(f: &FkwLayer) -> QuantFkw {
         let mut scales = vec![1f32; f.cout];
         for phys in 0..f.cout {
@@ -138,53 +165,61 @@ impl QuantFkw {
             }
         }
         QuantFkw {
-            layer: f.clone(),
+            cout: f.cout,
+            cin: f.cin,
+            filter_order: f.filter_order.clone(),
+            offsets: f.offsets.clone(),
+            kernels: f.kernels.clone(),
             weights_q,
             scales,
+            bias: f.bias.clone(),
         }
     }
 
-    /// Dequantized FKW layer (runs on the standard pattern executor).
+    /// Reconstruct the f32 FKW layer (error analysis / oracle tests; the
+    /// pattern executor runs the i8 weights directly).
     pub fn dequantize(&self) -> FkwLayer {
-        let mut out = self.layer.clone();
-        for phys in 0..out.cout {
-            let co = out.filter_order[phys] as usize;
-            let lo = out.offsets[phys] as usize * 4;
-            let hi = out.offsets[phys + 1] as usize * 4;
+        let mut weights = vec![0f32; self.weights_q.len()];
+        for phys in 0..self.cout {
+            let co = self.filter_order[phys] as usize;
+            let lo = self.offsets[phys] as usize * 4;
+            let hi = self.offsets[phys + 1] as usize * 4;
             for i in lo..hi {
-                out.weights[i] =
-                    self.weights_q[i] as f32 * self.scales[co];
+                weights[i] = self.weights_q[i] as f32 * self.scales[co];
             }
         }
-        out
+        FkwLayer {
+            cout: self.cout,
+            cin: self.cin,
+            filter_order: self.filter_order.clone(),
+            offsets: self.offsets.clone(),
+            kernels: self.kernels.clone(),
+            weights,
+            bias: self.bias.clone(),
+        }
+    }
+
+    /// Surviving weight count (4 per kernel).
+    pub fn nnz(&self) -> usize {
+        self.weights_q.len()
     }
 
     pub fn size_bytes(&self) -> usize {
-        self.layer.filter_order.len() * 4
-            + self.layer.offsets.len() * 4
-            + self.layer.kernels.len() * 3
+        self.filter_order.len() * 4
+            + self.offsets.len() * 4
+            + self.kernels.len() * 3 // u16 ci + u8 pattern
             + self.weights_q.len() // 1 byte each
             + self.scales.len() * 4
-            + self.layer.bias.len() * 4
+            + self.bias.len() * 4
     }
-}
-
-/// Run a quantized dense conv by dequant-on-load (weight-only int8).
-pub fn conv2d_quant(input: &Tensor, q: &QuantDense, stride: usize,
-                    relu: bool, threads: usize) -> Tensor {
-    naive::conv2d(input, &q.dequantize(), stride, relu, threads)
-}
-
-/// Run a quantized pattern conv.
-pub fn pattern_conv2d_quant(input: &Tensor, q: &QuantFkw, stride: usize,
-                            relu: bool, threads: usize, tile: TileConfig)
-                            -> Tensor {
-    pattern::conv2d(input, &q.dequantize(), stride, relu, threads, tile)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::TileConfig;
+    use crate::exec::tensor::Tensor;
+    use crate::exec::{naive, pattern};
     use crate::patterns::connectivity::ConnectivityMask;
     use crate::util::prop;
     use crate::util::rng::Rng;
@@ -232,7 +267,7 @@ mod tests {
         let q = QuantDense::quantize(&d);
         let x = Tensor::random(8, 10, 10, &mut rng);
         let a = naive::conv2d(&x, &d, 1, false, 1);
-        let b = conv2d_quant(&x, &q, 1, false, 1);
+        let b = naive::conv2d_quant(&x, &q, 1, false, 1);
         // error accumulates over cin*9 MACs; stays small relative to
         // activation magnitude
         let scale = a.data.iter().fold(0f32, |m, v| m.max(v.abs()));
@@ -246,15 +281,34 @@ mod tests {
         let conn = ConnectivityMask::all_alive(16, 16);
         let f = FkwLayer::from_dense(&d, &conn);
         let qf = QuantFkw::quantize(&f);
-        // int8 FKW smaller than f32 FKW
+        // int8 FKW smaller than f32 FKW...
         assert!(qf.size_bytes() < f.size_bytes());
-        // executes and matches the dequantized pattern conv
+        // ...and the weight store itself is the full 4x (1 byte vs 4).
+        assert_eq!(qf.weights_q.len(), f.weights.len());
+        // dequant-on-load executor is exactly the dequantized layer run
+        // through the same engine (identical f32 values, identical loop)
         let x = Tensor::random(16, 8, 8, &mut rng);
-        let a = pattern_conv2d_quant(&x, &qf, 1, true, 2,
-                                     TileConfig::default());
+        let a = pattern::conv2d_quant(&x, &qf, 1, true, 2,
+                                      TileConfig::default());
         let b = pattern::conv2d(&x, &qf.dequantize(), 1, true, 1,
                                 TileConfig::default());
-        assert!(a.max_abs_diff(&b) < 1e-5);
+        assert_eq!(a.data, b.data, "dequant-on-load diverged from oracle");
+    }
+
+    #[test]
+    fn fkw_quant_round_trip_is_stable() {
+        let d = random_dense(11, 8, 8);
+        let conn = crate::codegen::prune_conn_oihw(&d, 0.5);
+        let f = FkwLayer::from_dense(&d, &conn);
+        let qf = QuantFkw::quantize(&f);
+        // quantize(dequantize(q)) reproduces q exactly: values are on
+        // the grid already
+        let back = QuantFkw::quantize(&qf.dequantize());
+        assert_eq!(qf.weights_q, back.weights_q);
+        // structure survives untouched
+        assert_eq!(qf.filter_order, f.filter_order);
+        assert_eq!(qf.offsets, f.offsets);
+        assert_eq!(qf.kernels.len(), f.kernels.len());
     }
 
     #[test]

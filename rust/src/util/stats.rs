@@ -25,14 +25,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over an already-sorted slice — lets callers that need
+/// several percentiles (metrics summaries) sort once instead of once per
+/// quantile.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
         let frac = rank - lo as f64;
-        v[lo] * (1.0 - frac) + v[hi] * frac
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
     }
 }
 

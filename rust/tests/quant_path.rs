@@ -1,0 +1,112 @@
+//! End-to-end int8 plan path (Scheme::CocoGenQuant).
+//!
+//! Two properties over zoo models:
+//!  1. the quant executors are *exactly* dequant-on-load: a CocoGenQuant
+//!     plan and its dequantized f32 twin agree to float-association
+//!     noise (the pattern layers bitwise, the im2col layers up to
+//!     scale-fusion order);
+//!  2. quant outputs stay within the weight-quantization error bound of
+//!     the fp32 CocoGen plan built from the same seed (same masks, same
+//!     reorder — the int8 plan is the quantized image of the fp32 one);
+//! plus the storage claim: the int8 plan is strictly smaller than the
+//! fp32 pruned plan, which is smaller than dense.
+
+use cocopie::codegen::{
+    build_plan, ExecPlan, LayerPlan, PruneConfig, Scheme,
+};
+use cocopie::exec::{ModelExecutor, Tensor};
+use cocopie::ir::{zoo, ModelIR};
+use cocopie::util::rng::Rng;
+
+/// The f32 twin of a quant plan: every int8 layer dequantized, executed
+/// by the corresponding f32 engine (scheme CocoGen so dense layers take
+/// the same im2col lowering).
+fn dequantized_twin(quant: &ExecPlan) -> ExecPlan {
+    let layers = quant
+        .layers
+        .iter()
+        .map(|p| match p {
+            LayerPlan::QuantFkw { layer, tile } => LayerPlan::Fkw {
+                layer: layer.dequantize(),
+                tile: *tile,
+            },
+            LayerPlan::QuantDense(q) => LayerPlan::Dense(q.dequantize()),
+            other => other.clone(),
+        })
+        .collect();
+    ExecPlan {
+        ir: quant.ir.clone(),
+        layers,
+        scheme: Scheme::CocoGen,
+    }
+}
+
+fn check_model(ir: &ModelIR, seed: u64) {
+    let fp32 = build_plan(ir, Scheme::CocoGen, PruneConfig::default(),
+                          seed);
+    let quant = build_plan(ir, Scheme::CocoGenQuant,
+                           PruneConfig::default(), seed);
+    let twin = dequantized_twin(&quant);
+
+    // storage: int8 < fp32 pruned < dense f32
+    let dense = build_plan(ir, Scheme::DenseIm2col, PruneConfig::default(),
+                           seed);
+    assert!(quant.weight_bytes() < fp32.weight_bytes(),
+            "{}: int8 {} !< fp32 {}", ir.name, quant.weight_bytes(),
+            fp32.weight_bytes());
+    assert!(fp32.weight_bytes() < dense.weight_bytes());
+
+    let mut rng = Rng::seed_from(seed ^ 0x51);
+    let mut ex_q = ModelExecutor::new(&quant, 2);
+    let mut ex_t = ModelExecutor::new(&twin, 2);
+    let mut ex_f = ModelExecutor::new(&fp32, 2);
+    for trial in 0..3 {
+        let x = Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                               &mut rng);
+        let out_q = ex_q.run(&x);
+        let out_t = ex_t.run(&x);
+        let out_f = ex_f.run(&x);
+        assert!(out_q.iter_finite(), "{}: non-finite quant out", ir.name);
+
+        let scale = out_f
+            .data
+            .iter()
+            .fold(0f32, |m, v| m.max(v.abs()))
+            .max(1.0);
+        // (1) executor property: quant == dequantized twin up to f32
+        // association noise from the scale-fused im2col layers.
+        let d_twin = out_q.max_abs_diff(&out_t);
+        assert!(
+            d_twin < 1e-2 * scale,
+            "{} trial {trial}: quant vs dequantized twin diff {d_twin} \
+             (scale {scale})",
+            ir.name
+        );
+        // (2) quantization error bound: per-channel symmetric int8 puts
+        // each weight within 0.5/127 of its channel absmax; through the
+        // network the logits stay within a few percent of the fp32
+        // plan's output magnitude (generous cap: per-layer ~1% relative
+        // error compounding ~sqrt(depth) over the deepest zoo model).
+        let d_fp32 = out_q.max_abs_diff(&out_f);
+        assert!(
+            d_fp32 < 0.2 * scale,
+            "{} trial {trial}: quant vs fp32 diff {d_fp32} (scale {scale})",
+            ir.name
+        );
+    }
+}
+
+#[test]
+fn mobilenet_quant_plan_end_to_end() {
+    check_model(&zoo::mobilenet_v2(24, 10), 42);
+}
+
+#[test]
+fn vgg_quant_plan_end_to_end() {
+    check_model(&zoo::vgg16(32, 10), 7);
+}
+
+#[test]
+fn resnet_quant_plan_end_to_end() {
+    check_model(&zoo::resnet50(32, 10), 11);
+}

@@ -93,6 +93,74 @@ fn native_coordinator_matches_direct_executor() {
 }
 
 #[test]
+fn quant_coordinator_matches_direct_quant_executor() {
+    // The int8 plan behind the same Backend seam: predictions must be
+    // bit-identical to a direct ModelExecutor run on the quant plan
+    // (single-threaded pool executors, dequant-on-load determinism).
+    let plan = tiny_plan(Scheme::CocoGenQuant);
+    let coord = Coordinator::start_with(
+        vec![Box::new(NativeBackend::new("native-int8", plan.clone()))],
+        BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        },
+        RouterPolicy::Failover,
+    )
+    .expect("start");
+    let imgs = images(24, 9);
+    let pending: Vec<_> = imgs
+        .iter()
+        .map(|img| coord.submit(img.clone()).unwrap())
+        .collect();
+    for (img, p) in imgs.iter().zip(pending) {
+        let pred = p.recv().expect("prediction");
+        let (class, score) = direct_predict(&plan, img);
+        assert_eq!(pred.class, class);
+        assert_eq!(pred.score, score, "int8 serving diverged from direct");
+        assert_eq!(pred.backend, "native-int8");
+    }
+    let s = coord.shutdown();
+    assert_eq!(s.completed, 24);
+    assert_eq!(s.rejected, 0);
+}
+
+#[test]
+fn quant_and_fp32_variants_serve_side_by_side() {
+    // A quantized deployment variant next to the fp32 one — the canary
+    // shape CocoGenQuant is for.
+    let coord = Coordinator::start_with(
+        vec![
+            Box::new(NativeBackend::new("fp32",
+                                        tiny_plan(Scheme::CocoGen))),
+            Box::new(NativeBackend::new("int8",
+                                        tiny_plan(Scheme::CocoGenQuant))),
+        ],
+        BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        },
+        RouterPolicy::Split(vec![1.0, 1.0]),
+    )
+    .expect("start");
+    let imgs = images(40, 13);
+    let pending: Vec<_> = imgs
+        .iter()
+        .map(|img| coord.submit(img.clone()).unwrap())
+        .collect();
+    let mut by_backend = std::collections::HashMap::new();
+    for p in pending {
+        let pred = p.recv().expect("prediction");
+        *by_backend.entry(pred.backend).or_insert(0usize) += 1;
+    }
+    let report = coord.shutdown_report();
+    assert_eq!(report.overall.completed, 40);
+    assert!(by_backend.get("fp32").copied().unwrap_or(0) > 0,
+            "fp32 never served: {by_backend:?}");
+    assert!(by_backend.get("int8").copied().unwrap_or(0) > 0,
+            "int8 never served: {by_backend:?}");
+}
+
+#[test]
 fn native_concurrent_clients_batch_and_complete() {
     let plan = tiny_plan(Scheme::CocoGen);
     let coord = Coordinator::start_with(
