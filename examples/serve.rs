@@ -6,11 +6,13 @@
 //!     pattern-pruned engines behind the `Backend` seam, split across a
 //!     CoCo-Gen variant and a dense baseline; with `--quant` the split
 //!     canaries the weight-only int8 plan (`Scheme::CocoGenQuant`) next
-//!     to the fp32 CoCo-Gen one and prints the resident weight bytes,
+//!     to the fp32 CoCo-Gen one and prints the resident weight bytes;
+//!     with `--auto` it canaries the per-layer engine-selected plan
+//!     (`Scheme::CocoAuto`, auto-tuned before serving) instead,
 //!  3. the PJRT backend, when a real runtime + artifacts are present
 //!     (`make artifacts`); offline it reports why it was skipped.
 //!
-//! Run: `cargo run --release --example serve [-- --quant]`
+//! Run: `cargo run --release --example serve [-- --quant | --auto]`
 
 use std::time::{Duration, Instant};
 
@@ -56,26 +58,45 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- 2. native serving: executor pool behind the Backend seam ---------
-    // `--quant` canaries the weight-only int8 plan next to fp32 CoCo-Gen.
+    // `--quant` canaries the weight-only int8 plan next to fp32 CoCo-Gen;
+    // `--auto` canaries the per-layer engine-selected CocoAuto plan.
     let quant = std::env::args().any(|a| a == "--quant");
+    let auto = std::env::args().any(|a| a == "--auto");
     let ir = zoo::mobilenet_v2(zoo::CIFAR_HW, 10);
     let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7)
         .into_shared();
     let second_scheme = if quant {
         Scheme::CocoGenQuant
+    } else if auto {
+        Scheme::CocoAuto
     } else {
         Scheme::DenseIm2col
     };
-    let second = build_plan(&ir, second_scheme, PruneConfig::default(), 7)
-        .into_shared();
-    let second_name = if quant { "native-int8" } else { "native-dense" };
+    let mut second_plan =
+        build_plan(&ir, second_scheme, PruneConfig::default(), 7);
+    if auto {
+        // The point of CocoAuto: measure every legal engine per layer at
+        // its real shape, then serve the compiled winners. Tuned at
+        // threads = 1 because the pool serves with one single-threaded
+        // executor per core — the regime the winners must hold in.
+        cocopie::codegen::autotune_plan(&mut second_plan, 1);
+    }
+    let second = second_plan.into_shared();
+    let second_name = if quant {
+        "native-int8"
+    } else if auto {
+        "native-auto"
+    } else {
+        "native-dense"
+    };
     if quant {
         println!(
             "\nweight bytes: fp32 cocogen {} KB, int8 cocogen {} KB \
-             ({:.2}x)",
+             ({:.2}x); activation arena {} KB per executor",
             coco.weight_bytes() / 1024,
             second.weight_bytes() / 1024,
             coco.weight_bytes() as f64 / second.weight_bytes() as f64,
+            coco.peak_activation_bytes() / 1024,
         );
     }
     let elems = ir.input.c * ir.input.h * ir.input.w;

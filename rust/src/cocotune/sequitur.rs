@@ -23,7 +23,7 @@ use std::collections::HashMap;
 pub type Symbol = i64;
 
 /// A context-free grammar: rules[0] is the start rule S; the symbol
-/// `-(i as i64)` references rules[i] (i >= 1).
+/// `-(i as i64)` references `rules[i]` (i >= 1).
 #[derive(Debug, Clone)]
 pub struct Grammar {
     pub rules: Vec<Vec<Symbol>>,

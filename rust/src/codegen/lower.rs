@@ -1,0 +1,519 @@
+//! Lowering: compile an `ExecPlan` into a flat op pipeline.
+//!
+//! The paper's §2.1.3 claim is that the *compiler* picks the execution
+//! strategy per layer. This pass is where that happens for the native
+//! path: every `(LayerKind, LayerPlan)` pair is resolved ONCE into a
+//! [`CompiledOp`] that binds
+//!
+//! * the kernel choice (which engine entry point runs the layer),
+//! * the weights (`Arc`-shared with the plan — no copy),
+//! * the geometry (input/output shapes, stride, fused ReLU),
+//! * compile-time derived data (Winograd-domain weights, the pattern-GEMM
+//!   row map),
+//! * preassigned input/output arena slots from the IR liveness pass
+//!   (`crate::ir::liveness`), including `Add` skip-link sources.
+//!
+//! `ModelExecutor::run` then degenerates into a straight walk over
+//! `CompiledPipeline::ops` — no per-layer `match` on `LayerPlan` or
+//! `Scheme`, no activation allocation beyond the [`Arena`], no
+//! `saved`/`clone` bookkeeping for residual inputs.
+
+use std::sync::Arc;
+
+use crate::compress::{CsrLayer, DenseLayer, FkwLayer, FlatWeights};
+use crate::exec::pattern::PatternGemmPlan;
+use crate::exec::tensor::TensorView;
+use crate::exec::winograd::WinogradWeights;
+use crate::exec::{csr, im2col, naive, ops, pattern, winograd, ExecScratch,
+                  Tensor};
+use crate::ir::liveness::MemoryPlan;
+use crate::ir::{Chw, LayerKind};
+use crate::quant::{QuantDense, QuantFkw};
+
+use super::{DenseEngine, ExecPlan, LayerPlan, TileConfig};
+
+/// Where an op reads an activation from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufId {
+    /// The caller-provided model input.
+    Input,
+    /// An arena slot.
+    Slot(usize),
+}
+
+/// The kernel an op was lowered to, weights bound. Selection happened at
+/// lowering; executing an op is a direct call into the chosen engine's
+/// write-into-output entry point.
+#[derive(Debug, Clone)]
+pub enum CompiledKernel {
+    ConvNaive {
+        w: Arc<DenseLayer>,
+        stride: usize,
+        relu: bool,
+    },
+    ConvIm2col {
+        w: Arc<DenseLayer>,
+        stride: usize,
+        relu: bool,
+    },
+    /// Weights pre-transformed into the Winograd domain at lowering.
+    ConvWinograd {
+        w: Arc<WinogradWeights>,
+        relu: bool,
+    },
+    ConvCsr {
+        w: Arc<CsrLayer>,
+        stride: usize,
+        relu: bool,
+    },
+    /// Pattern row-AXPY path with its tuned tile.
+    ConvPattern {
+        w: Arc<FkwLayer>,
+        stride: usize,
+        relu: bool,
+        tile: TileConfig,
+    },
+    /// Pattern GEMM path with its row map precomputed at lowering.
+    ConvPatternGemm {
+        w: Arc<FkwLayer>,
+        stride: usize,
+        relu: bool,
+        gp: PatternGemmPlan,
+    },
+    ConvQuantDense {
+        w: Arc<QuantDense>,
+        stride: usize,
+        relu: bool,
+    },
+    ConvQuantPattern {
+        w: Arc<QuantFkw>,
+        stride: usize,
+        relu: bool,
+        tile: TileConfig,
+    },
+    ConvQuantPatternGemm {
+        w: Arc<QuantFkw>,
+        stride: usize,
+        relu: bool,
+        gp: PatternGemmPlan,
+    },
+    Depthwise {
+        w: Arc<FlatWeights>,
+        stride: usize,
+        relu: bool,
+    },
+    MaxPool2,
+    GlobalAvgPool,
+    Fc {
+        w: Arc<FlatWeights>,
+        relu: bool,
+    },
+    /// Residual add; the skip operand is `CompiledOp::src2`.
+    Add { relu: bool },
+}
+
+/// One fully resolved pipeline step.
+#[derive(Debug, Clone)]
+pub struct CompiledOp {
+    pub kernel: CompiledKernel,
+    /// Main input buffer.
+    pub src: BufId,
+    /// Second input (the `Add` skip source).
+    pub src2: Option<BufId>,
+    /// Output arena slot.
+    pub dst: usize,
+    pub in_shape: Chw,
+    pub out_shape: Chw,
+}
+
+/// A compiled model: ops in execution order plus the arena layout they
+/// were planned against. Immutable and `Send + Sync` (weights are `Arc`),
+/// so one pipeline is shared by every executor in a pool — compile once,
+/// serve everywhere.
+#[derive(Debug, Clone)]
+pub struct CompiledPipeline {
+    pub ops: Vec<CompiledOp>,
+    /// Model input shape.
+    pub input: Chw,
+    /// The arena layout (slot assignment + slot capacities) the ops'
+    /// `src`/`dst` fields index into.
+    pub mem: MemoryPlan,
+}
+
+impl CompiledPipeline {
+    /// Arena footprint in bytes (what [`Arena::for_pipeline`] allocates).
+    pub fn peak_activation_bytes(&self) -> usize {
+        self.mem.peak_bytes()
+    }
+
+    /// Run the pipeline: a flat walk over the ops, each reading and
+    /// writing preassigned arena slots. The only allocation is the
+    /// returned output tensor; every intermediate activation lives in
+    /// `arena` and every engine scratch buffer in `scratch` (both warm
+    /// after the first call).
+    pub fn execute(&self, input: &Tensor, arena: &mut Arena,
+                   scratch: &mut ExecScratch, threads: usize) -> Tensor {
+        assert_eq!(input.shape(), self.input, "input shape mismatch");
+        let Some(last_op) = self.ops.last() else {
+            return input.clone();
+        };
+        for op in &self.ops {
+            let in_elems = op.in_shape.elements();
+            let out_elems = op.out_shape.elements();
+            // Move the destination buffer out of the arena so the
+            // sources can be borrowed from it simultaneously; the
+            // memory plan guarantees dst never aliases a live source.
+            let mut dstbuf = std::mem::take(&mut arena.bufs[op.dst]);
+            let dst = &mut dstbuf[..out_elems];
+            {
+                let src_all = arena.read(input, op.src);
+                let view = TensorView::new(
+                    op.in_shape.c,
+                    op.in_shape.h,
+                    op.in_shape.w,
+                    &src_all[..in_elems],
+                );
+                match &op.kernel {
+                    CompiledKernel::ConvNaive { w, stride, relu } => {
+                        naive::conv2d_into(view, w, *stride, *relu,
+                                           threads, dst);
+                    }
+                    CompiledKernel::ConvIm2col { w, stride, relu } => {
+                        im2col::conv2d_into(view, w, *stride, *relu,
+                                            threads, &mut scratch.im2col,
+                                            dst);
+                    }
+                    CompiledKernel::ConvWinograd { w, relu } => {
+                        winograd::conv2d_pre_into(
+                            view, w, *relu, threads, &mut scratch.wino_u,
+                            &mut scratch.wino_m, dst,
+                        );
+                    }
+                    CompiledKernel::ConvCsr { w, stride, relu } => {
+                        csr::conv2d_into(view, w, *stride, *relu, threads,
+                                         dst);
+                    }
+                    CompiledKernel::ConvPattern {
+                        w, stride, relu, tile,
+                    } => {
+                        pattern::conv2d_into(view, w, *stride, *relu,
+                                             threads, *tile, dst);
+                    }
+                    CompiledKernel::ConvPatternGemm {
+                        w, stride, relu, gp,
+                    } => {
+                        pattern::conv2d_gemm_into(
+                            view, w, *stride, *relu, threads, gp,
+                            &mut scratch.gemm_u, dst,
+                        );
+                    }
+                    CompiledKernel::ConvQuantDense { w, stride, relu } => {
+                        im2col::conv2d_quant_into(
+                            view, w, *stride, *relu, threads,
+                            &mut scratch.im2col, dst,
+                        );
+                    }
+                    CompiledKernel::ConvQuantPattern {
+                        w, stride, relu, tile,
+                    } => {
+                        pattern::conv2d_quant_into(view, w, *stride,
+                                                   *relu, threads, *tile,
+                                                   dst);
+                    }
+                    CompiledKernel::ConvQuantPatternGemm {
+                        w, stride, relu, gp,
+                    } => {
+                        pattern::conv2d_gemm_quant_into(
+                            view, w, *stride, *relu, threads, gp,
+                            &mut scratch.gemm_u, dst,
+                        );
+                    }
+                    CompiledKernel::Depthwise { w, stride, relu } => {
+                        ops::depthwise3x3_into(view, &w.weights, &w.bias,
+                                               *stride, *relu, dst);
+                    }
+                    CompiledKernel::MaxPool2 => {
+                        ops::maxpool2_into(view, dst);
+                    }
+                    CompiledKernel::GlobalAvgPool => {
+                        ops::gap_into(view, dst);
+                    }
+                    CompiledKernel::Fc { w, relu } => {
+                        ops::dense_into(view.data, &w.weights, &w.bias,
+                                        op.out_shape.c, *relu, dst);
+                    }
+                    CompiledKernel::Add { relu } => {
+                        let skip = arena.read(
+                            input,
+                            op.src2.expect("Add op without skip source"),
+                        );
+                        ops::add_into(view.data, &skip[..out_elems],
+                                      *relu, dst);
+                    }
+                }
+            }
+            arena.bufs[op.dst] = dstbuf;
+        }
+        let shape = last_op.out_shape;
+        let mut out = Tensor::from_shape(shape);
+        out.data
+            .copy_from_slice(&arena.bufs[last_op.dst][..shape.elements()]);
+        out
+    }
+}
+
+/// The reusable activation buffers one executor owns, sized by the
+/// pipeline's memory plan. Allocated once; never grows at run time.
+#[derive(Debug)]
+pub struct Arena {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Arena {
+    /// Allocate every slot of `p`'s memory plan up front.
+    pub fn for_pipeline(p: &CompiledPipeline) -> Arena {
+        Arena {
+            bufs: p
+                .mem
+                .slot_elems
+                .iter()
+                .map(|&n| vec![0f32; n])
+                .collect(),
+        }
+    }
+
+    /// Resident arena bytes (regression guard for the no-growth
+    /// property). Length-based, so it equals the memory plan's
+    /// `peak_bytes` exactly regardless of allocator rounding.
+    pub fn bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.len() * 4).sum()
+    }
+
+    fn read<'a>(&'a self, input: &'a Tensor, id: BufId) -> &'a [f32] {
+        match id {
+            BufId::Input => &input.data,
+            BufId::Slot(s) => &self.bufs[s],
+        }
+    }
+}
+
+/// Compile an `ExecPlan` into its op pipeline: kernel selection, weight
+/// binding, compile-time weight transforms, and arena slot assignment.
+/// Panics on an internally inconsistent plan (a layer kind paired with
+/// an incompatible `LayerPlan`), exactly like the old interpreter did —
+/// that is a plan-construction bug, not an input error.
+pub fn lower(plan: &ExecPlan) -> CompiledPipeline {
+    let ir = &plan.ir;
+    let mem = MemoryPlan::build(ir);
+    let mut ops = Vec::with_capacity(ir.layers.len());
+    for (i, (layer, lplan)) in
+        ir.layers.iter().zip(&plan.layers).enumerate()
+    {
+        let kernel = match (&layer.kind, lplan) {
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::Dense { layer: d, engine },
+            ) => match engine {
+                DenseEngine::Naive => CompiledKernel::ConvNaive {
+                    w: d.clone(),
+                    stride: *stride,
+                    relu: *relu,
+                },
+                DenseEngine::Winograd
+                    if d.kh == 3 && d.kw == 3 && *stride == 1 =>
+                {
+                    CompiledKernel::ConvWinograd {
+                        w: Arc::new(WinogradWeights::transform(d)),
+                        relu: *relu,
+                    }
+                }
+                // Winograd on an illegal shape falls back to im2col,
+                // matching the scheme's documented behavior.
+                DenseEngine::Im2col | DenseEngine::Winograd => {
+                    CompiledKernel::ConvIm2col {
+                        w: d.clone(),
+                        stride: *stride,
+                        relu: *relu,
+                    }
+                }
+            },
+            (LayerKind::Conv { stride, relu, .. }, LayerPlan::Csr(c)) => {
+                CompiledKernel::ConvCsr {
+                    w: c.clone(),
+                    stride: *stride,
+                    relu: *relu,
+                }
+            }
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::Fkw { layer: f, tile },
+            ) => {
+                if tile.use_gemm {
+                    CompiledKernel::ConvPatternGemm {
+                        w: f.clone(),
+                        stride: *stride,
+                        relu: *relu,
+                        gp: PatternGemmPlan::build(f.cin, &f.kernels),
+                    }
+                } else {
+                    CompiledKernel::ConvPattern {
+                        w: f.clone(),
+                        stride: *stride,
+                        relu: *relu,
+                        tile: *tile,
+                    }
+                }
+            }
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::QuantDense(q),
+            ) => CompiledKernel::ConvQuantDense {
+                w: q.clone(),
+                stride: *stride,
+                relu: *relu,
+            },
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::QuantFkw { layer: q, tile },
+            ) => {
+                if tile.use_gemm {
+                    CompiledKernel::ConvQuantPatternGemm {
+                        w: q.clone(),
+                        stride: *stride,
+                        relu: *relu,
+                        gp: PatternGemmPlan::build(q.cin, &q.kernels),
+                    }
+                } else {
+                    CompiledKernel::ConvQuantPattern {
+                        w: q.clone(),
+                        stride: *stride,
+                        relu: *relu,
+                        tile: *tile,
+                    }
+                }
+            }
+            (
+                LayerKind::DwConv { stride, relu },
+                LayerPlan::Depthwise(w),
+            ) => CompiledKernel::Depthwise {
+                w: w.clone(),
+                stride: *stride,
+                relu: *relu,
+            },
+            (LayerKind::MaxPool2, _) => CompiledKernel::MaxPool2,
+            (LayerKind::GlobalAvgPool, _) => CompiledKernel::GlobalAvgPool,
+            (LayerKind::Dense { relu, .. }, LayerPlan::Fc(w)) => {
+                CompiledKernel::Fc {
+                    w: w.clone(),
+                    relu: *relu,
+                }
+            }
+            (LayerKind::Add { relu, .. }, _) => {
+                CompiledKernel::Add { relu: *relu }
+            }
+            (k, p) => panic!(
+                "layer {} kind {:?} has incompatible plan {:?}",
+                layer.name,
+                k,
+                std::mem::discriminant(p)
+            ),
+        };
+        let src = if i == 0 {
+            BufId::Input
+        } else {
+            BufId::Slot(mem.slot_of[i - 1])
+        };
+        let src2 = match layer.kind {
+            LayerKind::Add { from, .. } => {
+                Some(BufId::Slot(mem.slot_of[from]))
+            }
+            _ => None,
+        };
+        ops.push(CompiledOp {
+            kernel,
+            src,
+            src2,
+            dst: mem.slot_of[i],
+            in_shape: layer.input,
+            out_shape: layer.output,
+        });
+    }
+    CompiledPipeline {
+        ops,
+        input: ir.input,
+        mem,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{build_plan, PruneConfig, Scheme};
+    use crate::ir::{Chw, IrBuilder};
+    use crate::util::rng::Rng;
+
+    fn residual_ir() -> crate::ir::ModelIR {
+        let mut b = IrBuilder::new("t", Chw::new(3, 10, 10));
+        b.conv("c1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("c2", 3, 8, 1, false)
+            .add("a", skip, true)
+            .maxpool("p")
+            .gap("g")
+            .dense("fc", 4, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn lowering_binds_slots_and_kernels() {
+        let ir = residual_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              3);
+        let p = lower(&plan);
+        assert_eq!(p.ops.len(), ir.layers.len());
+        // every op writes a slot inside the arena
+        for op in &p.ops {
+            assert!(op.dst < p.mem.slot_elems.len());
+            assert!(op.out_shape.elements() <= p.mem.slot_elems[op.dst]);
+        }
+        // the Add op carries its skip source
+        let add = &p.ops[2];
+        assert!(matches!(add.kernel, CompiledKernel::Add { .. }));
+        assert_eq!(add.src2, Some(BufId::Slot(p.ops[0].dst)));
+        // pattern layers compiled to a pattern kernel, not re-dispatched
+        assert!(matches!(
+            p.ops[0].kernel,
+            CompiledKernel::ConvPattern { .. }
+                | CompiledKernel::ConvPatternGemm { .. }
+        ));
+        assert!(p.peak_activation_bytes() > 0);
+    }
+
+    #[test]
+    fn pipeline_is_send_and_sync() {
+        fn assert_ss<T: Send + Sync>(_: &T) {}
+        let ir = residual_ir();
+        let plan = build_plan(&ir, Scheme::CocoGenQuant,
+                              PruneConfig::default(), 3);
+        let p = lower(&plan);
+        assert_ss(&p);
+    }
+
+    #[test]
+    fn empty_pipeline_returns_input() {
+        let ir = crate::ir::ModelIR {
+            name: "empty".into(),
+            input: Chw::new(2, 3, 3),
+            layers: Vec::new(),
+        };
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 1);
+        let p = lower(&plan);
+        let mut arena = Arena::for_pipeline(&p);
+        let mut scratch = ExecScratch::default();
+        let mut rng = Rng::seed_from(1);
+        let x = Tensor::random(2, 3, 3, &mut rng);
+        let y = p.execute(&x, &mut arena, &mut scratch, 1);
+        assert_eq!(x.data, y.data);
+    }
+}

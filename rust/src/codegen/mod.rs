@@ -1,42 +1,103 @@
 //! Pattern-aware execution-plan generation (the "compilation" half of the
 //! co-design, paper §2.1.3): filter-kernel reorder, per-layer scheme
-//! selection, tile auto-tuning. The output `ExecPlan` is what the exec
-//! engines consume.
+//! selection, tile/engine auto-tuning, and lowering to a compiled op
+//! pipeline. The output `ExecPlan` is compiled once by `lower` into the
+//! `CompiledPipeline` the executors run.
 
+pub mod lower;
 pub mod reorder;
 pub mod tuner;
 
 use std::sync::Arc;
 
-use crate::compress::{CsrLayer, DenseLayer, FkwLayer};
+use crate::compress::{CsrLayer, DenseLayer, FkwLayer, FlatWeights};
 use crate::ir::{LayerKind, ModelIR};
 use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
 use crate::quant::{QuantDense, QuantFkw};
 use crate::util::rng::Rng;
 
+pub use lower::{lower, Arena, BufId, CompiledKernel, CompiledOp,
+                CompiledPipeline};
 pub use tuner::TileConfig;
 
-/// Which executor strategy a conv layer uses.
+/// Which lowering a *dense* conv layer compiles to. Fixed by the scheme
+/// for the `Dense*` baselines; measured per layer (at the layer's real
+/// shape) under `Scheme::CocoAuto`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseEngine {
+    /// Direct loops (TFLite-CPU stand-in).
+    Naive,
+    /// im2col + GEMM (TVM stand-in).
+    Im2col,
+    /// Winograd F(2x2,3x3) — legal for 3x3 stride-1 only; the lowering
+    /// falls back to im2col elsewhere.
+    Winograd,
+}
+
+/// Which executor strategy a layer uses. Weight payloads are `Arc`-shared
+/// so the lowered `CompiledPipeline` binds them without copying and a
+/// serving pool holds each tensor exactly once per process.
 #[derive(Debug, Clone)]
 pub enum LayerPlan {
-    /// Dense direct conv (naive engine) or im2col (chosen by engine).
-    Dense(DenseLayer),
+    /// Dense conv weights plus the engine that lowers them.
+    Dense {
+        layer: Arc<DenseLayer>,
+        engine: DenseEngine,
+    },
     /// Non-structured sparse (CSR) conv.
-    Csr(CsrLayer),
+    Csr(Arc<CsrLayer>),
     /// Pattern + connectivity pruned, reordered, tuned (CoCo-Gen).
-    Fkw { layer: FkwLayer, tile: TileConfig },
+    Fkw {
+        layer: Arc<FkwLayer>,
+        tile: TileConfig,
+    },
     /// Weight-only per-channel int8 dense conv (i8 weights resident, no
     /// f32 copy); runs on the im2col quant kernel.
-    QuantDense(QuantDense),
-    /// Pattern + connectivity pruned AND int8-quantized (CoCoGenQuant):
+    QuantDense(Arc<QuantDense>),
+    /// Pattern + connectivity pruned AND int8-quantized (CocoGenQuant):
     /// both halves of the paper's compression, dequantized on load.
-    QuantFkw { layer: QuantFkw, tile: TileConfig },
-    /// Depthwise conv weights: w[c][ky][kx].
-    Depthwise { weights: Vec<f32>, bias: Vec<f32> },
-    /// Dense FC: w[cout][cin] + bias.
-    Fc { weights: Vec<f32>, bias: Vec<f32> },
+    QuantFkw {
+        layer: Arc<QuantFkw>,
+        tile: TileConfig,
+    },
+    /// Depthwise conv weights: `w[c][ky][kx]`.
+    Depthwise(Arc<FlatWeights>),
+    /// Dense FC: `w[cout][cin]` + bias.
+    Fc(Arc<FlatWeights>),
     /// No weights (pool/add/gap).
     None,
+}
+
+impl LayerPlan {
+    /// (surviving weights, dense weight count) for the pruned conv
+    /// formats — the shared helper behind `ExecPlan::flop_keep_ratio`.
+    pub fn conv_nnz(&self) -> Option<(usize, usize)> {
+        match self {
+            LayerPlan::Fkw { layer, .. } => {
+                Some((layer.nnz(), 9 * layer.cin * layer.cout))
+            }
+            LayerPlan::QuantFkw { layer, .. } => {
+                Some((layer.nnz(), 9 * layer.cin * layer.cout))
+            }
+            LayerPlan::Csr(c) => {
+                Some((c.nnz(), c.kh * c.kw * c.cin * c.cout))
+            }
+            _ => None,
+        }
+    }
+
+    /// Resident weight bytes of this layer's store.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            LayerPlan::Dense { layer, .. } => layer.size_bytes(),
+            LayerPlan::Csr(c) => c.size_bytes(),
+            LayerPlan::Fkw { layer, .. } => layer.size_bytes(),
+            LayerPlan::QuantDense(q) => q.size_bytes(),
+            LayerPlan::QuantFkw { layer, .. } => layer.size_bytes(),
+            LayerPlan::Depthwise(w) | LayerPlan::Fc(w) => w.size_bytes(),
+            LayerPlan::None => 0,
+        }
+    }
 }
 
 /// A fully planned model: IR + per-layer weights/strategies.
@@ -65,6 +126,18 @@ pub enum Scheme {
     /// "pruning and quantization") pushed through the same compiler
     /// passes and executors.
     CocoGenQuant,
+    /// CoCo-Gen compression plus *per-layer engine selection*: the
+    /// auto-tuner measures every legal lowering for each conv layer at
+    /// its real shape (pattern AXPY tile sweep vs pattern GEMM vs their
+    /// int8 dequant-on-load variants for the pruned layers; naive vs
+    /// im2col vs int8 im2col for the dense remainder — under this
+    /// scheme's pruning the remainder is the non-3x3 convs, so the
+    /// Winograd candidate only enters the sweep if a dense 3x3/s1
+    /// layer is present) and the compiled pipeline binds the per-layer
+    /// winner — the paper's §2.1.3 auto-tuning claim. Run
+    /// `autotune_plan` after `build_plan` to perform the measurement;
+    /// untuned plans behave like CoCo-Gen.
+    CocoAuto,
 }
 
 /// Pruning hyper-parameters for plan building.
@@ -88,7 +161,9 @@ impl Default for PruneConfig {
 }
 
 /// Deterministic random weights for a model IR (timing experiments are
-/// weight-value independent; accuracy experiments use PJRT-trained models).
+/// weight-value independent; accuracy experiments use PJRT-trained
+/// models). Dense conv layers default to the im2col engine; `build_plan`
+/// rewrites the engine per scheme.
 pub fn random_dense_weights(ir: &ModelIR, seed: u64) -> Vec<LayerPlan> {
     let mut rng = Rng::seed_from(seed);
     ir.layers
@@ -97,35 +172,39 @@ pub fn random_dense_weights(ir: &ModelIR, seed: u64) -> Vec<LayerPlan> {
             LayerKind::Conv { kh, kw, cout, .. } => {
                 let n = kh * kw * l.input.c * cout;
                 let scale = (2.0 / (kh * kw * l.input.c) as f64).sqrt();
-                LayerPlan::Dense(DenseLayer {
-                    cout: *cout,
-                    cin: l.input.c,
-                    kh: *kh,
-                    kw: *kw,
-                    weights: (0..n)
-                        .map(|_| (rng.normal() * scale) as f32)
-                        .collect(),
-                    bias: (0..*cout).map(|_| rng.normal_f32() * 0.01)
-                        .collect(),
-                })
+                LayerPlan::Dense {
+                    layer: Arc::new(DenseLayer {
+                        cout: *cout,
+                        cin: l.input.c,
+                        kh: *kh,
+                        kw: *kw,
+                        weights: (0..n)
+                            .map(|_| (rng.normal() * scale) as f32)
+                            .collect(),
+                        bias: (0..*cout).map(|_| rng.normal_f32() * 0.01)
+                            .collect(),
+                    }),
+                    engine: DenseEngine::Im2col,
+                }
             }
-            LayerKind::DwConv { .. } => LayerPlan::Depthwise {
-                weights: (0..9 * l.input.c)
-                    .map(|_| rng.normal_f32() * 0.3)
-                    .collect(),
-                bias: (0..l.input.c).map(|_| rng.normal_f32() * 0.01)
-                    .collect(),
-            },
+            LayerKind::DwConv { .. } => {
+                LayerPlan::Depthwise(Arc::new(FlatWeights::new(
+                    (0..9 * l.input.c)
+                        .map(|_| rng.normal_f32() * 0.3)
+                        .collect(),
+                    (0..l.input.c).map(|_| rng.normal_f32() * 0.01)
+                        .collect(),
+                )))
+            }
             LayerKind::Dense { cout, .. } => {
                 let cin = l.input.elements();
                 let scale = (2.0 / cin as f64).sqrt();
-                LayerPlan::Fc {
-                    weights: (0..cin * cout)
+                LayerPlan::Fc(Arc::new(FlatWeights::new(
+                    (0..cin * cout)
                         .map(|_| (rng.normal() * scale) as f32)
                         .collect(),
-                    bias: (0..*cout).map(|_| rng.normal_f32() * 0.01)
-                        .collect(),
-                }
+                    (0..*cout).map(|_| rng.normal_f32() * 0.01).collect(),
+                )))
             }
             _ => LayerPlan::None,
         })
@@ -133,61 +212,97 @@ pub fn random_dense_weights(ir: &ModelIR, seed: u64) -> Vec<LayerPlan> {
 }
 
 /// Build an execution plan for (model, scheme): applies the scheme's
-/// pruning to every 3x3 conv, then the codegen passes (reorder + static
-/// tile heuristic) for the CoCo-Gen scheme. Use `autotune_plan` after
-/// this to replace the heuristic tiles with measured ones.
+/// pruning to every 3x3 conv and fixes each dense layer's engine, then
+/// the codegen passes (reorder + static tile heuristic) for the CoCo-Gen
+/// family. Use `autotune_plan` after this to replace the heuristics with
+/// measured choices (tiles for `CocoGen`/`CocoGenQuant`, full per-layer
+/// engine selection for `CocoAuto`).
 pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
                   seed: u64) -> ExecPlan {
     let dense = random_dense_weights(ir, seed);
     let layers = dense
         .into_iter()
         .zip(&ir.layers)
-        .map(|(plan, l)| match (&scheme, plan) {
-            (
-                Scheme::DenseNaive
-                | Scheme::DenseIm2col
-                | Scheme::DenseWinograd,
-                p,
-            ) => p,
-            (Scheme::SparseCsr, LayerPlan::Dense(d))
-                if l.is_conv3x3() =>
-            {
-                // Non-structured magnitude pruning, then CSR.
-                let mask = crate::patterns::connectivity::prune_unstructured(
-                    &d.weights,
-                    prune.unstructured_keep,
-                );
-                LayerPlan::Csr(CsrLayer::from_dense(&d, Some(&mask)))
-            }
-            (Scheme::SparseCsr, p) => p,
-            (Scheme::CocoGen, LayerPlan::Dense(d)) if l.is_conv3x3() => {
-                let conn = prune_conn_oihw(&d, prune.connectivity_keep);
-                let mut fkw = FkwLayer::from_dense(&d, &conn);
-                reorder::filter_kernel_reorder(&mut fkw);
-                let tile = tuner::default_tile(l.output.h, l.output.w);
-                LayerPlan::Fkw { layer: fkw, tile }
-            }
-            (Scheme::CocoGen, p) => p,
-            (Scheme::CocoGenQuant, LayerPlan::Dense(d))
-                if l.is_conv3x3() =>
-            {
-                // Same pruning + codegen passes as CoCo-Gen, then the
-                // weights (and only the weights) drop to int8.
-                let conn = prune_conn_oihw(&d, prune.connectivity_keep);
-                let mut fkw = FkwLayer::from_dense(&d, &conn);
-                reorder::filter_kernel_reorder(&mut fkw);
-                let tile = tuner::default_tile(l.output.h, l.output.w);
-                LayerPlan::QuantFkw {
-                    layer: QuantFkw::quantize(&fkw),
-                    tile,
+        .map(|(plan, l)| {
+            let conv_stride = match l.kind {
+                LayerKind::Conv { stride, .. } => stride,
+                _ => 1,
+            };
+            match (scheme, plan) {
+                (Scheme::DenseNaive, LayerPlan::Dense { layer, .. }) => {
+                    LayerPlan::Dense {
+                        layer,
+                        engine: DenseEngine::Naive,
+                    }
                 }
+                (Scheme::DenseWinograd, LayerPlan::Dense { layer, .. })
+                    if l.is_conv3x3() && conv_stride == 1 =>
+                {
+                    LayerPlan::Dense {
+                        layer,
+                        engine: DenseEngine::Winograd,
+                    }
+                }
+                (
+                    Scheme::DenseNaive
+                    | Scheme::DenseIm2col
+                    | Scheme::DenseWinograd,
+                    p,
+                ) => p,
+                (Scheme::SparseCsr, LayerPlan::Dense { layer, .. })
+                    if l.is_conv3x3() =>
+                {
+                    // Non-structured magnitude pruning, then CSR.
+                    let mask =
+                        crate::patterns::connectivity::prune_unstructured(
+                            &layer.weights,
+                            prune.unstructured_keep,
+                        );
+                    LayerPlan::Csr(Arc::new(CsrLayer::from_dense(
+                        &layer,
+                        Some(&mask),
+                    )))
+                }
+                (Scheme::SparseCsr, p) => p,
+                (
+                    Scheme::CocoGen | Scheme::CocoAuto,
+                    LayerPlan::Dense { layer, .. },
+                ) if l.is_conv3x3() => {
+                    let conn =
+                        prune_conn_oihw(&layer, prune.connectivity_keep);
+                    let mut fkw = FkwLayer::from_dense(&layer, &conn);
+                    reorder::filter_kernel_reorder(&mut fkw);
+                    let tile = tuner::default_tile(l.output.h, l.output.w);
+                    LayerPlan::Fkw {
+                        layer: Arc::new(fkw),
+                        tile,
+                    }
+                }
+                (Scheme::CocoGen | Scheme::CocoAuto, p) => p,
+                (Scheme::CocoGenQuant, LayerPlan::Dense { layer, .. })
+                    if l.is_conv3x3() =>
+                {
+                    // Same pruning + codegen passes as CoCo-Gen, then the
+                    // weights (and only the weights) drop to int8.
+                    let conn =
+                        prune_conn_oihw(&layer, prune.connectivity_keep);
+                    let mut fkw = FkwLayer::from_dense(&layer, &conn);
+                    reorder::filter_kernel_reorder(&mut fkw);
+                    let tile = tuner::default_tile(l.output.h, l.output.w);
+                    LayerPlan::QuantFkw {
+                        layer: Arc::new(QuantFkw::quantize(&fkw)),
+                        tile,
+                    }
+                }
+                (Scheme::CocoGenQuant, LayerPlan::Dense { layer, .. }) => {
+                    // Convs the pattern pass leaves dense (e.g. 1x1): still
+                    // weight-only int8.
+                    LayerPlan::QuantDense(Arc::new(QuantDense::quantize(
+                        &layer,
+                    )))
+                }
+                (Scheme::CocoGenQuant, p) => p,
             }
-            (Scheme::CocoGenQuant, LayerPlan::Dense(d)) => {
-                // Convs the pattern pass leaves dense (e.g. 1x1): still
-                // weight-only int8.
-                LayerPlan::QuantDense(QuantDense::quantize(&d))
-            }
-            (Scheme::CocoGenQuant, p) => p,
         })
         .collect();
     ExecPlan {
@@ -214,11 +329,21 @@ pub fn prune_conn_oihw(d: &DenseLayer, keep: f64) -> ConnectivityMask {
     prune_connectivity(&hwio, d.kh, d.kw, d.cin, d.cout, keep)
 }
 
-/// Parameter auto-tuning (paper §2.1.3): per pattern conv layer (f32
-/// `Fkw` or int8 `QuantFkw`), sweep the reduced candidate set (both
-/// execution paths x tile shapes) on a synthetic input of the layer's
-/// real shape and keep the fastest.
+/// Parameter auto-tuning (paper §2.1.3). For the fixed-engine schemes
+/// this sweeps execution-path x tile-shape candidates per pattern conv
+/// layer; for `Scheme::CocoAuto` it additionally measures every legal
+/// engine per layer (including the int8 dequant-on-load variants) and
+/// rewrites the plan to the per-layer winner.
 pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
+    if plan.scheme == Scheme::CocoAuto {
+        autotune_engines(plan, threads);
+    } else {
+        autotune_tiles(plan, threads);
+    }
+}
+
+/// Tile-only sweep for `CocoGen`/`CocoGenQuant` pattern layers.
+fn autotune_tiles(plan: &mut ExecPlan, threads: usize) {
     let mut rng = Rng::seed_from(0xA070);
     let layers: Vec<_> = plan
         .ir
@@ -235,10 +360,11 @@ pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
             LayerPlan::Fkw { layer, tile } => {
                 let input = crate::exec::Tensor::random(
                     lir.input.c, lir.input.h, lir.input.w, &mut rng);
-                *tile = tune_tile(*tile, lir.output.h, &mut |cand| {
+                let fkw = layer.clone();
+                (*tile, _) = tune_tile(*tile, lir.output.h, &mut |cand| {
                     std::hint::black_box(
                         crate::exec::pattern::conv2d_auto(
-                            &input, layer, stride, relu, threads, cand,
+                            &input, &fkw, stride, relu, threads, cand,
                         ),
                     );
                 });
@@ -246,10 +372,11 @@ pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
             LayerPlan::QuantFkw { layer, tile } => {
                 let input = crate::exec::Tensor::random(
                     lir.input.c, lir.input.h, lir.input.w, &mut rng);
-                *tile = tune_tile(*tile, lir.output.h, &mut |cand| {
+                let qf = layer.clone();
+                (*tile, _) = tune_tile(*tile, lir.output.h, &mut |cand| {
                     std::hint::black_box(
                         crate::exec::pattern::conv2d_quant_auto(
-                            &input, layer, stride, relu, threads, cand,
+                            &input, &qf, stride, relu, threads, cand,
                         ),
                     );
                 });
@@ -259,25 +386,148 @@ pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
     }
 }
 
-/// One layer's sweep: warm + best-of-2 per candidate, keep the fastest.
+/// Per-layer engine selection for `Scheme::CocoAuto`: measure every
+/// legal lowering of each conv layer on a synthetic input of the layer's
+/// real shape, and rewrite the `LayerPlan` (engine tag, tile config, or
+/// weight format for the int8 variants) to the winner. The compiled
+/// pipeline then binds that choice — zero per-request dispatch.
+fn autotune_engines(plan: &mut ExecPlan, threads: usize) {
+    let mut rng = Rng::seed_from(0xC0C0);
+    let layers: Vec<_> = plan
+        .ir
+        .layers
+        .iter()
+        .cloned()
+        .zip(plan.layers.iter_mut())
+        .collect();
+    for (lir, lp) in layers {
+        let LayerKind::Conv { stride, relu, .. } = lir.kind else {
+            continue;
+        };
+        let input = crate::exec::Tensor::random(
+            lir.input.c, lir.input.h, lir.input.w, &mut rng);
+        match lp {
+            LayerPlan::Fkw { layer, tile } => {
+                // Pattern layer: AXPY tile sweep + GEMM path (all in
+                // quick_candidates), then the int8 dequant-on-load
+                // variant at the winning config.
+                let fkw = layer.clone();
+                let (best_tile, best_t) =
+                    tune_tile(*tile, lir.output.h, &mut |cand| {
+                        std::hint::black_box(
+                            crate::exec::pattern::conv2d_auto(
+                                &input, &fkw, stride, relu, threads, cand,
+                            ),
+                        );
+                    });
+                let qf = Arc::new(QuantFkw::quantize(&fkw));
+                let t_quant = measure(&mut || {
+                    std::hint::black_box(
+                        crate::exec::pattern::conv2d_quant_auto(
+                            &input, &qf, stride, relu, threads, best_tile,
+                        ),
+                    );
+                });
+                *lp = if t_quant < best_t {
+                    LayerPlan::QuantFkw {
+                        layer: qf,
+                        tile: best_tile,
+                    }
+                } else {
+                    LayerPlan::Fkw {
+                        layer: fkw,
+                        tile: best_tile,
+                    }
+                };
+            }
+            LayerPlan::Dense { layer, .. } => {
+                // Dense remainder (1x1 convs, non-pattern shapes):
+                // naive vs im2col vs int8 im2col. The Winograd
+                // candidate below is guarded on 3x3/s1 — under
+                // CocoAuto's pruning every 3x3 conv became Fkw above,
+                // so it only fires for plans where a 3x3 layer was
+                // deliberately left dense.
+                let d = layer.clone();
+                let mut scratch =
+                    crate::exec::im2col::Im2colScratch::default();
+                let mut best_eng = DenseEngine::Im2col;
+                let mut best_t = measure(&mut || {
+                    std::hint::black_box(crate::exec::im2col::conv2d(
+                        &input, &d, stride, relu, threads, &mut scratch,
+                    ));
+                });
+                let t_naive = measure(&mut || {
+                    std::hint::black_box(crate::exec::naive::conv2d(
+                        &input, &d, stride, relu, threads,
+                    ));
+                });
+                if t_naive < best_t {
+                    best_t = t_naive;
+                    best_eng = DenseEngine::Naive;
+                }
+                if lir.is_conv3x3() && stride == 1 {
+                    let t_wino = measure(&mut || {
+                        std::hint::black_box(
+                            crate::exec::winograd::conv2d(
+                                &input, &d, relu, threads,
+                            ),
+                        );
+                    });
+                    if t_wino < best_t {
+                        best_t = t_wino;
+                        best_eng = DenseEngine::Winograd;
+                    }
+                }
+                let qd = Arc::new(QuantDense::quantize(&d));
+                let t_quant = measure(&mut || {
+                    std::hint::black_box(
+                        crate::exec::im2col::conv2d_quant(
+                            &input, &qd, stride, relu, threads,
+                            &mut scratch,
+                        ),
+                    );
+                });
+                *lp = if t_quant < best_t {
+                    LayerPlan::QuantDense(qd)
+                } else {
+                    LayerPlan::Dense {
+                        layer: d,
+                        engine: best_eng,
+                    }
+                };
+            }
+            _ => continue,
+        }
+    }
+}
+
+/// Warm + best-of-2 wall-clock for one candidate.
+fn measure(run: &mut dyn FnMut()) -> f64 {
+    run(); // warm
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let s = std::time::Instant::now();
+        run();
+        best = best.min(s.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// One layer's sweep: warm + best-of-2 per candidate; returns the
+/// fastest config and its time (so `autotune_engines` can compare the
+/// winner against other engines without re-running the sweep).
 fn tune_tile(current: TileConfig, h_out: usize,
-             run: &mut dyn FnMut(TileConfig)) -> TileConfig {
+             run: &mut dyn FnMut(TileConfig)) -> (TileConfig, f64) {
     let mut best = current;
     let mut best_t = f64::INFINITY;
     for cand in tuner::quick_candidates(h_out) {
-        run(cand); // warm
-        let mut t = f64::INFINITY;
-        for _ in 0..2 {
-            let s = std::time::Instant::now();
-            run(cand);
-            t = t.min(s.elapsed().as_secs_f64());
-        }
+        let t = measure(&mut || run(cand));
         if t < best_t {
             best_t = t;
             best = cand;
         }
     }
-    best
+    (best, best_t)
 }
 
 impl ExecPlan {
@@ -290,6 +540,13 @@ impl ExecPlan {
         Arc::new(self)
     }
 
+    /// Compile this plan into its op pipeline (see `lower`): per-layer
+    /// kernel choice, bound weights, and arena slot assignment, all
+    /// resolved ahead of serving.
+    pub fn compile(&self) -> CompiledPipeline {
+        lower(self)
+    }
+
     /// Surviving-FLOP ratio vs dense (the analytic speedup bound).
     pub fn flop_keep_ratio(&self) -> f64 {
         let mut dense = 0f64;
@@ -297,19 +554,9 @@ impl ExecPlan {
         for (l, p) in self.ir.layers.iter().zip(&self.layers) {
             let f = l.flops() as f64;
             dense += f;
-            kept += match p {
-                LayerPlan::Fkw { layer, .. } => {
-                    f * layer.nnz() as f64
-                        / (9 * layer.cin * layer.cout) as f64
-                }
-                LayerPlan::QuantFkw { layer, .. } => {
-                    f * layer.nnz() as f64
-                        / (9 * layer.cin * layer.cout) as f64
-                }
-                LayerPlan::Csr(c) => {
-                    f * c.nnz() as f64 / (9 * c.cin * c.cout) as f64
-                }
-                _ => f,
+            kept += match p.conv_nnz() {
+                Some((nnz, total)) => f * nnz as f64 / total as f64,
+                None => f,
             };
         }
         if dense == 0.0 {
@@ -321,23 +568,14 @@ impl ExecPlan {
 
     /// Total weight storage of the plan in bytes.
     pub fn weight_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|p| match p {
-                LayerPlan::Dense(d) => d.size_bytes(),
-                LayerPlan::Csr(c) => c.size_bytes(),
-                LayerPlan::Fkw { layer, .. } => layer.size_bytes(),
-                LayerPlan::QuantDense(q) => q.size_bytes(),
-                LayerPlan::QuantFkw { layer, .. } => layer.size_bytes(),
-                LayerPlan::Depthwise { weights, bias } => {
-                    (weights.len() + bias.len()) * 4
-                }
-                LayerPlan::Fc { weights, bias } => {
-                    (weights.len() + bias.len()) * 4
-                }
-                LayerPlan::None => 0,
-            })
-            .sum()
+        self.layers.iter().map(LayerPlan::weight_bytes).sum()
+    }
+
+    /// Arena footprint of the plan's static activation-memory plan (see
+    /// `crate::ir::liveness`): what a `ModelExecutor` keeps resident for
+    /// activations, reported alongside `weight_bytes`.
+    pub fn peak_activation_bytes(&self) -> usize {
+        crate::ir::liveness::MemoryPlan::build(&self.ir).peak_bytes()
     }
 }
 
@@ -365,10 +603,52 @@ mod tests {
             Scheme::SparseCsr,
             Scheme::CocoGen,
             Scheme::CocoGenQuant,
+            Scheme::CocoAuto,
         ] {
             let plan = build_plan(&ir, scheme, PruneConfig::default(), 1);
             assert_eq!(plan.layers.len(), ir.layers.len());
         }
+    }
+
+    #[test]
+    fn schemes_fix_dense_engines() {
+        let ir = tiny_ir();
+        let naive = build_plan(&ir, Scheme::DenseNaive,
+                               PruneConfig::default(), 1);
+        let wino = build_plan(&ir, Scheme::DenseWinograd,
+                              PruneConfig::default(), 1);
+        match &naive.layers[0] {
+            LayerPlan::Dense { engine, .. } => {
+                assert_eq!(*engine, DenseEngine::Naive)
+            }
+            p => panic!("expected dense, got {p:?}"),
+        }
+        // c1 is 3x3 stride 1 -> winograd; c2 is stride 2 -> im2col
+        match (&wino.layers[0], &wino.layers[1]) {
+            (
+                LayerPlan::Dense { engine: e1, .. },
+                LayerPlan::Dense { engine: e2, .. },
+            ) => {
+                assert_eq!(*e1, DenseEngine::Winograd);
+                assert_eq!(*e2, DenseEngine::Im2col);
+            }
+            p => panic!("expected dense pair, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn coco_auto_builds_like_cocogen_before_tuning() {
+        let ir = tiny_ir();
+        let auto = build_plan(&ir, Scheme::CocoAuto,
+                              PruneConfig::default(), 1);
+        for (l, p) in auto.ir.layers.iter().zip(&auto.layers) {
+            if l.is_conv3x3() {
+                assert!(matches!(p, LayerPlan::Fkw { .. }));
+            }
+        }
+        let coco = build_plan(&ir, Scheme::CocoGen,
+                              PruneConfig::default(), 1);
+        assert_eq!(auto.weight_bytes(), coco.weight_bytes());
     }
 
     #[test]
@@ -408,12 +688,33 @@ mod tests {
     }
 
     #[test]
+    fn peak_activation_is_scheme_independent_and_positive() {
+        let ir = tiny_ir();
+        let a = build_plan(&ir, Scheme::DenseNaive,
+                           PruneConfig::default(), 1);
+        let b = build_plan(&ir, Scheme::CocoGenQuant,
+                           PruneConfig::default(), 1);
+        assert_eq!(a.peak_activation_bytes(), b.peak_activation_bytes());
+        assert!(a.peak_activation_bytes() > 0);
+        // bounded by the sum of all layer outputs
+        let total: usize = ir
+            .layers
+            .iter()
+            .map(|l| l.output.elements() * 4)
+            .sum();
+        assert!(a.peak_activation_bytes() <= total);
+    }
+
+    #[test]
     fn deterministic_weights() {
         let ir = tiny_ir();
         let a = random_dense_weights(&ir, 7);
         let b = random_dense_weights(&ir, 7);
         match (&a[0], &b[0]) {
-            (LayerPlan::Dense(x), LayerPlan::Dense(y)) => {
+            (
+                LayerPlan::Dense { layer: x, .. },
+                LayerPlan::Dense { layer: y, .. },
+            ) => {
                 assert_eq!(x.weights, y.weights);
             }
             _ => panic!("expected dense"),

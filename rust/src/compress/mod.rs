@@ -6,14 +6,14 @@
 //!   Yields much better compression than CSR because tap positions are a
 //!   1-byte pattern id instead of per-weight indices.
 //! * `CsrLayer` — conventional compressed-sparse-row over the flattened
-//!   [cout][cin*kh*kw] matrix; the baseline the paper compares against
+//!   `[cout][cin*kh*kw]` matrix; the baseline the paper compares against
 //!   (and what non-structured pruning must use).
 //! * `DenseLayer` — OIHW dense weights for the naive/im2col/xla engines.
 
 use crate::patterns::connectivity::ConnectivityMask;
 use crate::patterns::{self, PatternId, PATTERN_SET_4};
 
-/// Dense conv weights, OIHW layout: w[co][ci][ky][kx].
+/// Dense conv weights, OIHW layout: `w[co][ci][ky][kx]`.
 #[derive(Debug, Clone)]
 pub struct DenseLayer {
     pub cout: usize,
@@ -34,7 +34,26 @@ impl DenseLayer {
     }
 }
 
-/// CSR over the flattened [cout][cin*kh*kw] weight matrix.
+/// Flat f32 weights + bias — the shape depthwise-conv and FC layers
+/// share (`w[c][ky][kx]` resp. `w[cout][cin_flat]`), so plan accounting
+/// (`LayerPlan::weight_bytes`) has one code path for both.
+#[derive(Debug, Clone)]
+pub struct FlatWeights {
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl FlatWeights {
+    pub fn new(weights: Vec<f32>, bias: Vec<f32>) -> FlatWeights {
+        FlatWeights { weights, bias }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        (self.weights.len() + self.bias.len()) * 4
+    }
+}
+
+/// CSR over the flattened `[cout][cin*kh*kw]` weight matrix.
 #[derive(Debug, Clone)]
 pub struct CsrLayer {
     pub cout: usize,
@@ -137,7 +156,8 @@ pub struct FkwLayer {
     /// Physical filter order (after filter-kernel reorder); maps physical
     /// position -> original output-channel index.
     pub filter_order: Vec<u32>,
-    /// Per physical filter: [offsets[f], offsets[f+1]) indexes kernels/weights.
+    /// Per physical filter: `[offsets[f], offsets[f+1])` indexes
+    /// kernels/weights.
     pub offsets: Vec<u32>,
     /// Per surviving kernel: input channel + pattern id (sorted by pattern
     /// within each filter — the "kernel reorder" half of the pass).

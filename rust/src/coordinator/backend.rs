@@ -107,8 +107,13 @@ pub fn nhwc_to_chw(img: &[f32], h: usize, w: usize, c: usize) -> Tensor {
 /// The co-designed native path: a pattern-pruned [`ExecPlan`] served by
 /// an [`ExecutorPool`] — one single-threaded `ModelExecutor` per core —
 /// so live traffic runs on the FKW/CSR/Winograd engines with no PJRT (or
-/// Python) anywhere on the request path. Numerics are bit-identical to a
-/// direct `ModelExecutor::run` on the same image.
+/// Python) anywhere on the request path. `compile()` lowers the plan to
+/// its compiled op pipeline exactly once (per-layer kernel choice, bound
+/// weights, arena slot assignment — see `codegen::lower`); every pool
+/// worker then serves from that shared pipeline with its own fixed
+/// activation arena, so the steady-state request path performs no
+/// per-layer dispatch and no activation allocation. Numerics are
+/// bit-identical to a direct `ModelExecutor::run` on the same image.
 pub struct NativeBackend {
     name: String,
     plan: Arc<ExecPlan>,

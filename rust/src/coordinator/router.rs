@@ -160,7 +160,7 @@ impl BackendState {
         self.penalty.load(Ordering::SeqCst) == 0
     }
     /// An infer failure takes the backend out of rotation for
-    /// [`UNHEALTHY_COOLDOWN`] routing decisions.
+    /// `UNHEALTHY_COOLDOWN` routing decisions.
     pub fn mark_unhealthy(&self) {
         self.penalty.store(UNHEALTHY_COOLDOWN, Ordering::SeqCst);
     }

@@ -7,7 +7,7 @@
 use crate::runtime::manifest::DatasetSpec;
 use crate::util::rng::Rng;
 
-/// A generated batch: x is NHWC [n, size, size, 3] flattened, y is [n].
+/// A generated batch: x is NHWC `[n, size, size, 3]` flattened, y is `[n]`.
 pub struct Batch {
     pub n: usize,
     pub size: usize,

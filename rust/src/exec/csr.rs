@@ -4,18 +4,28 @@
 //! rows are still walked in AXPY form where possible.
 
 use crate::compress::CsrLayer;
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 use crate::util::threadpool;
 
 /// Sparse conv2d from a CSR layer, SAME padding, optional fused ReLU.
 pub fn conv2d(input: &Tensor, layer: &CsrLayer, stride: usize, relu: bool,
               threads: usize) -> Tensor {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    conv2d_into(input.view(), layer, stride, relu, threads, &mut out.data);
+    out
+}
+
+/// [`conv2d`] writing into a preassigned output buffer (arena slot).
+pub fn conv2d_into(input: TensorView<'_>, layer: &CsrLayer, stride: usize,
+                   relu: bool, threads: usize, out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
     let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
     let hw = h_out * w_out;
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
     let khw = layer.kh * layer.kw;
-    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+    threadpool::parallel_chunks_mut(out, hw, threads, |co, plane| {
         plane.fill(layer.bias[co]);
         for e in layer.row_ptr[co] as usize..layer.row_ptr[co + 1] as usize {
             // Decode the flat column index — the per-weight cost that
@@ -64,7 +74,6 @@ pub fn conv2d(input: &Tensor, layer: &CsrLayer, stride: usize, relu: bool,
             }
         }
     });
-    out
 }
 
 #[cfg(test)]

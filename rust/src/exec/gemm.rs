@@ -1,6 +1,6 @@
 //! Blocked single-precision GEMM for the im2col engine and FC layers.
 //!
-//! C[M][N] += A[M][K] * B[K][N], all row-major. The kernel processes
+//! `C[M][N] += A[M][K] * B[K][N]`, all row-major. The kernel processes
 //! 4 rows of A at a time with a K-blocked broadcast-AXPY inner loop over
 //! contiguous rows of B — auto-vectorizes well and keeps the B row in
 //! registers/L1 across the 4 accumulator rows.

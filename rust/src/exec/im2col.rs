@@ -3,7 +3,7 @@
 
 use crate::compress::DenseLayer;
 use crate::exec::gemm::gemm;
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 use crate::quant::QuantDense;
 use crate::util::threadpool;
 
@@ -14,10 +14,10 @@ pub struct Im2colScratch {
     buf: Vec<f32>,
 }
 
-/// Fill `scratch` with the [K][HW] patch matrix for a (kh, kw, cin)
+/// Fill `scratch` with the `[K][HW]` patch matrix for a (kh, kw, cin)
 /// kernel over `input`; returns the output geometry. Shared by the f32
 /// and the weight-only-int8 GEMM paths.
-fn im2col_patches(input: &Tensor, kh: usize, kw: usize, cin: usize,
+fn im2col_patches(input: TensorView<'_>, kh: usize, kw: usize, cin: usize,
                   stride: usize, scratch: &mut Im2colScratch)
                   -> (usize, usize) {
     let (h_out, pad_h) = same_pad(input.h, kh, stride);
@@ -72,26 +72,36 @@ fn im2col_patches(input: &Tensor, kh: usize, kw: usize, cin: usize,
 /// Dense conv via im2col + GEMM, SAME padding, optional fused ReLU.
 pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
               threads: usize, scratch: &mut Im2colScratch) -> Tensor {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    conv2d_into(input.view(), layer, stride, relu, threads, scratch,
+                &mut out.data);
+    out
+}
+
+/// [`conv2d`] writing into a preassigned output buffer (arena slot);
+/// allocation-free once `scratch` has warmed to the layer's patch size.
+pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
+                   stride: usize, relu: bool, threads: usize,
+                   scratch: &mut Im2colScratch, out: &mut [f32]) {
     let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
                                         layer.cin, stride, scratch);
     let hw = h_out * w_out;
     let kdim = layer.cin * layer.kh * layer.kw;
     let cols = &scratch.buf;
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
 
     // C[cout][HW] = W[cout][K] x cols[K][HW]
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
-    // bias init
     for co in 0..layer.cout {
-        out.plane_mut(co).fill(layer.bias[co]);
+        out[co * hw..(co + 1) * hw].fill(layer.bias[co]);
     }
-    gemm(&layer.weights, cols, &mut out.data, layer.cout, kdim, hw,
-         threads);
+    gemm(&layer.weights, cols, out, layer.cout, kdim, hw, threads);
     if relu {
-        for v in out.data.iter_mut() {
+        for v in out.iter_mut() {
             *v = v.max(0.0);
         }
     }
-    out
 }
 
 /// Weight-only int8 conv via im2col: the f32 patch matrix is shared with
@@ -103,13 +113,26 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
 pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
                     relu: bool, threads: usize,
                     scratch: &mut Im2colScratch) -> Tensor {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    conv2d_quant_into(input.view(), layer, stride, relu, threads, scratch,
+                      &mut out.data);
+    out
+}
+
+/// [`conv2d_quant`] writing into a preassigned output buffer.
+pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantDense,
+                         stride: usize, relu: bool, threads: usize,
+                         scratch: &mut Im2colScratch, out: &mut [f32]) {
     let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
                                         layer.cin, stride, scratch);
     let hw = h_out * w_out;
     let kdim = layer.cin * layer.kh * layer.kw;
     let cols: &[f32] = &scratch.buf;
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
-    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
+    threadpool::parallel_chunks_mut(out, hw, threads, |co, plane| {
+        plane.fill(0.0);
         let wrow = &layer.weights[co * kdim..(co + 1) * kdim];
         for (k, &qw) in wrow.iter().enumerate() {
             if qw == 0 {
@@ -128,7 +151,6 @@ pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
             *v = if relu { x.max(0.0) } else { x };
         }
     });
-    out
 }
 
 #[cfg(test)]

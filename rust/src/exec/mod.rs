@@ -1,6 +1,12 @@
 //! Native executors: run an ExecPlan (IR + per-layer weights/strategy)
-//! over planar NCHW tensors. Four engines implement the Fig. 5 framework
-//! axis; all four are validated against each other by property tests.
+//! over planar NCHW tensors. The engines implement the Fig. 5 framework
+//! axis and are validated against each other by property tests.
+//!
+//! Execution is ahead-of-time compiled: `codegen::lower` turns the plan
+//! into a `CompiledPipeline` (per-layer kernel choice, bound weights,
+//! preassigned arena slots) exactly once; [`ModelExecutor::run`] is a
+//! flat walk over the compiled ops with zero per-layer dispatch and no
+//! activation allocation beyond its arena.
 
 pub mod csr;
 pub mod gemm;
@@ -15,59 +21,71 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-use crate::codegen::{ExecPlan, LayerPlan, Scheme};
-use crate::ir::LayerKind;
+use crate::codegen::{Arena, CompiledPipeline, ExecPlan};
 use crate::util::threadpool;
-pub use tensor::Tensor;
+pub use tensor::{Tensor, TensorView};
 
-/// How an executor holds its plan: borrowed for one-shot benchmark runs,
-/// shared (`Arc`) for long-lived serving workers that must be `Send`.
-enum PlanRef<'a> {
-    Borrowed(&'a ExecPlan),
-    Shared(Arc<ExecPlan>),
+/// Reusable engine scratch owned by one executor: the im2col patch
+/// matrix, the Winograd input/product buffers, and the pattern-GEMM
+/// shifted-input matrix. All warm to their steady-state sizes on the
+/// first inference and are never reallocated after.
+#[derive(Default)]
+pub struct ExecScratch {
+    pub im2col: im2col::Im2colScratch,
+    pub wino_u: Vec<f32>,
+    pub wino_m: Vec<f32>,
+    pub gemm_u: Vec<f32>,
 }
 
-impl<'a> PlanRef<'a> {
-    fn get(&self) -> &ExecPlan {
-        match self {
-            PlanRef::Borrowed(p) => p,
-            PlanRef::Shared(a) => a,
-        }
-    }
-}
-
-/// Stateful model executor (owns im2col scratch).
-pub struct ModelExecutor<'a> {
-    plan: PlanRef<'a>,
+/// Stateful model executor: a compiled pipeline plus the mutable state
+/// one inference stream needs (activation arena + engine scratch).
+///
+/// Owns no reference to the `ExecPlan` it was compiled from — the
+/// pipeline's ops hold `Arc`s to every weight they bind, so the
+/// executor is `Send + 'static` and serving workers can own one across
+/// threads while each weight tensor exists once per process.
+pub struct ModelExecutor {
     pub threads: usize,
-    scratch: im2col::Im2colScratch,
+    pipeline: Arc<CompiledPipeline>,
+    arena: Arena,
+    scratch: ExecScratch,
 }
 
-impl ModelExecutor<'static> {
-    /// Executor over a shared plan. The result is `Send` and borrows
-    /// nothing, so serving workers can own one across threads while the
-    /// weights stay in a single `Arc<ExecPlan>`.
-    pub fn shared(plan: Arc<ExecPlan>, threads: usize) -> ModelExecutor<'static> {
-        ModelExecutor {
-            plan: PlanRef::Shared(plan),
-            threads,
-            scratch: im2col::Im2colScratch::default(),
-        }
-    }
-}
-
-impl<'a> ModelExecutor<'a> {
-    pub fn new(plan: &'a ExecPlan, threads: usize) -> Self {
-        ModelExecutor {
-            plan: PlanRef::Borrowed(plan),
-            threads,
-            scratch: im2col::Im2colScratch::default(),
-        }
+impl ModelExecutor {
+    /// Compile `plan` and build an executor for it. The plan is not
+    /// retained; the pipeline keeps the bound weights alive.
+    pub fn new(plan: &ExecPlan, threads: usize) -> ModelExecutor {
+        Self::with_pipeline(Arc::new(plan.compile()), threads)
     }
 
-    /// The execution plan this executor runs.
-    pub fn plan(&self) -> &ExecPlan {
-        self.plan.get()
+    /// Executor over a shared plan (convenience for callers holding an
+    /// `Arc<ExecPlan>`; equivalent to [`ModelExecutor::new`]).
+    pub fn shared(plan: Arc<ExecPlan>, threads: usize) -> ModelExecutor {
+        Self::new(&plan, threads)
+    }
+
+    /// Executor over a pipeline compiled elsewhere (an `ExecutorPool`
+    /// lowers once and hands every slot the same `Arc`).
+    pub fn with_pipeline(pipeline: Arc<CompiledPipeline>, threads: usize)
+                         -> ModelExecutor {
+        let arena = Arena::for_pipeline(&pipeline);
+        ModelExecutor {
+            threads,
+            pipeline,
+            arena,
+            scratch: ExecScratch::default(),
+        }
+    }
+
+    /// The compiled op pipeline (kernel choices, slot assignment).
+    pub fn pipeline(&self) -> &CompiledPipeline {
+        &self.pipeline
+    }
+
+    /// Resident bytes of the activation arena. Constant across runs —
+    /// the regression guard the arena-reuse tests assert on.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena.bytes()
     }
 
     /// Run a batch of inputs sequentially on this executor, preserving
@@ -77,119 +95,35 @@ impl<'a> ModelExecutor<'a> {
     }
 
     /// Run one input through the model; returns the final tensor.
+    ///
+    /// This is a straight walk over the compiled ops: dispatch happened
+    /// once, at lowering, and every intermediate activation lives in a
+    /// preassigned arena slot.
     pub fn run(&mut self, input: &Tensor) -> Tensor {
-        let plan = self.plan.get();
-        assert_eq!(input.shape(), plan.ir.input,
-                   "input shape mismatch");
-        let n = plan.ir.layers.len();
-        // Keep outputs that later Add layers reference.
-        let mut needed = vec![false; n];
-        for l in &plan.ir.layers {
-            if let LayerKind::Add { from, .. } = l.kind {
-                needed[from] = true;
-            }
-        }
-        let mut saved: Vec<Option<Tensor>> = vec![None; n];
-        let mut cur = input.clone();
-        for (i, (layer, lplan)) in plan
-            .ir
-            .layers
-            .iter()
-            .zip(&plan.layers)
-            .enumerate()
-        {
-            let out = match (&layer.kind, lplan) {
-                (LayerKind::Conv { stride, relu, .. }, LayerPlan::Dense(d)) => {
-                    // Dense layers inside non-naive schemes (1x1 convs the
-                    // pattern pass leaves dense, CSR scheme's non-3x3
-                    // layers) use the strong im2col lowering; only the
-                    // DenseNaive baseline is interpreter-style throughout.
-                    // The Winograd scheme applies F(2x2,3x3) where legal.
-                    match plan.scheme {
-                        Scheme::DenseNaive => naive::conv2d(
-                            &cur, d, *stride, *relu, self.threads,
-                        ),
-                        Scheme::DenseWinograd
-                            if d.kh == 3 && d.kw == 3 && *stride == 1 =>
-                        {
-                            winograd::conv2d(&cur, d, *relu, self.threads)
-                        }
-                        _ => im2col::conv2d(
-                            &cur, d, *stride, *relu, self.threads,
-                            &mut self.scratch,
-                        ),
-                    }
-                }
-                (LayerKind::Conv { stride, relu, .. }, LayerPlan::Csr(c)) => {
-                    csr::conv2d(&cur, c, *stride, *relu, self.threads)
-                }
-                (
-                    LayerKind::Conv { stride, relu, .. },
-                    LayerPlan::Fkw { layer: f, tile },
-                ) => pattern::conv2d_auto(&cur, f, *stride, *relu,
-                                          self.threads, *tile),
-                (
-                    LayerKind::Conv { stride, relu, .. },
-                    LayerPlan::QuantDense(q),
-                ) => {
-                    // Weight-only int8 dense conv (the layers the pattern
-                    // pass leaves dense under CocoGenQuant, e.g. 1x1):
-                    // always the im2col lowering with i8 weight rows.
-                    im2col::conv2d_quant(
-                        &cur, q, *stride, *relu, self.threads,
-                        &mut self.scratch,
-                    )
-                }
-                (
-                    LayerKind::Conv { stride, relu, .. },
-                    LayerPlan::QuantFkw { layer: q, tile },
-                ) => pattern::conv2d_quant_auto(&cur, q, *stride, *relu,
-                                                self.threads, *tile),
-                (
-                    LayerKind::DwConv { stride, relu },
-                    LayerPlan::Depthwise { weights, bias },
-                ) => ops::depthwise3x3(&cur, weights, bias, *stride, *relu),
-                (LayerKind::MaxPool2, _) => ops::maxpool2(&cur),
-                (LayerKind::GlobalAvgPool, _) => ops::gap(&cur),
-                (
-                    LayerKind::Dense { cout, relu },
-                    LayerPlan::Fc { weights, bias },
-                ) => ops::dense(&cur, weights, bias, *cout, *relu),
-                (LayerKind::Add { from, relu }, _) => {
-                    let skip = saved[*from]
-                        .as_ref()
-                        .expect("Add source not saved");
-                    ops::add(&cur, skip, *relu)
-                }
-                (k, p) => panic!(
-                    "layer {} kind {:?} has incompatible plan {:?}",
-                    layer.name, k, std::mem::discriminant(p)
-                ),
-            };
-            if needed[i] {
-                saved[i] = Some(out.clone());
-            }
-            cur = out;
-        }
-        cur
+        self.pipeline
+            .execute(input, &mut self.arena, &mut self.scratch,
+                     self.threads)
     }
 }
 
-/// A fixed pool of [`ModelExecutor`] workers sharing one `Arc<ExecPlan>`.
+/// A fixed pool of [`ModelExecutor`] workers sharing one compiled
+/// pipeline: the plan is lowered exactly once per pool ("compile once,
+/// serve everywhere") and the pipeline's `Arc`-bound weights exist once
+/// per process no matter how many slots serve them.
 ///
-/// Each slot owns its executor (and thus its im2col scratch), so a batch
-/// fans out across cores without cloning weights or re-allocating
-/// scratch buffers. Executors run single-threaded (`threads = 1`):
-/// parallelism comes from running pool slots concurrently, which keeps
-/// per-image numerics bit-identical to a sequential
-/// `ModelExecutor::run` — the property the serving tests assert.
+/// Each slot owns its executor (and thus its arena + scratch), so a
+/// batch fans out across cores without cloning weights or re-allocating
+/// buffers. Executors run single-threaded (`threads = 1`): parallelism
+/// comes from running pool slots concurrently, which keeps per-image
+/// numerics bit-identical to a sequential `ModelExecutor::run` — the
+/// property the serving tests assert.
 ///
 /// Free slots live in a Condvar-blocked index queue: a claimer with no
 /// free slot *parks* until one is released instead of burning a core in
 /// a yield loop — pools shared across concurrent `run_batch` callers
 /// (several serving coordinators, tests) routinely oversubscribe.
 pub struct ExecutorPool {
-    slots: Vec<Mutex<ModelExecutor<'static>>>,
+    slots: Vec<Mutex<ModelExecutor>>,
     /// Indices of currently-free slots.
     free: Mutex<Vec<usize>>,
     available: Condvar,
@@ -201,13 +135,13 @@ pub struct ExecutorPool {
 /// An exclusively-claimed pool slot; releases its index (and wakes one
 /// parked claimer) on drop.
 struct PoolSlot<'a> {
-    exec: Option<MutexGuard<'a, ModelExecutor<'static>>>,
+    exec: Option<MutexGuard<'a, ModelExecutor>>,
     index: usize,
     pool: &'a ExecutorPool,
 }
 
 impl Deref for PoolSlot<'_> {
-    type Target = ModelExecutor<'static>;
+    type Target = ModelExecutor;
     fn deref(&self) -> &Self::Target {
         self.exec.as_ref().unwrap()
     }
@@ -230,13 +164,19 @@ impl Drop for PoolSlot<'_> {
 
 impl ExecutorPool {
     /// Pool with `workers` executor slots (clamped to at least 1) over a
-    /// shared plan. Serving backends size this to one slot per core via
-    /// `util::threadpool::default_threads`.
+    /// shared plan, lowered once. Serving backends size this to one slot
+    /// per core via `util::threadpool::default_threads`.
     pub fn new(plan: Arc<ExecPlan>, workers: usize) -> ExecutorPool {
         let workers = workers.max(1);
+        let pipeline = Arc::new(plan.compile());
         ExecutorPool {
             slots: (0..workers)
-                .map(|_| Mutex::new(ModelExecutor::shared(plan.clone(), 1)))
+                .map(|_| {
+                    Mutex::new(ModelExecutor::with_pipeline(
+                        pipeline.clone(),
+                        1,
+                    ))
+                })
                 .collect(),
             free: Mutex::new((0..workers).collect()),
             available: Condvar::new(),
@@ -370,6 +310,41 @@ mod tests {
         let out = ModelExecutor::new(&p, 2).run(&x);
         assert_eq!(out.c, 5);
         assert!(out.iter_finite());
+    }
+
+    #[test]
+    fn winograd_scheme_runs_through_pretransformed_weights() {
+        let ir = tiny_ir();
+        let wino = build_plan(&ir, Scheme::DenseWinograd,
+                              PruneConfig::default(), 42);
+        let naive = build_plan(&ir, Scheme::DenseNaive,
+                               PruneConfig::default(), 42);
+        let mut rng = Rng::seed_from(8);
+        let x = Tensor::random(3, 12, 12, &mut rng);
+        let a = ModelExecutor::new(&wino, 2).run(&x);
+        let b = ModelExecutor::new(&naive, 2).run(&x);
+        assert!(a.max_abs_diff(&b) < 1e-3, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn arena_is_reused_across_runs_without_growth() {
+        let ir = tiny_ir();
+        let p = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                           42);
+        let mut exec = ModelExecutor::new(&p, 2);
+        let mut rng = Rng::seed_from(11);
+        let x1 = Tensor::random(3, 12, 12, &mut rng);
+        let x2 = Tensor::random(3, 12, 12, &mut rng);
+        let out1 = exec.run(&x1);
+        let bytes = exec.arena_bytes();
+        assert_eq!(bytes, p.peak_activation_bytes());
+        // interleave a different input, then repeat the first: identical
+        // results out of recycled buffers, no arena growth
+        let _ = exec.run(&x2);
+        let out1_again = exec.run(&x1);
+        assert_eq!(out1.data, out1_again.data,
+                   "stale arena contents leaked into a later run");
+        assert_eq!(exec.arena_bytes(), bytes, "arena grew across runs");
     }
 
     #[test]

@@ -4,18 +4,31 @@
 //! what the compiler finds on its own.
 
 use crate::compress::DenseLayer;
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 use crate::quant::QuantDense;
 use crate::util::threadpool;
 
 /// Dense conv2d, SAME padding, optional fused ReLU.
 pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize,
               relu: bool, threads: usize) -> Tensor {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    conv2d_into(input.view(), layer, stride, relu, threads, &mut out.data);
+    out
+}
+
+/// [`conv2d`] writing into a preassigned output buffer (arena slot) of
+/// exactly `cout * h_out * w_out` elements — the compiled-pipeline entry
+/// point; performs no allocation.
+pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
+                   stride: usize, relu: bool, threads: usize,
+                   out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
     let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
     let hw = h_out * w_out;
-    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
+    threadpool::parallel_chunks_mut(out, hw, threads, |co, plane| {
         for y in 0..h_out {
             for x in 0..w_out {
                 let mut acc = layer.bias[co];
@@ -40,7 +53,6 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize,
             }
         }
     });
-    out
 }
 
 /// Weight-only int8 dense conv, SAME padding, optional fused ReLU.
@@ -51,12 +63,24 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize,
 /// materialization, no allocation beyond the output tensor.
 pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
                     relu: bool, threads: usize) -> Tensor {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    conv2d_quant_into(input.view(), layer, stride, relu, threads,
+                      &mut out.data);
+    out
+}
+
+/// [`conv2d_quant`] writing into a preassigned output buffer.
+pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantDense,
+                         stride: usize, relu: bool, threads: usize,
+                         out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, layer.kh, stride);
     let (w_out, pad_w) = same_pad(input.w, layer.kw, stride);
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
     let hw = h_out * w_out;
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
     let per = layer.cin * layer.kh * layer.kw;
-    threadpool::parallel_chunks_mut(&mut out.data, hw, threads, |co, plane| {
+    threadpool::parallel_chunks_mut(out, hw, threads, |co, plane| {
         let wrow = &layer.weights[co * per..(co + 1) * per];
         let scale = layer.scales[co];
         let bias = layer.bias[co];
@@ -87,7 +111,6 @@ pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
             }
         }
     });
-    out
 }
 
 #[cfg(test)]

@@ -1,20 +1,38 @@
 //! Shared non-conv ops: depthwise conv, max-pool, global average pool,
 //! fully connected, residual add.
+//!
+//! Each op has two entry points: a one-shot form returning a fresh
+//! [`Tensor`] (benchmarks, oracle tests) and a `*_into` form writing
+//! into a preassigned buffer — what the compiled-op pipeline calls so
+//! steady-state inference allocates nothing beyond its arena.
 
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 
-/// Depthwise 3x3 conv, SAME padding; weights w[c][ky][kx], bias[c].
+/// Depthwise 3x3 conv, SAME padding; weights `w[c][ky][kx]`, `bias[c]`.
 pub fn depthwise3x3(input: &Tensor, weights: &[f32], bias: &[f32],
                     stride: usize, relu: bool) -> Tensor {
+    let (h_out, _) = same_pad(input.h, 3, stride);
+    let (w_out, _) = same_pad(input.w, 3, stride);
+    let mut out = Tensor::zeros(input.c, h_out, w_out);
+    depthwise3x3_into(input.view(), weights, bias, stride, relu,
+                      &mut out.data);
+    out
+}
+
+/// [`depthwise3x3`] writing into a preassigned output buffer.
+pub fn depthwise3x3_into(input: TensorView<'_>, weights: &[f32],
+                         bias: &[f32], stride: usize, relu: bool,
+                         out: &mut [f32]) {
     assert_eq!(weights.len(), 9 * input.c);
     let (h_out, pad_h) = same_pad(input.h, 3, stride);
     let (w_out, pad_w) = same_pad(input.w, 3, stride);
-    let mut out = Tensor::zeros(input.c, h_out, w_out);
+    let hw = h_out * w_out;
+    assert_eq!(out.len(), input.c * hw, "output buffer size mismatch");
     for c in 0..input.c {
         let in_plane = input.plane(c);
         let w9 = &weights[c * 9..c * 9 + 9];
         let b = bias[c];
-        let plane = out.plane_mut(c);
+        let plane = &mut out[c * hw..(c + 1) * hw];
         plane.fill(b);
         for ky in 0..3 {
             for kx in 0..3 {
@@ -46,7 +64,6 @@ pub fn depthwise3x3(input: &Tensor, weights: &[f32], bias: &[f32],
             }
         }
     }
-    out
 }
 
 /// 2x2 max pool, stride 2, SAME (ceil) semantics.
@@ -54,9 +71,19 @@ pub fn maxpool2(input: &Tensor) -> Tensor {
     let h_out = input.h.div_ceil(2);
     let w_out = input.w.div_ceil(2);
     let mut out = Tensor::zeros(input.c, h_out, w_out);
+    maxpool2_into(input.view(), &mut out.data);
+    out
+}
+
+/// [`maxpool2`] writing into a preassigned output buffer.
+pub fn maxpool2_into(input: TensorView<'_>, out: &mut [f32]) {
+    let h_out = input.h.div_ceil(2);
+    let w_out = input.w.div_ceil(2);
+    let hw = h_out * w_out;
+    assert_eq!(out.len(), input.c * hw, "output buffer size mismatch");
     for c in 0..input.c {
         let in_plane = input.plane(c);
-        let plane = out.plane_mut(c);
+        let plane = &mut out[c * hw..(c + 1) * hw];
         for y in 0..h_out {
             for x in 0..w_out {
                 let mut m = f32::NEG_INFINITY;
@@ -73,47 +100,66 @@ pub fn maxpool2(input: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
 /// Global average pool -> [C,1,1].
 pub fn gap(input: &Tensor) -> Tensor {
     let mut out = Tensor::zeros(input.c, 1, 1);
-    let hw = (input.h * input.w) as f32;
-    for c in 0..input.c {
-        out.data[c] = input.plane(c).iter().sum::<f32>() / hw;
-    }
+    gap_into(input.view(), &mut out.data);
     out
 }
 
-/// Fully connected over the flattened input; w[cout][cin_flat].
+/// [`gap`] writing into a preassigned output buffer of `c` elements.
+pub fn gap_into(input: TensorView<'_>, out: &mut [f32]) {
+    assert_eq!(out.len(), input.c, "output buffer size mismatch");
+    let hw = (input.h * input.w) as f32;
+    for c in 0..input.c {
+        out[c] = input.plane(c).iter().sum::<f32>() / hw;
+    }
+}
+
+/// Fully connected over the flattened input; `w[cout][cin_flat]`.
 pub fn dense(input: &Tensor, weights: &[f32], bias: &[f32], cout: usize,
              relu: bool) -> Tensor {
-    let cin = input.data.len();
-    assert_eq!(weights.len(), cout * cin);
     let mut out = Tensor::zeros(cout, 1, 1);
-    for co in 0..cout {
+    dense_into(&input.data, weights, bias, cout, relu, &mut out.data);
+    out
+}
+
+/// [`dense`] over a flat input slice, writing into a preassigned output
+/// buffer of `cout` elements.
+pub fn dense_into(input: &[f32], weights: &[f32], bias: &[f32],
+                  cout: usize, relu: bool, out: &mut [f32]) {
+    let cin = input.len();
+    assert_eq!(weights.len(), cout * cin);
+    assert_eq!(out.len(), cout, "output buffer size mismatch");
+    for (co, o) in out.iter_mut().enumerate() {
         let row = &weights[co * cin..(co + 1) * cin];
         let mut acc = bias[co];
-        for (w, x) in row.iter().zip(&input.data) {
+        for (w, x) in row.iter().zip(input) {
             acc += w * x;
         }
-        out.data[co] = if relu { acc.max(0.0) } else { acc };
+        *o = if relu { acc.max(0.0) } else { acc };
     }
-    out
 }
 
 /// Elementwise residual add (+ optional ReLU).
 pub fn add(a: &Tensor, b: &Tensor, relu: bool) -> Tensor {
     assert_eq!(a.shape(), b.shape());
-    let mut out = a.clone();
-    for (o, v) in out.data.iter_mut().zip(&b.data) {
-        *o += *v;
-        if relu {
-            *o = o.max(0.0);
-        }
-    }
+    let mut out = Tensor::zeros(a.c, a.h, a.w);
+    add_into(&a.data, &b.data, relu, &mut out.data);
     out
+}
+
+/// [`add`] over flat slices, writing into a preassigned output buffer.
+/// `out` may not alias the inputs (the memory plan guarantees this).
+pub fn add_into(a: &[f32], b: &[f32], relu: bool, out: &mut [f32]) {
+    assert_eq!(a.len(), b.len(), "add operand length mismatch");
+    assert_eq!(out.len(), a.len(), "output buffer size mismatch");
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        let v = x + y;
+        *o = if relu { v.max(0.0) } else { v };
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +218,24 @@ mod tests {
         assert!((s.data[5] - (a.data[5] + b.data[5])).abs() < 1e-6);
         let r = add(&a, &b, true);
         assert!(r.data.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn into_forms_overwrite_stale_buffers() {
+        // Arena slots arrive dirty; every *_into must fully overwrite.
+        let mut rng = Rng::seed_from(7);
+        let input = Tensor::random(3, 6, 6, &mut rng);
+        let want = maxpool2(&input);
+        let mut buf = vec![f32::NAN; want.data.len()];
+        maxpool2_into(input.view(), &mut buf);
+        assert_eq!(buf, want.data);
+
+        let w: Vec<f32> = (0..27).map(|_| rng.normal_f32()).collect();
+        let b = vec![0.1f32; 3];
+        let want = depthwise3x3(&input, &w, &b, 1, true);
+        let mut buf = vec![f32::NAN; want.data.len()];
+        depthwise3x3_into(input.view(), &w, &b, 1, true, &mut buf);
+        assert_eq!(buf, want.data);
     }
 
     #[test]

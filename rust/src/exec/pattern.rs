@@ -4,10 +4,10 @@
 //! optimizes — see EXPERIMENTS.md §Perf.
 //!
 //! Execution structure (mirrors the generated mobile code):
-//!   parallel over reordered filter blocks (co_block)      [TLP]
-//!     per filter: walk its kernels (sorted by pattern)    [low divergence]
-//!       per pattern tap (static 4-entry unroll)           [ILP]
-//!         row AXPY over the output row                    [SIMD]
+//!   parallel over reordered filter blocks (co_block)      `[TLP]`
+//!     per filter: walk its kernels (sorted by pattern)    `[low divergence]`
+//!       per pattern tap (static 4-entry unroll)           `[ILP]`
+//!         row AXPY over the output row                    `[SIMD]`
 //! The input row needed by a tap is loaded once per (kernel, tap) and
 //! streamed through a contiguous AXPY; with the row tile sized by the
 //! tuner the touched input rows stay in L1 across the four taps — the
@@ -21,7 +21,7 @@
 
 use crate::codegen::TileConfig;
 use crate::compress::{FkwKernel, FkwLayer};
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 use crate::patterns::PATTERN_SET_4;
 use crate::quant::QuantFkw;
 
@@ -105,24 +105,57 @@ impl<'a> FkwView<'a> {
 /// downstream layers see unpermuted channels.
 pub fn conv2d(input: &Tensor, layer: &FkwLayer, stride: usize, relu: bool,
               threads: usize, tile: TileConfig) -> Tensor {
-    conv2d_view(input, &FkwView::from_f32(layer), stride, relu, threads,
-                tile)
+    alloc_out(input, layer.cout, stride, |view, out| {
+        conv2d_view_into(view, &FkwView::from_f32(layer), stride, relu,
+                         threads, tile, out);
+    })
 }
 
 /// [`conv2d`] over weight-only int8 weights (dequant-on-load).
 pub fn conv2d_quant(input: &Tensor, layer: &QuantFkw, stride: usize,
                     relu: bool, threads: usize, tile: TileConfig)
                     -> Tensor {
-    conv2d_view(input, &FkwView::from_quant(layer), stride, relu, threads,
-                tile)
+    alloc_out(input, layer.cout, stride, |view, out| {
+        conv2d_view_into(view, &FkwView::from_quant(layer), stride, relu,
+                         threads, tile, out);
+    })
 }
 
-fn conv2d_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
-               relu: bool, threads: usize, tile: TileConfig) -> Tensor {
+/// [`conv2d`] writing into a preassigned output buffer (arena slot).
+pub fn conv2d_into(input: TensorView<'_>, layer: &FkwLayer, stride: usize,
+                   relu: bool, threads: usize, tile: TileConfig,
+                   out: &mut [f32]) {
+    conv2d_view_into(input, &FkwView::from_f32(layer), stride, relu,
+                     threads, tile, out);
+}
+
+/// [`conv2d_quant`] writing into a preassigned output buffer.
+pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantFkw,
+                         stride: usize, relu: bool, threads: usize,
+                         tile: TileConfig, out: &mut [f32]) {
+    conv2d_view_into(input, &FkwView::from_quant(layer), stride, relu,
+                     threads, tile, out);
+}
+
+/// Allocate the output tensor of a 3x3 SAME conv and fill it via `f`.
+fn alloc_out<F>(input: &Tensor, cout: usize, stride: usize, f: F) -> Tensor
+where
+    F: FnOnce(TensorView<'_>, &mut [f32]),
+{
+    let (h_out, _) = same_pad(input.h, 3, stride);
+    let (w_out, _) = same_pad(input.w, 3, stride);
+    let mut out = Tensor::zeros(cout, h_out, w_out);
+    f(input.view(), &mut out.data);
+    out
+}
+
+fn conv2d_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
+                    stride: usize, relu: bool, threads: usize,
+                    tile: TileConfig, out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, 3, stride);
     let (w_out, pad_w) = same_pad(input.w, 3, stride);
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
     let hw = h_out * w_out;
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
     let co_block = tile.co_block.max(1);
     let h_tile = tile.h_tile.max(1);
     let cout = layer.cout;
@@ -130,7 +163,6 @@ fn conv2d_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
     // One slot per original output channel; each is taken exactly once by
     // the worker that owns the corresponding physical filter.
     let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
-        .data
         .chunks_mut(hw)
         .map(|c| std::sync::Mutex::new(Some(c)))
         .collect();
@@ -157,17 +189,15 @@ fn conv2d_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
             });
         }
     });
-    drop(plane_slots);
-    out
 }
 
 /// Compute one filter's output plane.
 #[inline]
 #[allow(clippy::too_many_arguments)]
-fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwView<'_>,
-               phys: usize, co: usize, stride: usize, relu: bool,
-               h_tile: usize, h_out: usize, w_out: usize, pad_h: usize,
-               pad_w: usize) {
+fn filter_conv(plane: &mut [f32], input: TensorView<'_>,
+               layer: &FkwView<'_>, phys: usize, co: usize, stride: usize,
+               relu: bool, h_tile: usize, h_out: usize, w_out: usize,
+               pad_h: usize, pad_w: usize) {
     plane.fill(layer.bias[co]);
     let k_lo = layer.offsets[phys] as usize;
     let k_hi = layer.offsets[phys + 1] as usize;
@@ -272,8 +302,45 @@ fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwView<'_>,
     }
 }
 
+/// The compile-time half of the pattern-GEMM lowering: which (ci, tap)
+/// shifted-input rows the layer's surviving kernels actually touch.
+/// Depends only on the layer *structure*, so the plan lowering builds it
+/// once and every inference reuses it.
+#[derive(Debug, Clone)]
+pub struct PatternGemmPlan {
+    /// [(ci * 9) + tap_id] -> row index in U, or `u32::MAX` if unused.
+    row_of: Vec<u32>,
+    /// Number of live rows in U.
+    n_rows: usize,
+}
+
+impl PatternGemmPlan {
+    /// Build the row map for a layer's surviving kernels.
+    pub fn build(cin: usize, kernels: &[FkwKernel]) -> PatternGemmPlan {
+        let mut used = vec![false; cin * 9];
+        for k in kernels {
+            let taps = &PATTERN_SET_4[k.pattern as usize];
+            for &(dy, dx) in taps {
+                used[k.ci as usize * 9 + dy * 3 + dx] = true;
+            }
+        }
+        let mut row_of = vec![u32::MAX; cin * 9];
+        let mut next = 0u32;
+        for (i, u) in used.iter().enumerate() {
+            if *u {
+                row_of[i] = next;
+                next += 1;
+            }
+        }
+        PatternGemmPlan {
+            row_of,
+            n_rows: next as usize,
+        }
+    }
+}
+
 /// Pattern-aware im2col + GEMM path: build the shifted-input matrix
-/// U[(ci,tap)][hw] ONCE for the union of taps that actually occur, then
+/// `U[(ci,tap)][hw]` ONCE for the union of taps that actually occur, then
 /// one GEMM per filter row over its surviving (ci,tap) columns.
 ///
 /// Chosen by the dispatcher for deep layers (small spatial dims, large
@@ -283,46 +350,62 @@ fn filter_conv(plane: &mut [f32], input: &Tensor, layer: &FkwView<'_>,
 /// lowering" counterpart of the paper's GPU code generation.
 pub fn conv2d_gemm(input: &Tensor, layer: &FkwLayer, stride: usize,
                    relu: bool, threads: usize) -> Tensor {
-    conv2d_gemm_view(input, &FkwView::from_f32(layer), stride, relu,
-                     threads)
+    let gp = PatternGemmPlan::build(layer.cin, &layer.kernels);
+    let mut u_buf = Vec::new();
+    alloc_out(input, layer.cout, stride, |view, out| {
+        conv2d_gemm_view_into(view, &FkwView::from_f32(layer), stride,
+                              relu, threads, &gp, &mut u_buf, out);
+    })
 }
 
 /// [`conv2d_gemm`] over weight-only int8 weights (dequant-on-load).
 pub fn conv2d_gemm_quant(input: &Tensor, layer: &QuantFkw, stride: usize,
                          relu: bool, threads: usize) -> Tensor {
-    conv2d_gemm_view(input, &FkwView::from_quant(layer), stride, relu,
-                     threads)
+    let gp = PatternGemmPlan::build(layer.cin, &layer.kernels);
+    let mut u_buf = Vec::new();
+    alloc_out(input, layer.cout, stride, |view, out| {
+        conv2d_gemm_view_into(view, &FkwView::from_quant(layer), stride,
+                              relu, threads, &gp, &mut u_buf, out);
+    })
 }
 
-fn conv2d_gemm_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
-                    relu: bool, threads: usize) -> Tensor {
+/// [`conv2d_gemm`] writing into a preassigned output buffer, with the
+/// row map precomputed at lowering time and the U matrix in a reusable
+/// scratch buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm_into(input: TensorView<'_>, layer: &FkwLayer,
+                        stride: usize, relu: bool, threads: usize,
+                        gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                        out: &mut [f32]) {
+    conv2d_gemm_view_into(input, &FkwView::from_f32(layer), stride, relu,
+                          threads, gp, u_buf, out);
+}
+
+/// [`conv2d_gemm_quant`] writing into a preassigned output buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm_quant_into(input: TensorView<'_>, layer: &QuantFkw,
+                              stride: usize, relu: bool, threads: usize,
+                              gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                              out: &mut [f32]) {
+    conv2d_gemm_view_into(input, &FkwView::from_quant(layer), stride,
+                          relu, threads, gp, u_buf, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_gemm_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
+                         stride: usize, relu: bool, threads: usize,
+                         gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                         out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, 3, stride);
     let (w_out, pad_w) = same_pad(input.w, 3, stride);
     let hw = h_out * w_out;
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
     let cin = layer.cin;
-    // U rows: (ci, tap) -> shifted plane. Build all 9 possible taps only
-    // if used; index map [(ci * 9) + tap_id] -> row in U (dense alloc,
-    // rows built lazily by a used-bitmap).
-    let mut used = vec![false; cin * 9];
-    for k in layer.kernels {
-        let taps = &PATTERN_SET_4[k.pattern as usize];
-        for &(dy, dx) in taps {
-            used[k.ci as usize * 9 + dy * 3 + dx] = true;
-        }
-    }
-    let row_of: Vec<u32> = {
-        let mut map = vec![u32::MAX; cin * 9];
-        let mut next = 0u32;
-        for (i, u) in used.iter().enumerate() {
-            if *u {
-                map[i] = next;
-                next += 1;
-            }
-        }
-        map
-    };
-    let n_rows = row_of.iter().filter(|r| **r != u32::MAX).count();
-    let mut u_mat = vec![0f32; n_rows * hw];
+    let row_of = &gp.row_of;
+    assert_eq!(row_of.len(), cin * 9, "gemm plan built for other layer");
+    u_buf.clear();
+    u_buf.resize(gp.n_rows * hw, 0.0);
+    let u_mat = &mut u_buf[..];
     for ci in 0..cin {
         let plane = input.plane(ci);
         for dy in 0..3 {
@@ -363,9 +446,8 @@ fn conv2d_gemm_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
         }
     }
     // Per-filter sparse-row GEMV over the shared U.
-    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let u_mat = &u_mat[..];
     let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
-        .data
         .chunks_mut(hw)
         .map(|c| std::sync::Mutex::new(Some(c)))
         .collect();
@@ -410,8 +492,6 @@ fn conv2d_gemm_view(input: &Tensor, layer: &FkwView<'_>, stride: usize,
             });
         }
     });
-    drop(plane_slots);
-    out
 }
 
 /// Dispatch on the tuner's path decision (TileConfig::use_gemm).

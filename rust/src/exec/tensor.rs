@@ -8,7 +8,7 @@
 use crate::ir::Chw;
 use crate::util::rng::Rng;
 
-/// A single-image activation tensor: planar [C][H][W], f32.
+/// A single-image activation tensor: planar `[C][H][W]`, f32.
 #[derive(Debug, Clone)]
 pub struct Tensor {
     pub c: usize,
@@ -77,6 +77,56 @@ impl Tensor {
 
     pub fn iter_finite(&self) -> bool {
         self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Borrowed view of this tensor (what the `*_into` kernel entry
+    /// points consume, so arena slots can feed kernels without owning a
+    /// `Tensor`).
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView::new(self.c, self.h, self.w, &self.data)
+    }
+}
+
+/// Borrowed planar `[C][H][W]` activation view. The compiled-op pipeline
+/// reads layer inputs straight out of arena slots through this — same
+/// accessors as [`Tensor`], no ownership, no copy.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(c: usize, h: usize, w: usize, data: &'a [f32])
+               -> TensorView<'a> {
+        assert_eq!(data.len(), c * h * w, "view length mismatch");
+        TensorView { c, h, w, data }
+    }
+
+    pub fn shape(&self) -> Chw {
+        Chw::new(self.c, self.h, self.w)
+    }
+
+    #[inline]
+    pub fn plane(&self, c: usize) -> &'a [f32] {
+        &self.data[c * self.h * self.w..(c + 1) * self.h * self.w]
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Copy into an owned tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor {
+            c: self.c,
+            h: self.h,
+            w: self.w,
+            data: self.data.to_vec(),
+        }
     }
 }
 

@@ -10,7 +10,7 @@
 
 use crate::compress::DenseLayer;
 use crate::exec::gemm::gemm;
-use crate::exec::tensor::{same_pad, Tensor};
+use crate::exec::tensor::{same_pad, Tensor, TensorView};
 
 /// Transform one 3x3 kernel g -> 4x4: G g G^T.
 fn transform_kernel(g: &[f32]) -> [f32; 16] {
@@ -83,31 +83,77 @@ fn transform_output(m: &[f32; 16]) -> [f32; 4] {
     ]
 }
 
+/// Winograd-domain weights, transformed once at plan-lowering time so
+/// the per-inference path skips the `G g G^T` kernel transform entirely
+/// (the compiled pipeline binds these instead of the raw `DenseLayer`).
+#[derive(Debug, Clone)]
+pub struct WinogradWeights {
+    pub cout: usize,
+    pub cin: usize,
+    /// `V[16][cout][cin]`: per-frequency transformed kernels.
+    pub v: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl WinogradWeights {
+    /// Transform a dense 3x3 layer into the Winograd domain.
+    pub fn transform(layer: &DenseLayer) -> WinogradWeights {
+        assert_eq!(layer.kh, 3);
+        assert_eq!(layer.kw, 3);
+        let (cin, cout) = (layer.cin, layer.cout);
+        let mut v = vec![0f32; 16 * cout * cin];
+        for co in 0..cout {
+            for ci in 0..cin {
+                let base = (co * cin + ci) * 9;
+                let tk = transform_kernel(&layer.weights[base..base + 9]);
+                for f in 0..16 {
+                    v[(f * cout + co) * cin + ci] = tk[f];
+                }
+            }
+        }
+        WinogradWeights {
+            cout,
+            cin,
+            v,
+            bias: layer.bias.clone(),
+        }
+    }
+}
+
 /// Winograd conv2d (3x3, stride 1 only), SAME padding.
 pub fn conv2d(input: &Tensor, layer: &DenseLayer, relu: bool,
               threads: usize) -> Tensor {
-    assert_eq!(layer.kh, 3);
-    assert_eq!(layer.kw, 3);
+    let tw = WinogradWeights::transform(layer);
+    let (h_out, _) = same_pad(input.h, 3, 1);
+    let (w_out, _) = same_pad(input.w, 3, 1);
+    let mut out = Tensor::zeros(layer.cout, h_out, w_out);
+    let (mut u, mut m) = (Vec::new(), Vec::new());
+    conv2d_pre_into(input.view(), &tw, relu, threads, &mut u, &mut m,
+                    &mut out.data);
+    out
+}
+
+/// Winograd conv over pre-transformed weights, writing into a
+/// preassigned output buffer. `u_buf`/`m_buf` are reusable scratch for
+/// the transformed input tiles and the per-frequency GEMM results —
+/// allocation-free once warmed to this layer's tile count.
+pub fn conv2d_pre_into(input: TensorView<'_>, layer: &WinogradWeights,
+                       relu: bool, threads: usize, u_buf: &mut Vec<f32>,
+                       m_buf: &mut Vec<f32>, out: &mut [f32]) {
     let (h_out, pad_h) = same_pad(input.h, 3, 1);
     let (w_out, pad_w) = same_pad(input.w, 3, 1);
     let th = h_out.div_ceil(2);
     let tw = w_out.div_ceil(2);
     let tiles = th * tw;
     let (cin, cout) = (layer.cin, layer.cout);
+    assert_eq!(out.len(), cout * h_out * w_out,
+               "output buffer size mismatch");
 
-    // V[16][cout][cin]: transformed kernels.
-    let mut v = vec![0f32; 16 * cout * cin];
-    for co in 0..cout {
-        for ci in 0..cin {
-            let base = (co * cin + ci) * 9;
-            let tk = transform_kernel(&layer.weights[base..base + 9]);
-            for f in 0..16 {
-                v[(f * cout + co) * cin + ci] = tk[f];
-            }
-        }
-    }
+    let v = &layer.v;
     // U[16][cin][tiles]: transformed input tiles.
-    let mut u = vec![0f32; 16 * cin * tiles];
+    u_buf.clear();
+    u_buf.resize(16 * cin * tiles, 0.0);
+    let u = &mut u_buf[..];
     for ci in 0..cin {
         let plane = input.plane(ci);
         for ty in 0..th {
@@ -135,7 +181,9 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, relu: bool,
         }
     }
     // M[16][cout][tiles] = V[f] @ U[f] (16 GEMMs).
-    let mut m = vec![0f32; 16 * cout * tiles];
+    m_buf.clear();
+    m_buf.resize(16 * cout * tiles, 0.0);
+    let m = &mut m_buf[..];
     for f in 0..16 {
         gemm(
             &v[f * cout * cin..(f + 1) * cout * cin],
@@ -148,10 +196,9 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, relu: bool,
         );
     }
     // Inverse transform into the output.
-    let mut out = Tensor::zeros(cout, h_out, w_out);
     for co in 0..cout {
         let b = layer.bias[co];
-        let plane = out.plane_mut(co);
+        let plane = &mut out[co * h_out * w_out..(co + 1) * h_out * w_out];
         for ty in 0..th {
             for tx in 0..tw {
                 let t = ty * tw + tx;
@@ -174,7 +221,6 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, relu: bool,
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

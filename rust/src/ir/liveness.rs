@@ -1,0 +1,190 @@
+//! Liveness analysis and static activation-memory planning over the LR.
+//!
+//! The executor used to allocate a fresh output tensor per layer per
+//! inference and keep clones of every `Add` source alive. This pass
+//! computes, ahead of time, how long each layer's output actually lives
+//! (its last reader — the next layer, or a later `Add` skip-link) and
+//! assigns every output to a slot in a small arena of reusable buffers.
+//! A chain model needs 2 slots; a residual model needs 3 — independent
+//! of depth — so steady-state inference performs no activation
+//! allocation at all.
+//!
+//! `codegen::lower` consumes the [`MemoryPlan`] when compiling an
+//! `ExecPlan` into its op pipeline;
+//! `codegen::ExecPlan::peak_activation_bytes` reports its footprint next
+//! to `weight_bytes()`.
+
+use super::{LayerKind, ModelIR};
+
+/// For each layer output, the index of its last reader.
+///
+/// Layer `i`'s output is read by layer `i + 1` (the linear chain) and by
+/// any later `Add { from: i, .. }` layer. The final layer's output is
+/// the model result and gets the sentinel `n` (alive past the end).
+pub fn last_uses(ir: &ModelIR) -> Vec<usize> {
+    let n = ir.layers.len();
+    let mut last: Vec<usize> = (0..n).map(|i| (i + 1).min(n)).collect();
+    if n > 0 {
+        last[n - 1] = n;
+    }
+    for (j, l) in ir.layers.iter().enumerate() {
+        if let LayerKind::Add { from, .. } = l.kind {
+            last[from] = last[from].max(j);
+        }
+    }
+    last
+}
+
+/// Static assignment of layer outputs to reusable arena slots.
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// Arena slot holding each layer's output.
+    pub slot_of: Vec<usize>,
+    /// Element capacity of each slot (max over its tenants).
+    pub slot_elems: Vec<usize>,
+}
+
+impl MemoryPlan {
+    /// Greedy linear scan: walk layers in execution order, reusing any
+    /// slot whose current tenant was last read strictly before this op
+    /// (a tenant with `last_use == i` is still being read *by* op `i`,
+    /// so its slot can never double as op `i`'s output — that rule is
+    /// what makes every op safely out-of-place). Among free slots the
+    /// best fit wins: smallest one that already holds the output, else
+    /// the one needing the least growth.
+    pub fn build(ir: &ModelIR) -> MemoryPlan {
+        let n = ir.layers.len();
+        let last = last_uses(ir);
+        let mut slot_of = vec![0usize; n];
+        let mut slot_elems: Vec<usize> = Vec::new();
+        // Last-use index of each slot's current tenant.
+        let mut expiry: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let need = ir.layers[i].output.elements();
+            let fit = |s: usize| {
+                let sz = slot_elems[s];
+                // (must grow?, wasted or missing elements)
+                if sz >= need {
+                    (false, sz - need)
+                } else {
+                    (true, need - sz)
+                }
+            };
+            let mut best: Option<usize> = None;
+            for (s, &e) in expiry.iter().enumerate() {
+                if e >= i {
+                    continue; // tenant still live (or read by op i)
+                }
+                best = match best {
+                    None => Some(s),
+                    Some(b) if fit(s) < fit(b) => Some(s),
+                    keep => keep,
+                };
+            }
+            let s = match best {
+                Some(s) => {
+                    slot_elems[s] = slot_elems[s].max(need);
+                    s
+                }
+                None => {
+                    slot_elems.push(need);
+                    expiry.push(0);
+                    slot_elems.len() - 1
+                }
+            };
+            expiry[s] = last[i];
+            slot_of[i] = s;
+        }
+        MemoryPlan { slot_of, slot_elems }
+    }
+
+    /// Total arena footprint in bytes (f32 activations).
+    pub fn peak_bytes(&self) -> usize {
+        self.slot_elems.iter().sum::<usize>() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Chw, IrBuilder};
+
+    fn chain_ir() -> ModelIR {
+        let mut b = IrBuilder::new("chain", Chw::new(3, 16, 16));
+        b.conv("c1", 3, 8, 1, true)
+            .conv("c2", 3, 8, 1, true)
+            .conv("c3", 3, 16, 2, true)
+            .gap("g")
+            .dense("fc", 10, false);
+        b.build().unwrap()
+    }
+
+    fn residual_ir() -> ModelIR {
+        let mut b = IrBuilder::new("res", Chw::new(3, 12, 12));
+        b.conv("c1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("c2", 3, 8, 1, false)
+            .conv("c3", 3, 8, 1, false)
+            .add("a", skip, true)
+            .gap("g")
+            .dense("fc", 5, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn chain_uses_two_slots() {
+        let ir = chain_ir();
+        let mp = MemoryPlan::build(&ir);
+        assert_eq!(mp.slot_elems.len(), 2, "{:?}", mp);
+        // consecutive layers never share a slot (out-of-place ops)
+        for w in mp.slot_of.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn residual_keeps_skip_source_alive() {
+        let ir = residual_ir();
+        let last = last_uses(&ir);
+        // c1 (index 0) is read by c2 (1) and by the Add at index 3.
+        assert_eq!(last[0], 3);
+        let mp = MemoryPlan::build(&ir);
+        // three live values at the Add: skip, cur, and the Add's output
+        assert_eq!(mp.slot_elems.len(), 3, "{:?}", mp);
+        // the Add's inputs (c1 and c3 outputs) and output all differ
+        assert_ne!(mp.slot_of[3], mp.slot_of[0]);
+        assert_ne!(mp.slot_of[3], mp.slot_of[2]);
+    }
+
+    #[test]
+    fn peak_is_bounded_by_total_and_covers_largest() {
+        for ir in [chain_ir(), residual_ir()] {
+            let mp = MemoryPlan::build(&ir);
+            let total: usize = ir
+                .layers
+                .iter()
+                .map(|l| l.output.elements() * 4)
+                .sum();
+            let largest = ir
+                .layers
+                .iter()
+                .map(|l| l.output.elements() * 4)
+                .max()
+                .unwrap();
+            assert!(mp.peak_bytes() <= total);
+            assert!(mp.peak_bytes() >= largest);
+        }
+    }
+
+    #[test]
+    fn empty_model_has_empty_plan() {
+        let ir = ModelIR {
+            name: "empty".into(),
+            input: Chw::new(1, 1, 1),
+            layers: Vec::new(),
+        };
+        let mp = MemoryPlan::build(&ir);
+        assert!(mp.slot_of.is_empty());
+        assert_eq!(mp.peak_bytes(), 0);
+    }
+}

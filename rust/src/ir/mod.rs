@@ -8,6 +8,7 @@
 //! weight compression, the executors, the hardware model) never re-derive
 //! geometry.
 
+pub mod liveness;
 pub mod zoo;
 
 use anyhow::{bail, Result};
@@ -129,8 +130,15 @@ impl IrBuilder {
         }
     }
 
-    /// Output index of the most recently added layer.
+    /// Output index of the most recently added layer (the value `add`
+    /// takes as its skip source). Panics with a clear message on an
+    /// empty builder instead of underflowing.
     pub fn last(&self) -> usize {
+        assert!(
+            !self.layers.is_empty(),
+            "IrBuilder::last() called on an empty builder: add a layer \
+             before requesting a skip-link index"
+        );
         self.layers.len() - 1
     }
 
@@ -296,6 +304,13 @@ mod tests {
         let skip = b.last();
         b.conv("c2", 3, 16, 1, false).add("a", skip, true);
         assert!(b.build().is_err()); // channel mismatch
+    }
+
+    #[test]
+    #[should_panic(expected = "empty builder")]
+    fn last_on_empty_builder_panics_clearly() {
+        let b = IrBuilder::new("t", Chw::new(1, 4, 4));
+        let _ = b.last();
     }
 
     #[test]

@@ -3,14 +3,16 @@
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   info                      — artifacts + manifest summary
 //!   serve  [--model M] [--batch B] [--requests N] [--backend pjrt|native]
-//!          [--scheme cocogen|cocogen-quant|dense]
+//!          [--scheme cocogen|cocogen-quant|coco-auto|dense]
 //!                             — run the serving coordinator on synthetic
 //!                               traffic and print latency metrics;
 //!                               `--backend native` serves a zoo timing
 //!                               model on the executor pool (no PJRT or
 //!                               artifacts needed); `--scheme
 //!                               cocogen-quant` serves the weight-only
-//!                               int8 plan
+//!                               int8 plan; `--scheme coco-auto` runs
+//!                               per-layer engine auto-tuning before
+//!                               serving
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -135,17 +137,32 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 "cocogen-quant" | "quant" | "int8" => {
                     (Scheme::CocoGenQuant, "native-int8")
                 }
+                "coco-auto" | "cocoauto" | "auto" => {
+                    (Scheme::CocoAuto, "native-auto")
+                }
                 "dense" => (Scheme::DenseIm2col, "native-dense"),
                 other => anyhow::bail!(
-                    "unknown scheme {other} (cocogen|cocogen-quant|dense)"
+                    "unknown scheme {other} \
+                     (cocogen|cocogen-quant|coco-auto|dense)"
                 ),
             };
             let elems = ir.input.c * ir.input.h * ir.input.w;
-            let plan = build_plan(&ir, scheme, PruneConfig::default(), 7)
-                .into_shared();
+            let mut plan = build_plan(&ir, scheme, PruneConfig::default(),
+                                      7);
+            if scheme == Scheme::CocoAuto {
+                println!("auto-tuning per-layer engines for {model}...");
+                // Tune at threads = 1: the serving pool runs one
+                // single-threaded executor per core, so per-layer
+                // winners must be measured in that regime, not at the
+                // machine's full parallelism.
+                cocopie::codegen::autotune_plan(&mut plan, 1);
+            }
+            let plan = plan.into_shared();
             println!(
-                "serving {model} via {name}: {} KB resident weights",
-                plan.weight_bytes() / 1024
+                "serving {model} via {name}: {} KB resident weights, \
+                 {} KB activation arena per executor",
+                plan.weight_bytes() / 1024,
+                plan.peak_activation_bytes() / 1024
             );
             let coord = Coordinator::start_with(
                 vec![Box::new(cocopie::coordinator::NativeBackend::new(

@@ -10,11 +10,14 @@
 //! * storage only — the structs here hold i8 weights and scales, never a
 //!   retained f32 copy, so the 4x weight shrink is real resident memory;
 //! * execution lives in `exec`: `exec::naive::conv2d_quant`,
-//!   `exec::im2col::conv2d_quant` and `exec::pattern::conv2d_quant[_auto]`
+//!   `exec::im2col::conv2d_quant` and `exec::pattern::conv2d_quant(_auto)`
 //!   load i8 weights and dequantize in-register (scale-fused AXPY), with
 //!   no per-call f32 weight materialization and no allocation beyond the
 //!   output tensor. `codegen::Scheme::CocoGenQuant` builds plans on these
-//!   formats end-to-end.
+//!   formats end-to-end, `codegen::lower` compiles them to the quant
+//!   kernels' write-into-arena entry points, and `Scheme::CocoAuto`'s
+//!   per-layer tuner offers the int8 variants as measured candidates
+//!   next to their f32 twins.
 //!
 //! `dequantize()` on both structs reconstructs an f32 layer for error
 //! analysis and oracle tests only; it is never on the inference path.
@@ -28,9 +31,9 @@ pub struct QuantDense {
     pub cin: usize,
     pub kh: usize,
     pub kw: usize,
-    /// w_q[co][ci][ky][kx] (OIHW), values in [-127, 127].
+    /// `w_q[co][ci][ky][kx]` (OIHW), values in `[-127, 127]`.
     pub weights: Vec<i8>,
-    /// Per-output-channel scale: w ~= w_q * scale[co].
+    /// Per-output-channel scale: `w ~= w_q * scale[co]`.
     pub scales: Vec<f32>,
     pub bias: Vec<f32>,
 }
@@ -125,7 +128,7 @@ pub struct QuantFkw {
     /// Physical filter order (after filter-kernel reorder); maps physical
     /// position -> original output-channel index.
     pub filter_order: Vec<u32>,
-    /// Per physical filter: [offsets[f], offsets[f+1]) indexes
+    /// Per physical filter: `[offsets[f], offsets[f+1])` indexes
     /// kernels/weights.
     pub offsets: Vec<u32>,
     /// Per surviving kernel: input channel + pattern id.
@@ -133,7 +136,7 @@ pub struct QuantFkw {
     /// 4 int8 weights per kernel (pattern tap order), same indexing as
     /// `FkwLayer::weights`.
     pub weights_q: Vec<i8>,
-    /// Per *original* output-channel scale: w ~= w_q * scales[co].
+    /// Per *original* output-channel scale: `w ~= w_q * scales[co]`.
     pub scales: Vec<f32>,
     pub bias: Vec<f32>,
 }

@@ -301,7 +301,8 @@ impl Runtime {
         })
     }
 
-    /// Default artifacts directory: $COCOPIE_ARTIFACTS or <crate>/artifacts.
+    /// Default artifacts directory: `$COCOPIE_ARTIFACTS` or
+    /// `<crate>/artifacts`.
     pub fn default_dir() -> PathBuf {
         std::env::var("COCOPIE_ARTIFACTS")
             .map(PathBuf::from)

@@ -1,0 +1,201 @@
+//! The compiled-op pipeline vs direct kernel invocation.
+//!
+//! `ModelExecutor::run` is a flat walk over `codegen::lower`'s compiled
+//! ops — dispatch resolved once, activations in a preassigned arena.
+//! These tests pin it, for every `Scheme` on zoo models, bit-identical
+//! to an oracle that walks the same plan and calls the one-shot kernel
+//! entry points directly (fresh allocations, no arena, no lowering) —
+//! i.e. the executor the lowering pass replaced.
+
+use cocopie::codegen::{
+    autotune_plan, build_plan, DenseEngine, ExecPlan, LayerPlan,
+    PruneConfig, Scheme,
+};
+use cocopie::exec::im2col::Im2colScratch;
+use cocopie::exec::{csr, im2col, naive, ops, pattern, winograd};
+use cocopie::exec::{ModelExecutor, Tensor};
+use cocopie::ir::{zoo, LayerKind, ModelIR};
+use cocopie::util::rng::Rng;
+
+/// Direct kernel invocation of a plan: the interpreter-style walk the
+/// lowering pass deleted, reconstructed as the test oracle.
+fn oracle_run(plan: &ExecPlan, input: &Tensor, threads: usize) -> Tensor {
+    let n = plan.ir.layers.len();
+    let mut needed = vec![false; n];
+    for l in &plan.ir.layers {
+        if let LayerKind::Add { from, .. } = l.kind {
+            needed[from] = true;
+        }
+    }
+    let mut saved: Vec<Option<Tensor>> = vec![None; n];
+    let mut scratch = Im2colScratch::default();
+    let mut cur = input.clone();
+    for (i, (layer, lplan)) in
+        plan.ir.layers.iter().zip(&plan.layers).enumerate()
+    {
+        let out = match (&layer.kind, lplan) {
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::Dense { layer: d, engine },
+            ) => match engine {
+                DenseEngine::Naive => {
+                    naive::conv2d(&cur, d, *stride, *relu, threads)
+                }
+                DenseEngine::Winograd
+                    if d.kh == 3 && d.kw == 3 && *stride == 1 =>
+                {
+                    winograd::conv2d(&cur, d, *relu, threads)
+                }
+                _ => im2col::conv2d(&cur, d, *stride, *relu, threads,
+                                    &mut scratch),
+            },
+            (LayerKind::Conv { stride, relu, .. }, LayerPlan::Csr(c)) => {
+                csr::conv2d(&cur, c, *stride, *relu, threads)
+            }
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::Fkw { layer: f, tile },
+            ) => pattern::conv2d_auto(&cur, f, *stride, *relu, threads,
+                                      *tile),
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::QuantDense(q),
+            ) => im2col::conv2d_quant(&cur, q, *stride, *relu, threads,
+                                      &mut scratch),
+            (
+                LayerKind::Conv { stride, relu, .. },
+                LayerPlan::QuantFkw { layer: q, tile },
+            ) => pattern::conv2d_quant_auto(&cur, q, *stride, *relu,
+                                            threads, *tile),
+            (
+                LayerKind::DwConv { stride, relu },
+                LayerPlan::Depthwise(w),
+            ) => ops::depthwise3x3(&cur, &w.weights, &w.bias, *stride,
+                                   *relu),
+            (LayerKind::MaxPool2, _) => ops::maxpool2(&cur),
+            (LayerKind::GlobalAvgPool, _) => ops::gap(&cur),
+            (LayerKind::Dense { cout, relu }, LayerPlan::Fc(w)) => {
+                ops::dense(&cur, &w.weights, &w.bias, *cout, *relu)
+            }
+            (LayerKind::Add { from, relu }, _) => {
+                let skip =
+                    saved[*from].as_ref().expect("Add source not saved");
+                ops::add(&cur, skip, *relu)
+            }
+            (k, p) => panic!(
+                "layer {} kind {:?} has incompatible plan {:?}",
+                layer.name,
+                k,
+                std::mem::discriminant(p)
+            ),
+        };
+        if needed[i] {
+            saved[i] = Some(out.clone());
+        }
+        cur = out;
+    }
+    cur
+}
+
+const ALL_SCHEMES: [Scheme; 7] = [
+    Scheme::DenseNaive,
+    Scheme::DenseIm2col,
+    Scheme::DenseWinograd,
+    Scheme::SparseCsr,
+    Scheme::CocoGen,
+    Scheme::CocoGenQuant,
+    Scheme::CocoAuto,
+];
+
+fn check_all_schemes(ir: &ModelIR, seed: u64) {
+    for scheme in ALL_SCHEMES {
+        let plan = build_plan(ir, scheme, PruneConfig::default(), seed);
+        let mut exec = ModelExecutor::new(&plan, 2);
+        let mut rng = Rng::seed_from(seed ^ 0x11C0);
+        for trial in 0..2 {
+            let x = Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                   &mut rng);
+            let got = exec.run(&x);
+            let want = oracle_run(&plan, &x, 2);
+            assert_eq!(
+                got.data, want.data,
+                "{}: compiled pipeline diverged from direct kernels \
+                 (scheme {scheme:?}, trial {trial})",
+                ir.name
+            );
+        }
+    }
+}
+
+#[test]
+fn mobilenet_compiled_matches_direct_kernels() {
+    check_all_schemes(&zoo::mobilenet_v2(24, 10), 42);
+}
+
+#[test]
+fn vgg_compiled_matches_direct_kernels() {
+    check_all_schemes(&zoo::vgg16(16, 10), 7);
+}
+
+#[test]
+fn resnet_compiled_matches_direct_kernels() {
+    check_all_schemes(&zoo::resnet50(16, 10), 11);
+}
+
+#[test]
+fn coco_auto_tuned_plan_matches_direct_kernels() {
+    // After per-layer engine selection the compiled pipeline must still
+    // agree bit-for-bit with direct invocation of whatever engines the
+    // tuner picked (including any int8 variants it chose).
+    let ir = zoo::mobilenet_v2(16, 10);
+    let mut plan = build_plan(&ir, Scheme::CocoAuto,
+                              PruneConfig::default(), 3);
+    autotune_plan(&mut plan, 2);
+    let mut exec = ModelExecutor::new(&plan, 2);
+    let mut rng = Rng::seed_from(21);
+    let x = Tensor::random(ir.input.c, ir.input.h, ir.input.w, &mut rng);
+    let got = exec.run(&x);
+    let want = oracle_run(&plan, &x, 2);
+    assert_eq!(got.data, want.data,
+               "tuned CocoAuto pipeline diverged from direct kernels");
+}
+
+#[test]
+fn arena_reuse_identical_results_no_growth() {
+    // Two consecutive runs on recycled arena slots: identical bits, no
+    // buffer growth — the memory plan's no-allocation guarantee.
+    let ir = zoo::resnet50(16, 10);
+    let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 5);
+    let mut exec = ModelExecutor::new(&plan, 2);
+    let mut rng = Rng::seed_from(33);
+    let x1 = Tensor::random(ir.input.c, ir.input.h, ir.input.w, &mut rng);
+    let x2 = Tensor::random(ir.input.c, ir.input.h, ir.input.w, &mut rng);
+    let first = exec.run(&x1);
+    let bytes = exec.arena_bytes();
+    assert_eq!(bytes, plan.peak_activation_bytes());
+    let _ = exec.run(&x2); // dirty every slot with other activations
+    let again = exec.run(&x1);
+    assert_eq!(first.data, again.data,
+               "recycled arena slots leaked state between runs");
+    assert_eq!(exec.arena_bytes(), bytes, "arena grew across runs");
+}
+
+#[test]
+fn peak_activation_reported_and_small_vs_total() {
+    // The memory plan's point: a deep residual net's arena is a small
+    // constant number of buffers, far below the sum of every layer
+    // output the old executor allocated per inference.
+    let ir = zoo::resnet50(32, 10);
+    let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 1);
+    let total: usize = ir
+        .layers
+        .iter()
+        .map(|l| l.output.elements() * 4)
+        .sum();
+    let peak = plan.peak_activation_bytes();
+    assert!(peak > 0);
+    assert!(
+        peak * 2 < total,
+        "arena {peak} B not meaningfully below per-layer total {total} B"
+    );
+}

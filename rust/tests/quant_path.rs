@@ -11,26 +11,31 @@
 //! plus the storage claim: the int8 plan is strictly smaller than the
 //! fp32 pruned plan, which is smaller than dense.
 
+use std::sync::Arc;
+
 use cocopie::codegen::{
-    build_plan, ExecPlan, LayerPlan, PruneConfig, Scheme,
+    build_plan, DenseEngine, ExecPlan, LayerPlan, PruneConfig, Scheme,
 };
 use cocopie::exec::{ModelExecutor, Tensor};
 use cocopie::ir::{zoo, ModelIR};
 use cocopie::util::rng::Rng;
 
 /// The f32 twin of a quant plan: every int8 layer dequantized, executed
-/// by the corresponding f32 engine (scheme CocoGen so dense layers take
-/// the same im2col lowering).
+/// by the corresponding f32 engine (dense layers keep the same im2col
+/// lowering the quant plan's dense layers use).
 fn dequantized_twin(quant: &ExecPlan) -> ExecPlan {
     let layers = quant
         .layers
         .iter()
         .map(|p| match p {
             LayerPlan::QuantFkw { layer, tile } => LayerPlan::Fkw {
-                layer: layer.dequantize(),
+                layer: Arc::new(layer.dequantize()),
                 tile: *tile,
             },
-            LayerPlan::QuantDense(q) => LayerPlan::Dense(q.dequantize()),
+            LayerPlan::QuantDense(q) => LayerPlan::Dense {
+                layer: Arc::new(q.dequantize()),
+                engine: DenseEngine::Im2col,
+            },
             other => other.clone(),
         })
         .collect();
