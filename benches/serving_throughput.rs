@@ -4,9 +4,12 @@
 //! the co-designed native path must hold its kernel-level advantage once
 //! dynamic batching and routing sit in front of it.
 //!
-//! Rows: native CoCo-Gen pool, native dense-im2col pool, a 50/50 split
-//! across both, and — when a real runtime + artifacts exist — PJRT.
-//! Offline the PJRT row reports why it was skipped.
+//! Rows: native CoCo-Gen *fused-batch* pool vs the per-image fan-out
+//! path it replaces (same plan, `NativeBatchMode` forced each way —
+//! the batched-execution acceptance comparison), the default Auto mode,
+//! native dense-im2col, a 50/50 split across CoCo-Gen and dense, and —
+//! when a real runtime + artifacts exist — PJRT. Offline the PJRT row
+//! reports why it was skipped.
 //!
 //! Run: `cargo bench --bench serving_throughput`
 //! (COCOPIE_QUICK=1 shrinks the request count for smoke runs.)
@@ -15,7 +18,8 @@ use std::time::{Duration, Instant};
 
 use cocopie::codegen::{build_plan, PruneConfig, Scheme};
 use cocopie::coordinator::{
-    BatchPolicy, Coordinator, NativeBackend, RouterPolicy, ServeConfig,
+    BatchPolicy, Coordinator, NativeBackend, NativeBatchMode,
+    RouterPolicy, ServeConfig,
 };
 use cocopie::ir::zoo;
 use cocopie::util::bench::Table;
@@ -79,16 +83,22 @@ fn main() {
         "backend", "req/s", "p50 ms", "p99 ms", "mean batch", "served",
     ]);
 
-    // Native pools: the co-designed plan and the dense compiler baseline.
-    let scenarios: &[(&str, Scheme)] = &[
-        ("native-cocogen", Scheme::CocoGen),
-        ("native-dense", Scheme::DenseIm2col),
+    // The batched-execution comparison: one CoCo-Gen plan served three
+    // ways — fused batched pipeline, the per-image fan-out path it
+    // replaces, and the default Auto policy (fused for n >= 2).
+    let modes: &[(&str, NativeBatchMode)] = &[
+        ("cocogen-fused", NativeBatchMode::Fused),
+        ("cocogen-fanout", NativeBatchMode::FanOut),
+        ("cocogen-auto", NativeBatchMode::Auto),
     ];
-    for (name, scheme) in scenarios {
-        let plan = build_plan(&ir, *scheme, PruneConfig::default(), 7)
+    for (name, mode) in modes {
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              7)
             .into_shared();
         let coord = Coordinator::start_with(
-            vec![Box::new(NativeBackend::new(name, plan))],
+            vec![Box::new(
+                NativeBackend::new(name, plan).with_batch_mode(*mode),
+            )],
             policy,
             RouterPolicy::Failover,
         )
@@ -96,6 +106,22 @@ fn main() {
         let wall = drive(&coord, elems, total, window);
         let s = coord.shutdown();
         row(&mut table, name, &s, wall);
+    }
+
+    // The dense compiler baseline (default batch mode).
+    {
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 7)
+            .into_shared();
+        let coord = Coordinator::start_with(
+            vec![Box::new(NativeBackend::new("native-dense", plan))],
+            policy,
+            RouterPolicy::Failover,
+        )
+        .expect("native coordinator");
+        let wall = drive(&coord, elems, total, window);
+        let s = coord.shutdown();
+        row(&mut table, "native-dense", &s, wall);
     }
 
     // 50/50 split across both native variants.
@@ -137,4 +163,9 @@ fn main() {
     }
 
     table.print();
+    println!(
+        "\nshape: cocogen-fused req/s > cocogen-fanout req/s at mean \
+         batch >= 4 (the fused walk streams each layer's weights once \
+         per batch; fan-out pays them once per image)"
+    );
 }

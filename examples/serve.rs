@@ -12,16 +12,23 @@
 //!  3. the PJRT backend, when a real runtime + artifacts are present
 //!     (`make artifacts`); offline it reports why it was skipped.
 //!
-//! Run: `cargo run --release --example serve [-- --quant | --auto]`
+//! Batches route through the fused batched pipeline by default
+//! (`NativeBatchMode::Auto`); `--fanout` forces the per-image pool
+//! fan-out path for comparison. `--smoke` serves a tiny model with a
+//! small request count — the CI end-to-end serving smoke test.
+//!
+//! Run: `cargo run --release --example serve
+//!       [-- --quant | --auto | --fanout | --smoke]`
 
 use std::time::{Duration, Instant};
 
 use cocopie::codegen::{build_plan, PruneConfig, Scheme};
 use cocopie::coordinator::router::{Router, Sla, Variant};
 use cocopie::coordinator::{
-    BatchPolicy, Coordinator, NativeBackend, RouterPolicy, ServeConfig,
+    BatchPolicy, Coordinator, NativeBackend, NativeBatchMode,
+    RouterPolicy, ServeConfig,
 };
-use cocopie::ir::zoo;
+use cocopie::ir::{zoo, Chw, IrBuilder};
 use cocopie::util::rng::Rng;
 
 fn drive(coord: &Coordinator, elems: usize, n_requests: usize,
@@ -59,10 +66,29 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2. native serving: executor pool behind the Backend seam ---------
     // `--quant` canaries the weight-only int8 plan next to fp32 CoCo-Gen;
-    // `--auto` canaries the per-layer engine-selected CocoAuto plan.
+    // `--auto` canaries the per-layer engine-selected CocoAuto plan;
+    // `--fanout` forces per-image pool fan-out instead of the fused
+    // batched pipeline; `--smoke` is the tiny CI configuration.
     let quant = std::env::args().any(|a| a == "--quant");
     let auto = std::env::args().any(|a| a == "--auto");
-    let ir = zoo::mobilenet_v2(zoo::CIFAR_HW, 10);
+    let fanout = std::env::args().any(|a| a == "--fanout");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let batch_mode = if fanout {
+        NativeBatchMode::FanOut
+    } else {
+        NativeBatchMode::Auto
+    };
+    let ir = if smoke {
+        let mut b = IrBuilder::new("smoke", Chw::new(3, 12, 12));
+        b.conv("c1", 3, 8, 1, true)
+            .conv("c2", 3, 8, 2, true)
+            .gap("g")
+            .dense("fc", 10, false);
+        b.build().unwrap()
+    } else {
+        zoo::mobilenet_v2(zoo::CIFAR_HW, 10)
+    };
+    let n_requests = if smoke { 48 } else { 256 };
     let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7)
         .into_shared();
     let second_scheme = if quant {
@@ -72,14 +98,20 @@ fn main() -> anyhow::Result<()> {
     } else {
         Scheme::DenseIm2col
     };
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+    };
     let mut second_plan =
         build_plan(&ir, second_scheme, PruneConfig::default(), 7);
     if auto {
-        // The point of CocoAuto: measure every legal engine per layer at
-        // its real shape, then serve the compiled winners. Tuned at
-        // threads = 1 because the pool serves with one single-threaded
-        // executor per core — the regime the winners must hold in.
-        cocopie::codegen::autotune_plan(&mut second_plan, 1);
+        // The point of CocoAuto: measure every legal engine per layer
+        // at its real shape AND at the serving batch regime — under
+        // fused batching the best kernel at n = 1 is often not the best
+        // at n = max_batch, so candidates are timed on fused batches of
+        // the size the coordinator will actually form.
+        cocopie::codegen::autotune_plan_batched(&mut second_plan, 1,
+                                                policy.max_batch);
     }
     let second = second_plan.into_shared();
     let second_name = if quant {
@@ -100,24 +132,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let elems = ir.input.c * ir.input.h * ir.input.w;
-    let policy = BatchPolicy {
-        max_batch: 8,
-        max_wait: Duration::from_millis(2),
-    };
     let coord = Coordinator::start_with(
         vec![
-            Box::new(NativeBackend::new("native-cocogen", coco)),
-            Box::new(NativeBackend::new(second_name, second)),
+            Box::new(NativeBackend::new("native-cocogen", coco)
+                .with_batch_mode(batch_mode)),
+            Box::new(NativeBackend::new(second_name, second)
+                .with_batch_mode(batch_mode)),
         ],
         policy,
         // 3:1 in favor of the first variant, like a canaried rollout.
         RouterPolicy::Split(vec![3.0, 1.0]),
     )?;
-    let wall = drive(&coord, elems, 256, 3);
+    let wall = drive(&coord, elems, n_requests, 3);
     let report = coord.shutdown_report();
     println!(
-        "\nnative pool: served {} requests in {:.2}s ({:.0} rps), \
+        "\nnative pool ({}): served {} requests in {:.2}s ({:.0} rps), \
          {} failovers",
+        if fanout { "per-image fan-out" } else { "fused batches" },
         report.overall.completed,
         wall,
         report.overall.completed as f64 / wall,
@@ -129,6 +160,21 @@ fn main() -> anyhow::Result<()> {
              mean batch {:.1}",
             s.completed, s.p50_ms, s.p99_ms, s.mean_batch
         );
+    }
+    if smoke {
+        // The CI smoke step: every request must have been served, none
+        // rejected — a real end-to-end pass through batcher, router,
+        // fused executor, and reply channels.
+        anyhow::ensure!(
+            report.overall.completed == n_requests as u64
+                && report.overall.rejected == 0,
+            "smoke: served {}/{} requests ({} rejected)",
+            report.overall.completed,
+            n_requests,
+            report.overall.rejected
+        );
+        println!("smoke: all {n_requests} requests served");
+        return Ok(());
     }
 
     // --- 3. PJRT serving (requires real runtime + artifacts) --------------

@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::compress::{CsrLayer, DenseLayer, FkwLayer, FlatWeights};
 use crate::exec::pattern::PatternGemmPlan;
-use crate::exec::tensor::TensorView;
+use crate::exec::tensor::{BatchView, TensorView};
 use crate::exec::winograd::WinogradWeights;
 use crate::exec::{csr, im2col, naive, ops, pattern, winograd, ExecScratch,
                   Tensor};
@@ -142,8 +142,15 @@ pub struct CompiledPipeline {
 
 impl CompiledPipeline {
     /// Arena footprint in bytes (what [`Arena::for_pipeline`] allocates).
+    /// Includes the leading batch dimension for batch-compiled pipelines.
     pub fn peak_activation_bytes(&self) -> usize {
         self.mem.peak_bytes()
+    }
+
+    /// Largest fused batch this pipeline's arena was planned for
+    /// (1 for single-image pipelines).
+    pub fn max_batch(&self) -> usize {
+        self.mem.batch
     }
 
     /// Run the pipeline: a flat walk over the ops, each reading and
@@ -166,7 +173,7 @@ impl CompiledPipeline {
             let mut dstbuf = std::mem::take(&mut arena.bufs[op.dst]);
             let dst = &mut dstbuf[..out_elems];
             {
-                let src_all = arena.read(input, op.src);
+                let src_all = arena.read(&input.data, op.src);
                 let view = TensorView::new(
                     op.in_shape.c,
                     op.in_shape.h,
@@ -244,7 +251,7 @@ impl CompiledPipeline {
                     }
                     CompiledKernel::Add { relu } => {
                         let skip = arena.read(
-                            input,
+                            &input.data,
                             op.src2.expect("Add op without skip source"),
                         );
                         ops::add_into(view.data, &skip[..out_elems],
@@ -259,6 +266,149 @@ impl CompiledPipeline {
         out.data
             .copy_from_slice(&arena.bufs[last_op.dst][..shape.elements()]);
         out
+    }
+
+    /// Run the pipeline over a fused batch of `n` images packed
+    /// contiguously (`[N][C][H][W]`, `n <= max_batch()`): one walk over
+    /// the ops for the whole batch, each op serving every image through
+    /// its engine's `*_batch_into` entry point — the compressed weight
+    /// stream of each layer is decoded/streamed once per *batch*, not
+    /// once per image. Per-image results are bit-identical to
+    /// [`CompiledPipeline::execute`] on that image alone (the batched
+    /// kernels preserve each image's accumulation order exactly).
+    pub fn execute_batched(&self, n: usize, input: &[f32],
+                           arena: &mut Arena, scratch: &mut ExecScratch,
+                           threads: usize) -> Vec<Tensor> {
+        assert!(n >= 1, "empty batch");
+        assert!(
+            n <= self.max_batch(),
+            "batch of {n} exceeds the pipeline's planned batch {}",
+            self.max_batch()
+        );
+        let per_in = self.input.elements();
+        assert_eq!(input.len(), n * per_in, "batched input length \
+                                             mismatch");
+        let Some(last_op) = self.ops.last() else {
+            return (0..n)
+                .map(|i| {
+                    let mut t = Tensor::from_shape(self.input);
+                    t.data.copy_from_slice(
+                        &input[i * per_in..(i + 1) * per_in],
+                    );
+                    t
+                })
+                .collect();
+        };
+        for op in &self.ops {
+            let in_elems = n * op.in_shape.elements();
+            let out_elems = n * op.out_shape.elements();
+            let mut dstbuf = std::mem::take(&mut arena.bufs[op.dst]);
+            let dst = &mut dstbuf[..out_elems];
+            {
+                let src_all = arena.read(input, op.src);
+                let view = BatchView::new(
+                    n,
+                    op.in_shape.c,
+                    op.in_shape.h,
+                    op.in_shape.w,
+                    &src_all[..in_elems],
+                );
+                match &op.kernel {
+                    CompiledKernel::ConvNaive { w, stride, relu } => {
+                        naive::conv2d_batch_into(view, w, *stride, *relu,
+                                                 threads, dst);
+                    }
+                    CompiledKernel::ConvIm2col { w, stride, relu } => {
+                        im2col::conv2d_batch_into(
+                            view, w, *stride, *relu, threads,
+                            &mut scratch.im2col, dst,
+                        );
+                    }
+                    CompiledKernel::ConvWinograd { w, relu } => {
+                        winograd::conv2d_pre_batch_into(
+                            view, w, *relu, threads, &mut scratch.wino_u,
+                            &mut scratch.wino_m, dst,
+                        );
+                    }
+                    CompiledKernel::ConvCsr { w, stride, relu } => {
+                        csr::conv2d_batch_into(view, w, *stride, *relu,
+                                               threads, dst);
+                    }
+                    CompiledKernel::ConvPattern {
+                        w, stride, relu, tile,
+                    } => {
+                        pattern::conv2d_batch_into(view, w, *stride,
+                                                   *relu, threads, *tile,
+                                                   dst);
+                    }
+                    CompiledKernel::ConvPatternGemm {
+                        w, stride, relu, gp,
+                    } => {
+                        pattern::conv2d_gemm_batch_into(
+                            view, w, *stride, *relu, threads, gp,
+                            &mut scratch.gemm_u, dst,
+                        );
+                    }
+                    CompiledKernel::ConvQuantDense { w, stride, relu } => {
+                        im2col::conv2d_quant_batch_into(
+                            view, w, *stride, *relu, threads,
+                            &mut scratch.im2col, dst,
+                        );
+                    }
+                    CompiledKernel::ConvQuantPattern {
+                        w, stride, relu, tile,
+                    } => {
+                        pattern::conv2d_quant_batch_into(
+                            view, w, *stride, *relu, threads, *tile, dst,
+                        );
+                    }
+                    CompiledKernel::ConvQuantPatternGemm {
+                        w, stride, relu, gp,
+                    } => {
+                        pattern::conv2d_gemm_quant_batch_into(
+                            view, w, *stride, *relu, threads, gp,
+                            &mut scratch.gemm_u, dst,
+                        );
+                    }
+                    CompiledKernel::Depthwise { w, stride, relu } => {
+                        ops::depthwise3x3_batch_into(
+                            view, &w.weights, &w.bias, *stride, *relu,
+                            dst,
+                        );
+                    }
+                    CompiledKernel::MaxPool2 => {
+                        ops::maxpool2_batch_into(view, dst);
+                    }
+                    CompiledKernel::GlobalAvgPool => {
+                        ops::gap_batch_into(view, dst);
+                    }
+                    CompiledKernel::Fc { w, relu } => {
+                        ops::dense_batch_into(view.data, n, &w.weights,
+                                              &w.bias, op.out_shape.c,
+                                              *relu, dst);
+                    }
+                    CompiledKernel::Add { relu } => {
+                        let skip = arena.read(
+                            input,
+                            op.src2.expect("Add op without skip source"),
+                        );
+                        ops::add_into(view.data, &skip[..out_elems],
+                                      *relu, dst);
+                    }
+                }
+            }
+            arena.bufs[op.dst] = dstbuf;
+        }
+        let shape = last_op.out_shape;
+        let per = shape.elements();
+        let buf = &arena.bufs[last_op.dst];
+        (0..n)
+            .map(|i| {
+                let mut t = Tensor::from_shape(shape);
+                t.data.copy_from_slice(&buf[i * per..(i + 1) * per]);
+                t
+            })
+            .collect()
     }
 }
 
@@ -289,9 +439,9 @@ impl Arena {
         self.bufs.iter().map(|b| b.len() * 4).sum()
     }
 
-    fn read<'a>(&'a self, input: &'a Tensor, id: BufId) -> &'a [f32] {
+    fn read<'a>(&'a self, input: &'a [f32], id: BufId) -> &'a [f32] {
         match id {
-            BufId::Input => &input.data,
+            BufId::Input => input,
             BufId::Slot(s) => &self.bufs[s],
         }
     }
@@ -303,8 +453,20 @@ impl Arena {
 /// an incompatible `LayerPlan`), exactly like the old interpreter did —
 /// that is a plan-construction bug, not an input error.
 pub fn lower(plan: &ExecPlan) -> CompiledPipeline {
+    lower_batched(plan, 1)
+}
+
+/// [`lower`] with a leading batch dimension: identical kernel choices
+/// and slot assignment, but every arena slot is sized for `batch`
+/// images stored contiguously, so
+/// [`CompiledPipeline::execute_batched`] serves fused batches of up to
+/// `batch` out of the same fixed arena. Weights are the same `Arc`s as
+/// any other pipeline compiled from this plan — compiling both a
+/// single-image and a batched pipeline does not duplicate a single
+/// weight tensor.
+pub fn lower_batched(plan: &ExecPlan, batch: usize) -> CompiledPipeline {
     let ir = &plan.ir;
-    let mem = MemoryPlan::build(ir);
+    let mem = MemoryPlan::build_batched(ir, batch);
     let mut ops = Vec::with_capacity(ir.layers.len());
     for (i, (layer, lplan)) in
         ir.layers.iter().zip(&plan.layers).enumerate()
@@ -497,6 +659,64 @@ mod tests {
                               PruneConfig::default(), 3);
         let p = lower(&plan);
         assert_ss(&p);
+    }
+
+    #[test]
+    fn batched_lowering_scales_arena_not_weights() {
+        let ir = residual_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              3);
+        let single = lower(&plan);
+        let batched = lower_batched(&plan, 4);
+        assert_eq!(single.max_batch(), 1);
+        assert_eq!(batched.max_batch(), 4);
+        assert_eq!(single.peak_activation_bytes() * 4,
+                   batched.peak_activation_bytes());
+        // identical op structure and slot assignment
+        assert_eq!(single.ops.len(), batched.ops.len());
+        for (a, b) in single.ops.iter().zip(&batched.ops) {
+            assert_eq!(a.dst, b.dst);
+            assert_eq!(a.src, b.src);
+            assert_eq!(a.out_shape, b.out_shape);
+        }
+        // the Arc'd weights are shared, not copied
+        if let (CompiledKernel::ConvPattern { w: a, .. }
+                | CompiledKernel::ConvPatternGemm { w: a, .. },
+                CompiledKernel::ConvPattern { w: b, .. }
+                | CompiledKernel::ConvPatternGemm { w: b, .. }) =
+            (&single.ops[0].kernel, &batched.ops[0].kernel)
+        {
+            assert!(Arc::ptr_eq(a, b), "batched lowering copied weights");
+        } else {
+            panic!("expected pattern kernels");
+        }
+    }
+
+    #[test]
+    fn batched_execute_matches_single_execute() {
+        let ir = residual_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              3);
+        let p1 = lower(&plan);
+        let pb = lower_batched(&plan, 3);
+        let mut rng = Rng::seed_from(4);
+        let images: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::random(3, 10, 10, &mut rng))
+            .collect();
+        let mut packed = Vec::new();
+        for t in &images {
+            packed.extend_from_slice(&t.data);
+        }
+        let mut arena_b = Arena::for_pipeline(&pb);
+        let mut scratch = ExecScratch::default();
+        let outs =
+            pb.execute_batched(3, &packed, &mut arena_b, &mut scratch, 2);
+        let mut arena_1 = Arena::for_pipeline(&p1);
+        for (x, got) in images.iter().zip(&outs) {
+            let want = p1.execute(x, &mut arena_1, &mut scratch, 2);
+            assert_eq!(want.data, got.data,
+                       "fused batch diverged from single execute");
+        }
     }
 
     #[test]

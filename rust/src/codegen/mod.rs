@@ -16,8 +16,8 @@ use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
 use crate::quant::{QuantDense, QuantFkw};
 use crate::util::rng::Rng;
 
-pub use lower::{lower, Arena, BufId, CompiledKernel, CompiledOp,
-                CompiledPipeline};
+pub use lower::{lower, lower_batched, Arena, BufId, CompiledKernel,
+                CompiledOp, CompiledPipeline};
 pub use tuner::TileConfig;
 
 /// Which lowering a *dense* conv layer compiles to. Fixed by the scheme
@@ -329,21 +329,81 @@ pub fn prune_conn_oihw(d: &DenseLayer, keep: f64) -> ConnectivityMask {
     prune_connectivity(&hwio, d.kh, d.kw, d.cin, d.cout, keep)
 }
 
-/// Parameter auto-tuning (paper §2.1.3). For the fixed-engine schemes
-/// this sweeps execution-path x tile-shape candidates per pattern conv
-/// layer; for `Scheme::CocoAuto` it additionally measures every legal
-/// engine per layer (including the int8 dequant-on-load variants) and
-/// rewrites the plan to the per-layer winner.
+/// Parameter auto-tuning (paper §2.1.3) at the single-image regime.
+/// For the fixed-engine schemes this sweeps execution-path x tile-shape
+/// candidates per pattern conv layer; for `Scheme::CocoAuto` it
+/// additionally measures every legal engine per layer (including the
+/// int8 dequant-on-load variants) and rewrites the plan to the
+/// per-layer winner. Equivalent to [`autotune_plan_batched`] with
+/// `batch = 1`.
 pub fn autotune_plan(plan: &mut ExecPlan, threads: usize) {
+    autotune_plan_batched(plan, threads, 1);
+}
+
+/// [`autotune_plan`] measured at the *serving batch regime*: every
+/// candidate runs through its fused `*_batch_into` entry point on a
+/// synthetic batch of `batch` images of the layer's real shape. The
+/// best kernel at n = 1 is often not the best at n = 8 — batched GEMM
+/// amortizes its patch-matrix build and weight streaming across the
+/// batch, while the AXPY path's relative advantage shrinks — so a plan
+/// that will serve fused batches should be tuned with the batch it
+/// serves (`BatchPolicy::max_batch`).
+pub fn autotune_plan_batched(plan: &mut ExecPlan, threads: usize,
+                             batch: usize) {
+    let batch = batch.max(1);
     if plan.scheme == Scheme::CocoAuto {
-        autotune_engines(plan, threads);
+        autotune_engines(plan, threads, batch);
     } else {
-        autotune_tiles(plan, threads);
+        autotune_tiles(plan, threads, batch);
     }
 }
 
-/// Tile-only sweep for `CocoGen`/`CocoGenQuant` pattern layers.
-fn autotune_tiles(plan: &mut ExecPlan, threads: usize) {
+/// Synthetic `[N][C][H][W]` input for candidate measurement.
+fn random_batch(c: usize, h: usize, w: usize, n: usize, rng: &mut Rng)
+                -> Vec<f32> {
+    (0..n * c * h * w).map(|_| rng.normal_f32()).collect()
+}
+
+/// Run one pattern-layer candidate through the fused batch kernels
+/// (AXPY or GEMM path per the tile's `use_gemm`).
+#[allow(clippy::too_many_arguments)]
+fn run_pattern_candidate(view: crate::exec::BatchView<'_>,
+                         fkw: &crate::compress::FkwLayer,
+                         gp: &crate::exec::pattern::PatternGemmPlan,
+                         stride: usize, relu: bool, threads: usize,
+                         cand: TileConfig, u_buf: &mut Vec<f32>,
+                         out: &mut [f32]) {
+    if cand.use_gemm {
+        crate::exec::pattern::conv2d_gemm_batch_into(
+            view, fkw, stride, relu, threads, gp, u_buf, out);
+    } else {
+        crate::exec::pattern::conv2d_batch_into(
+            view, fkw, stride, relu, threads, cand, out);
+    }
+    std::hint::black_box(&mut *out);
+}
+
+/// Int8 edition of [`run_pattern_candidate`].
+#[allow(clippy::too_many_arguments)]
+fn run_quant_pattern_candidate(view: crate::exec::BatchView<'_>,
+                               qf: &QuantFkw,
+                               gp: &crate::exec::pattern::PatternGemmPlan,
+                               stride: usize, relu: bool, threads: usize,
+                               cand: TileConfig, u_buf: &mut Vec<f32>,
+                               out: &mut [f32]) {
+    if cand.use_gemm {
+        crate::exec::pattern::conv2d_gemm_quant_batch_into(
+            view, qf, stride, relu, threads, gp, u_buf, out);
+    } else {
+        crate::exec::pattern::conv2d_quant_batch_into(
+            view, qf, stride, relu, threads, cand, out);
+    }
+    std::hint::black_box(&mut *out);
+}
+
+/// Tile-only sweep for `CocoGen`/`CocoGenQuant` pattern layers, measured
+/// on fused batches of `batch` images.
+fn autotune_tiles(plan: &mut ExecPlan, threads: usize, batch: usize) {
     let mut rng = Rng::seed_from(0xA070);
     let layers: Vec<_> = plan
         .ir
@@ -356,29 +416,38 @@ fn autotune_tiles(plan: &mut ExecPlan, threads: usize) {
         let LayerKind::Conv { stride, relu, .. } = lir.kind else {
             continue;
         };
+        let (c, h, w) = (lir.input.c, lir.input.h, lir.input.w);
         match lp {
             LayerPlan::Fkw { layer, tile } => {
-                let input = crate::exec::Tensor::random(
-                    lir.input.c, lir.input.h, lir.input.w, &mut rng);
+                let data = random_batch(c, h, w, batch, &mut rng);
                 let fkw = layer.clone();
+                let gp = crate::exec::pattern::PatternGemmPlan::build(
+                    fkw.cin, &fkw.kernels);
+                let mut u_buf = Vec::new();
+                let mut out =
+                    vec![0f32; batch * lir.output.elements()];
                 (*tile, _) = tune_tile(*tile, lir.output.h, &mut |cand| {
-                    std::hint::black_box(
-                        crate::exec::pattern::conv2d_auto(
-                            &input, &fkw, stride, relu, threads, cand,
-                        ),
-                    );
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    run_pattern_candidate(view, &fkw, &gp, stride, relu,
+                                          threads, cand, &mut u_buf,
+                                          &mut out);
                 });
             }
             LayerPlan::QuantFkw { layer, tile } => {
-                let input = crate::exec::Tensor::random(
-                    lir.input.c, lir.input.h, lir.input.w, &mut rng);
+                let data = random_batch(c, h, w, batch, &mut rng);
                 let qf = layer.clone();
+                let gp = crate::exec::pattern::PatternGemmPlan::build(
+                    qf.cin, &qf.kernels);
+                let mut u_buf = Vec::new();
+                let mut out =
+                    vec![0f32; batch * lir.output.elements()];
                 (*tile, _) = tune_tile(*tile, lir.output.h, &mut |cand| {
-                    std::hint::black_box(
-                        crate::exec::pattern::conv2d_quant_auto(
-                            &input, &qf, stride, relu, threads, cand,
-                        ),
-                    );
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    run_quant_pattern_candidate(view, &qf, &gp, stride,
+                                                relu, threads, cand,
+                                                &mut u_buf, &mut out);
                 });
             }
             _ => continue,
@@ -387,11 +456,12 @@ fn autotune_tiles(plan: &mut ExecPlan, threads: usize) {
 }
 
 /// Per-layer engine selection for `Scheme::CocoAuto`: measure every
-/// legal lowering of each conv layer on a synthetic input of the layer's
-/// real shape, and rewrite the `LayerPlan` (engine tag, tile config, or
-/// weight format for the int8 variants) to the winner. The compiled
-/// pipeline then binds that choice — zero per-request dispatch.
-fn autotune_engines(plan: &mut ExecPlan, threads: usize) {
+/// legal lowering of each conv layer on a synthetic fused batch of
+/// `batch` images of the layer's real shape, and rewrite the
+/// `LayerPlan` (engine tag, tile config, or weight format for the int8
+/// variants) to the winner. The compiled pipeline then binds that
+/// choice — zero per-request dispatch.
+fn autotune_engines(plan: &mut ExecPlan, threads: usize, batch: usize) {
     let mut rng = Rng::seed_from(0xC0C0);
     let layers: Vec<_> = plan
         .ir
@@ -404,29 +474,33 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize) {
         let LayerKind::Conv { stride, relu, .. } = lir.kind else {
             continue;
         };
-        let input = crate::exec::Tensor::random(
-            lir.input.c, lir.input.h, lir.input.w, &mut rng);
+        let (c, h, w) = (lir.input.c, lir.input.h, lir.input.w);
+        let data = random_batch(c, h, w, batch, &mut rng);
+        let mut out = vec![0f32; batch * lir.output.elements()];
         match lp {
             LayerPlan::Fkw { layer, tile } => {
                 // Pattern layer: AXPY tile sweep + GEMM path (all in
                 // quick_candidates), then the int8 dequant-on-load
                 // variant at the winning config.
                 let fkw = layer.clone();
+                let gp = crate::exec::pattern::PatternGemmPlan::build(
+                    fkw.cin, &fkw.kernels);
+                let mut u_buf = Vec::new();
                 let (best_tile, best_t) =
                     tune_tile(*tile, lir.output.h, &mut |cand| {
-                        std::hint::black_box(
-                            crate::exec::pattern::conv2d_auto(
-                                &input, &fkw, stride, relu, threads, cand,
-                            ),
-                        );
+                        let view = crate::exec::BatchView::new(
+                            batch, c, h, w, &data);
+                        run_pattern_candidate(view, &fkw, &gp, stride,
+                                              relu, threads, cand,
+                                              &mut u_buf, &mut out);
                     });
                 let qf = Arc::new(QuantFkw::quantize(&fkw));
                 let t_quant = measure(&mut || {
-                    std::hint::black_box(
-                        crate::exec::pattern::conv2d_quant_auto(
-                            &input, &qf, stride, relu, threads, best_tile,
-                        ),
-                    );
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    run_quant_pattern_candidate(view, &qf, &gp, stride,
+                                                relu, threads, best_tile,
+                                                &mut u_buf, &mut out);
                 });
                 *lp = if t_quant < best_t {
                     LayerPlan::QuantFkw {
@@ -452,26 +526,36 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize) {
                     crate::exec::im2col::Im2colScratch::default();
                 let mut best_eng = DenseEngine::Im2col;
                 let mut best_t = measure(&mut || {
-                    std::hint::black_box(crate::exec::im2col::conv2d(
-                        &input, &d, stride, relu, threads, &mut scratch,
-                    ));
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    crate::exec::im2col::conv2d_batch_into(
+                        view, &d, stride, relu, threads, &mut scratch,
+                        &mut out);
+                    std::hint::black_box(&mut out);
                 });
                 let t_naive = measure(&mut || {
-                    std::hint::black_box(crate::exec::naive::conv2d(
-                        &input, &d, stride, relu, threads,
-                    ));
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    crate::exec::naive::conv2d_batch_into(
+                        view, &d, stride, relu, threads, &mut out);
+                    std::hint::black_box(&mut out);
                 });
                 if t_naive < best_t {
                     best_t = t_naive;
                     best_eng = DenseEngine::Naive;
                 }
                 if lir.is_conv3x3() && stride == 1 {
+                    let ww = Arc::new(
+                        crate::exec::winograd::WinogradWeights::transform(
+                            &d));
+                    let (mut wu, mut wm) = (Vec::new(), Vec::new());
                     let t_wino = measure(&mut || {
-                        std::hint::black_box(
-                            crate::exec::winograd::conv2d(
-                                &input, &d, relu, threads,
-                            ),
-                        );
+                        let view = crate::exec::BatchView::new(
+                            batch, c, h, w, &data);
+                        crate::exec::winograd::conv2d_pre_batch_into(
+                            view, &ww, relu, threads, &mut wu, &mut wm,
+                            &mut out);
+                        std::hint::black_box(&mut out);
                     });
                     if t_wino < best_t {
                         best_t = t_wino;
@@ -480,12 +564,12 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize) {
                 }
                 let qd = Arc::new(QuantDense::quantize(&d));
                 let t_quant = measure(&mut || {
-                    std::hint::black_box(
-                        crate::exec::im2col::conv2d_quant(
-                            &input, &qd, stride, relu, threads,
-                            &mut scratch,
-                        ),
-                    );
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    crate::exec::im2col::conv2d_quant_batch_into(
+                        view, &qd, stride, relu, threads, &mut scratch,
+                        &mut out);
+                    std::hint::black_box(&mut out);
                 });
                 *lp = if t_quant < best_t {
                     LayerPlan::QuantDense(qd)
@@ -545,6 +629,16 @@ impl ExecPlan {
     /// resolved ahead of serving.
     pub fn compile(&self) -> CompiledPipeline {
         lower(self)
+    }
+
+    /// Compile with a leading batch dimension (see `lower_batched`):
+    /// the pipeline's arena slots carry `batch` images each, and
+    /// `CompiledPipeline::execute_batched` runs a fused walk whose
+    /// per-layer weight traffic is paid once per batch. Weights stay
+    /// `Arc`-shared with this plan and any other pipeline compiled from
+    /// it.
+    pub fn compile_batched(&self, batch: usize) -> CompiledPipeline {
+        lower_batched(self, batch.max(1))
     }
 
     /// Surviving-FLOP ratio vs dense (the analytic speedup bound).

@@ -14,7 +14,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::codegen::ExecPlan;
-use crate::exec::{ExecutorPool, Tensor};
+use crate::exec::{ExecutorPool, ModelExecutor, Tensor};
 use crate::runtime::{DeviceInputs, Executable, HostTensor, Runtime};
 use crate::util::threadpool;
 
@@ -92,34 +92,66 @@ pub trait Backend: Send {
 /// Convert one flattened NHWC image into the planar CHW [`Tensor`] the
 /// native engines consume.
 pub fn nhwc_to_chw(img: &[f32], h: usize, w: usize, c: usize) -> Tensor {
-    assert_eq!(img.len(), h * w * c, "image length mismatch");
     let mut t = Tensor::zeros(c, h, w);
+    nhwc_to_chw_into(img, h, w, c, &mut t.data);
+    t
+}
+
+/// [`nhwc_to_chw`] writing into a preassigned CHW slice — the fused
+/// serving path converts straight into its packed `[N][C][H][W]` batch
+/// buffer, with no per-image `Tensor` intermediate.
+pub fn nhwc_to_chw_into(img: &[f32], h: usize, w: usize, c: usize,
+                        out: &mut [f32]) {
+    assert_eq!(img.len(), h * w * c, "image length mismatch");
+    assert_eq!(out.len(), h * w * c, "output length mismatch");
     for y in 0..h {
         for x in 0..w {
             for ch in 0..c {
-                t.set(ch, y, x, img[(y * w + x) * c + ch]);
+                out[(ch * h + y) * w + x] = img[(y * w + x) * c + ch];
             }
         }
     }
-    t
+}
+
+/// How [`NativeBackend::infer_batch`] executes a routed batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeBatchMode {
+    /// Fused batched pipeline for batches of 2 or more; per-image pool
+    /// fan-out for singletons. The default.
+    Auto,
+    /// Always the fused batched pipeline (singletons included).
+    Fused,
+    /// Always per-image fan-out across the executor pool — the
+    /// pre-batched behavior, kept for comparison and for machines where
+    /// per-image parallelism wins (e.g. many idle cores, tiny models).
+    FanOut,
 }
 
 /// The co-designed native path: a pattern-pruned [`ExecPlan`] served by
 /// an [`ExecutorPool`] — one single-threaded `ModelExecutor` per core —
 /// so live traffic runs on the FKW/CSR/Winograd engines with no PJRT (or
-/// Python) anywhere on the request path. `compile()` lowers the plan to
-/// its compiled op pipeline exactly once (per-layer kernel choice, bound
-/// weights, arena slot assignment — see `codegen::lower`); every pool
-/// worker then serves from that shared pipeline with its own fixed
-/// activation arena, so the steady-state request path performs no
-/// per-layer dispatch and no activation allocation. Numerics are
-/// bit-identical to a direct `ModelExecutor::run` on the same image.
+/// Python) anywhere on the request path. `compile()` builds the
+/// execution paths the configured [`NativeBatchMode`] can reach (both
+/// under `Auto`), sharing every weight `Arc`: the single-image pipeline
+/// the pool fans out over, and a batch-compiled pipeline
+/// (`ExecPlan::compile_batched`) whose fused walk streams each layer's
+/// weights once per *batch* — at batch 8 that is 1/8 of the fan-out
+/// path's weight traffic. Numerics are bit-identical to a direct
+/// `ModelExecutor::run` on the same image either way.
 pub struct NativeBackend {
     name: String,
     plan: Arc<ExecPlan>,
     workers: usize,
+    mode: NativeBatchMode,
     classes: usize,
     pool: Option<ExecutorPool>,
+    /// Batch-compiled executor for the fused path (multi-threaded: the
+    /// whole batch runs as one walk, so intra-layer parallelism uses
+    /// the cores the fan-out path would have spread images over).
+    fused: Option<ModelExecutor>,
+    /// Reusable packed `[N][C][H][W]` staging buffer for the fused
+    /// path's NHWC conversion (warm after the first batch).
+    packed: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -135,9 +167,20 @@ impl NativeBackend {
             name: name.to_string(),
             plan,
             workers: workers.max(1),
+            mode: NativeBatchMode::Auto,
             classes: 0,
             pool: None,
+            fused: None,
+            packed: Vec::new(),
         }
+    }
+
+    /// Select how batches execute (see [`NativeBatchMode`]); builder
+    /// style, call before the backend is handed to the coordinator.
+    pub fn with_batch_mode(mut self, mode: NativeBatchMode)
+                           -> NativeBackend {
+        self.mode = mode;
+        self
     }
 }
 
@@ -146,7 +189,7 @@ impl Backend for NativeBackend {
         &self.name
     }
 
-    fn compile(&mut self, _max_batch: usize) -> Result<ModelSignature> {
+    fn compile(&mut self, max_batch: usize) -> Result<ModelSignature> {
         let last = self
             .plan
             .ir
@@ -160,7 +203,23 @@ impl Backend for NativeBackend {
             last.output
         );
         self.classes = last.output.c;
-        self.pool = Some(ExecutorPool::new(self.plan.clone(), self.workers));
+        // Build only the execution paths this mode can reach: a forced
+        // mode pays one arena footprint, not two (a pool is workers x
+        // peak_activation_bytes of arena; the fused pipeline is
+        // max_batch x). Auto needs both.
+        if self.mode != NativeBatchMode::Fused {
+            self.pool =
+                Some(ExecutorPool::new(self.plan.clone(), self.workers));
+        }
+        if self.mode != NativeBatchMode::FanOut {
+            // The fused pipeline shares every weight Arc with the
+            // pool's; only its (batch-scaled) arena is new.
+            self.fused = Some(ModelExecutor::new_batched(
+                &self.plan,
+                self.workers,
+                max_batch.max(1),
+            ));
+        }
         let inp = self.plan.ir.input;
         Ok(ModelSignature {
             input_shape: vec![inp.h, inp.w, inp.c],
@@ -169,10 +228,8 @@ impl Backend for NativeBackend {
     }
 
     fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor> {
-        let pool = self
-            .pool
-            .as_ref()
-            .ok_or_else(|| anyhow!("native backend: compile() not called"))?;
+        ensure!(self.pool.is_some() || self.fused.is_some(),
+                "native backend: compile() not called");
         let shape = images.shape();
         ensure!(shape.len() == 4, "expected [n,h,w,c], got {shape:?}");
         let (n, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
@@ -183,11 +240,38 @@ impl Backend for NativeBackend {
         );
         let data = images.as_f32()?;
         let elems = h * w * c;
-        // Layout conversion happens on the claiming pool worker, in
-        // parallel with inference, not serially up front.
-        let outs = pool.run_batch_map(n, |i| {
-            nhwc_to_chw(&data[i * elems..(i + 1) * elems], h, w, c)
-        });
+        let use_fused = self.fused.is_some()
+            && match self.mode {
+                NativeBatchMode::FanOut => false,
+                NativeBatchMode::Fused => true,
+                NativeBatchMode::Auto => n >= 2 || self.pool.is_none(),
+            };
+        let outs = if use_fused {
+            // Fused batched walk: one pass over the compiled ops for
+            // the whole batch, per-layer weights streamed once. The
+            // NHWC conversion writes straight into the reusable packed
+            // batch buffer — no per-image Tensor intermediates, no
+            // second pack copy.
+            self.packed.clear();
+            self.packed.resize(n * elems, 0.0);
+            for i in 0..n {
+                nhwc_to_chw_into(
+                    &data[i * elems..(i + 1) * elems], h, w, c,
+                    &mut self.packed[i * elems..(i + 1) * elems],
+                );
+            }
+            self.fused
+                .as_mut()
+                .expect("fused executor checked above")
+                .run_batch_packed(n, &self.packed)
+        } else {
+            // Per-image fan-out: layout conversion happens on the
+            // claiming pool worker, in parallel with inference.
+            let pool = self.pool.as_ref().expect("pool checked above");
+            pool.run_batch_map(n, |i| {
+                nhwc_to_chw(&data[i * elems..(i + 1) * elems], h, w, c)
+            })
+        };
         let mut logits = Vec::with_capacity(n * self.classes);
         for t in &outs {
             ensure!(
@@ -379,6 +463,63 @@ mod tests {
             assert_eq!(&lv[i * 5..(i + 1) * 5], want.data.as_slice(),
                        "image {i} diverged");
         }
+    }
+
+    #[test]
+    fn fused_and_fanout_modes_agree_bitwise() {
+        let plan = tiny_plan();
+        let mut rng = Rng::seed_from(7);
+        let n = 6;
+        let elems = 8 * 8 * 3;
+        let data: Vec<f32> =
+            (0..n * elems).map(|_| rng.normal_f32()).collect();
+        let images = HostTensor::f32(&[n, 8, 8, 3], data.clone());
+        let mut logits = Vec::new();
+        for mode in [NativeBatchMode::Auto, NativeBatchMode::Fused,
+                     NativeBatchMode::FanOut]
+        {
+            let mut be =
+                NativeBackend::with_workers("native", plan.clone(), 2)
+                    .with_batch_mode(mode);
+            be.compile(8).unwrap();
+            let out = be.infer_batch(&images).unwrap();
+            assert_eq!(out.shape(), &[n, 5]);
+            logits.push(out.as_f32().unwrap().to_vec());
+        }
+        assert_eq!(logits[0], logits[1],
+                   "auto (fused) diverged from forced fused");
+        assert_eq!(logits[0], logits[2],
+                   "fused path diverged from per-image fan-out");
+        // and both match the direct executor
+        let mut exec = ModelExecutor::new(&plan, 1);
+        for i in 0..n {
+            let t = nhwc_to_chw(&data[i * elems..(i + 1) * elems], 8, 8, 3);
+            let want = exec.run(&t);
+            assert_eq!(&logits[0][i * 5..(i + 1) * 5],
+                       want.data.as_slice(), "image {i} diverged");
+        }
+    }
+
+    #[test]
+    fn forced_modes_build_only_their_path() {
+        let plan = tiny_plan();
+        let mut be = NativeBackend::with_workers("native", plan.clone(), 2)
+            .with_batch_mode(NativeBatchMode::FanOut);
+        be.compile(8).unwrap();
+        assert!(be.fused.is_none(),
+                "FanOut mode must not build the batched pipeline");
+        assert!(be
+            .infer_batch(&HostTensor::zeros(&[3, 8, 8, 3]))
+            .is_ok());
+        let mut be = NativeBackend::with_workers("native", plan, 2)
+            .with_batch_mode(NativeBatchMode::Fused);
+        be.compile(8).unwrap();
+        assert!(be.pool.is_none(),
+                "Fused mode must not build the fan-out pool");
+        // Singletons run fused too.
+        assert!(be
+            .infer_batch(&HostTensor::zeros(&[1, 8, 8, 3]))
+            .is_ok());
     }
 
     #[test]

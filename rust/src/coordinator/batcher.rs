@@ -20,7 +20,10 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     /// Flush when this many requests are pending.
     pub max_batch: usize,
-    /// Flush a non-empty batch this long after its first request.
+    /// Flush a non-empty batch this long after its first request
+    /// *arrived* (its enqueue timestamp — not when the batcher got
+    /// around to reading it, so time a request already spent queued
+    /// behind failover retries counts against the deadline).
     pub max_wait: Duration,
 }
 
@@ -44,36 +47,53 @@ pub enum BatchStep<T> {
     Closed,
 }
 
-/// Pull one batch from `rx` under `policy`. Returns None when the channel
-/// is closed and drained.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy)
+/// Pull one batch from `rx` under `policy`; `enqueued` reports when an
+/// item first entered the queue, anchoring the `max_wait` deadline (a
+/// request that already sat in the channel — e.g. while the leader
+/// serviced failover retries — must not wait the full `max_wait` again).
+/// Returns None when the channel is closed and drained.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy,
+                     enqueued: impl Fn(&T) -> Instant)
                      -> Option<Vec<T>> {
     // Block for the first element.
     let first = rx.recv().ok()?;
-    Some(fill_batch(rx, policy, first))
+    let deadline = enqueued(&first) + policy.max_wait;
+    Some(fill_batch(rx, policy, first, deadline))
 }
 
 /// Like [`next_batch`], but waits at most `idle` for the first request so
 /// the caller's loop can interleave other work. The serving leader uses
 /// this to service failover retries while the request queue is quiet.
 pub fn next_batch_step<T>(rx: &Receiver<T>, policy: &BatchPolicy,
-                          idle: Duration) -> BatchStep<T> {
+                          idle: Duration,
+                          enqueued: impl Fn(&T) -> Instant)
+                          -> BatchStep<T> {
     let first = match rx.recv_timeout(idle) {
         Ok(item) => item,
         Err(RecvTimeoutError::Timeout) => return BatchStep::Idle,
         Err(RecvTimeoutError::Disconnected) => return BatchStep::Closed,
     };
-    BatchStep::Batch(fill_batch(rx, policy, first))
+    let deadline = enqueued(&first) + policy.max_wait;
+    BatchStep::Batch(fill_batch(rx, policy, first, deadline))
 }
 
-/// Accumulate onto `first` until the batch is full or the deadline hits.
-fn fill_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy, first: T)
-                 -> Vec<T> {
+/// Accumulate onto `first` until the batch is full or `deadline`
+/// (anchored at the first item's enqueue time) hits. A deadline that
+/// has already passed still drains whatever is immediately available —
+/// a backlogged queue must keep forming full batches, it just stops
+/// *waiting* for more.
+fn fill_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy, first: T,
+                 deadline: Instant) -> Vec<T> {
     let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
         if now >= deadline {
+            while batch.len() < policy.max_batch {
+                match rx.try_recv() {
+                    Ok(item) => batch.push(item),
+                    Err(_) => break,
+                }
+            }
             break;
         }
         match rx.recv_timeout(deadline - now) {
@@ -90,6 +110,12 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
+    /// Enqueue-timestamp accessor for tests over plain values: "arrived
+    /// just now", the pre-fix behavior.
+    fn fresh<T>(_: &T) -> Instant {
+        Instant::now()
+    }
+
     #[test]
     fn flushes_full_batch_immediately() {
         let (tx, rx) = mpsc::channel();
@@ -100,9 +126,9 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_secs(10),
         };
-        let b = next_batch(&rx, &policy).unwrap();
+        let b = next_batch(&rx, &policy, fresh).unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = next_batch(&rx, &policy).unwrap();
+        let b = next_batch(&rx, &policy, fresh).unwrap();
         assert_eq!(b, vec![4, 5, 6, 7]);
     }
 
@@ -115,7 +141,7 @@ mod tests {
             max_wait: Duration::from_millis(10),
         };
         let t0 = Instant::now();
-        let b = next_batch(&rx, &policy).unwrap();
+        let b = next_batch(&rx, &policy, fresh).unwrap();
         assert_eq!(b, vec![1]);
         assert!(t0.elapsed() >= Duration::from_millis(9));
     }
@@ -124,7 +150,7 @@ mod tests {
     fn returns_none_on_closed_channel() {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
-        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+        assert!(next_batch(&rx, &BatchPolicy::default(), fresh).is_none());
     }
 
     #[test]
@@ -135,16 +161,16 @@ mod tests {
             max_wait: Duration::from_millis(1),
         };
         let idle = Duration::from_millis(5);
-        assert!(matches!(next_batch_step(&rx, &policy, idle),
+        assert!(matches!(next_batch_step(&rx, &policy, idle, fresh),
                          BatchStep::Idle));
         tx.send(1).unwrap();
         tx.send(2).unwrap();
-        match next_batch_step(&rx, &policy, idle) {
+        match next_batch_step(&rx, &policy, idle, fresh) {
             BatchStep::Batch(b) => assert_eq!(b, vec![1, 2]),
             _ => panic!("expected a batch"),
         }
         drop(tx);
-        assert!(matches!(next_batch_step(&rx, &policy, idle),
+        assert!(matches!(next_batch_step(&rx, &policy, idle, fresh),
                          BatchStep::Closed));
     }
 
@@ -153,8 +179,57 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(7).unwrap();
         drop(tx);
-        let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
+        let b = next_batch(&rx, &BatchPolicy::default(), fresh).unwrap();
         assert_eq!(b, vec![7]);
-        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+        assert!(next_batch(&rx, &BatchPolicy::default(), fresh).is_none());
+    }
+
+    #[test]
+    fn pre_aged_request_does_not_wait_max_wait_again() {
+        // Regression: the deadline is anchored at the request's enqueue
+        // time. A request that already sat in the channel longer than
+        // max_wait (e.g. while the leader serviced failover retries)
+        // flushes immediately instead of waiting max_wait a second time.
+        let (tx, rx) = mpsc::channel();
+        let max_wait = Duration::from_millis(200);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait,
+        };
+        let aged = Instant::now() - 2 * max_wait;
+        tx.send(("old", aged)).unwrap();
+        tx.send(("queued-behind-it", aged)).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy, |r: &(&str, Instant)| r.1)
+            .unwrap();
+        let took = t0.elapsed();
+        // Both queued items flush (an expired deadline still drains the
+        // backlog), and nothing waits for the 200 ms window.
+        assert_eq!(b.len(), 2);
+        assert!(
+            took < max_wait / 2,
+            "expired deadline still waited {took:?}"
+        );
+    }
+
+    #[test]
+    fn fresh_request_still_gets_its_full_window() {
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(150),
+        };
+        let t0 = Instant::now();
+        tx.send(((), Instant::now())).unwrap();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let _ = tx.send(((), Instant::now()));
+        });
+        let b = next_batch(&rx, &policy, |r: &((), Instant)| r.1)
+            .unwrap();
+        // The late arrival lands inside the window anchored at the
+        // first request's enqueue time.
+        assert_eq!(b.len(), 2);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
     }
 }

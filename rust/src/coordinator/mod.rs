@@ -35,7 +35,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::runtime::{HostTensor, Runtime};
-pub use backend::{Backend, ModelSignature, NativeBackend, PjrtBackend};
+pub use backend::{Backend, ModelSignature, NativeBackend,
+                  NativeBatchMode, PjrtBackend};
 pub use batcher::{BatchPolicy, BatchStep};
 pub use metrics::{Metrics, ServeReport, Summary};
 pub use router::{BackendState, BatchRouter, RouterPolicy};
@@ -463,7 +464,11 @@ fn leader_main(mut ctx: LeaderCtx) {
             dispatch(&mut ctx, reqs);
         }
         if open {
-            match batcher::next_batch_step(&ctx.rx, &ctx.policy, idle) {
+            // The deadline anchors at each batch's first request's
+            // *enqueue* time: time spent queued behind failover retries
+            // counts against max_wait.
+            match batcher::next_batch_step(&ctx.rx, &ctx.policy, idle,
+                                           |r: &Request| r.enqueued) {
                 BatchStep::Batch(batch) => {
                     ctx.pending.fetch_add(batch.len(), Ordering::SeqCst);
                     dispatch(&mut ctx, batch);

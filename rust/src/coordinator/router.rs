@@ -63,52 +63,67 @@ impl Variant {
 }
 
 /// The per-request variant router: SLA-filtered, least-loaded selection.
+///
+/// The per-SLA candidate sets depend only on the variant list, so they
+/// are computed once at construction — [`Router::route`] on the request
+/// hot path is an allocation-free scan over a precomputed slice.
 pub struct Router {
     variants: Vec<Variant>,
+    /// Precomputed candidate indices: fastest third.
+    realtime: Vec<usize>,
+    /// Precomputed candidate indices: most-accurate third.
+    quality: Vec<usize>,
+    /// Precomputed candidate indices: everything.
+    standard: Vec<usize>,
 }
 
 impl Router {
     pub fn new(variants: Vec<Variant>) -> Router {
         assert!(!variants.is_empty());
-        Router { variants }
+        let n = variants.len();
+        let k = n.div_ceil(3);
+        let mut realtime: Vec<usize> = (0..n).collect();
+        realtime.sort_by(|&a, &b| {
+            variants[a]
+                .latency_ms
+                .partial_cmp(&variants[b].latency_ms)
+                .unwrap()
+        });
+        realtime.truncate(k);
+        let mut quality: Vec<usize> = (0..n).collect();
+        quality.sort_by(|&a, &b| {
+            variants[b]
+                .accuracy
+                .partial_cmp(&variants[a].accuracy)
+                .unwrap()
+        });
+        quality.truncate(k);
+        Router {
+            variants,
+            realtime,
+            quality,
+            standard: (0..n).collect(),
+        }
     }
 
     /// Candidate set for an SLA class: Realtime = fastest third,
-    /// Quality = most-accurate third, Standard = all.
-    fn candidates(&self, sla: Sla) -> Vec<usize> {
-        let n = self.variants.len();
-        let k = n.div_ceil(3);
-        let mut idx: Vec<usize> = (0..n).collect();
+    /// Quality = most-accurate third, Standard = all. Precomputed at
+    /// [`Router::new`] — no per-request allocation or sort.
+    fn candidates(&self, sla: Sla) -> &[usize] {
         match sla {
-            Sla::Realtime => {
-                idx.sort_by(|&a, &b| {
-                    self.variants[a]
-                        .latency_ms
-                        .partial_cmp(&self.variants[b].latency_ms)
-                        .unwrap()
-                });
-                idx.truncate(k);
-            }
-            Sla::Quality => {
-                idx.sort_by(|&a, &b| {
-                    self.variants[b]
-                        .accuracy
-                        .partial_cmp(&self.variants[a].accuracy)
-                        .unwrap()
-                });
-                idx.truncate(k);
-            }
-            Sla::Standard => {}
+            Sla::Realtime => &self.realtime,
+            Sla::Quality => &self.quality,
+            Sla::Standard => &self.standard,
         }
-        idx
     }
 
     /// Pick a variant for `sla`: least outstanding load among candidates,
     /// ties broken by latency.
     pub fn route(&self, sla: Sla) -> &Variant {
-        let cands = self.candidates(sla);
-        let best = cands
-            .into_iter()
+        let best = self
+            .candidates(sla)
+            .iter()
+            .copied()
             .min_by(|&a, &b| {
                 let va = &self.variants[a];
                 let vb = &self.variants[b];
@@ -241,38 +256,59 @@ impl BatchRouter {
     /// policy runs over the full set ordered by ascending cooldown
     /// (degraded mode: attempting the least-recently-failed backend
     /// beats dropping traffic on the floor, and is what lets a sole
-    /// backend recover from a transient error). Each call also ticks
-    /// every backend's cooldown.
+    /// backend recover from a transient error). Every policy honors
+    /// that ordering — `LeastLoaded` breaks load ties by ascending
+    /// penalty, and `Split` suspends deficit-round-robin accounting
+    /// entirely while degraded (out-of-rotation backends must not
+    /// accrue credit, or a recovering backend would absorb a burst of
+    /// consecutive batches the moment it comes back). Each call also
+    /// ticks every backend's cooldown.
     pub fn pick(&mut self, states: &[Arc<BackendState>]) -> usize {
         for s in states {
             s.decay();
         }
-        let mut healthy: Vec<usize> = (0..states.len())
+        let mut rotation: Vec<usize> = (0..states.len())
             .filter(|&i| states[i].healthy())
             .collect();
-        if healthy.is_empty() {
-            healthy = (0..states.len()).collect();
-            healthy.sort_by_key(|&i| {
+        let degraded = rotation.is_empty();
+        if degraded {
+            rotation = (0..states.len()).collect();
+            // Stable sort: ascending cooldown, declaration order on
+            // ties.
+            rotation.sort_by_key(|&i| {
                 states[i].penalty.load(Ordering::SeqCst)
             });
         }
         match &self.policy {
-            RouterPolicy::Failover => healthy[0],
-            RouterPolicy::LeastLoaded => healthy
+            RouterPolicy::Failover => rotation[0],
+            RouterPolicy::LeastLoaded => rotation
                 .iter()
                 .copied()
-                .min_by_key(|&i| (states[i].load(), i))
+                .min_by_key(|&i| {
+                    let tie = if degraded {
+                        states[i].penalty.load(Ordering::SeqCst)
+                    } else {
+                        0
+                    };
+                    (states[i].load(), tie, i)
+                })
                 .unwrap(),
             RouterPolicy::Split(w) => {
-                // Deficit round-robin: healthy backends accrue credit at
-                // their weight; the richest one serves and pays the
-                // round's total, giving a `w`-proportional long-run
-                // split that adapts when backends drop out.
-                let total: f64 = healthy.iter().map(|&i| w[i]).sum();
-                for &i in &healthy {
+                if degraded {
+                    // No backend is in rotation: probe by ascending
+                    // cooldown and leave every deficit counter
+                    // untouched.
+                    return rotation[0];
+                }
+                // Deficit round-robin: in-rotation backends accrue
+                // credit at their weight; the richest one serves and
+                // pays the round's total, giving a `w`-proportional
+                // long-run split that adapts when backends drop out.
+                let total: f64 = rotation.iter().map(|&i| w[i]).sum();
+                for &i in &rotation {
                     self.credit[i] += w[i];
                 }
-                let pick = healthy
+                let pick = rotation
                     .iter()
                     .copied()
                     .max_by(|&a, &b| {
@@ -426,6 +462,82 @@ mod tests {
         st[1].begin();
         st[1].begin();
         assert_eq!(r.pick(&st), 0);
+    }
+
+    #[test]
+    fn degraded_split_follows_ascending_cooldown() {
+        // b1 failed first (lower remaining cooldown), b0 most recently.
+        // Degraded-mode Split must probe the least-recently-failed
+        // backend, not fall back to declaration order.
+        let st = states(2);
+        let mut r =
+            BatchRouter::new(RouterPolicy::Split(vec![1.0, 1.0]), 2)
+                .unwrap();
+        st[1].mark_unhealthy();
+        for _ in 0..3 {
+            assert_eq!(r.pick(&st), 0); // b0 still healthy
+        }
+        st[0].mark_unhealthy();
+        // degraded: b1's penalty has decayed below b0's
+        assert_eq!(r.pick(&st), 1);
+    }
+
+    #[test]
+    fn degraded_least_loaded_breaks_ties_by_cooldown() {
+        let st = states(2);
+        let mut r = BatchRouter::new(RouterPolicy::LeastLoaded, 2).unwrap();
+        st[1].mark_unhealthy();
+        for _ in 0..3 {
+            assert_eq!(r.pick(&st), 0);
+        }
+        st[0].mark_unhealthy();
+        // equal load: the tie must go to the least cooldown (b1), not
+        // declaration order (b0, the most-recently-failed backend).
+        assert_eq!(r.pick(&st), 1);
+        // an actual load difference still dominates
+        st[1].begin();
+        assert_eq!(r.pick(&st), 0);
+        st[1].end();
+    }
+
+    #[test]
+    fn degraded_split_accrues_no_credit() {
+        // While no backend is in rotation, deficit counters must not
+        // move: otherwise the never-picked backend banks credit and
+        // absorbs a burst of consecutive batches once it recovers.
+        let st = states(2);
+        let mut r =
+            BatchRouter::new(RouterPolicy::Split(vec![1.0, 1.0]), 2)
+                .unwrap();
+        st[0].mark_unhealthy();
+        st[1].mark_unhealthy();
+        for _ in 0..10 {
+            r.pick(&st); // degraded picks
+        }
+        // Force both back into rotation.
+        st[0].penalty.store(0, Ordering::SeqCst);
+        st[1].penalty.store(0, Ordering::SeqCst);
+        // With untouched counters an equal-weight split alternates
+        // exactly; a banked deficit would hand one backend a run of
+        // consecutive picks.
+        let mut counts = [0usize; 2];
+        let mut longest_run = 0usize;
+        let mut run = 0usize;
+        let mut last = usize::MAX;
+        for _ in 0..20 {
+            let p = r.pick(&st);
+            counts[p] += 1;
+            if p == last {
+                run += 1;
+            } else {
+                run = 1;
+                last = p;
+            }
+            longest_run = longest_run.max(run);
+        }
+        assert_eq!(counts, [10, 10], "degraded phase skewed the split");
+        assert!(longest_run <= 1, "recovering backend absorbed a burst \
+                                   of {longest_run} consecutive picks");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! rows are still walked in AXPY form where possible.
 
 use crate::compress::CsrLayer;
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
+use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
 use crate::util::threadpool;
 
 /// Sparse conv2d from a CSR layer, SAME padding, optional fused ReLU.
@@ -74,6 +74,22 @@ pub fn conv2d_into(input: TensorView<'_>, layer: &CsrLayer, stride: usize,
             }
         }
     });
+}
+
+/// Batched [`conv2d_into`]: per-image loop behind the same
+/// `[N][C][H][W]` signature as the fused engines (the CSR ablation is
+/// not a hot serving path, so it pays the per-image index decode).
+pub fn conv2d_batch_into(input: BatchView<'_>, layer: &CsrLayer,
+                         stride: usize, relu: bool, threads: usize,
+                         out: &mut [f32]) {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let per = layer.cout * h_out * w_out;
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        conv2d_into(input.image(img), layer, stride, relu, threads,
+                    chunk);
+    }
 }
 
 #[cfg(test)]

@@ -3,64 +3,54 @@
 
 use crate::compress::DenseLayer;
 use crate::exec::gemm::gemm;
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
+use crate::exec::tensor::{fill_shifted_row, same_pad, BatchView, Tensor,
+                          TensorView};
 use crate::quant::QuantDense;
 use crate::util::threadpool;
 
-/// Scratch buffer reused across layers to avoid re-allocating the im2col
-/// matrix per call (part of the fair-baseline treatment).
+/// Scratch buffers reused across layers to avoid re-allocating the
+/// im2col matrix (and, on the batched path, the pre-scatter GEMM output)
+/// per call — part of the fair-baseline treatment.
 #[derive(Default)]
 pub struct Im2colScratch {
     buf: Vec<f32>,
+    /// Batched-path GEMM output `[cout][n*hw]`, scattered into the
+    /// `[n][cout][hw]` activation layout after the per-layer GEMM.
+    acc: Vec<f32>,
 }
 
-/// Fill `scratch` with the `[K][HW]` patch matrix for a (kh, kw, cin)
-/// kernel over `input`; returns the output geometry. Shared by the f32
-/// and the weight-only-int8 GEMM paths.
-fn im2col_patches(input: TensorView<'_>, kh: usize, kw: usize, cin: usize,
+/// Fill `scratch` with the `[K][N*HW]` patch matrix for a (kh, kw, cin)
+/// kernel over the whole batch — image `i`'s patches occupy columns
+/// `[i*hw, (i+1)*hw)` of every row, so one GEMM per layer covers the
+/// batch and the weight panel streams once per batch, not once per
+/// image. Returns the per-image output geometry. Shared by the f32 and
+/// the weight-only-int8 GEMM paths (n = 1 is the single-image case).
+fn im2col_patches(input: BatchView<'_>, kh: usize, kw: usize, cin: usize,
                   stride: usize, scratch: &mut Im2colScratch)
                   -> (usize, usize) {
     let (h_out, pad_h) = same_pad(input.h, kh, stride);
     let (w_out, pad_w) = same_pad(input.w, kw, stride);
     let hw = h_out * w_out;
+    let nhw = input.n * hw;
     let kdim = cin * kh * kw;
     scratch.buf.clear();
-    scratch.buf.resize(kdim * hw, 0.0);
+    scratch.buf.resize(kdim * nhw, 0.0);
     let cols = &mut scratch.buf;
-    for ci in 0..cin {
-        let plane = input.plane(ci);
-        for ky in 0..kh {
-            for kx in 0..kw {
-                let krow = (ci * kh + ky) * kw + kx;
-                let dst = &mut cols[krow * hw..(krow + 1) * hw];
-                for y in 0..h_out {
-                    let iy = (y * stride + ky) as isize - pad_h as isize;
-                    if iy < 0 || iy >= input.h as isize {
-                        continue; // stays zero
-                    }
-                    let src_row =
-                        &plane[iy as usize * input.w..(iy as usize + 1)
-                            * input.w];
-                    let dst_row = &mut dst[y * w_out..(y + 1) * w_out];
-                    if stride == 1 {
-                        // contiguous copy with border clamp
-                        let x_lo = pad_w.saturating_sub(kx);
-                        let x_hi =
-                            (input.w + pad_w - kx).min(w_out);
-                        if x_lo < x_hi {
-                            let src_lo = x_lo + kx - pad_w;
-                            dst_row[x_lo..x_hi].copy_from_slice(
-                                &src_row[src_lo..src_lo + (x_hi - x_lo)],
-                            );
-                        }
-                    } else {
-                        for (x, d) in dst_row.iter_mut().enumerate() {
-                            let ix = (x * stride + kx) as isize
-                                - pad_w as isize;
-                            if ix >= 0 && (ix as usize) < input.w {
-                                *d = src_row[ix as usize];
-                            }
-                        }
+    for img in 0..input.n {
+        let image = input.image(img);
+        for ci in 0..cin {
+            let plane = image.plane(ci);
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let krow = (ci * kh + ky) * kw + kx;
+                    let dst = &mut cols
+                        [krow * nhw + img * hw..krow * nhw + (img + 1) * hw];
+                    for y in 0..h_out {
+                        fill_shifted_row(
+                            &mut dst[y * w_out..(y + 1) * w_out], plane,
+                            input.h, input.w, y, ky, kx, stride, pad_h,
+                            pad_w, w_out,
+                        );
                     }
                 }
             }
@@ -85,8 +75,9 @@ pub fn conv2d(input: &Tensor, layer: &DenseLayer, stride: usize, relu: bool,
 pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
                    stride: usize, relu: bool, threads: usize,
                    scratch: &mut Im2colScratch, out: &mut [f32]) {
-    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
-                                        layer.cin, stride, scratch);
+    let (h_out, w_out) = im2col_patches(BatchView::of_single(input),
+                                        layer.kh, layer.kw, layer.cin,
+                                        stride, scratch);
     let hw = h_out * w_out;
     let kdim = layer.cin * layer.kh * layer.kw;
     let cols = &scratch.buf;
@@ -100,6 +91,58 @@ pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
     if relu {
         for v in out.iter_mut() {
             *v = v.max(0.0);
+        }
+    }
+}
+
+/// Fused batched conv: one `[K][n*hw]` patch matrix and a *single* GEMM
+/// for the whole batch, so the weight panel streams once per batch
+/// instead of once per image — the batch-amortization the compiled
+/// batched pipeline is built on. The GEMM result (`[cout][n*hw]`, bias
+/// pre-filled so per-element accumulation order matches [`conv2d_into`]
+/// exactly) is scattered into the `[n][cout][hw]` activation layout.
+/// Bit-identical per image to `conv2d_into` on that image alone.
+pub fn conv2d_batch_into(input: BatchView<'_>, layer: &DenseLayer,
+                         stride: usize, relu: bool, threads: usize,
+                         scratch: &mut Im2colScratch, out: &mut [f32]) {
+    let n = input.n;
+    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
+                                        layer.cin, stride, scratch);
+    let hw = h_out * w_out;
+    let nhw = n * hw;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    assert_eq!(out.len(), n * layer.cout * hw,
+               "output buffer size mismatch");
+    scratch.acc.clear();
+    scratch.acc.resize(layer.cout * nhw, 0.0);
+    for co in 0..layer.cout {
+        scratch.acc[co * nhw..(co + 1) * nhw].fill(layer.bias[co]);
+    }
+    gemm(&layer.weights, &scratch.buf, &mut scratch.acc, layer.cout,
+         kdim, nhw, threads);
+    scatter_batch(&scratch.acc, out, n, layer.cout, hw, relu,
+                  |v, _| v);
+}
+
+/// Scatter the batched GEMM output `acc[cout][n*hw]` into the
+/// `[n][cout][hw]` activation layout, applying `finish(value, co)` (the
+/// quant path's scale+bias fusion; identity for f32) and the fused ReLU.
+fn scatter_batch<F>(acc: &[f32], out: &mut [f32], n: usize, cout: usize,
+                    hw: usize, relu: bool, finish: F)
+where
+    F: Fn(f32, usize) -> f32,
+{
+    let nhw = n * hw;
+    let chw = cout * hw;
+    for img in 0..n {
+        for co in 0..cout {
+            let src = &acc[co * nhw + img * hw..co * nhw + (img + 1) * hw];
+            let dst =
+                &mut out[img * chw + co * hw..img * chw + (co + 1) * hw];
+            for (d, s) in dst.iter_mut().zip(src) {
+                let v = finish(*s, co);
+                *d = if relu { v.max(0.0) } else { v };
+            }
         }
     }
 }
@@ -125,8 +168,9 @@ pub fn conv2d_quant(input: &Tensor, layer: &QuantDense, stride: usize,
 pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantDense,
                          stride: usize, relu: bool, threads: usize,
                          scratch: &mut Im2colScratch, out: &mut [f32]) {
-    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
-                                        layer.cin, stride, scratch);
+    let (h_out, w_out) = im2col_patches(BatchView::of_single(input),
+                                        layer.kh, layer.kw, layer.cin,
+                                        stride, scratch);
     let hw = h_out * w_out;
     let kdim = layer.cin * layer.kh * layer.kw;
     let cols: &[f32] = &scratch.buf;
@@ -150,6 +194,46 @@ pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantDense,
             let x = scale * *v + bias;
             *v = if relu { x.max(0.0) } else { x };
         }
+    });
+}
+
+/// Fused batched weight-only-int8 conv: the i8 filter rows are decoded
+/// exactly once per batch and each surviving weight streams through an
+/// AXPY over the whole `[n*hw]` patch row; scale + bias fuse during the
+/// scatter into `[n][cout][hw]`. Bit-identical per image to
+/// [`conv2d_quant_into`] on that image alone.
+pub fn conv2d_quant_batch_into(input: BatchView<'_>, layer: &QuantDense,
+                               stride: usize, relu: bool, threads: usize,
+                               scratch: &mut Im2colScratch,
+                               out: &mut [f32]) {
+    let n = input.n;
+    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
+                                        layer.cin, stride, scratch);
+    let hw = h_out * w_out;
+    let nhw = n * hw;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    assert_eq!(out.len(), n * layer.cout * hw,
+               "output buffer size mismatch");
+    scratch.acc.clear();
+    scratch.acc.resize(layer.cout * nhw, 0.0);
+    let cols: &[f32] = &scratch.buf;
+    threadpool::parallel_chunks_mut(
+        &mut scratch.acc, nhw, threads, |co, plane| {
+            let wrow = &layer.weights[co * kdim..(co + 1) * kdim];
+            for (k, &qw) in wrow.iter().enumerate() {
+                if qw == 0 {
+                    continue;
+                }
+                let w = qw as f32;
+                let src = &cols[k * nhw..(k + 1) * nhw];
+                for (o, i) in plane.iter_mut().zip(src.iter()) {
+                    *o += w * *i;
+                }
+            }
+        },
+    );
+    scatter_batch(&scratch.acc, out, n, layer.cout, hw, relu, |v, co| {
+        layer.scales[co] * v + layer.bias[co]
     });
 }
 
@@ -217,6 +301,68 @@ mod tests {
         let _ = conv2d(&input, &small, 1, false, 1, &mut scratch);
         let again = conv2d(&input, &big, 1, false, 1, &mut scratch);
         assert!(first.max_abs_diff(&again) < 1e-6);
+    }
+
+    #[test]
+    fn batch_matches_per_image_bitwise() {
+        prop::check("im2col-batch-vs-single", 20, |g| {
+            let n = g.usize(1, 5);
+            let cin = g.usize(1, 5);
+            let cout = g.usize(1, 7);
+            let h = g.usize(3, 10);
+            let w = g.usize(3, 10);
+            let k = *g.pick(&[1usize, 3]);
+            let stride = *g.pick(&[1usize, 2]);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let layer = DenseLayer {
+                cout,
+                cin,
+                kh: k,
+                kw: k,
+                weights: (0..cout * cin * k * k)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let images: Vec<Tensor> = (0..n)
+                .map(|_| Tensor::random(cin, h, w, &mut rng))
+                .collect();
+            let mut packed = Vec::new();
+            for t in &images {
+                packed.extend_from_slice(&t.data);
+            }
+            let view = crate::exec::tensor::BatchView::new(
+                n, cin, h, w, &packed);
+            let q = crate::quant::QuantDense::quantize(&layer);
+            let per = {
+                let (ho, _) = same_pad(h, k, stride);
+                let (wo, _) = same_pad(w, k, stride);
+                cout * ho * wo
+            };
+            let mut scratch = Im2colScratch::default();
+            let mut got = vec![0f32; n * per];
+            conv2d_batch_into(view, &layer, stride, relu, 2,
+                              &mut scratch, &mut got);
+            let mut got_q = vec![0f32; n * per];
+            conv2d_quant_batch_into(view, &q, stride, relu, 2,
+                                    &mut scratch, &mut got_q);
+            for (i, t) in images.iter().enumerate() {
+                let mut want = vec![0f32; per];
+                conv2d_into(t.view(), &layer, stride, relu, 1,
+                            &mut scratch, &mut want);
+                if got[i * per..(i + 1) * per] != want[..] {
+                    return Err(format!("f32 batch diverged at image {i}"));
+                }
+                let mut want_q = vec![0f32; per];
+                conv2d_quant_into(t.view(), &q, stride, relu, 1,
+                                  &mut scratch, &mut want_q);
+                if got_q[i * per..(i + 1) * per] != want_q[..] {
+                    return Err(format!("quant batch diverged at {i}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::codegen::{Arena, CompiledPipeline, ExecPlan};
 use crate::util::threadpool;
-pub use tensor::{Tensor, TensorView};
+pub use tensor::{BatchView, Tensor, TensorView};
 
 /// Reusable engine scratch owned by one executor: the im2col patch
 /// matrix, the Winograd input/product buffers, and the pattern-GEMM
@@ -49,6 +49,8 @@ pub struct ModelExecutor {
     pipeline: Arc<CompiledPipeline>,
     arena: Arena,
     scratch: ExecScratch,
+    /// Reusable packing buffer for fused batches (`[N][C][H][W]`).
+    batch_in: Vec<f32>,
 }
 
 impl ModelExecutor {
@@ -56,6 +58,20 @@ impl ModelExecutor {
     /// retained; the pipeline keeps the bound weights alive.
     pub fn new(plan: &ExecPlan, threads: usize) -> ModelExecutor {
         Self::with_pipeline(Arc::new(plan.compile()), threads)
+    }
+
+    /// Compile `plan` with a leading batch dimension of `max_batch` and
+    /// build an executor whose [`ModelExecutor::run_batch`] is a *fused*
+    /// walk: one pass over the compiled ops per batch, every layer's
+    /// weights decoded/streamed once per batch. Single-image
+    /// [`ModelExecutor::run`] still works (and stays bit-identical); the
+    /// arena is `max_batch` times the single-image footprint.
+    pub fn new_batched(plan: &ExecPlan, threads: usize, max_batch: usize)
+                       -> ModelExecutor {
+        Self::with_pipeline(
+            Arc::new(plan.compile_batched(max_batch.max(1))),
+            threads,
+        )
     }
 
     /// Executor over a shared plan (convenience for callers holding an
@@ -74,6 +90,7 @@ impl ModelExecutor {
             pipeline,
             arena,
             scratch: ExecScratch::default(),
+            batch_in: Vec::new(),
         }
     }
 
@@ -88,10 +105,68 @@ impl ModelExecutor {
         self.arena.bytes()
     }
 
-    /// Run a batch of inputs sequentially on this executor, preserving
-    /// order. For parallel fan-out across cores use [`ExecutorPool`].
+    /// Run a batch of inputs, preserving order.
+    ///
+    /// On a batch-compiled executor ([`ModelExecutor::new_batched`])
+    /// this is a *fused* walk: the batch packs into one `[N][C][H][W]`
+    /// buffer and each compiled op serves every image in a single
+    /// kernel call, so per-layer weight traffic is paid once per batch
+    /// (batches larger than the compiled cap run in cap-sized fused
+    /// chunks). On a single-image pipeline it degrades to a sequential
+    /// per-image loop. Either way, every output is bit-identical to
+    /// [`ModelExecutor::run`] on that input alone. For parallel
+    /// fan-out across cores use [`ExecutorPool`].
     pub fn run_batch(&mut self, inputs: &[Tensor]) -> Vec<Tensor> {
-        inputs.iter().map(|x| self.run(x)).collect()
+        let cap = self.pipeline.max_batch();
+        if cap <= 1 {
+            return inputs.iter().map(|x| self.run(x)).collect();
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(cap) {
+            if chunk.len() == 1 {
+                out.push(self.run(&chunk[0]));
+                continue;
+            }
+            self.batch_in.clear();
+            for t in chunk {
+                assert_eq!(t.shape(), self.pipeline.input,
+                           "input shape mismatch");
+                self.batch_in.extend_from_slice(&t.data);
+            }
+            out.extend(self.pipeline.execute_batched(
+                chunk.len(),
+                &self.batch_in,
+                &mut self.arena,
+                &mut self.scratch,
+                self.threads,
+            ));
+        }
+        out
+    }
+
+    /// [`ModelExecutor::run_batch`] over a pre-packed `[N][C][H][W]`
+    /// buffer — the zero-copy serving entry point: callers that already
+    /// hold (or can convert straight into) the packed layout skip the
+    /// per-image `Tensor` intermediates and the second pack copy.
+    /// Batches above the compiled cap run in cap-sized fused chunks;
+    /// results are bit-identical to [`ModelExecutor::run`] per image.
+    pub fn run_batch_packed(&mut self, n: usize, input: &[f32])
+                            -> Vec<Tensor> {
+        let per = self.pipeline.input.elements();
+        assert_eq!(input.len(), n * per, "packed batch length mismatch");
+        let cap = self.pipeline.max_batch().max(1);
+        let mut out = Vec::with_capacity(n);
+        for start in (0..n).step_by(cap) {
+            let m = cap.min(n - start);
+            out.extend(self.pipeline.execute_batched(
+                m,
+                &input[start * per..(start + m) * per],
+                &mut self.arena,
+                &mut self.scratch,
+                self.threads,
+            ));
+        }
+        out
     }
 
     /// Run one input through the model; returns the final tensor.
@@ -375,6 +450,42 @@ mod tests {
             .into_shared();
         let exec = ModelExecutor::shared(plan, 2);
         assert_send(&exec);
+    }
+
+    #[test]
+    fn fused_batch_matches_sequential_and_chunks_oversized() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42);
+        // cap 4, 10 inputs: 4 + 4 + 2 fused chunks
+        let mut fused = ModelExecutor::new_batched(&plan, 2, 4);
+        let mut seq = ModelExecutor::new(&plan, 2);
+        let mut rng = Rng::seed_from(14);
+        let inputs: Vec<Tensor> = (0..10)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let outs = fused.run_batch(&inputs);
+        assert_eq!(outs.len(), inputs.len());
+        for (x, got) in inputs.iter().zip(&outs) {
+            let want = seq.run(x);
+            assert_eq!(want.data, got.data,
+                       "fused batch diverged from sequential run");
+        }
+        // single-image run on the batch-compiled executor also agrees
+        let a = fused.run(&inputs[0]);
+        let b = seq.run(&inputs[0]);
+        assert_eq!(a.data, b.data);
+        assert!(fused.run_batch(&[]).is_empty());
+        // the packed zero-copy entry point matches the Tensor-slice one
+        let mut packed = Vec::new();
+        for t in &inputs {
+            packed.extend_from_slice(&t.data);
+        }
+        let packed_outs = fused.run_batch_packed(inputs.len(), &packed);
+        for (got, want) in packed_outs.iter().zip(&outs) {
+            assert_eq!(got.data, want.data,
+                       "packed batch diverged from run_batch");
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! what the compiler finds on its own.
 
 use crate::compress::DenseLayer;
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
+use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
 use crate::quant::QuantDense;
 use crate::util::threadpool;
 
@@ -53,6 +53,37 @@ pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
             }
         }
     });
+}
+
+/// Batched [`conv2d_into`]: the direct-loop baseline has no weight
+/// stream to amortize, so the batch is a plain per-image loop behind
+/// the same `[N][C][H][W]` signature as the fused engines.
+pub fn conv2d_batch_into(input: BatchView<'_>, layer: &DenseLayer,
+                         stride: usize, relu: bool, threads: usize,
+                         out: &mut [f32]) {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let per = layer.cout * h_out * w_out;
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        conv2d_into(input.image(img), layer, stride, relu, threads,
+                    chunk);
+    }
+}
+
+/// Batched [`conv2d_quant_into`]: per-image loop, same signature as the
+/// fused engines.
+pub fn conv2d_quant_batch_into(input: BatchView<'_>, layer: &QuantDense,
+                               stride: usize, relu: bool, threads: usize,
+                               out: &mut [f32]) {
+    let (h_out, _) = same_pad(input.h, layer.kh, stride);
+    let (w_out, _) = same_pad(input.w, layer.kw, stride);
+    let per = layer.cout * h_out * w_out;
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        conv2d_quant_into(input.image(img), layer, stride, relu, threads,
+                          chunk);
+    }
 }
 
 /// Weight-only int8 dense conv, SAME padding, optional fused ReLU.

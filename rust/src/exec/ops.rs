@@ -6,7 +6,7 @@
 //! into a preassigned buffer — what the compiled-op pipeline calls so
 //! steady-state inference allocates nothing beyond its arena.
 
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
+use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
 
 /// Depthwise 3x3 conv, SAME padding; weights `w[c][ky][kx]`, `bias[c]`.
 pub fn depthwise3x3(input: &Tensor, weights: &[f32], bias: &[f32],
@@ -159,6 +159,53 @@ pub fn add_into(a: &[f32], b: &[f32], relu: bool, out: &mut [f32]) {
     for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
         let v = x + y;
         *o = if relu { v.max(0.0) } else { v };
+    }
+}
+
+/// Batched [`depthwise3x3_into`]: per-image loop behind the same
+/// `[N][C][H][W]` signature as the fused conv engines.
+pub fn depthwise3x3_batch_into(input: BatchView<'_>, weights: &[f32],
+                               bias: &[f32], stride: usize, relu: bool,
+                               out: &mut [f32]) {
+    let (h_out, _) = same_pad(input.h, 3, stride);
+    let (w_out, _) = same_pad(input.w, 3, stride);
+    let per = input.c * h_out * w_out;
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        depthwise3x3_into(input.image(img), weights, bias, stride, relu,
+                          chunk);
+    }
+}
+
+/// Batched [`maxpool2_into`].
+pub fn maxpool2_batch_into(input: BatchView<'_>, out: &mut [f32]) {
+    let per = input.c * input.h.div_ceil(2) * input.w.div_ceil(2);
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        maxpool2_into(input.image(img), chunk);
+    }
+}
+
+/// Batched [`gap_into`]: `out` is `[n][c]`.
+pub fn gap_batch_into(input: BatchView<'_>, out: &mut [f32]) {
+    assert_eq!(out.len(), input.n * input.c,
+               "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(input.c).enumerate() {
+        gap_into(input.image(img), chunk);
+    }
+}
+
+/// Batched [`dense_into`] over `n` flattened input rows of `cin`
+/// elements each; `out` is `[n][cout]`.
+pub fn dense_batch_into(input: &[f32], n: usize, weights: &[f32],
+                        bias: &[f32], cout: usize, relu: bool,
+                        out: &mut [f32]) {
+    assert_eq!(input.len() % n.max(1), 0, "ragged batched FC input");
+    let cin = input.len() / n.max(1);
+    assert_eq!(out.len(), n * cout, "output buffer size mismatch");
+    for img in 0..n {
+        dense_into(&input[img * cin..(img + 1) * cin], weights, bias,
+                   cout, relu, &mut out[img * cout..(img + 1) * cout]);
     }
 }
 

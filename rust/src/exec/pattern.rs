@@ -21,8 +21,9 @@
 
 use crate::codegen::TileConfig;
 use crate::compress::{FkwKernel, FkwLayer};
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
-use crate::patterns::PATTERN_SET_4;
+use crate::exec::tensor::{fill_shifted_row, same_pad, BatchView, Tensor,
+                          TensorView};
+use crate::patterns::{Tap, PATTERN_SET_4};
 use crate::quant::QuantFkw;
 
 /// Borrowed structural view of a pattern-compact layer, generic over the
@@ -137,6 +138,29 @@ pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantFkw,
                      threads, tile, out);
 }
 
+/// Fused batched pattern conv (row-AXPY path): the compressed weight
+/// stream — kernel list, pattern taps, tap weights — is decoded once per
+/// (row-tile, kernel) and applied to every image in the batch, so at
+/// batch `n` the weight traffic is 1/n of running the images one by one.
+/// Output layout `[n][cout][hw]`; bit-identical per image to
+/// [`conv2d_into`] on that image alone.
+pub fn conv2d_batch_into(input: BatchView<'_>, layer: &FkwLayer,
+                         stride: usize, relu: bool, threads: usize,
+                         tile: TileConfig, out: &mut [f32]) {
+    conv2d_view_batch_into(input, &FkwView::from_f32(layer), stride, relu,
+                           threads, tile, out);
+}
+
+/// [`conv2d_batch_into`] over weight-only int8 weights: the 4 tap
+/// weights of a kernel are dequantized in-register once per
+/// (row-tile, kernel) for the whole batch.
+pub fn conv2d_quant_batch_into(input: BatchView<'_>, layer: &QuantFkw,
+                               stride: usize, relu: bool, threads: usize,
+                               tile: TileConfig, out: &mut [f32]) {
+    conv2d_view_batch_into(input, &FkwView::from_quant(layer), stride,
+                           relu, threads, tile, out);
+}
+
 /// Allocate the output tensor of a 3x3 SAME conv and fill it via `f`.
 fn alloc_out<F>(input: &Tensor, cout: usize, stride: usize, f: F) -> Tensor
 where
@@ -191,6 +215,114 @@ fn conv2d_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
     });
 }
 
+/// Per-(row-tile, kernel) execution geometry, decoded once and valid
+/// for every image of a batch (all images share one shape): fused-path
+/// eligibility and the interior x-range common to all 4 taps.
+struct KernelGeom {
+    fused: bool,
+    x_lo: usize,
+    x_hi: usize,
+}
+
+/// Decide the fused 4-tap fast path (stride 1, all tap rows interior
+/// over the whole tile, non-empty common x-range) and the common
+/// interior x-range.
+#[allow(clippy::too_many_arguments)]
+fn kernel_geom(taps: &[Tap; 4], y0: usize, y1: usize, stride: usize,
+               pad_h: usize, pad_w: usize, w_out: usize, in_h: usize,
+               in_w: usize) -> KernelGeom {
+    // Fused 4-tap fast path (stride 1, all rows interior): one pass over
+    // the output row with four input-row streams — 4x less out-row
+    // load/store traffic than tap-by-tap (EXPERIMENTS.md §Perf
+    // iteration 3).
+    let mut fused = stride == 1;
+    if fused {
+        for y in y0..y1 {
+            for &(dy, _) in taps.iter() {
+                let iy = (y + dy) as isize - pad_h as isize;
+                if iy < 0 || iy >= in_h as isize {
+                    fused = false;
+                }
+            }
+            if !fused {
+                break;
+            }
+        }
+    }
+    // interior x-range common to all taps (empty -> unfused)
+    let x_lo = taps
+        .iter()
+        .map(|&(_, dx)| pad_w.saturating_sub(dx))
+        .max()
+        .unwrap();
+    let x_hi = taps
+        .iter()
+        .map(|&(_, dx)| (in_w + pad_w - dx).min(w_out))
+        .min()
+        .unwrap();
+    if x_lo >= x_hi {
+        fused = false;
+    }
+    KernelGeom { fused, x_lo, x_hi }
+}
+
+/// Accumulate one kernel's 4 taps into one image's output plane for the
+/// row tile `[y0, y1)`, following the precomputed geometry. This is the
+/// single body both the per-image and the batched walks execute, so the
+/// two are bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn kernel_apply(plane: &mut [f32], in_plane: &[f32], taps: &[Tap; 4],
+                wts: [f32; 4], g: &KernelGeom, y0: usize, y1: usize,
+                stride: usize, pad_h: usize, pad_w: usize, w_out: usize,
+                in_h: usize, in_w: usize) {
+    let (x_lo, x_hi) = (g.x_lo, g.x_hi);
+    if g.fused {
+        for y in y0..y1 {
+            let row = |t: usize| -> &[f32] {
+                let (dy, dx) = taps[t];
+                let iy = (y + dy) - pad_h;
+                let s0 = x_lo + dx - pad_w;
+                &in_plane[iy * in_w + s0..iy * in_w + s0 + (x_hi - x_lo)]
+            };
+            {
+                let (r0, r1, r2, r3) = (row(0), row(1), row(2), row(3));
+                let (w0, w1, w2, w3) = (wts[0], wts[1], wts[2], wts[3]);
+                let out_row =
+                    &mut plane[y * w_out + x_lo..y * w_out + x_hi];
+                for (i, o) in out_row.iter_mut().enumerate() {
+                    *o += w0 * r0[i]
+                        + w1 * r1[i]
+                        + w2 * r2[i]
+                        + w3 * r3[i];
+                }
+            }
+            // borders outside the common range: per-tap
+            for (t, &(dy, dx)) in taps.iter().enumerate() {
+                let t_lo = pad_w.saturating_sub(dx);
+                let t_hi = (in_w + pad_w - dx).min(w_out);
+                let w = wts[t];
+                let iy = (y + dy) - pad_h;
+                let in_row = &in_plane[iy * in_w..(iy + 1) * in_w];
+                let out_row = &mut plane[y * w_out..(y + 1) * w_out];
+                for x in t_lo..t_hi.min(x_lo.max(t_lo)) {
+                    out_row[x] += w * in_row[x + dx - pad_w];
+                }
+                for x in x_hi.max(t_lo)..t_hi {
+                    out_row[x] += w * in_row[x + dx - pad_w];
+                }
+            }
+        }
+    } else {
+        for (t, &(dy, dx)) in taps.iter().enumerate() {
+            let w = wts[t];
+            tap_rows(
+                plane, in_plane, w, dy, dx, y0, y1, stride, pad_h,
+                pad_w, w_out, in_h, in_w,
+            );
+        }
+    }
+}
+
 /// Compute one filter's output plane.
 #[inline]
 #[allow(clippy::too_many_arguments)]
@@ -211,88 +343,10 @@ fn filter_conv(plane: &mut [f32], input: TensorView<'_>,
             let in_plane = input.plane(ci);
             let taps = &PATTERN_SET_4[kern.pattern as usize];
             let wts = layer.wts(e, co);
-            // Fused 4-tap fast path (stride 1, all rows interior): one
-            // pass over the output row with four input-row streams —
-            // 4x less out-row load/store traffic than tap-by-tap
-            // (EXPERIMENTS.md §Perf iteration 3).
-            let mut fused = stride == 1;
-            if fused {
-                for y in y0..y1 {
-                    for &(dy, _) in taps.iter() {
-                        let iy = (y + dy) as isize - pad_h as isize;
-                        if iy < 0 || iy >= input.h as isize {
-                            fused = false;
-                        }
-                    }
-                    if !fused {
-                        break;
-                    }
-                }
-            }
-            // interior x-range common to all taps (empty -> unfused)
-            let x_lo = taps
-                .iter()
-                .map(|&(_, dx)| pad_w.saturating_sub(dx))
-                .max()
-                .unwrap();
-            let x_hi = taps
-                .iter()
-                .map(|&(_, dx)| (input.w + pad_w - dx).min(w_out))
-                .min()
-                .unwrap();
-            if x_lo >= x_hi {
-                fused = false;
-            }
-            if fused {
-                for y in y0..y1 {
-                    let row = |t: usize| -> &[f32] {
-                        let (dy, dx) = taps[t];
-                        let iy = (y + dy) - pad_h;
-                        let s0 = x_lo + dx - pad_w;
-                        &in_plane[iy * input.w + s0
-                            ..iy * input.w + s0 + (x_hi - x_lo)]
-                    };
-                    {
-                        let (r0, r1, r2, r3) =
-                            (row(0), row(1), row(2), row(3));
-                        let (w0, w1, w2, w3) =
-                            (wts[0], wts[1], wts[2], wts[3]);
-                        let out_row =
-                            &mut plane[y * w_out + x_lo..y * w_out + x_hi];
-                        for (i, o) in out_row.iter_mut().enumerate() {
-                            *o += w0 * r0[i]
-                                + w1 * r1[i]
-                                + w2 * r2[i]
-                                + w3 * r3[i];
-                        }
-                    }
-                    // borders outside the common range: per-tap
-                    for (t, &(dy, dx)) in taps.iter().enumerate() {
-                        let t_lo = pad_w.saturating_sub(dx);
-                        let t_hi = (input.w + pad_w - dx).min(w_out);
-                        let w = wts[t];
-                        let iy = (y + dy) - pad_h;
-                        let in_row = &in_plane
-                            [iy * input.w..(iy + 1) * input.w];
-                        let out_row =
-                            &mut plane[y * w_out..(y + 1) * w_out];
-                        for x in t_lo..t_hi.min(x_lo.max(t_lo)) {
-                            out_row[x] += w * in_row[x + dx - pad_w];
-                        }
-                        for x in x_hi.max(t_lo)..t_hi {
-                            out_row[x] += w * in_row[x + dx - pad_w];
-                        }
-                    }
-                }
-            } else {
-                for (t, &(dy, dx)) in taps.iter().enumerate() {
-                    let w = wts[t];
-                    tap_rows(
-                        plane, in_plane, w, dy, dx, y0, y1, stride,
-                        pad_h, pad_w, w_out, input.h, input.w,
-                    );
-                }
-            }
+            let g = kernel_geom(taps, y0, y1, stride, pad_h, pad_w,
+                                w_out, input.h, input.w);
+            kernel_apply(plane, in_plane, taps, wts, &g, y0, y1, stride,
+                         pad_h, pad_w, w_out, input.h, input.w);
         }
     }
     if relu {
@@ -300,6 +354,102 @@ fn filter_conv(plane: &mut [f32], input: TensorView<'_>,
             *v = v.max(0.0);
         }
     }
+}
+
+/// Compute one filter's output plane for *every* image of the batch:
+/// the weight stream — kernel entries, taps, tap weights, geometry — is
+/// decoded once per (row-tile, kernel) and the inner image loop reuses
+/// it, which is where the batch amortizes the compressed-weight
+/// traffic. The per-image (tile, kernel, tap) order is exactly
+/// [`filter_conv`]'s, so results are bit-identical per image.
+#[allow(clippy::too_many_arguments)]
+fn filter_conv_batch(planes: &mut [&mut [f32]], input: BatchView<'_>,
+                     layer: &FkwView<'_>, phys: usize, co: usize,
+                     stride: usize, relu: bool, h_tile: usize,
+                     h_out: usize, w_out: usize, pad_h: usize,
+                     pad_w: usize) {
+    for p in planes.iter_mut() {
+        p.fill(layer.bias[co]);
+    }
+    let k_lo = layer.offsets[phys] as usize;
+    let k_hi = layer.offsets[phys + 1] as usize;
+    for y0 in (0..h_out).step_by(h_tile) {
+        let y1 = (y0 + h_tile).min(h_out);
+        for e in k_lo..k_hi {
+            let kern = layer.kernels[e];
+            let ci = kern.ci as usize;
+            let taps = &PATTERN_SET_4[kern.pattern as usize];
+            let wts = layer.wts(e, co);
+            let g = kernel_geom(taps, y0, y1, stride, pad_h, pad_w,
+                                w_out, input.h, input.w);
+            for (img, plane) in planes.iter_mut().enumerate() {
+                kernel_apply(plane, input.image(img).plane(ci), taps,
+                             wts, &g, y0, y1, stride, pad_h, pad_w,
+                             w_out, input.h, input.w);
+            }
+        }
+    }
+    if relu {
+        for p in planes.iter_mut() {
+            for v in p.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// Batched edition of [`conv2d_view_into`]: workers still claim physical
+/// filter groups, but each filter computes its plane for all `n` images
+/// before moving on (weight decode amortized across the batch). Output
+/// layout `[n][cout][hw]`.
+fn conv2d_view_batch_into(input: BatchView<'_>, layer: &FkwView<'_>,
+                          stride: usize, relu: bool, threads: usize,
+                          tile: TileConfig, out: &mut [f32]) {
+    let (h_out, pad_h) = same_pad(input.h, 3, stride);
+    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+    let hw = h_out * w_out;
+    let n = input.n;
+    let cout = layer.cout;
+    assert_eq!(out.len(), n * cout * hw, "output buffer size mismatch");
+    let co_block = tile.co_block.max(1);
+    let h_tile = tile.h_tile.max(1);
+
+    // Slot (img * cout + co): each taken exactly once by the worker that
+    // owns the corresponding physical filter.
+    let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
+        .chunks_mut(hw)
+        .map(|c| std::sync::Mutex::new(Some(c)))
+        .collect();
+    let n_groups = cout.div_ceil(co_block);
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let workers = threads.max(1).min(n_groups.max(1));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let g = counter
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if g >= n_groups {
+                    break;
+                }
+                for phys in g * co_block..((g + 1) * co_block).min(cout) {
+                    let co = layer.filter_order[phys] as usize;
+                    let mut guards: Vec<_> = (0..n)
+                        .map(|img| {
+                            plane_slots[img * cout + co].lock().unwrap()
+                        })
+                        .collect();
+                    let mut planes: Vec<&mut [f32]> = guards
+                        .iter_mut()
+                        .map(|gd| gd.as_deref_mut().unwrap())
+                        .collect();
+                    filter_conv_batch(
+                        &mut planes, input, layer, phys, co, stride,
+                        relu, h_tile, h_out, w_out, pad_h, pad_w,
+                    );
+                }
+            });
+        }
+    });
 }
 
 /// The compile-time half of the pattern-GEMM lowering: which (ci, tap)
@@ -391,80 +541,131 @@ pub fn conv2d_gemm_quant_into(input: TensorView<'_>, layer: &QuantFkw,
                           relu, threads, gp, u_buf, out);
 }
 
+/// Fused batched pattern-GEMM conv: one shared `U[(ci,tap)][n*hw]`
+/// shifted-input matrix for the whole batch and one kernel walk per
+/// filter per batch. Output layout `[n][cout][hw]`; bit-identical per
+/// image to [`conv2d_gemm_into`].
 #[allow(clippy::too_many_arguments)]
-fn conv2d_gemm_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
-                         stride: usize, relu: bool, threads: usize,
-                         gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
-                         out: &mut [f32]) {
-    let (h_out, pad_h) = same_pad(input.h, 3, stride);
-    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+pub fn conv2d_gemm_batch_into(input: BatchView<'_>, layer: &FkwLayer,
+                              stride: usize, relu: bool, threads: usize,
+                              gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                              out: &mut [f32]) {
+    conv2d_gemm_view_batch_into(input, &FkwView::from_f32(layer), stride,
+                                relu, threads, gp, u_buf, out);
+}
+
+/// [`conv2d_gemm_batch_into`] over weight-only int8 weights
+/// (dequant-on-load, once per kernel per batch).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_gemm_quant_batch_into(input: BatchView<'_>,
+                                    layer: &QuantFkw, stride: usize,
+                                    relu: bool, threads: usize,
+                                    gp: &PatternGemmPlan,
+                                    u_buf: &mut Vec<f32>,
+                                    out: &mut [f32]) {
+    conv2d_gemm_view_batch_into(input, &FkwView::from_quant(layer),
+                                stride, relu, threads, gp, u_buf, out);
+}
+
+/// Build the shifted-input matrix `U[(ci,tap)][n*hw]` for the whole
+/// batch — image `i`'s columns occupy `[i*hw, (i+1)*hw)` of every live
+/// row (n = 1 is the single-image layout).
+#[allow(clippy::too_many_arguments)]
+fn build_u_matrix(input: BatchView<'_>, cin: usize, gp: &PatternGemmPlan,
+                  stride: usize, pad_h: usize, pad_w: usize,
+                  h_out: usize, w_out: usize, u_buf: &mut Vec<f32>) {
     let hw = h_out * w_out;
-    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
-    let cin = layer.cin;
-    let row_of = &gp.row_of;
-    assert_eq!(row_of.len(), cin * 9, "gemm plan built for other layer");
+    let nhw = input.n * hw;
     u_buf.clear();
-    u_buf.resize(gp.n_rows * hw, 0.0);
+    u_buf.resize(gp.n_rows * nhw, 0.0);
     let u_mat = &mut u_buf[..];
-    for ci in 0..cin {
-        let plane = input.plane(ci);
-        for dy in 0..3 {
-            for dx in 0..3 {
-                let r = row_of[ci * 9 + dy * 3 + dx];
-                if r == u32::MAX {
-                    continue;
-                }
-                let dst = &mut u_mat[r as usize * hw..(r as usize + 1) * hw];
-                for y in 0..h_out {
-                    let iy = (y * stride + dy) as isize - pad_h as isize;
-                    if iy < 0 || iy >= input.h as isize {
+    for img in 0..input.n {
+        let image = input.image(img);
+        for ci in 0..cin {
+            let plane = image.plane(ci);
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    let r = gp.row_of[ci * 9 + dy * 3 + dx];
+                    if r == u32::MAX {
                         continue;
                     }
-                    let in_row = &plane[iy as usize * input.w
-                        ..(iy as usize + 1) * input.w];
-                    let dst_row = &mut dst[y * w_out..(y + 1) * w_out];
-                    if stride == 1 {
-                        let x_lo = pad_w.saturating_sub(dx);
-                        let x_hi = (input.w + pad_w - dx).min(w_out);
-                        if x_lo < x_hi {
-                            let s0 = x_lo + dx - pad_w;
-                            dst_row[x_lo..x_hi].copy_from_slice(
-                                &in_row[s0..s0 + (x_hi - x_lo)],
-                            );
-                        }
-                    } else {
-                        for (x, d) in dst_row.iter_mut().enumerate() {
-                            let ix = (x * stride + dx) as isize
-                                - pad_w as isize;
-                            if ix >= 0 && (ix as usize) < input.w {
-                                *d = in_row[ix as usize];
-                            }
-                        }
+                    let dst = &mut u_mat[r as usize * nhw + img * hw
+                        ..r as usize * nhw + (img + 1) * hw];
+                    for y in 0..h_out {
+                        fill_shifted_row(
+                            &mut dst[y * w_out..(y + 1) * w_out], plane,
+                            input.h, input.w, y, dy, dx, stride, pad_h,
+                            pad_w, w_out,
+                        );
                     }
                 }
             }
         }
     }
-    // Per-filter sparse-row GEMV over the shared U.
-    let u_mat = &u_mat[..];
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv2d_gemm_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
+                         stride: usize, relu: bool, threads: usize,
+                         gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                         out: &mut [f32]) {
+    conv2d_gemm_view_batch_into(BatchView::of_single(input), layer,
+                                stride, relu, threads, gp, u_buf, out);
+}
+
+/// Batched pattern-GEMM path: U is built once for the whole batch, and
+/// every filter's kernel walk — the compressed weight traversal —
+/// happens once per batch, with each tap's AXPY streaming over all `n`
+/// images' U columns. The per-image (kernel, tap) accumulation order is
+/// the single-image order, so results are bit-identical per image.
+/// Output layout `[n][cout][hw]`.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_gemm_view_batch_into(input: BatchView<'_>, layer: &FkwView<'_>,
+                               stride: usize, relu: bool, threads: usize,
+                               gp: &PatternGemmPlan, u_buf: &mut Vec<f32>,
+                               out: &mut [f32]) {
+    let (h_out, pad_h) = same_pad(input.h, 3, stride);
+    let (w_out, pad_w) = same_pad(input.w, 3, stride);
+    let hw = h_out * w_out;
+    let n = input.n;
+    let nhw = n * hw;
+    let cout = layer.cout;
+    assert_eq!(out.len(), n * cout * hw, "output buffer size mismatch");
+    let cin = layer.cin;
+    let row_of = &gp.row_of;
+    assert_eq!(row_of.len(), cin * 9, "gemm plan built for other layer");
+    build_u_matrix(input, cin, gp, stride, pad_h, pad_w, h_out, w_out,
+                   u_buf);
+    // Per-filter sparse-row GEMV over the shared U, all images per
+    // kernel walk.
+    let u_mat = &u_buf[..];
     let plane_slots: Vec<std::sync::Mutex<Option<&mut [f32]>>> = out
         .chunks_mut(hw)
         .map(|c| std::sync::Mutex::new(Some(c)))
         .collect();
     let counter = std::sync::atomic::AtomicUsize::new(0);
-    let workers = threads.max(1).min(layer.cout.max(1));
+    let workers = threads.max(1).min(cout.max(1));
     std::thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
                 let phys = counter
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if phys >= layer.cout {
+                if phys >= cout {
                     break;
                 }
                 let co = layer.filter_order[phys] as usize;
-                let mut guard = plane_slots[co].lock().unwrap();
-                let plane = guard.as_deref_mut().unwrap();
-                plane.fill(layer.bias[co]);
+                let mut guards: Vec<_> = (0..n)
+                    .map(|img| {
+                        plane_slots[img * cout + co].lock().unwrap()
+                    })
+                    .collect();
+                let mut planes: Vec<&mut [f32]> = guards
+                    .iter_mut()
+                    .map(|gd| gd.as_deref_mut().unwrap())
+                    .collect();
+                for p in planes.iter_mut() {
+                    p.fill(layer.bias[co]);
+                }
                 for e in layer.offsets[phys] as usize
                     ..layer.offsets[phys + 1] as usize
                 {
@@ -475,18 +676,25 @@ fn conv2d_gemm_view_into(input: TensorView<'_>, layer: &FkwView<'_>,
                         let r = row_of
                             [kern.ci as usize * 9 + dy * 3 + dx]
                             as usize;
-                        let u_row = &u_mat[r * hw..(r + 1) * hw];
                         let w = wts[t];
-                        for (o, i) in
-                            plane.iter_mut().zip(u_row.iter())
+                        for (img, plane) in
+                            planes.iter_mut().enumerate()
                         {
-                            *o += w * *i;
+                            let u_row = &u_mat[r * nhw + img * hw
+                                ..r * nhw + (img + 1) * hw];
+                            for (o, i) in
+                                plane.iter_mut().zip(u_row.iter())
+                            {
+                                *o += w * *i;
+                            }
                         }
                     }
                 }
                 if relu {
-                    for v in plane.iter_mut() {
-                        *v = v.max(0.0);
+                    for p in planes.iter_mut() {
+                        for v in p.iter_mut() {
+                            *v = v.max(0.0);
+                        }
                     }
                 }
             });
@@ -661,6 +869,87 @@ mod tests {
         let got = conv2d(&input, &fkw, 1, false, 2, TileConfig::default());
         let want = oracle(&input, &fkw, 1, false);
         assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn batch_paths_match_per_image_bitwise() {
+        prop::check("pattern-batch-vs-single", 20, |g| {
+            let n = g.usize(1, 5);
+            let cin = g.usize(1, 6);
+            let cout = g.usize(1, 8);
+            let h = g.usize(3, 12);
+            let w = g.usize(3, 12);
+            let stride = *g.pick(&[1usize, 2]);
+            let keep = g.f64(0.3, 1.0);
+            let relu = g.bool();
+            let tile = TileConfig {
+                h_tile: g.usize(1, 8),
+                co_block: g.usize(1, 4),
+                use_gemm: false,
+            };
+            let mut rng = g.rng().clone();
+            let dense = DenseLayer {
+                cout,
+                cin,
+                kh: 3,
+                kw: 3,
+                weights: (0..cout * cin * 9)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let conn = crate::codegen::prune_conn_oihw(&dense, keep);
+            let mut fkw = FkwLayer::from_dense(&dense, &conn);
+            filter_kernel_reorder(&mut fkw);
+            let qf = QuantFkw::quantize(&fkw);
+            let images: Vec<Tensor> = (0..n)
+                .map(|_| Tensor::random(cin, h, w, &mut rng))
+                .collect();
+            let mut packed = Vec::new();
+            for t in &images {
+                packed.extend_from_slice(&t.data);
+            }
+            let view = BatchView::new(n, cin, h, w, &packed);
+            let (h_out, _) = same_pad(h, 3, stride);
+            let (w_out, _) = same_pad(w, 3, stride);
+            let per = cout * h_out * w_out;
+            let gp = PatternGemmPlan::build(cin, &fkw.kernels);
+            let mut u_buf = Vec::new();
+            let mut axpy = vec![0f32; n * per];
+            conv2d_batch_into(view, &fkw, stride, relu, 2, tile,
+                              &mut axpy);
+            let mut gemm = vec![0f32; n * per];
+            conv2d_gemm_batch_into(view, &fkw, stride, relu, 2, &gp,
+                                   &mut u_buf, &mut gemm);
+            let mut q_axpy = vec![0f32; n * per];
+            conv2d_quant_batch_into(view, &qf, stride, relu, 2, tile,
+                                    &mut q_axpy);
+            let mut q_gemm = vec![0f32; n * per];
+            conv2d_gemm_quant_batch_into(view, &qf, stride, relu, 2,
+                                         &gp, &mut u_buf, &mut q_gemm);
+            for (i, t) in images.iter().enumerate() {
+                let want =
+                    conv2d(t, &fkw, stride, relu, 1, tile);
+                if axpy[i * per..(i + 1) * per] != want.data[..] {
+                    return Err(format!("axpy batch diverged at {i}"));
+                }
+                let want_g = conv2d_gemm(t, &fkw, stride, relu, 1);
+                if gemm[i * per..(i + 1) * per] != want_g.data[..] {
+                    return Err(format!("gemm batch diverged at {i}"));
+                }
+                let want_q =
+                    conv2d_quant(t, &qf, stride, relu, 1, tile);
+                if q_axpy[i * per..(i + 1) * per] != want_q.data[..] {
+                    return Err(format!("quant axpy diverged at {i}"));
+                }
+                let want_qg =
+                    conv2d_gemm_quant(t, &qf, stride, relu, 1);
+                if q_gemm[i * per..(i + 1) * per] != want_qg.data[..] {
+                    return Err(format!("quant gemm diverged at {i}"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -130,6 +130,88 @@ impl<'a> TensorView<'a> {
     }
 }
 
+/// Borrowed batch of `n` same-shape planar images, contiguous
+/// `[N][C][H][W]` — the activation layout of a batch-compiled pipeline
+/// (`codegen::lower_batched`). The `*_batch_into` kernel entry points
+/// consume this so one kernel call serves the whole batch (weights
+/// decoded/streamed once per batch, not once per image).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchView<'a> {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> BatchView<'a> {
+    pub fn new(n: usize, c: usize, h: usize, w: usize, data: &'a [f32])
+               -> BatchView<'a> {
+        assert_eq!(data.len(), n * c * h * w, "batch view length mismatch");
+        BatchView { n, c, h, w, data }
+    }
+
+    /// View of a single image as a batch of one.
+    pub fn of_single(t: TensorView<'a>) -> BatchView<'a> {
+        BatchView::new(1, t.c, t.h, t.w, t.data)
+    }
+
+    /// Per-image shape.
+    pub fn shape(&self) -> Chw {
+        Chw::new(self.c, self.h, self.w)
+    }
+
+    /// Elements per image.
+    pub fn image_elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Borrowed view of image `i`.
+    #[inline]
+    pub fn image(&self, i: usize) -> TensorView<'a> {
+        let per = self.image_elems();
+        TensorView::new(self.c, self.h, self.w,
+                        &self.data[i * per..(i + 1) * per])
+    }
+}
+
+/// Copy one SAME-padded shifted input row (tap offset `(dy, dx)`,
+/// output row `y`) into a row of a patch / shifted-input matrix, with
+/// border clamp; out-of-range destination elements are left untouched
+/// (callers zero-fill). Shared by the im2col patch builder and the
+/// pattern-GEMM U-matrix builder so their border handling can never
+/// desynchronize.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_shifted_row(dst_row: &mut [f32], plane: &[f32],
+                               in_h: usize, in_w: usize, y: usize,
+                               dy: usize, dx: usize, stride: usize,
+                               pad_h: usize, pad_w: usize, w_out: usize) {
+    let iy = (y * stride + dy) as isize - pad_h as isize;
+    if iy < 0 || iy >= in_h as isize {
+        return; // stays zero
+    }
+    let src_row = &plane[iy as usize * in_w..(iy as usize + 1) * in_w];
+    if stride == 1 {
+        // contiguous copy with border clamp
+        let x_lo = pad_w.saturating_sub(dx);
+        let x_hi = (in_w + pad_w - dx).min(w_out);
+        if x_lo < x_hi {
+            let src_lo = x_lo + dx - pad_w;
+            dst_row[x_lo..x_hi].copy_from_slice(
+                &src_row[src_lo..src_lo + (x_hi - x_lo)],
+            );
+        }
+    } else {
+        for (x, d) in dst_row.iter_mut().enumerate() {
+            let ix = (x * stride + dx) as isize - pad_w as isize;
+            if ix >= 0 && (ix as usize) < in_w {
+                *d = src_row[ix as usize];
+            }
+        }
+    }
+}
+
 /// SAME-padding geometry for a conv with kernel k and stride s:
 /// returns (out_size, pad_low).
 pub fn same_pad(in_size: usize, k: usize, stride: usize) -> (usize, usize) {
@@ -162,6 +244,16 @@ mod tests {
         // k=1
         assert_eq!(same_pad(16, 1, 1), (16, 0));
         assert_eq!(same_pad(16, 1, 2), (8, 0));
+    }
+
+    #[test]
+    fn batch_view_slices_images() {
+        let data: Vec<f32> = (0..2 * 2 * 3 * 4).map(|v| v as f32).collect();
+        let b = BatchView::new(2, 2, 3, 4, &data);
+        assert_eq!(b.image_elems(), 24);
+        assert_eq!(b.image(0).at(1, 2, 3), 23.0);
+        assert_eq!(b.image(1).at(0, 0, 0), 24.0);
+        assert_eq!(b.image(1).plane(1)[0], 36.0);
     }
 
     #[test]

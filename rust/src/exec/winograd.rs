@@ -10,7 +10,7 @@
 
 use crate::compress::DenseLayer;
 use crate::exec::gemm::gemm;
-use crate::exec::tensor::{same_pad, Tensor, TensorView};
+use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
 
 /// Transform one 3x3 kernel g -> 4x4: G g G^T.
 fn transform_kernel(g: &[f32]) -> [f32; 16] {
@@ -220,6 +220,25 @@ pub fn conv2d_pre_into(input: TensorView<'_>, layer: &WinogradWeights,
                 }
             }
         }
+    }
+}
+
+/// Batched [`conv2d_pre_into`]: per-image loop behind the same
+/// `[N][C][H][W]` signature as the fused engines (the weight transform
+/// is already amortized at lowering time, so the per-image cost is the
+/// tile transforms, which scale with the batch either way).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_pre_batch_into(input: BatchView<'_>,
+                             layer: &WinogradWeights, relu: bool,
+                             threads: usize, u_buf: &mut Vec<f32>,
+                             m_buf: &mut Vec<f32>, out: &mut [f32]) {
+    let (h_out, _) = same_pad(input.h, 3, 1);
+    let (w_out, _) = same_pad(input.w, 3, 1);
+    let per = layer.cout * h_out * w_out;
+    assert_eq!(out.len(), input.n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        conv2d_pre_into(input.image(img), layer, relu, threads, u_buf,
+                        m_buf, chunk);
     }
 }
 

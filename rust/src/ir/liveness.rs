@@ -36,12 +36,22 @@ pub fn last_uses(ir: &ModelIR) -> Vec<usize> {
 }
 
 /// Static assignment of layer outputs to reusable arena slots.
+///
+/// The plan can carry a leading batch dimension: `build_batched(ir, n)`
+/// sizes every slot for `n` images stored contiguously `[N][C][H][W]`
+/// (`batch` records the factor), so a batch-compiled pipeline serves
+/// fused batches out of the same fixed arena — weights and slot
+/// assignment identical to the single-image plan, capacities scaled.
 #[derive(Debug, Clone)]
 pub struct MemoryPlan {
     /// Arena slot holding each layer's output.
     pub slot_of: Vec<usize>,
-    /// Element capacity of each slot (max over its tenants).
+    /// Element capacity of each slot (max over its tenants, times
+    /// `batch`).
     pub slot_elems: Vec<usize>,
+    /// Leading batch dimension the capacities were scaled for (1 for
+    /// single-image plans).
+    pub batch: usize,
 }
 
 impl MemoryPlan {
@@ -53,6 +63,15 @@ impl MemoryPlan {
     /// best fit wins: smallest one that already holds the output, else
     /// the one needing the least growth.
     pub fn build(ir: &ModelIR) -> MemoryPlan {
+        Self::build_batched(ir, 1)
+    }
+
+    /// [`MemoryPlan::build`] with every slot sized for `batch` images
+    /// stored contiguously (the fused-batch arena). Slot *assignment* is
+    /// identical to the single-image plan — liveness does not depend on
+    /// the batch size — only capacities scale.
+    pub fn build_batched(ir: &ModelIR, batch: usize) -> MemoryPlan {
+        let batch = batch.max(1);
         let n = ir.layers.len();
         let last = last_uses(ir);
         let mut slot_of = vec![0usize; n];
@@ -95,7 +114,14 @@ impl MemoryPlan {
             expiry[s] = last[i];
             slot_of[i] = s;
         }
-        MemoryPlan { slot_of, slot_elems }
+        for e in slot_elems.iter_mut() {
+            *e *= batch;
+        }
+        MemoryPlan {
+            slot_of,
+            slot_elems,
+            batch,
+        }
     }
 
     /// Total arena footprint in bytes (f32 activations).
@@ -173,6 +199,25 @@ mod tests {
                 .unwrap();
             assert!(mp.peak_bytes() <= total);
             assert!(mp.peak_bytes() >= largest);
+        }
+    }
+
+    #[test]
+    fn batched_plan_scales_capacities_only() {
+        for ir in [chain_ir(), residual_ir()] {
+            let single = MemoryPlan::build(&ir);
+            let batched = MemoryPlan::build_batched(&ir, 8);
+            assert_eq!(single.batch, 1);
+            assert_eq!(batched.batch, 8);
+            // same slot assignment, 8x the capacity per slot
+            assert_eq!(single.slot_of, batched.slot_of);
+            assert_eq!(single.slot_elems.len(), batched.slot_elems.len());
+            for (s, b) in single.slot_elems.iter()
+                .zip(&batched.slot_elems)
+            {
+                assert_eq!(s * 8, *b);
+            }
+            assert_eq!(single.peak_bytes() * 8, batched.peak_bytes());
         }
     }
 

@@ -4,6 +4,7 @@
 //!   info                      — artifacts + manifest summary
 //!   serve  [--model M] [--batch B] [--requests N] [--backend pjrt|native]
 //!          [--scheme cocogen|cocogen-quant|coco-auto|dense]
+//!          [--batch-mode auto|fused|fanout]
 //!                             — run the serving coordinator on synthetic
 //!                               traffic and print latency metrics;
 //!                               `--backend native` serves a zoo timing
@@ -11,8 +12,11 @@
 //!                               artifacts needed); `--scheme
 //!                               cocogen-quant` serves the weight-only
 //!                               int8 plan; `--scheme coco-auto` runs
-//!                               per-layer engine auto-tuning before
-//!                               serving
+//!                               per-layer engine auto-tuning (at the
+//!                               serving batch size) before serving;
+//!                               `--batch-mode` picks fused batched
+//!                               execution vs per-image pool fan-out
+//!                               (auto = fused for batches of 2+)
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -146,16 +150,35 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                      (cocogen|cocogen-quant|coco-auto|dense)"
                 ),
             };
+            let mode = match flags
+                .get("batch-mode")
+                .map(String::as_str)
+                .unwrap_or("auto")
+            {
+                "auto" => cocopie::coordinator::NativeBatchMode::Auto,
+                "fused" => cocopie::coordinator::NativeBatchMode::Fused,
+                "fanout" | "fan-out" => {
+                    cocopie::coordinator::NativeBatchMode::FanOut
+                }
+                other => anyhow::bail!(
+                    "unknown batch mode {other} (auto|fused|fanout)"
+                ),
+            };
             let elems = ir.input.c * ir.input.h * ir.input.w;
             let mut plan = build_plan(&ir, scheme, PruneConfig::default(),
                                       7);
             if scheme == Scheme::CocoAuto {
-                println!("auto-tuning per-layer engines for {model}...");
-                // Tune at threads = 1: the serving pool runs one
-                // single-threaded executor per core, so per-layer
-                // winners must be measured in that regime, not at the
-                // machine's full parallelism.
-                cocopie::codegen::autotune_plan(&mut plan, 1);
+                println!(
+                    "auto-tuning per-layer engines for {model} at \
+                     batch {batch}..."
+                );
+                // Tune at threads = 1 and at the serving batch size:
+                // per-layer winners must hold in the regime that
+                // actually serves — fused batches of max_batch images
+                // (the best kernel at n = 1 is often not the best at
+                // n = 8).
+                cocopie::codegen::autotune_plan_batched(&mut plan, 1,
+                                                        batch);
             }
             let plan = plan.into_shared();
             println!(
@@ -165,9 +188,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 plan.peak_activation_bytes() / 1024
             );
             let coord = Coordinator::start_with(
-                vec![Box::new(cocopie::coordinator::NativeBackend::new(
-                    name, plan,
-                ))],
+                vec![Box::new(
+                    cocopie::coordinator::NativeBackend::new(name, plan)
+                        .with_batch_mode(mode),
+                )],
                 policy,
                 cocopie::coordinator::RouterPolicy::Failover,
             )?;

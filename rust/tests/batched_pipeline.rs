@@ -1,0 +1,151 @@
+//! Fused batched execution vs sequential per-image runs.
+//!
+//! `ExecPlan::compile_batched(n)` produces a pipeline whose arena
+//! carries a leading batch dimension and whose ops run the engines'
+//! `*_batch_into` entry points — one kernel call per layer per batch,
+//! weights decoded/streamed once per batch. These tests pin the fused
+//! walk bit-identical, per image, to sequential `ModelExecutor::run`
+//! for every scheme on zoo models (tuned `CocoAuto` included), and pin
+//! the batched arena's no-growth property.
+
+use cocopie::codegen::{
+    autotune_plan_batched, build_plan, PruneConfig, Scheme,
+};
+use cocopie::exec::{ModelExecutor, Tensor};
+use cocopie::ir::{zoo, ModelIR};
+use cocopie::util::rng::Rng;
+
+const ALL_SCHEMES: [Scheme; 7] = [
+    Scheme::DenseNaive,
+    Scheme::DenseIm2col,
+    Scheme::DenseWinograd,
+    Scheme::SparseCsr,
+    Scheme::CocoGen,
+    Scheme::CocoGenQuant,
+    Scheme::CocoAuto,
+];
+
+fn check_all_schemes(ir: &ModelIR, seed: u64, batch: usize) {
+    for scheme in ALL_SCHEMES {
+        let plan = build_plan(ir, scheme, PruneConfig::default(), seed);
+        let mut fused = ModelExecutor::new_batched(&plan, 2, batch);
+        let mut seq = ModelExecutor::new(&plan, 2);
+        let mut rng = Rng::seed_from(seed ^ 0xBA7C);
+        let inputs: Vec<Tensor> = (0..batch)
+            .map(|_| {
+                Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                               &mut rng)
+            })
+            .collect();
+        let outs = fused.run_batch(&inputs);
+        assert_eq!(outs.len(), inputs.len());
+        for (i, (x, got)) in inputs.iter().zip(&outs).enumerate() {
+            let want = seq.run(x);
+            assert_eq!(
+                got.data, want.data,
+                "{}: fused batch diverged from sequential run \
+                 (scheme {scheme:?}, image {i})",
+                ir.name
+            );
+        }
+    }
+}
+
+#[test]
+fn mobilenet_fused_batch_matches_sequential() {
+    check_all_schemes(&zoo::mobilenet_v2(24, 10), 42, 5);
+}
+
+#[test]
+fn vgg_fused_batch_matches_sequential() {
+    check_all_schemes(&zoo::vgg16(16, 10), 7, 3);
+}
+
+#[test]
+fn resnet_fused_batch_matches_sequential() {
+    // Residual nets exercise the batched Add skip-link path.
+    check_all_schemes(&zoo::resnet50(16, 10), 11, 4);
+}
+
+#[test]
+fn tuned_coco_auto_fused_batch_matches_sequential() {
+    // Tune at the serving batch regime, then pin the fused pipeline
+    // bit-identical to sequential runs of whatever engines the tuner
+    // picked (including any int8 variants).
+    let ir = zoo::mobilenet_v2(16, 10);
+    let batch = 4;
+    let mut plan = build_plan(&ir, Scheme::CocoAuto,
+                              PruneConfig::default(), 3);
+    autotune_plan_batched(&mut plan, 2, batch);
+    let mut fused = ModelExecutor::new_batched(&plan, 2, batch);
+    let mut seq = ModelExecutor::new(&plan, 2);
+    let mut rng = Rng::seed_from(21);
+    let inputs: Vec<Tensor> = (0..batch)
+        .map(|_| Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                &mut rng))
+        .collect();
+    let outs = fused.run_batch(&inputs);
+    for (x, got) in inputs.iter().zip(&outs) {
+        let want = seq.run(x);
+        assert_eq!(got.data, want.data,
+                   "tuned CocoAuto fused batch diverged from sequential");
+    }
+}
+
+#[test]
+fn partial_and_oversized_batches_match_sequential() {
+    // Batches below the compiled cap run fused at their actual size;
+    // batches above it run in cap-sized fused chunks. Both stay
+    // bit-identical to sequential runs.
+    let ir = zoo::resnet50(16, 10);
+    let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 5);
+    let mut fused = ModelExecutor::new_batched(&plan, 2, 4);
+    let mut seq = ModelExecutor::new(&plan, 2);
+    let mut rng = Rng::seed_from(6);
+    for n in [1usize, 2, 3, 4, 7, 9] {
+        let inputs: Vec<Tensor> = (0..n)
+            .map(|_| Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                    &mut rng))
+            .collect();
+        let outs = fused.run_batch(&inputs);
+        assert_eq!(outs.len(), n);
+        for (x, got) in inputs.iter().zip(&outs) {
+            let want = seq.run(x);
+            assert_eq!(got.data, want.data,
+                       "batch of {n} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn batched_arena_no_growth_across_runs() {
+    // The batched arena is allocated once at the compiled batch size
+    // and never grows: repeated fused batches (including smaller ones)
+    // recycle the same slots with identical results.
+    let ir = zoo::resnet50(16, 10);
+    let batch = 6;
+    let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 5);
+    let mut fused = ModelExecutor::new_batched(&plan, 2, batch);
+    assert_eq!(fused.arena_bytes(),
+               plan.peak_activation_bytes() * batch,
+               "batched arena is not batch x single-image footprint");
+    let mut rng = Rng::seed_from(33);
+    let a: Vec<Tensor> = (0..batch)
+        .map(|_| Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                &mut rng))
+        .collect();
+    let b: Vec<Tensor> = (0..batch - 2)
+        .map(|_| Tensor::random(ir.input.c, ir.input.h, ir.input.w,
+                                &mut rng))
+        .collect();
+    let first = fused.run_batch(&a);
+    let bytes = fused.arena_bytes();
+    let _ = fused.run_batch(&b); // dirty the slots with other activations
+    let again = fused.run_batch(&a);
+    for (x, y) in first.iter().zip(&again) {
+        assert_eq!(x.data, y.data,
+                   "recycled batched arena leaked state between runs");
+    }
+    assert_eq!(fused.arena_bytes(), bytes,
+               "batched arena grew across runs");
+}
