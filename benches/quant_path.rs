@@ -16,11 +16,8 @@
 
 use std::time::{Duration, Instant};
 
-use cocopie::codegen::{build_plan, PruneConfig, Scheme};
-use cocopie::coordinator::{
-    BatchPolicy, Coordinator, NativeBackend, RouterPolicy,
-};
 use cocopie::ir::zoo;
+use cocopie::prelude::*;
 use cocopie::util::bench::Table;
 use cocopie::util::rng::Rng;
 
@@ -85,15 +82,17 @@ fn main() {
                 .weight_bytes();
         let mut rates: Vec<(String, f64, usize)> = Vec::new();
         for (label, scheme) in schemes {
-            let plan = build_plan(ir, *scheme, PruneConfig::default(), 7)
-                .into_shared();
-            let bytes = plan.weight_bytes();
-            let coord = Coordinator::start_with(
-                vec![Box::new(NativeBackend::new(label, plan))],
-                policy,
-                RouterPolicy::Failover,
-            )
-            .expect("coordinator");
+            let dep = Deployment::builder(label, ir)
+                .scheme(*scheme)
+                .seed(7)
+                .build()
+                .expect("deployment");
+            let bytes = dep.plan().expect("native plan").weight_bytes();
+            let coord = Coordinator::builder()
+                .policy(policy)
+                .register(dep)
+                .start()
+                .expect("coordinator");
             let wall = drive(&coord, elems, total, window);
             let s = coord.shutdown();
             let rps = s.completed as f64 / wall;

@@ -1,27 +1,27 @@
-//! Serving-path benchmark: requests/sec and p50/p99 latency per backend,
-//! measured through the full coordinator (batcher -> router -> backend
-//! worker). This is the serving edition of the paper's real-time claim:
-//! the co-designed native path must hold its kernel-level advantage once
-//! dynamic batching and routing sit in front of it.
+//! Serving-path benchmark: requests/sec and p50/p99 latency per backend
+//! and per deployment, measured through the full coordinator (SLA
+//! router -> shard batcher -> batch router -> backend worker). This is
+//! the serving edition of the paper's real-time claim: the co-designed
+//! native path must hold its kernel-level advantage once dynamic
+//! batching and routing sit in front of it.
 //!
 //! Rows: native CoCo-Gen *fused-batch* pool vs the per-image fan-out
 //! path it replaces (same plan, `NativeBatchMode` forced each way —
 //! the batched-execution acceptance comparison), the default Auto mode,
-//! native dense-im2col, a 50/50 split across CoCo-Gen and dense, and —
-//! when a real runtime + artifacts exist — PJRT. Offline the PJRT row
-//! reports why it was skipped.
+//! native dense-im2col, a 50/50 split across CoCo-Gen and dense, then —
+//! the deployment-API acceptance — one coordinator serving three named
+//! deployments (`dense`, `cocogen`, `cocogen-quant`) under mixed-SLA
+//! traffic with per-deployment req/s + p50/p99, and — when a real
+//! runtime + artifacts exist — PJRT. Offline the PJRT row reports why
+//! it was skipped.
 //!
 //! Run: `cargo bench --bench serving_throughput`
 //! (COCOPIE_QUICK=1 shrinks the request count for smoke runs.)
 
 use std::time::{Duration, Instant};
 
-use cocopie::codegen::{build_plan, PruneConfig, Scheme};
-use cocopie::coordinator::{
-    BatchPolicy, Coordinator, NativeBackend, NativeBatchMode,
-    RouterPolicy, ServeConfig,
-};
 use cocopie::ir::zoo;
+use cocopie::prelude::*;
 use cocopie::util::bench::Table;
 use cocopie::util::rng::Rng;
 
@@ -30,18 +30,32 @@ use cocopie::util::rng::Rng;
 /// service rate rather than the arrival process. Returns wall seconds.
 fn drive(coord: &Coordinator, elems: usize, total: usize, window: usize)
          -> f64 {
+    drive_sla(coord, elems, total, window, &|_| Sla::Standard)
+}
+
+/// [`drive`] with a per-request SLA class (mixed-SLA traffic shapes).
+fn drive_sla(coord: &Coordinator, elems: usize, total: usize,
+             window: usize, sla_of: &dyn Fn(usize) -> Sla) -> f64 {
     let client = coord.client();
     let mut rng = Rng::seed_from(11);
     let t0 = Instant::now();
     let mut pending = std::collections::VecDeque::new();
-    for _ in 0..total {
+    for i in 0..total {
         if pending.len() >= window {
             let p: std::sync::mpsc::Receiver<_> =
                 pending.pop_front().unwrap();
             let _ = p.recv();
         }
         let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
-        pending.push_back(client.submit(img).expect("submit"));
+        pending.push_back(
+            client
+                .infer(InferRequest {
+                    image: img,
+                    sla: sla_of(i),
+                    deployment: None,
+                })
+                .expect("submit"),
+        );
     }
     while let Some(p) = pending.pop_front() {
         let _ = p.recv();
@@ -49,9 +63,8 @@ fn drive(coord: &Coordinator, elems: usize, total: usize, window: usize)
     t0.elapsed().as_secs_f64()
 }
 
-/// One table row from the shutdown summary + measured wall time.
-fn row(table: &mut Table, name: &str, s: &cocopie::coordinator::Summary,
-       wall: f64) {
+/// One table row from a summary + measured wall time.
+fn row(table: &mut Table, name: &str, s: &Summary, wall: f64) {
     table.row(&[
         name.to_string(),
         format!("{:.0}", s.completed as f64 / wall),
@@ -92,17 +105,18 @@ fn main() {
         ("cocogen-auto", NativeBatchMode::Auto),
     ];
     for (name, mode) in modes {
-        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
-                              7)
-            .into_shared();
-        let coord = Coordinator::start_with(
-            vec![Box::new(
-                NativeBackend::new(name, plan).with_batch_mode(*mode),
-            )],
-            policy,
-            RouterPolicy::Failover,
-        )
-        .expect("native coordinator");
+        let coord = Coordinator::builder()
+            .policy(policy)
+            .register(
+                Deployment::builder(name, &ir)
+                    .scheme(Scheme::CocoGen)
+                    .seed(7)
+                    .batch_mode(*mode)
+                    .build()
+                    .expect("deployment"),
+            )
+            .start()
+            .expect("native coordinator");
         let wall = drive(&coord, elems, total, window);
         let s = coord.shutdown();
         row(&mut table, name, &s, wall);
@@ -110,21 +124,24 @@ fn main() {
 
     // The dense compiler baseline (default batch mode).
     {
-        let plan = build_plan(&ir, Scheme::DenseIm2col,
-                              PruneConfig::default(), 7)
-            .into_shared();
-        let coord = Coordinator::start_with(
-            vec![Box::new(NativeBackend::new("native-dense", plan))],
-            policy,
-            RouterPolicy::Failover,
-        )
-        .expect("native coordinator");
+        let coord = Coordinator::builder()
+            .policy(policy)
+            .register(
+                Deployment::builder("native-dense", &ir)
+                    .scheme(Scheme::DenseIm2col)
+                    .seed(7)
+                    .build()
+                    .expect("deployment"),
+            )
+            .start()
+            .expect("native coordinator");
         let wall = drive(&coord, elems, total, window);
         let s = coord.shutdown();
         row(&mut table, "native-dense", &s, wall);
     }
 
-    // 50/50 split across both native variants.
+    // 50/50 split across both native variants behind one deployment —
+    // backend-level routing, the pre-`Deployment` shape.
     {
         let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
                               7)
@@ -144,9 +161,42 @@ fn main() {
         let wall = drive(&coord, elems, total, window);
         let report = coord.shutdown_report();
         row(&mut table, "split 50/50", &report.overall, wall);
-        for (name, s) in &report.per_backend {
+        for (name, s) in report.backends() {
             println!("  split detail {name}: {} reqs, p50 {:.2} ms",
                      s.completed, s.p50_ms);
+        }
+    }
+
+    // The deployment-API acceptance: one coordinator, three named
+    // deployments of the co-design menu, mixed-SLA traffic resolved on
+    // the live path — per-deployment req/s + p50/p99.
+    {
+        let mut builder = Coordinator::builder().policy(policy);
+        for scheme in [Scheme::DenseIm2col, Scheme::CocoGen,
+                       Scheme::CocoGenQuant]
+        {
+            builder = builder.register(
+                Deployment::builder(scheme.label(), &ir)
+                    .scheme(scheme)
+                    .seed(7)
+                    .build()
+                    .expect("deployment"),
+            );
+        }
+        let coord = builder.start().expect("multi coordinator");
+        let wall = drive_sla(&coord, elems, total, window, &Sla::mixed);
+        let report = coord.shutdown_report();
+        row(&mut table, "mixed-SLA menu", &report.overall, wall);
+        for dep in &report.deployments {
+            println!(
+                "  deployment {:14} {:4.0} req/s  p50 {:6.2} ms  \
+                 p99 {:6.2} ms  ({} reqs)",
+                dep.name,
+                dep.summary.completed as f64 / wall,
+                dep.summary.p50_ms,
+                dep.summary.p99_ms,
+                dep.summary.completed
+            );
         }
     }
 
@@ -166,6 +216,8 @@ fn main() {
     println!(
         "\nshape: cocogen-fused req/s > cocogen-fanout req/s at mean \
          batch >= 4 (the fused walk streams each layer's weights once \
-         per batch; fan-out pays them once per image)"
+         per batch; fan-out pays them once per image), and the \
+         mixed-SLA menu routes realtime traffic to the fast \
+         deployments once live latency points accumulate"
     );
 }

@@ -1,76 +1,78 @@
-//! Serving demo: the L3 coordinator under open-loop synthetic traffic.
+//! Serving demo: named deployments of the co-design menu behind one
+//! coordinator, with live SLA routing.
 //!
-//! Three scenes:
-//!  1. the SLA router choosing among deployment variants,
-//!  2. live serving on the *native* backend pool — the co-designed
-//!     pattern-pruned engines behind the `Backend` seam, split across a
-//!     CoCo-Gen variant and a dense baseline; with `--quant` the split
-//!     canaries the weight-only int8 plan (`Scheme::CocoGenQuant`) next
-//!     to the fp32 CoCo-Gen one and prints the resident weight bytes;
-//!     with `--auto` it canaries the per-layer engine-selected plan
-//!     (`Scheme::CocoAuto`, auto-tuned before serving) instead,
-//!  3. the PJRT backend, when a real runtime + artifacts are present
+//! Two scenes:
+//!  1. multi-deployment serving on the *native* backend pools — every
+//!     deployment is built by `Deployment::builder` (model IR → scheme
+//!     → prune config → optional autotune → compiled backends) and
+//!     registered under its menu name (`dense`, `cocogen`, and with
+//!     `--quant`/`--auto`/`--multi` also `cocogen-quant`/`coco-auto`).
+//!     Open-loop mixed-SLA traffic then hits `Client::infer`: the
+//!     leader resolves each request's SLA class to a deployment using
+//!     latency points fed back live from each deployment's `Metrics`,
+//!     plus a few requests pinned to a named deployment outright;
+//!  2. the PJRT backend, when a real runtime + artifacts are present
 //!     (`make artifacts`); offline it reports why it was skipped.
 //!
 //! Batches route through the fused batched pipeline by default
 //! (`NativeBatchMode::Auto`); `--fanout` forces the per-image pool
 //! fan-out path for comparison. `--smoke` serves a tiny model with a
-//! small request count — the CI end-to-end serving smoke test.
+//! small request count — the CI end-to-end serving smoke test
+//! (`--smoke --multi` is the multi-deployment smoke step, asserting
+//! SLA-routed traffic reached 2+ deployments).
 //!
 //! Run: `cargo run --release --example serve
-//!       [-- --quant | --auto | --fanout | --smoke]`
+//!       [-- --quant | --auto | --multi | --fanout | --smoke]`
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use cocopie::codegen::{build_plan, PruneConfig, Scheme};
-use cocopie::coordinator::router::{Router, Sla, Variant};
-use cocopie::coordinator::{
-    BatchPolicy, Coordinator, NativeBackend, NativeBatchMode,
-    RouterPolicy, ServeConfig,
-};
 use cocopie::ir::{zoo, Chw, IrBuilder};
+use cocopie::prelude::*;
 use cocopie::util::rng::Rng;
 
-fn drive(coord: &Coordinator, elems: usize, n_requests: usize,
-         seed: u64) -> f64 {
+/// Open-loop mixed-SLA load; returns (wall seconds, served count per
+/// (SLA, deployment) pair).
+#[allow(clippy::type_complexity)]
+fn drive(coord: &Coordinator, elems: usize, n_requests: usize, seed: u64)
+         -> (f64, HashMap<(Sla, Arc<str>), usize>) {
     let client = coord.client();
     let mut rng = Rng::seed_from(seed);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
-        pending.push(client.submit(img).expect("submit"));
+        let sla = Sla::mixed(i);
+        pending.push((
+            sla,
+            client
+                .infer(InferRequest {
+                    image: img,
+                    sla,
+                    deployment: None,
+                })
+                .expect("submit"),
+        ));
         if i % 8 == 0 {
             // open-loop pacing below the service rate so queues stay
             // bounded
             std::thread::sleep(Duration::from_millis(1));
         }
     }
-    for p in pending {
-        let _ = p.recv();
+    let mut routed = HashMap::new();
+    for (sla, p) in pending {
+        if let Ok(Ok(pred)) = p.recv() {
+            *routed.entry((sla, pred.deployment)).or_insert(0usize) += 1;
+        }
     }
-    t0.elapsed().as_secs_f64()
+    (t0.elapsed().as_secs_f64(), routed)
 }
 
 fn main() -> anyhow::Result<()> {
-    // --- 1. router across CoCo-Gen deployment variants --------------------
-    // latency/accuracy operating points come from the Fig.5/Table1 benches
-    let router = Router::new(vec![
-        Variant::new("dense", 9.8, 0.95),
-        Variant::new("pattern-2.5x", 4.1, 0.94),
-        Variant::new("pattern-7x", 1.6, 0.91),
-    ]);
-    for sla in [Sla::Realtime, Sla::Standard, Sla::Quality] {
-        println!("router {:?} -> {}", sla, router.route(sla).name);
-    }
-
-    // --- 2. native serving: executor pool behind the Backend seam ---------
-    // `--quant` canaries the weight-only int8 plan next to fp32 CoCo-Gen;
-    // `--auto` canaries the per-layer engine-selected CocoAuto plan;
-    // `--fanout` forces per-image pool fan-out instead of the fused
-    // batched pipeline; `--smoke` is the tiny CI configuration.
     let quant = std::env::args().any(|a| a == "--quant");
     let auto = std::env::args().any(|a| a == "--auto");
+    let multi = std::env::args().any(|a| a == "--multi");
     let fanout = std::env::args().any(|a| a == "--fanout");
     let smoke = std::env::args().any(|a| a == "--smoke");
     let batch_mode = if fanout {
@@ -89,100 +91,133 @@ fn main() -> anyhow::Result<()> {
         zoo::mobilenet_v2(zoo::CIFAR_HW, 10)
     };
     let n_requests = if smoke { 48 } else { 256 };
-    let coco = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(), 7)
-        .into_shared();
-    let second_scheme = if quant {
-        Scheme::CocoGenQuant
-    } else if auto {
-        Scheme::CocoAuto
-    } else {
-        Scheme::DenseIm2col
-    };
     let policy = BatchPolicy {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
     };
-    let mut second_plan =
-        build_plan(&ir, second_scheme, PruneConfig::default(), 7);
-    if auto {
-        // The point of CocoAuto: measure every legal engine per layer
-        // at its real shape AND at the serving batch regime — under
-        // fused batching the best kernel at n = 1 is often not the best
-        // at n = max_batch, so candidates are timed on fused batches of
-        // the size the coordinator will actually form.
-        cocopie::codegen::autotune_plan_batched(&mut second_plan, 1,
-                                                policy.max_batch);
+
+    // --- 1. named deployments of the co-design menu, one coordinator --
+    // Each builder run is the paper's staged pipeline: IR → scheme →
+    // prune/quant → (for coco-auto) measured per-layer engine selection
+    // at the serving batch size → compiled pipelines behind a backend.
+    let mut schemes = vec![Scheme::DenseIm2col, Scheme::CocoGen];
+    if quant || multi {
+        schemes.push(Scheme::CocoGenQuant);
     }
-    let second = second_plan.into_shared();
-    let second_name = if quant {
-        "native-int8"
-    } else if auto {
-        "native-auto"
-    } else {
-        "native-dense"
-    };
-    if quant {
-        println!(
-            "\nweight bytes: fp32 cocogen {} KB, int8 cocogen {} KB \
-             ({:.2}x); activation arena {} KB per executor",
-            coco.weight_bytes() / 1024,
-            second.weight_bytes() / 1024,
-            coco.weight_bytes() as f64 / second.weight_bytes() as f64,
-            coco.peak_activation_bytes() / 1024,
-        );
+    if auto || multi {
+        schemes.push(Scheme::CocoAuto);
+    }
+    let mut builder = Coordinator::builder().policy(policy);
+    let mut weight_kb = Vec::new();
+    for scheme in &schemes {
+        let mut db = Deployment::builder(scheme.label(), &ir)
+            .scheme(*scheme)
+            .seed(7)
+            .batch_mode(batch_mode);
+        if *scheme == Scheme::CocoAuto {
+            // Measure per-layer engines at the batch size the
+            // coordinator will actually form — the best kernel at n = 1
+            // is often not the best at n = max_batch.
+            db = db.autotune_at(policy.max_batch);
+        }
+        let dep = db.build()?;
+        let plan = dep.plan().expect("native deployment keeps its plan");
+        weight_kb.push((scheme.label(), plan.weight_bytes() / 1024));
+        builder = builder.register(dep);
+    }
+    println!("deployments (resident weight KB):");
+    for (name, kb) in &weight_kb {
+        println!("  {name:16} {kb:6} KB");
     }
     let elems = ir.input.c * ir.input.h * ir.input.w;
-    let coord = Coordinator::start_with(
-        vec![
-            Box::new(NativeBackend::new("native-cocogen", coco)
-                .with_batch_mode(batch_mode)),
-            Box::new(NativeBackend::new(second_name, second)
-                .with_batch_mode(batch_mode)),
-        ],
-        policy,
-        // 3:1 in favor of the first variant, like a canaried rollout.
-        RouterPolicy::Split(vec![3.0, 1.0]),
-    )?;
-    let wall = drive(&coord, elems, n_requests, 3);
+    let coord = builder.start()?;
+
+    // A few requests pinned to a named deployment outright — the
+    // explicit-routing side of the typed request form.
+    let client = coord.client();
+    let pinned = client
+        .infer(InferRequest {
+            image: vec![0.25; elems],
+            sla: Sla::Standard,
+            deployment: Some("cocogen"),
+        })?
+        .recv()??;
+    println!(
+        "pinned request -> deployment '{}' (backend '{}', class {})",
+        pinned.deployment, pinned.backend, pinned.class
+    );
+
+    let (wall, routed) = drive(&coord, elems, n_requests, 3);
+    drop(client);
     let report = coord.shutdown_report();
     println!(
-        "\nnative pool ({}): served {} requests in {:.2}s ({:.0} rps), \
-         {} failovers",
+        "\nnative deployments ({}): served {} requests in {:.2}s \
+         ({:.0} rps), {} failovers",
         if fanout { "per-image fan-out" } else { "fused batches" },
         report.overall.completed,
         wall,
         report.overall.completed as f64 / wall,
         report.overall.failovers,
     );
-    for (name, s) in &report.per_backend {
+    for dep in &report.deployments {
         println!(
-            "  {name:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms  \
+            "  {:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms  \
              mean batch {:.1}",
-            s.completed, s.p50_ms, s.p99_ms, s.mean_batch
+            dep.name,
+            dep.summary.completed,
+            dep.summary.p50_ms,
+            dep.summary.p99_ms,
+            dep.summary.mean_batch
         );
     }
+    let mut rows: Vec<_> = routed.iter().collect();
+    rows.sort_by_key(|((sla, name), _)| (sla.label(), name.clone()));
+    println!("SLA routing (live latency points from Metrics):");
+    for ((sla, name), count) in rows {
+        println!("  {:8} -> {:16} {count:5} reqs", sla.label(), name);
+    }
+
     if smoke {
-        // The CI smoke step: every request must have been served, none
-        // rejected — a real end-to-end pass through batcher, router,
-        // fused executor, and reply channels.
+        // The CI smoke step: every request (the pinned one included)
+        // must have been served, none rejected — a real end-to-end pass
+        // through SLA resolution, shard batcher, batch router, fused
+        // executor, and reply channels.
         anyhow::ensure!(
-            report.overall.completed == n_requests as u64
+            report.overall.completed == n_requests as u64 + 1
                 && report.overall.rejected == 0,
             "smoke: served {}/{} requests ({} rejected)",
             report.overall.completed,
-            n_requests,
+            n_requests + 1,
             report.overall.rejected
         );
-        println!("smoke: all {n_requests} requests served");
+        let active = report
+            .deployments
+            .iter()
+            .filter(|d| d.summary.completed > 0)
+            .count();
+        if multi {
+            // The multi-deployment smoke: SLA routing must actually
+            // spread live traffic across the registered menu.
+            anyhow::ensure!(
+                report.deployments.len() >= 3 && active >= 2,
+                "smoke --multi: {}/{} deployments served traffic",
+                active,
+                report.deployments.len()
+            );
+        }
+        println!(
+            "smoke: all {} requests served across {active} deployments",
+            n_requests + 1
+        );
         return Ok(());
     }
 
-    // --- 3. PJRT serving (requires real runtime + artifacts) --------------
+    // --- 2. PJRT serving (requires real runtime + artifacts) ----------
     let mut cfg = ServeConfig::new("resnet_mini");
     cfg.policy = policy;
     match Coordinator::start(cfg) {
         Ok(coord) => {
-            let wall = drive(&coord, 16 * 16 * 3, 256, 5);
+            let (wall, _) = drive(&coord, 16 * 16 * 3, 256, 5);
             let s = coord.shutdown();
             println!(
                 "\npjrt: served {} requests in {:.2}s ({:.0} rps), \

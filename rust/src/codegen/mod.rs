@@ -140,6 +140,52 @@ pub enum Scheme {
     CocoAuto,
 }
 
+impl Scheme {
+    /// Every scheme, in the Fig. 5 column order.
+    pub const ALL: [Scheme; 7] = [
+        Scheme::DenseNaive,
+        Scheme::DenseIm2col,
+        Scheme::DenseWinograd,
+        Scheme::SparseCsr,
+        Scheme::CocoGen,
+        Scheme::CocoGenQuant,
+        Scheme::CocoAuto,
+    ];
+
+    /// Parse a CLI-style scheme name (the `--scheme`/`--variants`
+    /// vocabulary, aliases included).
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "dense-naive" | "naive" => Some(Scheme::DenseNaive),
+            "dense" | "dense-im2col" | "im2col" => {
+                Some(Scheme::DenseIm2col)
+            }
+            "dense-winograd" | "winograd" => Some(Scheme::DenseWinograd),
+            "sparse-csr" | "csr" => Some(Scheme::SparseCsr),
+            "cocogen" => Some(Scheme::CocoGen),
+            "cocogen-quant" | "quant" | "int8" => {
+                Some(Scheme::CocoGenQuant)
+            }
+            "coco-auto" | "cocoauto" | "auto" => Some(Scheme::CocoAuto),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase label: the canonical name [`Scheme::parse`]
+    /// accepts, used for deployment/variant naming.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::DenseNaive => "dense-naive",
+            Scheme::DenseIm2col => "dense",
+            Scheme::DenseWinograd => "dense-winograd",
+            Scheme::SparseCsr => "sparse-csr",
+            Scheme::CocoGen => "cocogen",
+            Scheme::CocoGenQuant => "cocogen-quant",
+            Scheme::CocoAuto => "coco-auto",
+        }
+    }
+}
+
 /// Pruning hyper-parameters for plan building.
 #[derive(Debug, Clone, Copy)]
 pub struct PruneConfig {
@@ -797,6 +843,16 @@ mod tests {
             .map(|l| l.output.elements() * 4)
             .sum();
         assert!(a.peak_activation_bytes() <= total);
+    }
+
+    #[test]
+    fn scheme_labels_round_trip_through_parse() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.label()), Some(s),
+                       "label '{}' must parse back", s.label());
+        }
+        assert_eq!(Scheme::parse("int8"), Some(Scheme::CocoGenQuant));
+        assert_eq!(Scheme::parse("no-such-scheme"), None);
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Dynamic batcher: groups incoming requests into fixed-capacity batches,
 //! flushing on either a full batch or a deadline — the standard serving
 //! trade between throughput (big batches) and tail latency (short waits).
+//!
+//! The leader forms batches with the [`ShardBatcher`]: one shard per
+//! named deployment, each accumulating its own batch with its own
+//! deadline, because a batch must be executable by one compiled
+//! pipeline.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
 /// Batching policy: when the dynamic batcher flushes a batch to a
@@ -36,200 +40,168 @@ impl Default for BatchPolicy {
     }
 }
 
-/// One step of a polling batch loop (see [`next_batch_step`]).
-pub enum BatchStep<T> {
-    /// A batch formed under the policy.
-    Batch(Vec<T>),
-    /// No request arrived within the idle window; the caller can service
-    /// other work (e.g. failover retries) and poll again.
-    Idle,
-    /// The channel is closed and drained.
-    Closed,
+/// Per-shard batch accumulation under one [`BatchPolicy`]: the
+/// multi-deployment leader routes each request to a deployment (shard),
+/// pushes it here, and flushes a shard's batch when it fills
+/// ([`ShardBatcher::push`] returns it) or when its deadline — anchored
+/// at the shard's *first* request's enqueue time, so time a request
+/// already spent queued (e.g. behind failover retries) counts against
+/// `max_wait` — expires ([`ShardBatcher::take_expired`]).
+pub struct ShardBatcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    shards: Vec<Shard<T>>,
 }
 
-/// Pull one batch from `rx` under `policy`; `enqueued` reports when an
-/// item first entered the queue, anchoring the `max_wait` deadline (a
-/// request that already sat in the channel — e.g. while the leader
-/// serviced failover retries — must not wait the full `max_wait` again).
-/// Returns None when the channel is closed and drained.
-pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy,
-                     enqueued: impl Fn(&T) -> Instant)
-                     -> Option<Vec<T>> {
-    // Block for the first element.
-    let first = rx.recv().ok()?;
-    let deadline = enqueued(&first) + policy.max_wait;
-    Some(fill_batch(rx, policy, first, deadline))
+struct Shard<T> {
+    items: Vec<T>,
+    deadline: Option<Instant>,
 }
 
-/// Like [`next_batch`], but waits at most `idle` for the first request so
-/// the caller's loop can interleave other work. The serving leader uses
-/// this to service failover retries while the request queue is quiet.
-pub fn next_batch_step<T>(rx: &Receiver<T>, policy: &BatchPolicy,
-                          idle: Duration,
-                          enqueued: impl Fn(&T) -> Instant)
-                          -> BatchStep<T> {
-    let first = match rx.recv_timeout(idle) {
-        Ok(item) => item,
-        Err(RecvTimeoutError::Timeout) => return BatchStep::Idle,
-        Err(RecvTimeoutError::Disconnected) => return BatchStep::Closed,
-    };
-    let deadline = enqueued(&first) + policy.max_wait;
-    BatchStep::Batch(fill_batch(rx, policy, first, deadline))
-}
-
-/// Accumulate onto `first` until the batch is full or `deadline`
-/// (anchored at the first item's enqueue time) hits. A deadline that
-/// has already passed still drains whatever is immediately available —
-/// a backlogged queue must keep forming full batches, it just stops
-/// *waiting* for more.
-fn fill_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy, first: T,
-                 deadline: Instant) -> Vec<T> {
-    let mut batch = vec![first];
-    while batch.len() < policy.max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            while batch.len() < policy.max_batch {
-                match rx.try_recv() {
-                    Ok(item) => batch.push(item),
-                    Err(_) => break,
-                }
-            }
-            break;
-        }
-        match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+impl<T> ShardBatcher<T> {
+    pub fn new(n_shards: usize, policy: BatchPolicy) -> ShardBatcher<T> {
+        ShardBatcher {
+            max_batch: policy.max_batch.max(1),
+            max_wait: policy.max_wait,
+            shards: (0..n_shards)
+                .map(|_| Shard {
+                    items: Vec::new(),
+                    deadline: None,
+                })
+                .collect(),
         }
     }
-    batch
+
+    /// Queue `item` on `shard`; returns the shard's full batch when
+    /// this push fills it. A shard's deadline anchors at its first
+    /// item's `enqueued` time (a pre-aged request flushes on the next
+    /// [`ShardBatcher::take_expired`] instead of waiting `max_wait`
+    /// again).
+    pub fn push(&mut self, shard: usize, item: T, enqueued: Instant)
+                -> Option<Vec<T>> {
+        let s = &mut self.shards[shard];
+        if s.items.is_empty() {
+            s.deadline = Some(enqueued + self.max_wait);
+        }
+        s.items.push(item);
+        if s.items.len() >= self.max_batch {
+            s.deadline = None;
+            Some(std::mem::take(&mut s.items))
+        } else {
+            None
+        }
+    }
+
+    /// The earliest pending deadline across shards — how long the
+    /// leader may block waiting for new requests.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.shards.iter().filter_map(|s| s.deadline).min()
+    }
+
+    /// Flush every shard whose deadline has passed.
+    pub fn take_expired(&mut self, now: Instant)
+                        -> Vec<(usize, Vec<T>)> {
+        self.take_where(|s| s.deadline.is_some_and(|d| d <= now))
+    }
+
+    /// Flush everything (shutdown drain).
+    pub fn drain(&mut self) -> Vec<(usize, Vec<T>)> {
+        self.take_where(|s| !s.items.is_empty())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.items.is_empty())
+    }
+
+    fn take_where(&mut self, pred: impl Fn(&Shard<T>) -> bool)
+                  -> Vec<(usize, Vec<T>)> {
+        let mut out = Vec::new();
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if !s.items.is_empty() && pred(s) {
+                s.deadline = None;
+                out.push((i, std::mem::take(&mut s.items)));
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
-
-    /// Enqueue-timestamp accessor for tests over plain values: "arrived
-    /// just now", the pre-fix behavior.
-    fn fresh<T>(_: &T) -> Instant {
-        Instant::now()
-    }
 
     #[test]
-    fn flushes_full_batch_immediately() {
-        let (tx, rx) = mpsc::channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
-        }
+    fn shard_batcher_fills_and_flushes_per_shard() {
         let policy = BatchPolicy {
-            max_batch: 4,
+            max_batch: 3,
             max_wait: Duration::from_secs(10),
         };
-        let b = next_batch(&rx, &policy, fresh).unwrap();
-        assert_eq!(b, vec![0, 1, 2, 3]);
-        let b = next_batch(&rx, &policy, fresh).unwrap();
-        assert_eq!(b, vec![4, 5, 6, 7]);
+        let mut b: ShardBatcher<u32> = ShardBatcher::new(2, policy);
+        let now = Instant::now();
+        assert!(b.push(0, 1, now).is_none());
+        assert!(b.push(1, 10, now).is_none());
+        assert!(b.push(0, 2, now).is_none());
+        // Shard 0 fills independently of shard 1.
+        assert_eq!(b.push(0, 3, now), Some(vec![1, 2, 3]));
+        assert!(!b.is_empty(), "shard 1 still holds its item");
+        assert_eq!(b.drain(), vec![(1, vec![10])]);
+        assert!(b.is_empty());
     }
 
     #[test]
-    fn flushes_partial_batch_on_deadline() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(1).unwrap();
+    fn full_shard_resets_its_deadline() {
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(50),
+        };
+        let mut b: ShardBatcher<u32> = ShardBatcher::new(1, policy);
+        let now = Instant::now();
+        b.push(0, 1, now);
+        assert!(b.next_deadline().is_some());
+        assert!(b.push(0, 2, now).is_some());
+        // The flushed shard must not keep a stale deadline that would
+        // wake the leader (or double-flush) later.
+        assert!(b.next_deadline().is_none());
+        assert!(b.take_expired(now + Duration::from_secs(1)).is_empty());
+    }
+
+    #[test]
+    fn shard_deadline_anchors_at_first_enqueue() {
         let policy = BatchPolicy {
             max_batch: 8,
-            max_wait: Duration::from_millis(10),
+            max_wait: Duration::from_millis(200),
         };
-        let t0 = Instant::now();
-        let b = next_batch(&rx, &policy, fresh).unwrap();
-        assert_eq!(b, vec![1]);
-        assert!(t0.elapsed() >= Duration::from_millis(9));
+        let mut b: ShardBatcher<&str> = ShardBatcher::new(2, policy);
+        let now = Instant::now();
+        // A pre-aged request (it sat queued behind failover retries
+        // longer than max_wait) must flush on the next sweep, not wait
+        // the full window again.
+        b.push(0, "old", now - Duration::from_millis(400));
+        b.push(1, "fresh", now);
+        assert_eq!(b.take_expired(now), vec![(0, vec!["old"])]);
+        // The fresh shard keeps its (future) deadline: a fresh request
+        // still gets its full batching window.
+        let dl = b.next_deadline().expect("fresh shard has a deadline");
+        assert!(dl > now && dl <= now + Duration::from_millis(200));
+        assert!(b.take_expired(now).is_empty());
+        assert_eq!(b.take_expired(dl), vec![(1, vec!["fresh"])]);
+        assert!(b.next_deadline().is_none());
     }
 
     #[test]
-    fn returns_none_on_closed_channel() {
-        let (tx, rx) = mpsc::channel::<u32>();
-        drop(tx);
-        assert!(next_batch(&rx, &BatchPolicy::default(), fresh).is_none());
-    }
-
-    #[test]
-    fn step_reports_idle_then_batch_then_closed() {
-        let (tx, rx) = mpsc::channel();
-        let policy = BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_millis(1),
-        };
-        let idle = Duration::from_millis(5);
-        assert!(matches!(next_batch_step(&rx, &policy, idle, fresh),
-                         BatchStep::Idle));
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
-        match next_batch_step(&rx, &policy, idle, fresh) {
-            BatchStep::Batch(b) => assert_eq!(b, vec![1, 2]),
-            _ => panic!("expected a batch"),
-        }
-        drop(tx);
-        assert!(matches!(next_batch_step(&rx, &policy, idle, fresh),
-                         BatchStep::Closed));
-    }
-
-    #[test]
-    fn drains_after_close() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(7).unwrap();
-        drop(tx);
-        let b = next_batch(&rx, &BatchPolicy::default(), fresh).unwrap();
-        assert_eq!(b, vec![7]);
-        assert!(next_batch(&rx, &BatchPolicy::default(), fresh).is_none());
-    }
-
-    #[test]
-    fn pre_aged_request_does_not_wait_max_wait_again() {
-        // Regression: the deadline is anchored at the request's enqueue
-        // time. A request that already sat in the channel longer than
-        // max_wait (e.g. while the leader serviced failover retries)
-        // flushes immediately instead of waiting max_wait a second time.
-        let (tx, rx) = mpsc::channel();
-        let max_wait = Duration::from_millis(200);
+    fn later_pushes_do_not_move_the_deadline() {
         let policy = BatchPolicy {
             max_batch: 8,
-            max_wait,
+            max_wait: Duration::from_millis(100),
         };
-        let aged = Instant::now() - 2 * max_wait;
-        tx.send(("old", aged)).unwrap();
-        tx.send(("queued-behind-it", aged)).unwrap();
+        let mut b: ShardBatcher<u32> = ShardBatcher::new(1, policy);
         let t0 = Instant::now();
-        let b = next_batch(&rx, &policy, |r: &(&str, Instant)| r.1)
-            .unwrap();
-        let took = t0.elapsed();
-        // Both queued items flush (an expired deadline still drains the
-        // backlog), and nothing waits for the 200 ms window.
-        assert_eq!(b.len(), 2);
-        assert!(
-            took < max_wait / 2,
-            "expired deadline still waited {took:?}"
-        );
-    }
-
-    #[test]
-    fn fresh_request_still_gets_its_full_window() {
-        let (tx, rx) = mpsc::channel();
-        let policy = BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_millis(150),
-        };
-        let t0 = Instant::now();
-        tx.send(((), Instant::now())).unwrap();
-        std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(10));
-            let _ = tx.send(((), Instant::now()));
-        });
-        let b = next_batch(&rx, &policy, |r: &((), Instant)| r.1)
-            .unwrap();
-        // The late arrival lands inside the window anchored at the
-        // first request's enqueue time.
-        assert_eq!(b.len(), 2);
-        assert!(t0.elapsed() >= Duration::from_millis(9));
+        b.push(0, 1, t0);
+        let dl = b.next_deadline().unwrap();
+        // A second request arriving later joins the same window.
+        b.push(0, 2, t0 + Duration::from_millis(60));
+        assert_eq!(b.next_deadline(), Some(dl),
+                   "deadline must stay anchored at the first request");
+        assert_eq!(b.take_expired(dl), vec![(0, vec![1, 2])]);
     }
 }

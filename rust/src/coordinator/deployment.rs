@@ -1,0 +1,352 @@
+//! The `Deployment` abstraction: one named operating point of the
+//! co-design menu, packaged as the staged pipeline the paper describes —
+//! model IR → [`Scheme`] → prune/quant config → optional auto-tune at a
+//! target batch size → compiled serving backends.
+//!
+//! [`Deployment::builder`] replaces the scattered
+//! `build_plan`/`autotune_plan_batched`/`into_shared`/`NativeBackend::new`
+//! call chain with one fluent constructor, and a built deployment is the
+//! unit a [`super::Coordinator`] registers: several named deployments
+//! (e.g. `dense`, `cocogen`, `cocogen-quant`, `coco-auto`) of the *same*
+//! model serve behind one client, with per-request SLA routing picking
+//! among them on the live path.
+//!
+//! ```
+//! use cocopie::ir::{Chw, IrBuilder};
+//! use cocopie::prelude::*;
+//!
+//! let mut b = IrBuilder::new("doc", Chw::new(3, 8, 8));
+//! b.conv("c1", 3, 4, 1, true).gap("g").dense("fc", 3, false);
+//! let ir = b.build().unwrap();
+//! let dep = Deployment::builder("cocogen", &ir)
+//!     .scheme(Scheme::CocoGen)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(dep.name(), "cocogen");
+//! assert!(dep.plan().is_some());
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::codegen::{autotune_plan_batched, build_plan, ExecPlan,
+                     PruneConfig, Scheme};
+use crate::exec::{ModelExecutor, Tensor};
+use crate::ir::ModelIR;
+
+use super::backend::{Backend, NativeBackend, NativeBatchMode,
+                     PjrtBackend};
+use super::router::RouterPolicy;
+use super::ServeConfig;
+
+/// A named, fully-built deployment: the backends that serve it, its
+/// batch-routing policy across those backends, and the operating point
+/// (declared accuracy + measured prior latency) the SLA router starts
+/// from before live metrics take over.
+pub struct Deployment {
+    pub(crate) name: Arc<str>,
+    pub(crate) backends: Vec<Box<dyn Backend>>,
+    pub(crate) router: RouterPolicy,
+    pub(crate) accuracy: f64,
+    pub(crate) prior_latency_ms: f64,
+    plan: Option<Arc<ExecPlan>>,
+}
+
+impl Deployment {
+    /// Start the staged build pipeline for a native deployment of `ir`.
+    pub fn builder(name: &str, ir: &ModelIR) -> DeploymentBuilder {
+        DeploymentBuilder {
+            name: name.to_string(),
+            ir: ir.clone(),
+            scheme: Scheme::CocoGen,
+            prune: PruneConfig::default(),
+            seed: 7,
+            autotune_batch: None,
+            tune_threads: 1,
+            workers: None,
+            batch_mode: NativeBatchMode::Auto,
+            accuracy: None,
+        }
+    }
+
+    /// A native deployment over an already-built plan (e.g. one shared
+    /// with a direct [`ModelExecutor`] in tests, or tuned elsewhere).
+    pub fn from_plan(name: &str, plan: Arc<ExecPlan>) -> Deployment {
+        let prior = measure_prior_ms(&plan);
+        Deployment {
+            name: Arc::from(name),
+            backends: vec![Box::new(NativeBackend::new(name,
+                                                       plan.clone()))],
+            router: RouterPolicy::Failover,
+            accuracy: plan.flop_keep_ratio(),
+            prior_latency_ms: prior,
+            plan: Some(plan),
+        }
+    }
+
+    /// A deployment over arbitrary backends (custom [`Backend`] impls,
+    /// or a heterogeneous failover set). No plan is attached, the
+    /// accuracy proxy defaults to 1.0, and the latency prior is unknown
+    /// (`f64::INFINITY`) until live traffic measures it.
+    pub fn from_backends(name: &str, backends: Vec<Box<dyn Backend>>)
+                         -> Deployment {
+        Deployment {
+            name: Arc::from(name),
+            backends,
+            router: RouterPolicy::Failover,
+            accuracy: 1.0,
+            prior_latency_ms: f64::INFINITY,
+            plan: None,
+        }
+    }
+
+    /// The AOT XLA/PJRT path as a named deployment — the pre-redesign
+    /// `Coordinator::start(cfg)` entry point folded into the same
+    /// registry as the native deployments.
+    pub fn pjrt(name: &str, cfg: ServeConfig) -> Deployment {
+        Deployment::from_backends(name,
+                                  vec![Box::new(PjrtBackend::new(cfg))])
+    }
+
+    /// Add a standby backend (failover target under this deployment's
+    /// batch-routing policy).
+    pub fn with_backend(mut self, backend: Box<dyn Backend>)
+                        -> Deployment {
+        self.backends.push(backend);
+        self
+    }
+
+    /// Batch-routing policy across this deployment's backends.
+    pub fn with_router(mut self, router: RouterPolicy) -> Deployment {
+        self.router = router;
+        self
+    }
+
+    /// Override the declared accuracy operating point.
+    pub fn with_accuracy(mut self, accuracy: f64) -> Deployment {
+        self.accuracy = accuracy;
+        self
+    }
+
+    /// Override the latency prior used until live metrics exist (ms).
+    pub fn with_prior_latency_ms(mut self, ms: f64) -> Deployment {
+        self.prior_latency_ms = ms;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The compiled plan behind this deployment, when it is a native
+    /// single-plan deployment — what serving tests run directly through
+    /// a [`ModelExecutor`] to pin bit-identical results.
+    pub fn plan(&self) -> Option<&Arc<ExecPlan>> {
+        self.plan.as_ref()
+    }
+}
+
+/// Fluent staged pipeline: IR → scheme → prune config → optional
+/// autotune at a target batch size → compiled native deployment. See
+/// [`Deployment::builder`].
+pub struct DeploymentBuilder {
+    name: String,
+    ir: ModelIR,
+    scheme: Scheme,
+    prune: PruneConfig,
+    seed: u64,
+    autotune_batch: Option<usize>,
+    tune_threads: usize,
+    workers: Option<usize>,
+    batch_mode: NativeBatchMode,
+    accuracy: Option<f64>,
+}
+
+impl DeploymentBuilder {
+    /// Compression/compilation scheme (default [`Scheme::CocoGen`]).
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Pruning hyper-parameters (default [`PruneConfig::default`]).
+    pub fn prune(mut self, prune: PruneConfig) -> Self {
+        self.prune = prune;
+        self
+    }
+
+    /// Weight-init seed (default 7).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the measured auto-tuner on the built plan at this serving
+    /// batch size (tiles for the fixed-engine schemes, full per-layer
+    /// engine selection under [`Scheme::CocoAuto`]). Without this,
+    /// `CocoAuto` still tunes — at batch 1 — since an untuned CocoAuto
+    /// plan is just CoCo-Gen; other schemes skip tuning.
+    pub fn autotune_at(mut self, batch: usize) -> Self {
+        self.autotune_batch = Some(batch.max(1));
+        self
+    }
+
+    /// Threads the auto-tuner measures with (default 1).
+    pub fn tune_threads(mut self, threads: usize) -> Self {
+        self.tune_threads = threads.max(1);
+        self
+    }
+
+    /// Executor-pool width of the native backend (default: one per
+    /// core).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    /// How the native backend executes routed batches (default
+    /// [`NativeBatchMode::Auto`]).
+    pub fn batch_mode(mut self, mode: NativeBatchMode) -> Self {
+        self.batch_mode = mode;
+        self
+    }
+
+    /// Declared accuracy operating point. Default: the plan's
+    /// surviving-FLOP ratio — a plan-derived proxy that ranks denser
+    /// variants above aggressively pruned ones, for installs that have
+    /// not measured real validation accuracy yet.
+    pub fn accuracy(mut self, accuracy: f64) -> Self {
+        self.accuracy = Some(accuracy);
+        self
+    }
+
+    /// Run the pipeline: build the plan, optionally auto-tune it at the
+    /// target batch size, measure the single-image latency prior, and
+    /// compile the native backend.
+    pub fn build(self) -> Result<Deployment> {
+        ensure!(!self.name.is_empty(), "deployment name must be \
+                                        non-empty");
+        let mut plan =
+            build_plan(&self.ir, self.scheme, self.prune, self.seed);
+        let tune_batch = match self.autotune_batch {
+            Some(b) => Some(b),
+            // CocoAuto's whole point is measured per-layer engine
+            // selection; default it on.
+            None if self.scheme == Scheme::CocoAuto => Some(1),
+            None => None,
+        };
+        if let Some(batch) = tune_batch {
+            autotune_plan_batched(&mut plan, self.tune_threads, batch);
+        }
+        let plan = plan.into_shared();
+        let prior = measure_prior_ms(&plan);
+        let accuracy =
+            self.accuracy.unwrap_or_else(|| plan.flop_keep_ratio());
+        let backend = match self.workers {
+            Some(w) => NativeBackend::with_workers(&self.name,
+                                                   plan.clone(), w),
+            None => NativeBackend::new(&self.name, plan.clone()),
+        }
+        .with_batch_mode(self.batch_mode);
+        Ok(Deployment {
+            name: Arc::from(self.name.as_str()),
+            backends: vec![Box::new(backend)],
+            router: RouterPolicy::Failover,
+            accuracy,
+            prior_latency_ms: prior,
+            plan: Some(plan),
+        })
+    }
+}
+
+/// Measured single-image latency prior (ms): one warm-up plus best-of-2
+/// direct executor runs on a zero image. This is what seeds the SLA
+/// router's latency point until the deployment's own [`super::Metrics`]
+/// has served real traffic — measured, not a hard-coded constant.
+fn measure_prior_ms(plan: &Arc<ExecPlan>) -> f64 {
+    let inp = plan.ir.input;
+    let mut exec = ModelExecutor::new(plan, 1);
+    let image = Tensor::zeros(inp.c, inp.h, inp.w);
+    exec.run(&image); // warm: arena + scratch allocation
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        exec.run(&image);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::LayerPlan;
+    use crate::ir::{Chw, IrBuilder};
+
+    fn tiny_ir() -> ModelIR {
+        let mut b = IrBuilder::new("dep_t", Chw::new(3, 8, 8));
+        b.conv("c1", 3, 8, 1, true)
+            .conv("c2", 3, 8, 2, true)
+            .gap("g")
+            .dense("fc", 4, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn builder_runs_the_staged_pipeline() {
+        let dep = Deployment::builder("cocogen", &tiny_ir())
+            .scheme(Scheme::CocoGen)
+            .seed(42)
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(dep.name(), "cocogen");
+        assert_eq!(dep.backends.len(), 1);
+        let plan = dep.plan().expect("native deployment keeps its plan");
+        assert_eq!(plan.scheme, Scheme::CocoGen);
+        // Prior latency was actually measured.
+        assert!(dep.prior_latency_ms.is_finite()
+                    && dep.prior_latency_ms > 0.0);
+        // Accuracy proxy defaults to the surviving-FLOP ratio.
+        assert!((dep.accuracy - plan.flop_keep_ratio()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coco_auto_builder_tunes_by_default() {
+        let dep = Deployment::builder("auto", &tiny_ir())
+            .scheme(Scheme::CocoAuto)
+            .seed(1)
+            .build()
+            .unwrap();
+        // The tuner ran: every pattern layer holds either the fp32 or
+        // int8 pattern format with a measured tile (structure alone
+        // can't prove measurement, but the plan must still be CocoAuto
+        // and servable).
+        let plan = dep.plan().unwrap();
+        assert_eq!(plan.scheme, Scheme::CocoAuto);
+        assert!(plan.layers.iter().any(|l| matches!(
+            l,
+            LayerPlan::Fkw { .. } | LayerPlan::QuantFkw { .. }
+        )));
+    }
+
+    #[test]
+    fn builder_rejects_empty_name() {
+        assert!(Deployment::builder("", &tiny_ir()).build().is_err());
+    }
+
+    #[test]
+    fn accuracy_and_prior_overrides_stick() {
+        let dep = Deployment::builder("dense", &tiny_ir())
+            .scheme(Scheme::DenseIm2col)
+            .accuracy(0.97)
+            .build()
+            .unwrap()
+            .with_prior_latency_ms(123.0);
+        assert!((dep.accuracy - 0.97).abs() < 1e-12);
+        assert!((dep.prior_latency_ms - 123.0).abs() < 1e-12);
+    }
+}

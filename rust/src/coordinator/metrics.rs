@@ -1,7 +1,9 @@
 //! Serving metrics: request counts, latency percentiles, batch sizes,
 //! failovers. The coordinator keeps one global [`Metrics`] plus one per
-//! backend, so a [`ServeReport`] can attribute latency and load to the
-//! backend that actually served each request.
+//! deployment and one per backend, so a [`ServeReport`] can attribute
+//! latency and load to the deployment/backend that actually served each
+//! request — and each deployment's sink doubles as the SLA router's
+//! live latency feed ([`Metrics::live_latency_ms`]).
 //!
 //! Memory is bounded under sustained traffic: latencies go into a
 //! fixed-capacity uniform reservoir (Vitter's Algorithm R) instead of an
@@ -10,7 +12,7 @@
 //! metric state, and `summary()` sorts one bounded sample (once, for
 //! every percentile) rather than re-sorting the full request history.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::util::rng::Rng;
@@ -64,8 +66,19 @@ impl Reservoir {
     }
 }
 
+/// Smoothing factor of the live latency estimate: each new sample moves
+/// the estimate by 1/16 of the gap. Small enough to ride out per-batch
+/// noise, large enough that a deployment whose service time shifts is
+/// re-classified by the SLA router within a few dozen requests — an
+/// all-time mean would move as 1/N and pin admission decisions to
+/// history.
+const LATENCY_EWMA_ALPHA: f64 = 1.0 / 16.0;
+
 struct Inner {
     latencies_s: Reservoir,
+    /// Exponentially decayed mean latency (s); `None` until the first
+    /// completion.
+    latency_ewma_s: Option<f64>,
     queue_wait_sum_s: f64,
     batch_size_sum: f64,
     completed: u64,
@@ -77,6 +90,7 @@ impl Default for Inner {
     fn default() -> Inner {
         Inner {
             latencies_s: Reservoir::new(LATENCY_RESERVOIR, 0x4C41_54),
+            latency_ewma_s: None,
             queue_wait_sum_s: 0.0,
             batch_size_sum: 0.0,
             completed: 0,
@@ -105,17 +119,55 @@ pub struct Summary {
     pub mean_batch: f64,
 }
 
-/// Shutdown report: the aggregate view plus one summary per backend, in
-/// backend declaration order.
+/// One backend's share of a deployment's traffic.
+#[derive(Debug, Clone)]
+pub struct BackendReport {
+    pub name: Arc<str>,
+    pub summary: Summary,
+}
+
+/// One named deployment's view: its aggregate summary plus the
+/// per-backend breakdown, in backend declaration order.
+#[derive(Debug, Clone)]
+pub struct DeploymentReport {
+    pub name: Arc<str>,
+    pub summary: Summary,
+    pub backends: Vec<BackendReport>,
+}
+
+/// Shutdown report: the aggregate view plus one report per registered
+/// deployment, in registration order.
 ///
-/// `overall.rejected` can exceed the per-backend sum: requests the
-/// leader rejects before any backend accepted them (every worker
-/// thread gone) are counted globally only, since no backend served or
-/// failed them.
+/// `overall.rejected` can exceed the per-deployment sum: requests the
+/// leader rejects before resolving a deployment (no admissible SLA
+/// variant, or a submission racing past shutdown) are counted globally
+/// only. Rejections of *resolved* requests — exhausted failover, every
+/// worker thread of the deployment gone — count in that deployment's
+/// summary too.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub overall: Summary,
-    pub per_backend: Vec<(String, Summary)>,
+    pub deployments: Vec<DeploymentReport>,
+}
+
+impl ServeReport {
+    /// The report for one named deployment, if registered.
+    pub fn deployment(&self, name: &str) -> Option<&DeploymentReport> {
+        self.deployments.iter().find(|d| &*d.name == name)
+    }
+
+    /// Every backend summary across all deployments, flattened in
+    /// (deployment, backend) declaration order.
+    pub fn backends(&self) -> Vec<(Arc<str>, Summary)> {
+        self.deployments
+            .iter()
+            .flat_map(|d| {
+                d.backends
+                    .iter()
+                    .map(|b| (b.name.clone(), b.summary.clone()))
+            })
+            .collect()
+    }
 }
 
 impl Metrics {
@@ -126,10 +178,25 @@ impl Metrics {
     pub fn record(&self, total: Duration, queue_wait: Duration,
                   batch_size: usize) {
         let mut g = self.inner.lock().unwrap();
-        g.latencies_s.push(total.as_secs_f64());
+        let s = total.as_secs_f64();
+        g.latencies_s.push(s);
+        g.latency_ewma_s = Some(match g.latency_ewma_s {
+            None => s,
+            Some(e) => e + LATENCY_EWMA_ALPHA * (s - e),
+        });
         g.queue_wait_sum_s += queue_wait.as_secs_f64();
         g.batch_size_sum += batch_size as f64;
         g.completed += 1;
+    }
+
+    /// The live end-to-end latency operating point, in ms: an
+    /// exponentially decayed mean (`LATENCY_EWMA_ALPHA`), so the SLA
+    /// router's admission decisions track a deployment that speeds up
+    /// or degrades instead of being pinned to its all-time history.
+    /// `None` until the first completion, so callers can fall back to a
+    /// measured prior.
+    pub fn live_latency_ms(&self) -> Option<f64> {
+        self.inner.lock().unwrap().latency_ewma_s.map(|s| s * 1e3)
     }
 
     pub fn record_rejected(&self) {
@@ -228,6 +295,31 @@ mod tests {
         // sampled percentiles track the true uniform distribution
         assert!((s.p50_ms - 50.0).abs() < 5.0, "p50 {}", s.p50_ms);
         assert!(s.p99_ms > 90.0, "p99 {}", s.p99_ms);
+    }
+
+    #[test]
+    fn live_latency_tracks_drift_and_is_absent_when_idle() {
+        let m = Metrics::new();
+        assert_eq!(m.live_latency_ms(), None,
+                   "no traffic must yield no estimate");
+        m.record(Duration::from_millis(10), Duration::ZERO, 1);
+        let first = m.live_latency_ms().unwrap();
+        assert!((first - 10.0).abs() < 1e-9,
+                "first sample initializes the estimate: {first}");
+        // A long fast history...
+        for _ in 0..1000 {
+            m.record(Duration::from_millis(2), Duration::ZERO, 1);
+        }
+        assert!(m.live_latency_ms().unwrap() < 3.0);
+        // ...must not pin the estimate once the deployment degrades:
+        // within a few dozen slow requests the router-visible point has
+        // moved to the new regime (an all-time mean would still read
+        // ~2.5 ms here).
+        for _ in 0..64 {
+            m.record(Duration::from_millis(50), Duration::ZERO, 1);
+        }
+        let drifted = m.live_latency_ms().unwrap();
+        assert!(drifted > 40.0, "estimate stuck at {drifted} ms");
     }
 
     #[test]

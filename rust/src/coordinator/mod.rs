@@ -1,33 +1,50 @@
-//! Serving coordinator — the L3 request path, multi-backend edition.
+//! Serving coordinator — the L3 request path, deployment edition.
 //!
-//! A leader thread owns the dynamic batcher and the batch router; each
-//! [`Backend`] (PJRT runtime, native executor pool, ...) lives on its own
-//! worker thread, which compiles the model during startup and then
-//! executes the batches routed to it. Clients submit images over
-//! channels and receive [`Prediction`]s; Python is never on this path.
+//! One [`Coordinator`] registers several **named deployments** — points
+//! on the compression-compilation menu (`dense`, `cocogen`,
+//! `cocogen-quant`, `coco-auto`, ...), each built by
+//! [`Deployment::builder`] and each served by its own backends. A
+//! leader thread owns the SLA router and a per-deployment dynamic
+//! batcher; each [`Backend`] (PJRT runtime, native executor pool, ...)
+//! lives on its own worker thread, which compiles the model during
+//! startup and then executes the batches routed to it. Clients submit
+//! typed [`InferRequest`]s over channels and receive
+//! `Result<Prediction, ServeError>`; Python is never on this path.
 //!
 //! ```text
-//!  Client::submit ──► leader: batcher ──► BatchRouter ──┬─► worker[0]: Backend (pjrt)
-//!                        ▲                              └─► worker[1]: Backend (native pool)
-//!                        │         failover retry                 │
-//!                        └────────────────────────────────────────┘
+//!                         leader: SLA router (live Metrics feedback)
+//! Client::infer ────────►   │ per-deployment shard batcher
+//!  {image, sla,             ├─► dep "cocogen":  BatchRouter ─► workers
+//!   deployment?}            ├─► dep "int8":     BatchRouter ─► workers
+//!                           └─► dep "coco-auto":BatchRouter ─► workers
+//!                                  ▲        failover retry      │
+//!                                  └────────────────────────────┘
 //! ```
+//!
+//! Routing is two-tier: the leader first resolves each request to a
+//! deployment — an explicit name wins; otherwise the request's
+//! [`Sla`] class picks among the registered variants using *live*
+//! latency points fed back from each deployment's [`Metrics`] — then
+//! batches per deployment and routes each batch across that
+//! deployment's backends ([`RouterPolicy`]).
 //!
 //! Failure handling: a worker whose `infer_batch` errors logs the
 //! cause, puts its backend into a routing cooldown (a half-open circuit
 //! breaker, not a permanent removal), and hands the batch back to the
-//! leader, which re-routes it to the next healthy backend (counted in
-//! `Summary::failovers`). A request that has failed on every backend is
-//! rejected — its reply channel drops, so the client sees a recv error.
+//! leader, which re-routes it to the next healthy backend of the same
+//! deployment (counted in `Summary::failovers`). A request that has
+//! failed on every backend of its deployment is rejected with a typed
+//! [`ServeError::Exhausted`] on its reply channel.
 
 pub mod backend;
 pub mod batcher;
+pub mod deployment;
 pub mod metrics;
 pub mod router;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -37,19 +54,106 @@ use anyhow::{anyhow, ensure, Result};
 use crate::runtime::{HostTensor, Runtime};
 pub use backend::{Backend, ModelSignature, NativeBackend,
                   NativeBatchMode, PjrtBackend};
-pub use batcher::{BatchPolicy, BatchStep};
-pub use metrics::{Metrics, ServeReport, Summary};
-pub use router::{BackendState, BatchRouter, RouterPolicy};
+pub use batcher::{BatchPolicy, ShardBatcher};
+pub use deployment::{Deployment, DeploymentBuilder};
+pub use metrics::{BackendReport, DeploymentReport, Metrics, ServeReport,
+                  Summary};
+pub use router::{BackendState, BatchRouter, Router, RouterPolicy, Sla,
+                 SlaPolicy, Variant};
 
-/// A classification request: one NHWC image (flattened) + reply channel.
+/// Typed serving error — every client-visible failure mode of the
+/// request path. Submission-time errors come back from
+/// [`Client::infer`] directly; routing/execution-time errors arrive on
+/// the reply channel, so a rejected request is an explicit
+/// `Err(ServeError)` rather than a hung or dropped `recv`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The image's element count does not match the model signature.
+    WrongImageSize { got: usize, want: usize },
+    /// `InferRequest::deployment` names no registered deployment.
+    UnknownDeployment(String),
+    /// The request's SLA class admits no registered variant under the
+    /// configured [`SlaPolicy`].
+    NoAdmissibleVariant { sla: Sla },
+    /// The request failed on every backend of its deployment.
+    Exhausted,
+    /// The coordinator has shut down (or is shutting down).
+    Stopped,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::WrongImageSize { got, want } => {
+                write!(f, "image has {got} elements, model wants {want}")
+            }
+            ServeError::UnknownDeployment(name) => {
+                write!(f, "unknown deployment '{name}'")
+            }
+            ServeError::NoAdmissibleVariant { sla } => {
+                write!(f,
+                       "no registered deployment admissible for SLA \
+                        class '{}'",
+                       sla.label())
+            }
+            ServeError::Exhausted => {
+                write!(f, "request failed on every backend of its \
+                           deployment")
+            }
+            ServeError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The typed request form: one NHWC image (flattened), the SLA class
+/// the router resolves when no explicit deployment is named.
+#[derive(Debug, Clone)]
+pub struct InferRequest<'a> {
+    pub image: Vec<f32>,
+    pub sla: Sla,
+    /// Pin the request to a named deployment, bypassing SLA
+    /// resolution. `None` lets the live router pick.
+    pub deployment: Option<&'a str>,
+}
+
+impl InferRequest<'static> {
+    /// A `Standard`-class request with router-chosen deployment — what
+    /// the [`Client::submit`] convenience wrapper sends.
+    pub fn new(image: Vec<f32>) -> InferRequest<'static> {
+        InferRequest {
+            image,
+            sla: Sla::Standard,
+            deployment: None,
+        }
+    }
+}
+
+/// What a client's reply channel carries.
+pub type PredictionResult = Result<Prediction, ServeError>;
+
+/// A submission as it travels leader-ward: deployment still unresolved
+/// when the client did not pin one.
+struct Submit {
+    image: Vec<f32>,
+    sla: Sla,
+    deployment: Option<usize>,
+    enqueued: Instant,
+    reply: Sender<PredictionResult>,
+}
+
+/// A resolved classification request owned by the leader/workers.
 struct Request {
     image: Vec<f32>,
+    /// Index of the deployment this request resolved to.
+    deployment: usize,
     enqueued: Instant,
-    reply: Sender<Prediction>,
-    /// Bitmask of backend indices that have failed this request — the
-    /// exhaustion test ("failed on every backend") uses this, so a
-    /// degraded-mode re-pick of the same backend doesn't burn a
-    /// distinct-backend credit.
+    reply: Sender<PredictionResult>,
+    /// Bitmask of backend indices (within the deployment) that have
+    /// failed this request — the exhaustion test ("failed on every
+    /// backend") uses this, so a degraded-mode re-pick of the same
+    /// backend doesn't burn a distinct-backend credit.
     failed: u64,
     /// Total failover hops; a hard bound that guarantees termination
     /// even when routing can only reach already-failed backends (e.g.
@@ -57,47 +161,84 @@ struct Request {
     tries: usize,
 }
 
-/// The response.
+/// The response. Names are interned (`Arc<str>`): the hot reply path
+/// shares one allocation per backend/deployment for the coordinator's
+/// lifetime instead of a fresh `String` per request.
 #[derive(Debug, Clone)]
 pub struct Prediction {
     pub class: usize,
     pub score: f32,
     pub latency_ms: f64,
     /// Name of the backend that served this request.
-    pub backend: String,
+    pub backend: Arc<str>,
+    /// Name of the deployment the request resolved to.
+    pub deployment: Arc<str>,
 }
 
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
+    tx: Sender<Submit>,
     image_elems: usize,
+    names: Arc<Vec<Arc<str>>>,
+    closing: Arc<AtomicBool>,
 }
 
 impl Client {
-    /// Submit an image; returns the receiver for the prediction.
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Prediction>> {
-        anyhow::ensure!(
-            image.len() == self.image_elems,
-            "image has {} elements, model wants {}",
-            image.len(),
-            self.image_elems
-        );
+    /// Submit a typed request; returns the receiver for the
+    /// prediction. Submission-time failures (wrong image size, unknown
+    /// deployment name, coordinator stopped) are returned here;
+    /// routing/execution failures arrive typed on the receiver.
+    pub fn infer(&self, req: InferRequest<'_>)
+                 -> Result<Receiver<PredictionResult>, ServeError> {
+        if req.image.len() != self.image_elems {
+            return Err(ServeError::WrongImageSize {
+                got: req.image.len(),
+                want: self.image_elems,
+            });
+        }
+        let deployment = match req.deployment {
+            None => None,
+            Some(name) => Some(
+                self.names
+                    .iter()
+                    .position(|n| &**n == name)
+                    .ok_or_else(|| {
+                        ServeError::UnknownDeployment(name.to_string())
+                    })?,
+            ),
+        };
+        if self.closing.load(Ordering::SeqCst) {
+            return Err(ServeError::Stopped);
+        }
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .send(Request {
-                image,
+            .send(Submit {
+                image: req.image,
+                sla: req.sla,
+                deployment,
                 enqueued: Instant::now(),
                 reply: rtx,
-                failed: 0,
-                tries: 0,
             })
-            .map_err(|_| anyhow!("coordinator stopped"))?;
+            .map_err(|_| ServeError::Stopped)?;
         Ok(rrx)
+    }
+
+    /// Thin convenience wrapper: a `Standard`-class request with the
+    /// deployment left to the SLA router.
+    pub fn submit(&self, image: Vec<f32>)
+                  -> Result<Receiver<PredictionResult>, ServeError> {
+        self.infer(InferRequest::new(image))
+    }
+
+    /// The registered deployment names, in registration order.
+    pub fn deployments(&self) -> &[Arc<str>] {
+        &self.names
     }
 }
 
-/// Serving options for the PJRT path (see [`Coordinator::start`]).
+/// Serving options for the PJRT path (see [`Deployment::pjrt`] and
+/// [`Coordinator::start`]).
 #[derive(Clone)]
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
@@ -124,183 +265,323 @@ struct Job {
     reqs: Vec<Request>,
 }
 
-/// The serving coordinator for one model (one or more backends).
-pub struct Coordinator {
-    client: Client,
-    /// Aggregate metrics across all backends.
-    pub metrics: Arc<Metrics>,
-    backend_metrics: Vec<(String, Arc<Metrics>)>,
-    leader: Option<JoinHandle<()>>,
+/// Builder for a multi-deployment [`Coordinator`]: register named
+/// deployments, set the batching policy and the SLA admission limits,
+/// then [`CoordinatorBuilder::start`].
+pub struct CoordinatorBuilder {
+    deployments: Vec<Deployment>,
+    policy: BatchPolicy,
+    sla: SlaPolicy,
 }
 
-impl Coordinator {
-    /// Start serving `cfg.model` on the PJRT runtime alone — the
-    /// pre-`Backend`-seam entry point, kept for callers that only want
-    /// the AOT path. Equivalent to [`Coordinator::start_with`] over one
-    /// [`PjrtBackend`].
-    pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
-        let policy = cfg.policy;
-        Coordinator::start_with(
-            vec![Box::new(PjrtBackend::new(cfg))],
-            policy,
-            RouterPolicy::Failover,
-        )
+impl CoordinatorBuilder {
+    /// Batching policy shared by every deployment's shard batcher.
+    pub fn policy(mut self, policy: BatchPolicy) -> CoordinatorBuilder {
+        self.policy = policy;
+        self
     }
 
-    /// Start serving across `backends` under `policy`, routing each
-    /// formed batch per `router`. Blocks until every backend has
-    /// compiled on its worker thread; fails if any compile fails or the
-    /// backends disagree on the model signature.
-    pub fn start_with(backends: Vec<Box<dyn Backend>>, policy: BatchPolicy,
-                      router: RouterPolicy) -> Result<Coordinator> {
-        ensure!(!backends.is_empty(), "need at least one backend");
+    /// Per-SLA admission limits for the live variant router.
+    pub fn sla(mut self, sla: SlaPolicy) -> CoordinatorBuilder {
+        self.sla = sla;
+        self
+    }
+
+    /// Register a named deployment. Registration order is report order;
+    /// all deployments must agree on the model signature.
+    pub fn register(mut self, dep: Deployment) -> CoordinatorBuilder {
+        self.deployments.push(dep);
+        self
+    }
+
+    /// Start serving: spawn every backend worker (compiles run in
+    /// parallel), verify all signatures agree, and start the leader.
+    pub fn start(self) -> Result<Coordinator> {
+        let CoordinatorBuilder {
+            deployments,
+            policy,
+            sla,
+        } = self;
+        ensure!(!deployments.is_empty(),
+                "register at least one deployment");
         ensure!(
-            backends.len() <= 64,
-            "at most 64 backends (failed-backend tracking is a u64 \
-             bitmask)"
+            deployments.len() <= router::MAX_VARIANTS,
+            "at most {} deployments",
+            router::MAX_VARIANTS
         );
         ensure!(policy.max_batch > 0, "max_batch must be positive");
-        let n_backends = backends.len();
+        for (i, d) in deployments.iter().enumerate() {
+            ensure!(!d.name.is_empty(), "deployment names must be \
+                                         non-empty");
+            ensure!(
+                !deployments[..i].iter().any(|e| e.name == d.name),
+                "duplicate deployment name '{}'",
+                d.name
+            );
+            ensure!(!d.backends.is_empty(),
+                    "deployment '{}' has no backends", d.name);
+            ensure!(
+                d.backends.len() <= 64,
+                "deployment '{}': at most 64 backends (failed-backend \
+                 tracking is a u64 bitmask)",
+                d.name
+            );
+        }
+
         let global = Arc::new(Metrics::new());
         let pending = Arc::new(AtomicUsize::new(0));
+        let closing = Arc::new(AtomicBool::new(false));
         let (retry_tx, retry_rx) = mpsc::channel::<Vec<Request>>();
 
         // Spawn every worker first so the backends compile in parallel,
         // then collect their signatures: startup costs the slowest
         // compile, not the sum.
-        let mut init_rxs = Vec::with_capacity(n_backends);
-        let mut job_txs = Vec::with_capacity(n_backends);
-        let mut states = Vec::with_capacity(n_backends);
-        let mut backend_metrics = Vec::with_capacity(n_backends);
-        let mut workers = Vec::with_capacity(n_backends);
-        for (index, be) in backends.into_iter().enumerate() {
-            let name = be.name().to_string();
-            let state = BackendState::new(&name);
-            let bm = Arc::new(Metrics::new());
-            let (job_tx, job_rx) = mpsc::channel::<Job>();
-            let (init_tx, init_rx) =
-                mpsc::channel::<Result<ModelSignature>>();
-            let ctx = WorkerCtx {
-                index,
-                max_batch: policy.max_batch,
-                jobs: job_rx,
-                init_tx,
-                state: state.clone(),
-                metrics: bm.clone(),
-                global: global.clone(),
-                retry: retry_tx.clone(),
-                pending: pending.clone(),
-                n_backends,
-            };
-            let handle = std::thread::spawn(move || backend_worker(be, ctx));
-            init_rxs.push((name.clone(), init_rx));
-            job_txs.push(job_tx);
-            states.push(state);
-            backend_metrics.push((name, bm));
-            workers.push(handle);
+        let mut init_rxs = Vec::new();
+        let mut deps = Vec::with_capacity(deployments.len());
+        let mut dep_metrics = Vec::with_capacity(deployments.len());
+        let mut variants = Vec::with_capacity(deployments.len());
+        let mut workers = Vec::new();
+        for dep in deployments {
+            // Validate the batch-routing policy before consuming the
+            // deployment's backends.
+            let batch_router = BatchRouter::new(dep.router.clone(),
+                                                dep.backends.len())?;
+            let dep_name = dep.name.clone();
+            let dm = Arc::new(Metrics::new());
+            let tracker = Arc::new(AtomicU64::new(0));
+            let n_backends = dep.backends.len();
+            let mut jobs = Vec::with_capacity(n_backends);
+            let mut states = Vec::with_capacity(n_backends);
+            let mut bms = Vec::with_capacity(n_backends);
+            for (index, be) in dep.backends.into_iter().enumerate() {
+                let bname: Arc<str> = Arc::from(be.name());
+                let state = BackendState::new(&bname);
+                let bm = Arc::new(Metrics::new());
+                let (job_tx, job_rx) = mpsc::channel::<Job>();
+                let (init_tx, init_rx) =
+                    mpsc::channel::<Result<ModelSignature>>();
+                let ctx = WorkerCtx {
+                    index,
+                    n_backends,
+                    max_batch: policy.max_batch,
+                    jobs: job_rx,
+                    init_tx,
+                    state: state.clone(),
+                    metrics: bm.clone(),
+                    dep_metrics: dm.clone(),
+                    global: global.clone(),
+                    retry: retry_tx.clone(),
+                    pending: pending.clone(),
+                    tracker: tracker.clone(),
+                    dep_name: dep_name.clone(),
+                };
+                let handle =
+                    std::thread::spawn(move || backend_worker(be, ctx));
+                init_rxs.push((dep_name.clone(), bname.clone(),
+                               init_rx));
+                jobs.push(job_tx);
+                states.push(state);
+                bms.push((bname, bm));
+                workers.push(handle);
+            }
+            variants.push(Variant::live(
+                dep_name.clone(),
+                dep.accuracy,
+                dep.prior_latency_ms,
+                dm.clone(),
+                tracker,
+            ));
+            deps.push(LeaderDep {
+                jobs,
+                states,
+                router: batch_router,
+                metrics: dm.clone(),
+            });
+            dep_metrics.push((dep_name, dm, bms));
         }
         // Only workers hold retry senders from here on, so the retry
         // channel drains exactly when the workers are done.
         drop(retry_tx);
 
-        let mut sigs: Vec<ModelSignature> = Vec::with_capacity(n_backends);
-        for (name, init_rx) in init_rxs {
-            let sig = init_rx
-                .recv()
-                .map_err(|_| anyhow!("backend '{name}' died during \
-                                      compile"))??;
-            sigs.push(sig);
+        let mut sigs = Vec::with_capacity(init_rxs.len());
+        for (dname, bname, init_rx) in init_rxs {
+            let sig = init_rx.recv().map_err(|_| {
+                anyhow!("backend '{bname}' of deployment '{dname}' \
+                         died during compile")
+            })??;
+            sigs.push((dname, bname, sig));
         }
-
-        for (i, sig) in sigs.iter().enumerate().skip(1) {
+        for (dname, bname, sig) in sigs.iter().skip(1) {
             ensure!(
-                *sig == sigs[0],
-                "backend '{}' signature {:?} disagrees with '{}' ({:?})",
-                backend_metrics[i].0,
-                sig,
-                backend_metrics[0].0,
-                sigs[0]
+                *sig == sigs[0].2,
+                "backend '{bname}' of deployment '{dname}' signature \
+                 {sig:?} disagrees with '{}' ({:?})",
+                sigs[0].1,
+                sigs[0].2
             );
         }
-        let image_elems = sigs[0].image_elems();
+        let image_elems = sigs[0].2.image_elems();
 
-        let router = BatchRouter::new(router, n_backends)?;
-        let (tx, rx) = mpsc::channel::<Request>();
+        let names: Arc<Vec<Arc<str>>> = Arc::new(
+            dep_metrics.iter().map(|(n, _, _)| n.clone()).collect(),
+        );
+        let (tx, rx) = mpsc::channel::<Submit>();
         let ctx = LeaderCtx {
             rx,
             retry_rx,
-            jobs: job_txs,
-            states,
-            router,
+            deps,
+            sla_router: Router::with_policy(variants, sla),
             policy,
             global: global.clone(),
             pending,
+            closing: closing.clone(),
             workers,
         };
         let leader = std::thread::spawn(move || leader_main(ctx));
         Ok(Coordinator {
-            client: Client { tx, image_elems },
+            client: Client {
+                tx,
+                image_elems,
+                names,
+                closing: closing.clone(),
+            },
             metrics: global,
-            backend_metrics,
+            dep_metrics,
+            closing,
             leader: Some(leader),
         })
+    }
+}
+
+/// The serving coordinator: named deployments behind one client.
+pub struct Coordinator {
+    client: Client,
+    /// Aggregate metrics across all deployments.
+    pub metrics: Arc<Metrics>,
+    #[allow(clippy::type_complexity)]
+    dep_metrics:
+        Vec<(Arc<str>, Arc<Metrics>, Vec<(Arc<str>, Arc<Metrics>)>)>,
+    closing: Arc<AtomicBool>,
+    leader: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start building a multi-deployment coordinator.
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder {
+            deployments: Vec::new(),
+            policy: BatchPolicy::default(),
+            sla: SlaPolicy::default(),
+        }
+    }
+
+    /// Serve `cfg.model` on the PJRT runtime alone — kept for callers
+    /// that only want the AOT path. Equivalent to registering one
+    /// [`Deployment::pjrt`].
+    pub fn start(cfg: ServeConfig) -> Result<Coordinator> {
+        let policy = cfg.policy;
+        let name = format!("pjrt:{}", cfg.model);
+        Coordinator::builder()
+            .policy(policy)
+            .register(Deployment::pjrt(&name, cfg))
+            .start()
+    }
+
+    /// Serve one anonymous deployment (`"default"`) across `backends`
+    /// under `policy`, routing each formed batch per `router` — the
+    /// pre-`Deployment` entry point, kept as a thin wrapper over
+    /// [`Coordinator::builder`].
+    pub fn start_with(backends: Vec<Box<dyn Backend>>,
+                      policy: BatchPolicy, router: RouterPolicy)
+                      -> Result<Coordinator> {
+        Coordinator::builder()
+            .policy(policy)
+            .register(
+                Deployment::from_backends("default", backends)
+                    .with_router(router),
+            )
+            .start()
     }
 
     pub fn client(&self) -> Client {
         self.client.clone()
     }
 
+    /// The registered deployment names, in registration order.
+    pub fn deployments(&self) -> Vec<Arc<str>> {
+        self.client.names.as_ref().clone()
+    }
+
+    /// Submit a typed request through the coordinator's own client
+    /// handle (see [`Client::infer`]).
+    pub fn infer(&self, req: InferRequest<'_>)
+                 -> Result<Receiver<PredictionResult>, ServeError> {
+        self.client.infer(req)
+    }
+
     /// Submit an image through the coordinator's own client handle;
     /// returns the receiver for the prediction.
     ///
     /// ```
-    /// use cocopie::codegen::{build_plan, PruneConfig, Scheme};
-    /// use cocopie::coordinator::{
-    ///     BatchPolicy, Coordinator, NativeBackend, RouterPolicy,
-    /// };
     /// use cocopie::ir::{Chw, IrBuilder};
+    /// use cocopie::prelude::*;
     ///
     /// let mut b = IrBuilder::new("doc", Chw::new(3, 8, 8));
     /// b.conv("c1", 3, 4, 1, true).gap("g").dense("fc", 3, false);
-    /// let plan = build_plan(&b.build().unwrap(), Scheme::CocoGen,
-    ///                       PruneConfig::default(), 7)
-    ///     .into_shared();
-    /// let coord = Coordinator::start_with(
-    ///     vec![Box::new(NativeBackend::new("native", plan))],
-    ///     BatchPolicy::default(),
-    ///     RouterPolicy::Failover,
-    /// )
-    /// .unwrap();
+    /// let ir = b.build().unwrap();
+    /// let coord = Coordinator::builder()
+    ///     .register(
+    ///         Deployment::builder("cocogen", &ir)
+    ///             .scheme(Scheme::CocoGen)
+    ///             .build()
+    ///             .unwrap(),
+    ///     )
+    ///     .start()
+    ///     .unwrap();
     /// let pred = coord.submit(vec![0.5; 8 * 8 * 3]).unwrap()
-    ///     .recv().unwrap();
+    ///     .recv().unwrap().unwrap();
     /// assert!(pred.class < 3);
-    /// assert_eq!(pred.backend, "native");
+    /// assert_eq!(&*pred.deployment, "cocogen");
     /// coord.shutdown();
     /// ```
-    pub fn submit(&self, image: Vec<f32>) -> Result<Receiver<Prediction>> {
+    pub fn submit(&self, image: Vec<f32>)
+                  -> Result<Receiver<PredictionResult>, ServeError> {
         self.client.submit(image)
     }
 
-    /// Stop accepting requests and join the workers. All outstanding
-    /// Client clones must be dropped first, or this blocks until they
-    /// are. Returns the aggregate summary; use
-    /// [`Coordinator::shutdown_report`] for the per-backend view.
+    /// Stop accepting requests, drain in-flight work, and join the
+    /// workers. Outstanding [`Client`] clones see
+    /// [`ServeError::Stopped`] from the moment this is called. Returns
+    /// the aggregate summary; use [`Coordinator::shutdown_report`] for
+    /// the per-deployment view.
     pub fn shutdown(self) -> Summary {
         self.shutdown_report().overall
     }
 
-    /// Like [`Coordinator::shutdown`], with per-backend summaries.
+    /// Like [`Coordinator::shutdown`], with per-deployment (and
+    /// per-backend) summaries.
     pub fn shutdown_report(mut self) -> ServeReport {
+        self.closing.store(true, Ordering::SeqCst);
         drop(self.client);
         if let Some(h) = self.leader.take() {
             let _ = h.join();
         }
         ServeReport {
             overall: self.metrics.summary(),
-            per_backend: self
-                .backend_metrics
+            deployments: self
+                .dep_metrics
                 .iter()
-                .map(|(n, m)| (n.clone(), m.summary()))
+                .map(|(name, dm, bms)| DeploymentReport {
+                    name: name.clone(),
+                    summary: dm.summary(),
+                    backends: bms
+                        .iter()
+                        .map(|(bn, bm)| BackendReport {
+                            name: bn.clone(),
+                            summary: bm.summary(),
+                        })
+                        .collect(),
+                })
                 .collect(),
         }
     }
@@ -308,17 +589,24 @@ impl Coordinator {
 
 /// Everything a backend worker thread owns besides the backend itself.
 struct WorkerCtx {
-    /// This backend's index (bit position in `Request::failed`).
+    /// This backend's index within its deployment (bit position in
+    /// `Request::failed`).
     index: usize,
+    /// Backend count of this deployment (exhaustion bitmask width).
+    n_backends: usize,
     max_batch: usize,
     jobs: Receiver<Job>,
     init_tx: Sender<Result<ModelSignature>>,
     state: Arc<BackendState>,
     metrics: Arc<Metrics>,
+    dep_metrics: Arc<Metrics>,
     global: Arc<Metrics>,
     retry: Sender<Vec<Request>>,
     pending: Arc<AtomicUsize>,
-    n_backends: usize,
+    /// The deployment's outstanding-request counter (the SLA router's
+    /// load signal); decremented as requests finish here.
+    tracker: Arc<AtomicU64>,
+    dep_name: Arc<str>,
 }
 
 fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
@@ -337,7 +625,7 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
         (sig.input_shape[0], sig.input_shape[1], sig.input_shape[2]);
     let elems = sig.image_elems();
     let classes = sig.classes;
-    let name = be.name().to_string();
+    let name: Arc<str> = Arc::from(be.name());
     while let Ok(mut job) = ctx.jobs.recv() {
         let t0 = Instant::now();
         let n = job.reqs.len();
@@ -380,14 +668,17 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
                             .unwrap();
                         let total = done - r.enqueued;
                         ctx.metrics.record(total, t0 - r.enqueued, n);
+                        ctx.dep_metrics.record(total, t0 - r.enqueued, n);
                         ctx.global.record(total, t0 - r.enqueued, n);
-                        let _ = r.reply.send(Prediction {
+                        let _ = r.reply.send(Ok(Prediction {
                             class,
                             score,
                             latency_ms: total.as_secs_f64() * 1e3,
                             backend: name.clone(),
-                        });
+                            deployment: ctx.dep_name.clone(),
+                        }));
                     }
+                    ctx.tracker.fetch_sub(n as u64, Ordering::Relaxed);
                     ctx.pending.fetch_sub(n, Ordering::SeqCst);
                     None
                 }
@@ -395,7 +686,9 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
         };
         if let Some(err) = failure {
             eprintln!(
-                "coordinator: backend '{name}' failed a batch of {n}: {err}"
+                "coordinator: backend '{name}' of deployment '{}' \
+                 failed a batch of {n}: {err}",
+                ctx.dep_name
             );
             // Cool this backend down; requests that still have untried
             // backends go back to the leader.
@@ -406,7 +699,7 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
                 (1u64 << ctx.n_backends) - 1
             };
             let mut forward = Vec::new();
-            let mut exhausted = 0usize;
+            let mut finished = 0usize;
             for mut r in job.reqs.drain(..) {
                 r.failed |= 1u64 << ctx.index;
                 r.tries += 1;
@@ -415,42 +708,57 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
                 // already-failed backends (the others' threads are
                 // gone), after 2x n_backends hops.
                 if r.failed == all_failed || r.tries >= 2 * ctx.n_backends {
-                    exhausted += 1;
+                    finished += 1;
                     ctx.metrics.record_rejected();
+                    ctx.dep_metrics.record_rejected();
                     ctx.global.record_rejected();
+                    let _ = r.reply.send(Err(ServeError::Exhausted));
                 } else {
                     ctx.metrics.record_failover();
+                    ctx.dep_metrics.record_failover();
                     ctx.global.record_failover();
                     forward.push(r);
                 }
             }
-            ctx.pending.fetch_sub(exhausted, Ordering::SeqCst);
             if !forward.is_empty() {
                 let fwd_len = forward.len();
-                if ctx.retry.send(forward).is_err() {
+                if let Err(mpsc::SendError(lost)) = ctx.retry.send(forward)
+                {
                     // Leader already gone; nothing can serve these.
-                    for _ in 0..fwd_len {
+                    for r in lost {
+                        let _ = r.reply.send(Err(ServeError::Stopped));
                         ctx.metrics.record_rejected();
+                        ctx.dep_metrics.record_rejected();
                         ctx.global.record_rejected();
                     }
-                    ctx.pending.fetch_sub(fwd_len, Ordering::SeqCst);
+                    finished += fwd_len;
                 }
             }
+            ctx.tracker.fetch_sub(finished as u64, Ordering::Relaxed);
+            ctx.pending.fetch_sub(finished, Ordering::SeqCst);
         }
         ctx.state.end();
     }
 }
 
-/// Everything the leader thread owns.
-struct LeaderCtx {
-    rx: Receiver<Request>,
-    retry_rx: Receiver<Vec<Request>>,
+/// One deployment's routing state, leader side.
+struct LeaderDep {
     jobs: Vec<Sender<Job>>,
     states: Vec<Arc<BackendState>>,
     router: BatchRouter,
+    metrics: Arc<Metrics>,
+}
+
+/// Everything the leader thread owns.
+struct LeaderCtx {
+    rx: Receiver<Submit>,
+    retry_rx: Receiver<Vec<Request>>,
+    deps: Vec<LeaderDep>,
+    sla_router: Router,
     policy: BatchPolicy,
     global: Arc<Metrics>,
     pending: Arc<AtomicUsize>,
+    closing: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -458,97 +766,175 @@ fn leader_main(mut ctx: LeaderCtx) {
     // Short enough that failover retries are picked up promptly, long
     // enough that an idle coordinator barely wakes.
     let idle = Duration::from_millis(20);
+    let mut shards: ShardBatcher<Request> =
+        ShardBatcher::new(ctx.deps.len(), ctx.policy);
     let mut open = true;
     while open || ctx.pending.load(Ordering::SeqCst) > 0 {
         while let Ok(reqs) = ctx.retry_rx.try_recv() {
-            dispatch(&mut ctx, reqs);
+            dispatch_retry(&mut ctx, reqs);
+        }
+        let now = Instant::now();
+        for (d, batch) in shards.take_expired(now) {
+            dispatch(&mut ctx, d, batch);
         }
         if open {
-            // The deadline anchors at each batch's first request's
-            // *enqueue* time: time spent queued behind failover retries
-            // counts against max_wait.
-            match batcher::next_batch_step(&ctx.rx, &ctx.policy, idle,
-                                           |r: &Request| r.enqueued) {
-                BatchStep::Batch(batch) => {
-                    ctx.pending.fetch_add(batch.len(), Ordering::SeqCst);
-                    dispatch(&mut ctx, batch);
+            // Block until new work or the earliest shard deadline.
+            let timeout = shards
+                .next_deadline()
+                .map(|dl| dl.saturating_duration_since(now).min(idle))
+                .unwrap_or(idle);
+            match ctx.rx.recv_timeout(timeout) {
+                Ok(sub) => accept(&mut ctx, &mut shards, sub),
+                Err(RecvTimeoutError::Timeout) => {
+                    // A shutdown with lingering client clones never
+                    // disconnects the channel: drain what made it in,
+                    // then stop accepting.
+                    if ctx.closing.load(Ordering::SeqCst) {
+                        while let Ok(sub) = ctx.rx.try_recv() {
+                            accept(&mut ctx, &mut shards, sub);
+                        }
+                        open = false;
+                    }
                 }
-                BatchStep::Idle => {}
-                BatchStep::Closed => open = false,
+                Err(RecvTimeoutError::Disconnected) => open = false,
             }
-        } else {
-            // Request channel closed: drain in-flight work + retries.
-            if let Ok(reqs) = ctx.retry_rx.recv_timeout(idle) {
-                dispatch(&mut ctx, reqs);
+            if !open {
+                for (d, batch) in shards.drain() {
+                    dispatch(&mut ctx, d, batch);
+                }
             }
+        } else if let Ok(reqs) = ctx.retry_rx.recv_timeout(idle) {
+            dispatch_retry(&mut ctx, reqs);
         }
     }
+    // A request that raced past the closing flag gets a typed error
+    // instead of a silently dropped reply channel.
+    drain_stopped(&ctx);
     // Close the job channels so workers exit, then join them.
-    ctx.jobs.clear();
+    for d in &mut ctx.deps {
+        d.jobs.clear();
+    }
     for h in ctx.workers.drain(..) {
         let _ = h.join();
     }
+    // Joining can take a full batch's service time — long enough for a
+    // submit that loaded `closing == false` before the store to land in
+    // the channel. Drain once more so those see Stopped too, not a
+    // dropped reply.
+    drain_stopped(&ctx);
 }
 
-/// Route one batch (every request already counted in `pending`). The
-/// router always yields a backend (degraded mode falls back to
-/// unhealthy ones); rejection happens either in the worker once a
-/// request has failed on every backend, or here when *every* worker
-/// thread is gone.
-fn dispatch(ctx: &mut LeaderCtx, reqs: Vec<Request>) {
-    let mut first = ctx.router.pick(&ctx.states);
+/// Reply [`ServeError::Stopped`] to every submission still sitting in
+/// the intake channel.
+fn drain_stopped(ctx: &LeaderCtx) {
+    while let Ok(sub) = ctx.rx.try_recv() {
+        let _ = sub.reply.send(Err(ServeError::Stopped));
+        ctx.global.record_rejected();
+    }
+}
+
+/// Resolve a submission to a deployment (explicit name wins; otherwise
+/// the live SLA router picks) and queue it on that deployment's shard.
+fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
+          sub: Submit) {
+    let d = match sub.deployment {
+        Some(d) => d,
+        None => match ctx.sla_router.select(sub.sla) {
+            Ok(d) => d,
+            Err(e) => {
+                let _ = sub.reply.send(Err(e));
+                ctx.global.record_rejected();
+                return;
+            }
+        },
+    };
+    ctx.pending.fetch_add(1, Ordering::SeqCst);
+    ctx.sla_router.variants()[d].begin();
+    let enqueued = sub.enqueued;
+    let req = Request {
+        image: sub.image,
+        deployment: d,
+        enqueued,
+        reply: sub.reply,
+        failed: 0,
+        tries: 0,
+    };
+    if let Some(batch) = shards.push(d, req, enqueued) {
+        dispatch(ctx, d, batch);
+    }
+}
+
+/// Re-dispatch a failed-over batch (every request of a retry batch
+/// resolved to the same deployment when it was first accepted).
+fn dispatch_retry(ctx: &mut LeaderCtx, reqs: Vec<Request>) {
+    let d = reqs[0].deployment;
+    dispatch(ctx, d, reqs);
+}
+
+/// Route one batch to a backend of deployment `d` (every request
+/// already counted in `pending`). The batch router always yields a
+/// backend (degraded mode falls back to unhealthy ones); rejection
+/// happens either in the worker once a request has failed on every
+/// backend, or here when *every* worker thread of the deployment is
+/// gone.
+fn dispatch(ctx: &mut LeaderCtx, d: usize, reqs: Vec<Request>) {
+    let dep = &mut ctx.deps[d];
+    let mut first = dep.router.pick(&dep.states);
     // Backends every request in this batch has already failed on
     // (non-zero only for failover retries). Steering the retry away
     // from them is what makes "rejected only after failing on every
     // backend" hold even when the router is in degraded mode.
     let avoid: u64 = reqs.iter().fold(u64::MAX, |m, r| m & r.failed);
     if avoid & (1u64 << first) != 0 {
-        let fresh = (0..ctx.jobs.len())
+        let fresh = (0..dep.jobs.len())
             .filter(|&k| avoid & (1u64 << k) == 0)
-            .min_by_key(|&k| (!ctx.states[k].healthy(), k));
+            .min_by_key(|&k| (!dep.states[k].healthy(), k));
         if let Some(k) = fresh {
             first = k;
         }
     }
     let mut job = Job { reqs };
-    ctx.states[first].begin();
-    match ctx.jobs[first].send(job) {
+    dep.states[first].begin();
+    match dep.jobs[first].send(job) {
         Ok(()) => return,
         Err(mpsc::SendError(j)) => {
             // This worker's thread is gone (panic) — not a request
             // failure. Cool it down and scan the others, healthy
             // first, before giving up on the batch.
-            ctx.states[first].mark_unhealthy();
-            ctx.states[first].end();
+            dep.states[first].mark_unhealthy();
+            dep.states[first].end();
             job = j;
         }
     }
     let mut order: Vec<usize> =
-        (0..ctx.jobs.len()).filter(|&k| k != first).collect();
+        (0..dep.jobs.len()).filter(|&k| k != first).collect();
     // Untried-by-this-batch first, then healthy, then declaration order.
     order.sort_by_key(|&k| {
-        (avoid & (1u64 << k) != 0, !ctx.states[k].healthy())
+        (avoid & (1u64 << k) != 0, !dep.states[k].healthy())
     });
     for k in order {
-        ctx.states[k].begin();
-        match ctx.jobs[k].send(job) {
+        dep.states[k].begin();
+        match dep.jobs[k].send(job) {
             Ok(()) => return,
             Err(mpsc::SendError(j)) => {
-                ctx.states[k].mark_unhealthy();
-                ctx.states[k].end();
+                dep.states[k].mark_unhealthy();
+                dep.states[k].end();
                 job = j;
             }
         }
     }
-    reject(ctx, job.reqs);
+    reject(ctx, d, job.reqs);
 }
 
-fn reject(ctx: &LeaderCtx, reqs: Vec<Request>) {
+fn reject(ctx: &mut LeaderCtx, d: usize, reqs: Vec<Request>) {
     let n = reqs.len();
     for r in reqs {
-        // Dropping the reply sender signals the client with a recv error.
-        drop(r);
+        // A typed rejection: the client's recv yields the error rather
+        // than hanging on a silently dropped channel.
+        let _ = r.reply.send(Err(ServeError::Exhausted));
         ctx.global.record_rejected();
+        ctx.deps[d].metrics.record_rejected();
+        ctx.sla_router.variants()[d].end();
     }
     ctx.pending.fetch_sub(n, Ordering::SeqCst);
 }

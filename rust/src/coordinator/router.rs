@@ -2,55 +2,151 @@
 //!
 //! **Variant routing** (the co-design story at serving time): CoCo-Gen
 //! produces multiple deployment variants of the same model (dense,
-//! pattern-pruned at several rates) with different latency/accuracy
+//! pattern-pruned, int8, auto-tuned) with different latency/accuracy
 //! points; [`Router`] picks a [`Variant`] per request according to its
-//! SLA class and balances load across replicas
-//! (least-outstanding-requests).
+//! SLA class. This is a *live* router: each variant's latency point is
+//! read back from the deployment's [`Metrics`] (an exponentially
+//! decayed mean that tracks drift), falling back to a measured prior
+//! only until the first completion — the operating points the paper's
+//! menu promises are observed, not declared.
 //!
 //! **Batch routing** (the `Backend` seam): once the dynamic batcher has
-//! formed a batch, [`BatchRouter`] decides which live backend executes
-//! it — always-primary with hot standbys ([`RouterPolicy::Failover`]),
-//! a weighted traffic split ([`RouterPolicy::Split`]), or least
-//! outstanding batches ([`RouterPolicy::LeastLoaded`]). Health is
-//! tracked per backend in [`BackendState`]: a backend whose
-//! `infer_batch` fails is marked unhealthy and drops out of the
-//! candidate set, which is what makes failover work.
+//! formed a batch, [`BatchRouter`] decides which live backend of the
+//! chosen deployment executes it — always-primary with hot standbys
+//! ([`RouterPolicy::Failover`]), a weighted traffic split
+//! ([`RouterPolicy::Split`]), or least outstanding batches
+//! ([`RouterPolicy::LeastLoaded`]). Health is tracked per backend in
+//! [`BackendState`]: a backend whose `infer_batch` fails is marked
+//! unhealthy and drops out of the candidate set, which is what makes
+//! failover work.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
+use super::metrics::Metrics;
+use super::ServeError;
+
+/// Deployment-count ceiling: [`Router::select`] classifies variants on
+/// fixed stack buffers, and the coordinator's per-request bookkeeping
+/// assumes small variant sets.
+pub const MAX_VARIANTS: usize = 64;
+
 /// Request SLA class.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Sla {
-    /// Minimize latency: route to the most-pruned (fastest) variant.
+    /// Minimize latency: route to a fast (aggressively compressed)
+    /// variant.
     Realtime,
     /// Balanced default.
     Standard,
-    /// Maximize accuracy: dense variant.
+    /// Maximize accuracy: the densest admissible variant.
     Quality,
 }
 
-/// One routable deployment variant.
+impl Sla {
+    /// Parse a CLI-style class name.
+    pub fn parse(s: &str) -> Option<Sla> {
+        match s {
+            "realtime" | "rt" => Some(Sla::Realtime),
+            "standard" | "std" => Some(Sla::Standard),
+            "quality" | "hq" => Some(Sla::Quality),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase label (CLI/report strings).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Sla::Realtime => "realtime",
+            Sla::Standard => "standard",
+            Sla::Quality => "quality",
+        }
+    }
+
+    /// The deterministic mixed-traffic cycle the CLI, serve example,
+    /// and serving bench all drive: 2 realtime : 3 standard :
+    /// 1 quality per 6 requests, keyed by request index.
+    pub fn mixed(i: usize) -> Sla {
+        match i % 6 {
+            0 | 3 => Sla::Realtime,
+            5 => Sla::Quality,
+            _ => Sla::Standard,
+        }
+    }
+}
+
+/// Per-SLA admission limits. `None` falls back to relative admission
+/// (fastest / most-accurate third of the registered variants); `Some`
+/// makes the class a hard constraint, under which a request can find
+/// *no* admissible variant and is rejected with a typed error.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlaPolicy {
+    /// Realtime requests only admit variants whose live mean latency is
+    /// at or below this budget (ms).
+    pub realtime_budget_ms: Option<f64>,
+    /// Quality requests only admit variants whose declared accuracy
+    /// point is at or above this floor.
+    pub quality_floor: Option<f64>,
+}
+
+/// One routable deployment variant: a named operating point on the
+/// co-design menu, with a *live* latency estimate and a declared
+/// accuracy point.
 pub struct Variant {
-    pub name: String,
-    /// Expected single-batch latency (ms) — from the tuner/bench.
-    pub latency_ms: f64,
-    /// Expected accuracy of this variant.
+    pub name: Arc<str>,
+    /// Declared accuracy point of this variant (operator-provided, or a
+    /// plan-derived proxy — accuracy cannot be observed online without
+    /// labels).
     pub accuracy: f64,
-    outstanding: AtomicU64,
+    /// Latency estimate used until `metrics` has served anything (ms) —
+    /// measured at deployment build time, not a hard-coded constant.
+    prior_latency_ms: f64,
+    /// The deployment's live metrics sink; its decayed-mean latency
+    /// is this variant's operating point once traffic has flowed.
+    metrics: Arc<Metrics>,
+    outstanding: Arc<AtomicU64>,
 }
 
 impl Variant {
-    pub fn new(name: &str, latency_ms: f64, accuracy: f64) -> Variant {
+    /// A live variant over a deployment's metrics sink. `tracker` is
+    /// the shared outstanding-request counter (the worker side
+    /// decrements it as requests finish).
+    pub fn live(name: Arc<str>, accuracy: f64, prior_latency_ms: f64,
+                metrics: Arc<Metrics>, tracker: Arc<AtomicU64>)
+                -> Variant {
         Variant {
-            name: name.to_string(),
-            latency_ms,
+            name,
             accuracy,
-            outstanding: AtomicU64::new(0),
+            prior_latency_ms,
+            metrics,
+            outstanding: tracker,
         }
     }
+
+    /// Test/offline convenience: a variant with no traffic yet, whose
+    /// latency estimate is the given prior.
+    pub fn new(name: &str, latency_ms: f64, accuracy: f64) -> Variant {
+        Variant::live(
+            Arc::from(name),
+            accuracy,
+            latency_ms,
+            Arc::new(Metrics::new()),
+            Arc::new(AtomicU64::new(0)),
+        )
+    }
+
+    /// The live latency operating point: the deployment's
+    /// exponentially decayed mean once it has served traffic (so the
+    /// point follows a deployment that degrades or warms up), the
+    /// measured prior before that.
+    pub fn latency_ms(&self) -> f64 {
+        self.metrics
+            .live_latency_ms()
+            .unwrap_or(self.prior_latency_ms)
+    }
+
     pub fn begin(&self) {
         self.outstanding.fetch_add(1, Ordering::Relaxed);
     }
@@ -60,88 +156,122 @@ impl Variant {
     pub fn load(&self) -> u64 {
         self.outstanding.load(Ordering::Relaxed)
     }
+
+    /// Clone of the shared outstanding counter, for the worker side.
+    pub fn tracker(&self) -> Arc<AtomicU64> {
+        self.outstanding.clone()
+    }
 }
 
-/// The per-request variant router: SLA-filtered, least-loaded selection.
+/// The per-request variant router: SLA-filtered admission over *live*
+/// latency points, then least-loaded selection among the admitted set.
 ///
-/// The per-SLA candidate sets depend only on the variant list, so they
-/// are computed once at construction — [`Router::route`] on the request
-/// hot path is an allocation-free scan over a precomputed slice.
+/// Admission is recomputed per request from each variant's current
+/// [`Variant::latency_ms`] — latencies drift as traffic warms caches or
+/// a variant degrades, and the candidate set must drift with them. The
+/// scan runs over fixed stack buffers (at most [`MAX_VARIANTS`]
+/// variants), so the hot path stays allocation-free.
 pub struct Router {
     variants: Vec<Variant>,
-    /// Precomputed candidate indices: fastest third.
-    realtime: Vec<usize>,
-    /// Precomputed candidate indices: most-accurate third.
-    quality: Vec<usize>,
-    /// Precomputed candidate indices: everything.
-    standard: Vec<usize>,
+    policy: SlaPolicy,
 }
 
 impl Router {
     pub fn new(variants: Vec<Variant>) -> Router {
-        assert!(!variants.is_empty());
-        let n = variants.len();
+        Router::with_policy(variants, SlaPolicy::default())
+    }
+
+    pub fn with_policy(variants: Vec<Variant>, policy: SlaPolicy)
+                       -> Router {
+        assert!(!variants.is_empty(), "router needs at least one variant");
+        assert!(variants.len() <= MAX_VARIANTS,
+                "at most {MAX_VARIANTS} variants");
+        Router { variants, policy }
+    }
+
+    /// Pick a variant index for `sla`, or a typed error when the SLA
+    /// admits none.
+    ///
+    /// Admission: `Realtime` admits variants within the configured
+    /// latency budget (default: the fastest third by live latency);
+    /// `Quality` admits variants at or above the accuracy floor
+    /// (default: the most-accurate third); `Standard` admits all.
+    /// Among admitted variants the pick is least outstanding load, ties
+    /// broken by latency (`Realtime`/`Standard`) or accuracy-then-
+    /// latency (`Quality`).
+    pub fn select(&self, sla: Sla) -> Result<usize, ServeError> {
+        let n = self.variants.len();
+        let mut lat = [0f64; MAX_VARIANTS];
+        for (i, v) in self.variants.iter().enumerate() {
+            lat[i] = v.latency_ms();
+        }
         let k = n.div_ceil(3);
-        let mut realtime: Vec<usize> = (0..n).collect();
-        realtime.sort_by(|&a, &b| {
-            variants[a]
-                .latency_ms
-                .partial_cmp(&variants[b].latency_ms)
-                .unwrap()
-        });
-        realtime.truncate(k);
-        let mut quality: Vec<usize> = (0..n).collect();
-        quality.sort_by(|&a, &b| {
-            variants[b]
-                .accuracy
-                .partial_cmp(&variants[a].accuracy)
-                .unwrap()
-        });
-        quality.truncate(k);
-        Router {
-            variants,
-            realtime,
-            quality,
-            standard: (0..n).collect(),
-        }
-    }
-
-    /// Candidate set for an SLA class: Realtime = fastest third,
-    /// Quality = most-accurate third, Standard = all. Precomputed at
-    /// [`Router::new`] — no per-request allocation or sort.
-    fn candidates(&self, sla: Sla) -> &[usize] {
-        match sla {
-            Sla::Realtime => &self.realtime,
-            Sla::Quality => &self.quality,
-            Sla::Standard => &self.standard,
-        }
-    }
-
-    /// Pick a variant for `sla`: least outstanding load among candidates,
-    /// ties broken by latency.
-    pub fn route(&self, sla: Sla) -> &Variant {
-        let best = self
-            .candidates(sla)
-            .iter()
-            .copied()
-            .min_by(|&a, &b| {
-                let va = &self.variants[a];
-                let vb = &self.variants[b];
-                va.load()
-                    .cmp(&vb.load())
-                    .then(
-                        va.latency_ms
-                            .partial_cmp(&vb.latency_ms)
-                            .unwrap(),
-                    )
+        // One admission threshold per request, then a flat scan. Under
+        // a hard budget, a variant with no measurement at all (infinite
+        // prior — `from_backends`/`pjrt` deployments) is admitted
+        // rather than starved: its live estimate can only ever form
+        // from traffic it is allowed to serve, and after the first
+        // completion the measured point governs.
+        let lat_cap = match (sla, self.policy.realtime_budget_ms) {
+            (Sla::Realtime, Some(budget)) => {
+                for l in &mut lat[..n] {
+                    if l.is_infinite() {
+                        *l = budget;
+                    }
+                }
+                budget
+            }
+            (Sla::Realtime, None) => kth_smallest(&lat[..n], k),
+            _ => f64::INFINITY,
+        };
+        let acc_floor = match (sla, self.policy.quality_floor) {
+            (Sla::Quality, Some(floor)) => floor,
+            (Sla::Quality, None) => {
+                let mut neg = [0f64; MAX_VARIANTS];
+                for (j, v) in self.variants.iter().enumerate() {
+                    neg[j] = -v.accuracy;
+                }
+                -kth_smallest(&neg[..n], k)
+            }
+            _ => f64::NEG_INFINITY,
+        };
+        (0..n)
+            .filter(|&i| {
+                lat[i] <= lat_cap
+                    && self.variants[i].accuracy >= acc_floor
             })
-            .unwrap();
-        &self.variants[best]
+            .min_by(|&a, &b| {
+                let (va, vb) = (&self.variants[a], &self.variants[b]);
+                let load = va.load().cmp(&vb.load());
+                if sla == Sla::Quality {
+                    load.then(vb.accuracy.total_cmp(&va.accuracy))
+                        .then(lat[a].total_cmp(&lat[b]))
+                } else {
+                    load.then(lat[a].total_cmp(&lat[b]))
+                }
+            })
+            .ok_or(ServeError::NoAdmissibleVariant { sla })
+    }
+
+    /// Pick a variant for `sla` (see [`Router::select`]).
+    pub fn route(&self, sla: Sla) -> Result<&Variant, ServeError> {
+        self.select(sla).map(|i| &self.variants[i])
     }
 
     pub fn variants(&self) -> &[Variant] {
         &self.variants
     }
+}
+
+/// The k-th smallest value of `v` (1-based), on a stack copy — the
+/// admission threshold for "fastest third" semantics.
+fn kth_smallest(v: &[f64], k: usize) -> f64 {
+    debug_assert!(k >= 1 && k <= v.len() && v.len() <= MAX_VARIANTS);
+    let mut buf = [0f64; MAX_VARIANTS];
+    buf[..v.len()].copy_from_slice(v);
+    let buf = &mut buf[..v.len()];
+    buf.sort_unstable_by(|a, b| a.total_cmp(b));
+    buf[k - 1]
 }
 
 /// Cooldown after an infer failure, in routing decisions: the backend
@@ -341,26 +471,120 @@ mod tests {
     #[test]
     fn realtime_prefers_fastest() {
         let r = mk();
-        assert_eq!(r.route(Sla::Realtime).name, "pattern-8x");
+        assert_eq!(&*r.route(Sla::Realtime).unwrap().name, "pattern-8x");
     }
 
     #[test]
     fn quality_prefers_most_accurate() {
         let r = mk();
-        assert_eq!(r.route(Sla::Quality).name, "dense");
+        assert_eq!(&*r.route(Sla::Quality).unwrap().name, "dense");
     }
 
     #[test]
     fn standard_balances_by_load() {
         let r = mk();
         // Load up the fastest variant; Standard must avoid it.
-        let fast = r.route(Sla::Realtime);
+        let fast = r.route(Sla::Realtime).unwrap();
         fast.begin();
         fast.begin();
-        let chosen = r.route(Sla::Standard);
-        assert_ne!(chosen.name, "pattern-8x");
+        let chosen = r.route(Sla::Standard).unwrap();
+        assert_ne!(&*chosen.name, "pattern-8x");
         fast.end();
         fast.end();
+    }
+
+    #[test]
+    fn live_latency_overrides_the_prior() {
+        // "dense" claims a slow prior; once its metrics show it is
+        // actually the fastest variant, Realtime must follow the
+        // measurement, not the prior.
+        let dense_metrics = Arc::new(Metrics::new());
+        let variants = vec![
+            Variant::live(
+                Arc::from("dense"),
+                0.95,
+                50.0,
+                dense_metrics.clone(),
+                Arc::new(AtomicU64::new(0)),
+            ),
+            Variant::new("pattern-8x", 2.0, 0.90),
+        ];
+        let r = Router::new(variants);
+        assert_eq!(&*r.route(Sla::Realtime).unwrap().name, "pattern-8x");
+        for _ in 0..4 {
+            dense_metrics.record(
+                std::time::Duration::from_micros(500),
+                std::time::Duration::ZERO,
+                1,
+            );
+        }
+        assert_eq!(
+            &*r.route(Sla::Realtime).unwrap().name,
+            "dense",
+            "live mean (0.5 ms) must replace the 50 ms prior"
+        );
+    }
+
+    #[test]
+    fn hard_limits_reject_with_typed_errors() {
+        let policy = SlaPolicy {
+            realtime_budget_ms: Some(3.0),
+            quality_floor: Some(0.99),
+        };
+        let r = Router::with_policy(
+            vec![
+                Variant::new("dense", 10.0, 0.95),
+                Variant::new("pattern-8x", 2.0, 0.90),
+            ],
+            policy,
+        );
+        // Realtime budget admits only the fast variant.
+        assert_eq!(&*r.route(Sla::Realtime).unwrap().name, "pattern-8x");
+        // No variant reaches the 0.99 accuracy floor.
+        assert!(matches!(
+            r.select(Sla::Quality),
+            Err(ServeError::NoAdmissibleVariant { sla: Sla::Quality })
+        ));
+        // Standard is never constrained.
+        assert!(r.select(Sla::Standard).is_ok());
+    }
+
+    #[test]
+    fn unmeasured_variant_is_admitted_under_a_hard_budget() {
+        // A deployment with no latency prior (from_backends/pjrt:
+        // INFINITY) must not be starved by realtime_budget_ms — its
+        // live estimate can only form from traffic it is allowed to
+        // serve.
+        let policy = SlaPolicy {
+            realtime_budget_ms: Some(10.0),
+            quality_floor: None,
+        };
+        let r = Router::with_policy(
+            vec![Variant::new("unmeasured", f64::INFINITY, 1.0)],
+            policy,
+        );
+        assert_eq!(&*r.route(Sla::Realtime).unwrap().name, "unmeasured");
+        // Once a measurement exists, the budget is enforced for real.
+        let slow_metrics = Arc::new(Metrics::new());
+        slow_metrics.record(
+            std::time::Duration::from_millis(40),
+            std::time::Duration::ZERO,
+            1,
+        );
+        let r = Router::with_policy(
+            vec![Variant::live(
+                Arc::from("slow"),
+                1.0,
+                f64::INFINITY,
+                slow_metrics,
+                Arc::new(AtomicU64::new(0)),
+            )],
+            policy,
+        );
+        assert!(matches!(
+            r.select(Sla::Realtime),
+            Err(ServeError::NoAdmissibleVariant { sla: Sla::Realtime })
+        ));
     }
 
     #[test]
@@ -368,7 +592,7 @@ mod tests {
         prop::check("router-load", 50, |g| {
             let r = mk();
             let n = g.usize(0, 20);
-            let v = r.route(Sla::Standard);
+            let v = r.route(Sla::Standard).unwrap();
             for _ in 0..n {
                 v.begin();
             }

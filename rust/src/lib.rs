@@ -21,3 +21,51 @@ pub fn version() -> &'static str {
 
 pub mod cocotune;
 pub mod data;
+
+/// One-import surface for the serving pipeline: build a model IR, turn
+/// it into named [`prelude::Deployment`]s (scheme → prune/quant →
+/// autotune → compiled backends), register them on a
+/// [`prelude::Coordinator`], and submit typed
+/// [`prelude::InferRequest`]s.
+///
+/// ```
+/// use cocopie::ir::{Chw, IrBuilder};
+/// use cocopie::prelude::*;
+///
+/// let mut b = IrBuilder::new("p", Chw::new(3, 8, 8));
+/// b.conv("c1", 3, 4, 1, true).gap("g").dense("fc", 2, false);
+/// let ir = b.build().unwrap();
+/// let coord = Coordinator::builder()
+///     .register(Deployment::builder("dense", &ir)
+///         .scheme(Scheme::DenseIm2col)
+///         .build()
+///         .unwrap())
+///     .register(Deployment::builder("cocogen", &ir)
+///         .scheme(Scheme::CocoGen)
+///         .build()
+///         .unwrap())
+///     .start()
+///     .unwrap();
+/// let rx = coord
+///     .infer(InferRequest {
+///         image: vec![0.1; 8 * 8 * 3],
+///         sla: Sla::Realtime,
+///         deployment: None,
+///     })
+///     .unwrap();
+/// let pred = rx.recv().unwrap().unwrap();
+/// assert!(coord.deployments().iter().any(|d| *d == pred.deployment));
+/// coord.shutdown();
+/// ```
+pub mod prelude {
+    pub use crate::codegen::{autotune_plan, autotune_plan_batched,
+                             build_plan, ExecPlan, PruneConfig, Scheme};
+    pub use crate::coordinator::{BatchPolicy, Client, Coordinator,
+                                 CoordinatorBuilder, Deployment,
+                                 DeploymentBuilder, InferRequest,
+                                 NativeBackend, NativeBatchMode,
+                                 Prediction, PredictionResult,
+                                 RouterPolicy, ServeConfig, ServeError,
+                                 ServeReport, Sla, SlaPolicy, Summary};
+    pub use crate::exec::{ExecutorPool, ModelExecutor};
+}

@@ -3,69 +3,109 @@
 //! Subcommands (hand-rolled parser; clap is not in the offline registry):
 //!   info                      — artifacts + manifest summary
 //!   serve  [--model M] [--batch B] [--requests N] [--backend pjrt|native]
-//!          [--scheme cocogen|cocogen-quant|coco-auto|dense]
+//!          [--variants dense,cocogen,coco-auto | --scheme S]
+//!          [--sla mixed|realtime|standard|quality]
 //!          [--batch-mode auto|fused|fanout]
 //!                             — run the serving coordinator on synthetic
-//!                               traffic and print latency metrics;
-//!                               `--backend native` serves a zoo timing
-//!                               model on the executor pool (no PJRT or
-//!                               artifacts needed); `--scheme
-//!                               cocogen-quant` serves the weight-only
-//!                               int8 plan; `--scheme coco-auto` runs
-//!                               per-layer engine auto-tuning (at the
-//!                               serving batch size) before serving;
-//!                               `--batch-mode` picks fused batched
-//!                               execution vs per-image pool fan-out
-//!                               (auto = fused for batches of 2+)
+//!                               traffic and print per-deployment latency
+//!                               metrics; `--backend native` registers
+//!                               one named deployment per `--variants`
+//!                               scheme (built by `Deployment::builder`,
+//!                               `coco-auto` auto-tuned at the serving
+//!                               batch size) and routes each request's
+//!                               SLA class across them on the live path;
+//!                               `--scheme S` is shorthand for
+//!                               `--variants S`; `--batch-mode` picks
+//!                               fused batched execution vs per-image
+//!                               pool fan-out (auto = fused for 2+)
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
 //!                               storage + FLOP report
-//!   explore [--configs N]     — real-tier CoCo-Tune exploration demo
+//!   explore [--configs N]    — real-tier CoCo-Tune exploration demo
+//!
+//! Unknown flags are rejected per subcommand: a typo'd `--scehme` is a
+//! usage error, not a silently served default.
 
 use std::collections::HashMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use cocopie::codegen::{build_plan, PruneConfig, Scheme};
 use cocopie::cocotune::trainer::{
     config_masks, sample_subspace, ModelState, TrainOpts, Trainer,
 };
-use cocopie::coordinator::{BatchPolicy, Coordinator};
 use cocopie::ir::zoo;
+use cocopie::prelude::*;
 use cocopie::runtime::Runtime;
 use cocopie::util::rng::Rng;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
+/// Parse `--key value` / `--switch` pairs, rejecting any flag not in
+/// `allowed` with a usage error naming the subcommand.
+fn parse_flags(cmd: &str, args: &[String], allowed: &[&str])
+               -> Result<HashMap<String, String>> {
     let mut out = HashMap::new();
     let mut i = 0;
     while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            let val = args
-                .get(i + 1)
-                .filter(|v| !v.starts_with("--"))
-                .cloned()
-                .unwrap_or_else(|| "true".to_string());
-            if val != "true" {
-                i += 1;
-            }
-            out.insert(key.to_string(), val);
+        let Some(key) = args[i].strip_prefix("--") else {
+            bail!(
+                "unexpected argument '{}' for `{cmd}` (flags look like \
+                 --key [value])",
+                args[i]
+            );
+        };
+        if !allowed.contains(&key) {
+            bail!(
+                "unknown flag --{key} for `{cmd}` (expected one of: {})",
+                allowed
+                    .iter()
+                    .map(|f| format!("--{f}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
         }
+        let val = args
+            .get(i + 1)
+            .filter(|v| !v.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "true".to_string());
+        if val != "true" {
+            i += 1;
+        }
+        out.insert(key.to_string(), val);
         i += 1;
     }
-    out
+    Ok(out)
 }
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(&args[args.len().min(1)..]);
+    let rest = &args[args.len().min(1)..];
     match cmd {
-        "info" => info(),
-        "serve" => serve(&flags),
-        "train" => train(&flags),
-        "compress" => compress(&flags),
-        "explore" => explore(&flags),
+        "info" => {
+            parse_flags(cmd, rest, &[])?;
+            info()
+        }
+        "serve" => {
+            let flags = parse_flags(cmd, rest, &[
+                "model", "batch", "requests", "backend", "scheme",
+                "variants", "sla", "batch-mode",
+            ])?;
+            serve(&flags)
+        }
+        "train" => {
+            let flags =
+                parse_flags(cmd, rest, &["model", "dataset", "steps"])?;
+            train(&flags)
+        }
+        "compress" => {
+            let flags = parse_flags(cmd, rest, &["model"])?;
+            compress(&flags)
+        }
+        "explore" => {
+            let flags = parse_flags(cmd, rest, &["configs"])?;
+            explore(&flags)
+        }
         _ => {
             println!("cocopie {} — compression-compilation co-design",
                      cocopie::version());
@@ -109,19 +149,28 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         max_batch: batch,
         max_wait: std::time::Duration::from_millis(3),
     };
+    anyhow::ensure!(
+        !(flags.contains_key("scheme") && flags.contains_key("variants")),
+        "--scheme is shorthand for a single-entry --variants; pass one \
+         or the other"
+    );
+    let sla_flag = flags.get("sla").map(String::as_str);
     let (coord, elems) = match backend {
         "pjrt" => {
             anyhow::ensure!(
-                flags.get("scheme").is_none(),
-                "--scheme applies to --backend native only (the PJRT \
-                 path serves the compiled AOT artifact as-is)"
+                flags.get("scheme").is_none()
+                    && flags.get("variants").is_none()
+                    && flags.get("batch-mode").is_none(),
+                "--scheme/--variants/--batch-mode apply to --backend \
+                 native only (the PJRT path serves the compiled AOT \
+                 artifact as-is)"
             );
             let model = flags.get("model").map(String::as_str)
                 .unwrap_or("resnet_mini");
             let rt = Runtime::new(&Runtime::default_dir())?;
             let spec = rt.manifest.model(model)?.clone();
             let elems: usize = spec.input_shape.iter().product();
-            let mut cfg = cocopie::coordinator::ServeConfig::new(model);
+            let mut cfg = ServeConfig::new(model);
             cfg.policy = policy;
             (Coordinator::start(cfg)?, elems)
         }
@@ -132,82 +181,102 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 "vgg16" => zoo::vgg16(zoo::CIFAR_HW, 10),
                 "resnet50" => zoo::resnet50(zoo::CIFAR_HW, 10),
                 "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
-                other => anyhow::bail!("unknown timing model {other}"),
+                other => bail!("unknown timing model {other}"),
             };
-            let scheme_flag = flags.get("scheme").map(String::as_str)
+            let variants_flag = flags
+                .get("variants")
+                .or_else(|| flags.get("scheme"))
+                .map(String::as_str)
                 .unwrap_or("cocogen");
-            let (scheme, name) = match scheme_flag {
-                "cocogen" => (Scheme::CocoGen, "native-cocogen"),
-                "cocogen-quant" | "quant" | "int8" => {
-                    (Scheme::CocoGenQuant, "native-int8")
-                }
-                "coco-auto" | "cocoauto" | "auto" => {
-                    (Scheme::CocoAuto, "native-auto")
-                }
-                "dense" => (Scheme::DenseIm2col, "native-dense"),
-                other => anyhow::bail!(
-                    "unknown scheme {other} \
-                     (cocogen|cocogen-quant|coco-auto|dense)"
-                ),
-            };
+            let mut schemes = Vec::new();
+            for name in variants_flag.split(',') {
+                let Some(scheme) = Scheme::parse(name.trim()) else {
+                    bail!(
+                        "unknown scheme '{}' in --variants (try one of: \
+                         dense, cocogen, cocogen-quant, coco-auto)",
+                        name.trim()
+                    );
+                };
+                schemes.push(scheme);
+            }
             let mode = match flags
                 .get("batch-mode")
                 .map(String::as_str)
                 .unwrap_or("auto")
             {
-                "auto" => cocopie::coordinator::NativeBatchMode::Auto,
-                "fused" => cocopie::coordinator::NativeBatchMode::Fused,
-                "fanout" | "fan-out" => {
-                    cocopie::coordinator::NativeBatchMode::FanOut
-                }
-                other => anyhow::bail!(
+                "auto" => NativeBatchMode::Auto,
+                "fused" => NativeBatchMode::Fused,
+                "fanout" | "fan-out" => NativeBatchMode::FanOut,
+                other => bail!(
                     "unknown batch mode {other} (auto|fused|fanout)"
                 ),
             };
             let elems = ir.input.c * ir.input.h * ir.input.w;
-            let mut plan = build_plan(&ir, scheme, PruneConfig::default(),
-                                      7);
-            if scheme == Scheme::CocoAuto {
+            let mut builder = Coordinator::builder().policy(policy);
+            for scheme in schemes {
+                if scheme == Scheme::CocoAuto {
+                    println!(
+                        "auto-tuning per-layer engines for {model} at \
+                         batch {batch}..."
+                    );
+                }
+                // Tune CocoAuto at threads = 1 and at the serving
+                // batch size: per-layer winners must hold in the
+                // regime that actually serves — fused batches of
+                // max_batch images (the best kernel at n = 1 is often
+                // not the best at n = 8).
+                let mut db = Deployment::builder(scheme.label(), &ir)
+                    .scheme(scheme)
+                    .seed(7)
+                    .batch_mode(mode);
+                if scheme == Scheme::CocoAuto {
+                    db = db.autotune_at(batch);
+                }
+                let dep = db.build()?;
+                let plan = dep.plan().expect("native deployment");
                 println!(
-                    "auto-tuning per-layer engines for {model} at \
-                     batch {batch}..."
+                    "deployment '{}': {} KB resident weights, {} KB \
+                     activation arena per executor",
+                    dep.name(),
+                    plan.weight_bytes() / 1024,
+                    plan.peak_activation_bytes() / 1024
                 );
-                // Tune at threads = 1 and at the serving batch size:
-                // per-layer winners must hold in the regime that
-                // actually serves — fused batches of max_batch images
-                // (the best kernel at n = 1 is often not the best at
-                // n = 8).
-                cocopie::codegen::autotune_plan_batched(&mut plan, 1,
-                                                        batch);
+                builder = builder.register(dep);
             }
-            let plan = plan.into_shared();
-            println!(
-                "serving {model} via {name}: {} KB resident weights, \
-                 {} KB activation arena per executor",
-                plan.weight_bytes() / 1024,
-                plan.peak_activation_bytes() / 1024
-            );
-            let coord = Coordinator::start_with(
-                vec![Box::new(
-                    cocopie::coordinator::NativeBackend::new(name, plan)
-                        .with_batch_mode(mode),
-                )],
-                policy,
-                cocopie::coordinator::RouterPolicy::Failover,
-            )?;
-            (coord, elems)
+            (builder.start()?, elems)
         }
-        other => anyhow::bail!("unknown backend {other} (pjrt|native)"),
+        other => bail!("unknown backend {other} (pjrt|native)"),
     };
     let client = coord.client();
+    let multi = client.deployments().len() > 1;
+    let fixed_sla = match sla_flag {
+        None => None,
+        Some("mixed") => None,
+        Some(s) => Some(Sla::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown SLA class '{s}' (mixed|realtime|standard|quality)"
+            )
+        })?),
+    };
     let mut rng = Rng::seed_from(1);
     let mut pending = Vec::new();
-    for _ in 0..n {
+    for i in 0..n {
         let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
-        pending.push(client.submit(img)?);
+        let sla = fixed_sla.unwrap_or_else(|| {
+            if multi { Sla::mixed(i) } else { Sla::Standard }
+        });
+        pending.push((sla, client.infer(InferRequest {
+            image: img,
+            sla,
+            deployment: None,
+        })?));
     }
-    for p in pending {
-        let _ = p.recv();
+    let mut routed: HashMap<(Sla, std::sync::Arc<str>), usize> =
+        HashMap::new();
+    for (sla, p) in pending {
+        if let Ok(Ok(pred)) = p.recv() {
+            *routed.entry((sla, pred.deployment)).or_insert(0) += 1;
+        }
     }
     drop(client);
     let report = coord.shutdown_report();
@@ -216,9 +285,22 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         "served {} requests: p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
         s.completed, s.p50_ms, s.p99_ms, s.mean_batch
     );
-    for (name, b) in &report.per_backend {
-        println!("  {name}: {} requests, p50 {:.2} ms", b.completed,
-                 b.p50_ms);
+    for dep in &report.deployments {
+        println!(
+            "  {:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms",
+            dep.name, dep.summary.completed, dep.summary.p50_ms,
+            dep.summary.p99_ms
+        );
+    }
+    if multi {
+        let mut rows: Vec<_> = routed.into_iter().collect();
+        rows.sort_by_key(|((sla, name), _)| {
+            (sla.label(), name.clone())
+        });
+        println!("SLA routing (live, metrics-fed):");
+        for ((sla, name), count) in rows {
+            println!("  {:8} -> {:16} {count:5} reqs", sla.label(), name);
+        }
     }
     Ok(())
 }
@@ -322,4 +404,50 @@ fn explore(flags: &HashMap<String, String>) -> Result<()> {
         comp.found.map(|i| comp.results[i].model_size)
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_accepts_known_pairs_and_switches() {
+        let f = parse_flags(
+            "serve",
+            &args(&["--model", "vgg16", "--batch", "4", "--sla"]),
+            &["model", "batch", "sla"],
+        )
+        .unwrap();
+        assert_eq!(f.get("model").unwrap(), "vgg16");
+        assert_eq!(f.get("batch").unwrap(), "4");
+        // A trailing value-less flag parses as a switch.
+        assert_eq!(f.get("sla").unwrap(), "true");
+    }
+
+    #[test]
+    fn parse_flags_rejects_typos_with_usage_error() {
+        // The motivating bug: `--scehme` must be an error, not a
+        // silently served default scheme.
+        let err = parse_flags(
+            "serve",
+            &args(&["--scehme", "cocogen"]),
+            &["scheme", "model"],
+        )
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--scehme") && msg.contains("serve"),
+                "unhelpful error: {msg}");
+        assert!(msg.contains("--scheme"),
+                "error must list the accepted flags: {msg}");
+    }
+
+    #[test]
+    fn parse_flags_rejects_bare_positional_arguments() {
+        assert!(parse_flags("info", &args(&["extra"]), &[]).is_err());
+        assert!(parse_flags("info", &args(&[]), &[]).is_ok());
+    }
 }

@@ -1,0 +1,398 @@
+//! Integration: the deployment-centric serving API.
+//!
+//! One coordinator serving several *named* deployments of the co-design
+//! menu (fp32 CoCo-Gen, int8, auto-tuned), with typed requests
+//! ([`InferRequest`]), live SLA routing fed back from `Metrics`, and
+//! typed client errors for every failure mode — the request path must
+//! answer, never hang.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use cocopie::coordinator::backend::nhwc_to_chw;
+use cocopie::coordinator::{Backend, ModelSignature};
+use cocopie::ir::{Chw, IrBuilder, ModelIR};
+use cocopie::prelude::*;
+use cocopie::runtime::HostTensor;
+use cocopie::util::rng::Rng;
+
+const H: usize = 10;
+const W: usize = 10;
+const C: usize = 3;
+const CLASSES: usize = 6;
+const ELEMS: usize = H * W * C;
+
+fn tiny_ir() -> ModelIR {
+    let mut b = IrBuilder::new("dep_t", Chw::new(C, H, W));
+    b.conv("c1", 3, 8, 1, true);
+    let skip = b.last();
+    b.conv("c2", 3, 8, 1, false)
+        .add("a", skip, true)
+        .conv("c3", 3, 16, 2, true)
+        .gap("g")
+        .dense("fc", CLASSES, false);
+    b.build().unwrap()
+}
+
+fn images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|_| (0..ELEMS).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+/// Direct (coordinator-free) prediction for one NHWC image.
+fn direct_predict(plan: &ExecPlan, img: &[f32]) -> (usize, f32) {
+    let out = ModelExecutor::new(plan, 1).run(&nhwc_to_chw(img, H, W, C));
+    out.data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(cl, s)| (cl, *s))
+        .unwrap()
+}
+
+#[test]
+fn named_deployments_serve_bit_identical_to_their_plans() {
+    // The acceptance shape: one coordinator, three named deployments —
+    // fp32 CoCo-Gen, int8, and auto-tuned — each built by the staged
+    // builder pipeline; a request pinned to a name must return results
+    // bit-identical to a direct ModelExecutor run of that deployment's
+    // own plan.
+    let ir = tiny_ir();
+    let cocogen = Deployment::builder("cocogen", &ir)
+        .scheme(Scheme::CocoGen)
+        .seed(42)
+        .build()
+        .expect("cocogen");
+    let int8 = Deployment::builder("cocogen-quant", &ir)
+        .scheme(Scheme::CocoGenQuant)
+        .seed(42)
+        .build()
+        .expect("int8");
+    let auto = Deployment::builder("coco-auto", &ir)
+        .scheme(Scheme::CocoAuto)
+        .seed(42)
+        .autotune_at(4)
+        .build()
+        .expect("auto");
+    let plans: Vec<(&str, Arc<ExecPlan>)> = vec![
+        ("cocogen", cocogen.plan().unwrap().clone()),
+        ("cocogen-quant", int8.plan().unwrap().clone()),
+        ("coco-auto", auto.plan().unwrap().clone()),
+    ];
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        })
+        .register(cocogen)
+        .register(int8)
+        .register(auto)
+        .start()
+        .expect("start");
+    assert_eq!(coord.deployments().len(), 3);
+    for (name, plan) in &plans {
+        let imgs = images(12, 7);
+        let pending: Vec<_> = imgs
+            .iter()
+            .map(|img| {
+                coord
+                    .infer(InferRequest {
+                        image: img.clone(),
+                        sla: Sla::Standard,
+                        deployment: Some(*name),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for (img, p) in imgs.iter().zip(pending) {
+            let pred = p.recv().expect("reply").expect("served");
+            assert_eq!(&*pred.deployment, *name,
+                       "pinned request routed elsewhere");
+            let (class, score) = direct_predict(plan, img);
+            assert_eq!(pred.class, class, "deployment '{name}'");
+            assert_eq!(pred.score, score,
+                       "deployment '{name}' diverged from its plan");
+        }
+    }
+    let report = coord.shutdown_report();
+    assert_eq!(report.overall.completed, 36);
+    assert_eq!(report.overall.rejected, 0);
+    // Per-deployment metrics attribute every request to its name.
+    for (name, _) in &plans {
+        let dep = report.deployment(name).expect("report entry");
+        assert_eq!(dep.summary.completed, 12, "deployment '{name}'");
+    }
+}
+
+#[test]
+fn mixed_sla_traffic_completes_and_sums_per_deployment() {
+    let ir = tiny_ir();
+    let mut builder = Coordinator::builder().policy(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+    });
+    for scheme in [Scheme::DenseIm2col, Scheme::CocoGen,
+                   Scheme::CocoGenQuant]
+    {
+        builder = builder.register(
+            Deployment::builder(scheme.label(), &ir)
+                .scheme(scheme)
+                .seed(42)
+                .build()
+                .unwrap(),
+        );
+    }
+    let coord = builder.start().expect("start");
+    let imgs = images(48, 11);
+    let slas = [Sla::Realtime, Sla::Standard, Sla::Quality];
+    let pending: Vec<_> = imgs
+        .iter()
+        .enumerate()
+        .map(|(i, img)| {
+            coord
+                .infer(InferRequest {
+                    image: img.clone(),
+                    sla: slas[i % 3],
+                    deployment: None,
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut served = 0usize;
+    for p in pending {
+        let pred = p.recv().expect("reply").expect("served");
+        assert!(
+            coord.deployments().iter().any(|d| *d == pred.deployment),
+            "prediction names an unregistered deployment"
+        );
+        served += 1;
+    }
+    assert_eq!(served, 48);
+    let report = coord.shutdown_report();
+    assert_eq!(report.overall.completed, 48);
+    assert_eq!(report.overall.rejected, 0);
+    let sum: u64 = report
+        .deployments
+        .iter()
+        .map(|d| d.summary.completed)
+        .sum();
+    assert_eq!(sum, 48, "per-deployment metrics must sum to overall");
+}
+
+/// A backend with a controllable service time: deterministic logits
+/// (class 0), `delay` per batch — the knob that makes live-latency
+/// routing observable.
+struct SleepyBackend {
+    name: &'static str,
+    delay: Duration,
+}
+
+impl Backend for SleepyBackend {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn compile(&mut self, _max_batch: usize) -> Result<ModelSignature> {
+        Ok(ModelSignature {
+            input_shape: vec![H, W, C],
+            classes: CLASSES,
+        })
+    }
+    fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor> {
+        std::thread::sleep(self.delay);
+        let n = images.shape()[0];
+        let mut row = vec![0f32; CLASSES];
+        row[0] = 1.0;
+        Ok(HostTensor::f32(&[n, CLASSES], row.repeat(n)))
+    }
+}
+
+#[test]
+fn realtime_routing_follows_live_latency_not_the_prior() {
+    // "lying" declares a fast prior but actually serves slowly;
+    // "honest" declares a slower prior and serves instantly. The first
+    // Realtime request believes the prior; once the lying deployment's
+    // own Metrics report its real mean latency, Realtime traffic must
+    // move to the honest one — the live path, not hard-coded points.
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        })
+        .register(
+            Deployment::from_backends(
+                "lying",
+                vec![Box::new(SleepyBackend {
+                    name: "lying-be",
+                    delay: Duration::from_millis(30),
+                })],
+            )
+            .with_prior_latency_ms(1.0)
+            .with_accuracy(0.5),
+        )
+        .register(
+            Deployment::from_backends(
+                "honest",
+                vec![Box::new(SleepyBackend {
+                    name: "honest-be",
+                    delay: Duration::ZERO,
+                })],
+            )
+            .with_prior_latency_ms(5.0)
+            .with_accuracy(0.5),
+        )
+        .start()
+        .expect("start");
+    let submit_rt = |img: Vec<f32>| {
+        coord
+            .infer(InferRequest {
+                image: img,
+                sla: Sla::Realtime,
+                deployment: None,
+            })
+            .unwrap()
+            .recv()
+            .expect("reply")
+            .expect("served")
+    };
+    let imgs = images(6, 3);
+    let first = submit_rt(imgs[0].clone());
+    assert_eq!(&*first.deployment, "lying",
+               "the prior says 'lying' is fastest");
+    // Sequential requests: each sees the metrics of everything before
+    // it. From the second request on, 'lying' has a ~30 ms live mean —
+    // worse than 'honest''s 5 ms prior — so Realtime must switch.
+    for img in &imgs[1..] {
+        let pred = submit_rt(img.clone());
+        assert_eq!(&*pred.deployment, "honest",
+                   "live latency must override the prior");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn quality_floor_pins_traffic_to_accurate_deployments() {
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        })
+        .sla(SlaPolicy {
+            realtime_budget_ms: None,
+            quality_floor: Some(0.9),
+        })
+        .register(
+            Deployment::from_backends(
+                "fast",
+                vec![Box::new(SleepyBackend {
+                    name: "fast-be",
+                    delay: Duration::ZERO,
+                })],
+            )
+            .with_prior_latency_ms(0.1)
+            .with_accuracy(0.5),
+        )
+        .register(
+            Deployment::from_backends(
+                "accurate",
+                vec![Box::new(SleepyBackend {
+                    name: "accurate-be",
+                    delay: Duration::from_millis(5),
+                })],
+            )
+            .with_prior_latency_ms(6.0)
+            .with_accuracy(0.99),
+        )
+        .start()
+        .expect("start");
+    for img in images(6, 5) {
+        let pred = coord
+            .infer(InferRequest {
+                image: img,
+                sla: Sla::Quality,
+                deployment: None,
+            })
+            .unwrap()
+            .recv()
+            .expect("reply")
+            .expect("served");
+        assert_eq!(&*pred.deployment, "accurate",
+                   "quality floor admits only the accurate deployment");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn client_error_paths_are_typed_not_hung() {
+    let ir = tiny_ir();
+    let coord = Coordinator::builder()
+        .sla(SlaPolicy {
+            realtime_budget_ms: None,
+            // Nothing reaches this floor: Quality-class requests have
+            // no admissible variant.
+            quality_floor: Some(2.0),
+        })
+        .register(
+            Deployment::builder("cocogen", &ir)
+                .scheme(Scheme::CocoGen)
+                .seed(42)
+                .build()
+                .unwrap(),
+        )
+        .start()
+        .expect("start");
+
+    // Wrong image element count: typed, synchronous.
+    assert_eq!(
+        coord.submit(vec![0.0; 10]).err(),
+        Some(ServeError::WrongImageSize {
+            got: 10,
+            want: ELEMS
+        })
+    );
+
+    // Unknown deployment name: typed, synchronous.
+    assert_eq!(
+        coord
+            .infer(InferRequest {
+                image: vec![0.0; ELEMS],
+                sla: Sla::Standard,
+                deployment: Some("no-such-deployment"),
+            })
+            .err(),
+        Some(ServeError::UnknownDeployment(
+            "no-such-deployment".to_string()
+        ))
+    );
+
+    // SLA class with no admissible variant: typed, on the reply
+    // channel (resolution happens on the live path).
+    let rx = coord
+        .infer(InferRequest {
+            image: vec![0.0; ELEMS],
+            sla: Sla::Quality,
+            deployment: None,
+        })
+        .unwrap();
+    assert!(matches!(
+        rx.recv().expect("reply"),
+        Err(ServeError::NoAdmissibleVariant { sla: Sla::Quality })
+    ));
+
+    // A standard request still serves fine next to the rejections.
+    let ok = coord.submit(vec![0.1; ELEMS]).unwrap().recv()
+        .expect("reply").expect("served");
+    assert_eq!(&*ok.deployment, "cocogen");
+
+    // Submit after shutdown: typed, synchronous — and shutdown itself
+    // must not hang on the outstanding client clone.
+    let client = coord.client();
+    let report = coord.shutdown_report();
+    assert_eq!(report.overall.completed, 1);
+    assert_eq!(
+        client.submit(vec![0.0; ELEMS]).err(),
+        Some(ServeError::Stopped)
+    );
+}

@@ -14,7 +14,7 @@ use cocopie::codegen::{build_plan, ExecPlan, PruneConfig, Scheme};
 use cocopie::coordinator::backend::nhwc_to_chw;
 use cocopie::coordinator::{
     Backend, BatchPolicy, Coordinator, ModelSignature, NativeBackend,
-    RouterPolicy, ServeConfig,
+    RouterPolicy, ServeConfig, ServeError,
 };
 use cocopie::exec::ModelExecutor;
 use cocopie::ir::{Chw, IrBuilder};
@@ -77,12 +77,12 @@ fn native_coordinator_matches_direct_executor() {
         .map(|img| coord.submit(img.clone()).unwrap())
         .collect();
     for (img, p) in imgs.iter().zip(pending) {
-        let pred = p.recv().expect("prediction");
+        let pred = p.recv().expect("reply").expect("served");
         let (class, score) = direct_predict(&plan, img);
         assert_eq!(pred.class, class);
         assert!((pred.score - score).abs() < 1e-6,
                 "served {} vs direct {}", pred.score, score);
-        assert_eq!(pred.backend, "native");
+        assert_eq!(&*pred.backend, "native");
         assert!(pred.latency_ms >= 0.0);
     }
     let s = coord.shutdown();
@@ -113,11 +113,11 @@ fn quant_coordinator_matches_direct_quant_executor() {
         .map(|img| coord.submit(img.clone()).unwrap())
         .collect();
     for (img, p) in imgs.iter().zip(pending) {
-        let pred = p.recv().expect("prediction");
+        let pred = p.recv().expect("reply").expect("served");
         let (class, score) = direct_predict(&plan, img);
         assert_eq!(pred.class, class);
         assert_eq!(pred.score, score, "int8 serving diverged from direct");
-        assert_eq!(pred.backend, "native-int8");
+        assert_eq!(&*pred.backend, "native-int8");
     }
     let s = coord.shutdown();
     assert_eq!(s.completed, 24);
@@ -149,7 +149,9 @@ fn quant_and_fp32_variants_serve_side_by_side() {
         .collect();
     let mut by_backend = std::collections::HashMap::new();
     for p in pending {
-        let pred = p.recv().expect("prediction");
+        let pred = p.recv().expect("reply").expect("served");
+        // Both backends sit behind one anonymous deployment.
+        assert_eq!(&*pred.deployment, "default");
         *by_backend.entry(pred.backend).or_insert(0usize) += 1;
     }
     let report = coord.shutdown_report();
@@ -185,7 +187,7 @@ fn native_concurrent_clients_batch_and_complete() {
                     .map(|img| client.submit(img.clone()).unwrap())
                     .collect();
                 for (img, p) in imgs.iter().zip(pending) {
-                    let pred = p.recv().expect("prediction");
+                    let pred = p.recv().expect("reply").expect("served");
                     let (class, _) = direct_predict(&plan, img);
                     assert_eq!(pred.class, class);
                 }
@@ -223,7 +225,7 @@ fn split_router_spreads_load_across_variants() {
         .collect();
     let mut by_backend = std::collections::HashMap::new();
     for p in pending {
-        let pred = p.recv().expect("prediction");
+        let pred = p.recv().expect("reply").expect("served");
         *by_backend.entry(pred.backend).or_insert(0usize) += 1;
     }
     let report = coord.shutdown_report();
@@ -234,7 +236,7 @@ fn split_router_spreads_load_across_variants() {
             "dense never served: {by_backend:?}");
     // Per-backend metrics add up to the aggregate.
     let sum: u64 = report
-        .per_backend
+        .backends()
         .iter()
         .map(|(_, s)| s.completed)
         .sum();
@@ -281,8 +283,9 @@ fn failover_reroutes_to_healthy_backend() {
         .map(|img| coord.submit(img.clone()).unwrap())
         .collect();
     for (img, p) in imgs.iter().zip(pending) {
-        let pred = p.recv().expect("prediction despite primary failure");
-        assert_eq!(pred.backend, "native");
+        let pred = p.recv().expect("reply")
+            .expect("prediction despite primary failure");
+        assert_eq!(&*pred.backend, "native");
         let (class, _) = direct_predict(&plan, img);
         assert_eq!(pred.class, class);
     }
@@ -309,7 +312,12 @@ fn all_backends_failing_rejects_cleanly() {
         .map(|img| coord.submit(img.clone()).unwrap())
         .collect();
     for p in pending {
-        assert!(p.recv().is_err(), "rejected request must drop the reply");
+        // The rejection is typed — not a hung or dropped recv.
+        assert!(
+            matches!(p.recv().expect("reply"),
+                     Err(ServeError::Exhausted)),
+            "exhausted request must see a typed rejection"
+        );
     }
     let s = coord.shutdown();
     assert_eq!(s.completed, 0);
@@ -376,7 +384,7 @@ fn pjrt_serves_requests_and_batches() {
         pending.push(client.submit(img).unwrap());
     }
     for p in pending {
-        let pred = p.recv().expect("prediction");
+        let pred = p.recv().expect("reply").expect("served");
         assert!(pred.class < 16);
         assert!(pred.score.is_finite());
         assert!(pred.latency_ms >= 0.0);
@@ -396,8 +404,8 @@ fn pjrt_deterministic_predictions_same_image() {
     };
     let client = coord.client();
     let img: Vec<f32> = (0..768).map(|i| (i % 97) as f32 / 97.0).collect();
-    let a = client.submit(img.clone()).unwrap().recv().unwrap();
-    let b = client.submit(img).unwrap().recv().unwrap();
+    let a = client.submit(img.clone()).unwrap().recv().unwrap().unwrap();
+    let b = client.submit(img).unwrap().recv().unwrap().unwrap();
     assert_eq!(a.class, b.class);
     assert!((a.score - b.score).abs() < 1e-4);
     drop(client);
