@@ -21,15 +21,24 @@
 //! (`--smoke --multi` is the multi-deployment smoke step, asserting
 //! SLA-routed traffic reached 2+ deployments).
 //!
+//! `--overload` replaces the scenes with the bounded soak smoke:
+//! measure the deployment's closed-loop capacity, then offer ~2 s of
+//! open-loop traffic at 2x that rate against a small queue cap. The
+//! coordinator must shed the overflow typed (`Overloaded`), keep
+//! goodput nonzero, and answer every reply channel — zero hung
+//! requests. `--smoke --overload` is the CI soak step.
+//!
 //! Run: `cargo run --release --example serve
-//!       [-- --quant | --auto | --multi | --fanout | --smoke]`
+//!       [-- --quant | --auto | --multi | --fanout | --smoke
+//!        | --overload]`
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use cocopie::ir::{zoo, Chw, IrBuilder};
+use cocopie::ir::{zoo, Chw, IrBuilder, ModelIR};
 use cocopie::prelude::*;
+use cocopie::util::bench::{arrival_schedule, open_loop_drive};
 use cocopie::util::rng::Rng;
 
 /// Open-loop mixed-SLA load; returns (wall seconds, served count per
@@ -69,12 +78,105 @@ fn drive(coord: &Coordinator, elems: usize, n_requests: usize, seed: u64)
     (t0.elapsed().as_secs_f64(), routed)
 }
 
+/// The bounded soak smoke (`--overload`): measure closed-loop
+/// capacity, then offer 2x of it open-loop against a 32-deep queue.
+/// Asserts nonzero goodput, zero hung reply channels, and zero
+/// non-shed failures — sustained overload degrades to typed
+/// `Overloaded` sheds, never to hangs.
+fn overload_scene(ir: &ModelIR, policy: BatchPolicy, smoke: bool)
+                  -> anyhow::Result<()> {
+    const QUEUE_CAP: usize = 32;
+    let elems = ir.input.c * ir.input.h * ir.input.w;
+    let mk = || -> anyhow::Result<Coordinator> {
+        Ok(Coordinator::builder()
+            .policy(policy)
+            .queue_cap(QUEUE_CAP)
+            .register(
+                Deployment::builder("cocogen", ir)
+                    .scheme(Scheme::CocoGen)
+                    .seed(7)
+                    .build()?,
+            )
+            .start()?)
+    };
+    // Capacity probe: closed-loop with the in-flight window held under
+    // the soft watermark (cap/2 = 16), so nothing sheds and the
+    // measured rate is the service rate.
+    let probe = if smoke { 96 } else { 256 };
+    let cap_coord = mk()?;
+    let client = cap_coord.client();
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::new();
+    for _ in 0..probe {
+        if pending.len() >= 8 {
+            let _ = pending.pop_front().unwrap().recv();
+        }
+        pending.push_back(client.submit(vec![0.5; elems])?);
+    }
+    while let Some(p) = pending.pop_front() {
+        let _ = p.recv();
+    }
+    let capacity = probe as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    drop(client);
+    cap_coord.shutdown();
+
+    let rate = capacity * 2.0;
+    let n_req = ((rate * 2.0) as usize).clamp(64, 20_000);
+    println!(
+        "overload soak: capacity ~{capacity:.0} rps, offering {n_req} \
+         requests open-loop at {rate:.0} rps (2x) against queue cap \
+         {QUEUE_CAP}"
+    );
+    let coord = mk()?;
+    let client = coord.client();
+    let sched = arrival_schedule(rate, n_req, 0x50A1);
+    let r = open_loop_drive(&client, elems, &sched, Sla::mixed,
+                            Duration::from_secs(20));
+    drop(client);
+    let report = coord.shutdown_report();
+    println!(
+        "  goodput {:.0} rps: {} completed, {} shed, {} failed, \
+         {} hung in {:.2}s",
+        r.goodput_rps(), r.completed, r.shed, r.failed, r.hung,
+        r.elapsed_s
+    );
+    for c in &r.classes {
+        println!(
+            "  {:8} offered {:5}  completed {:5}  shed {:5}  \
+             p99 {:7.2} ms",
+            c.sla.label(), c.offered, c.completed, c.shed, c.p99_ms
+        );
+    }
+    println!(
+        "  queue depth high-water {}/{QUEUE_CAP}, {} sheds counted by \
+         metrics",
+        report.overall.queue_depth_max, report.overall.shed
+    );
+    anyhow::ensure!(r.hung == 0,
+                    "overload soak: {} reply channels hung", r.hung);
+    anyhow::ensure!(r.failed == 0,
+                    "overload soak: {} non-shed failures", r.failed);
+    anyhow::ensure!(
+        r.completed > 0 && r.goodput_rps() > 0.0,
+        "overload soak: zero goodput ({} offered, {} shed)",
+        r.offered, r.shed
+    );
+    anyhow::ensure!(
+        report.overall.queue_depth_max <= QUEUE_CAP,
+        "overload soak: queue depth {} exceeded cap {QUEUE_CAP}",
+        report.overall.queue_depth_max
+    );
+    println!("overload soak: pass");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let quant = std::env::args().any(|a| a == "--quant");
     let auto = std::env::args().any(|a| a == "--auto");
     let multi = std::env::args().any(|a| a == "--multi");
     let fanout = std::env::args().any(|a| a == "--fanout");
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let overload = std::env::args().any(|a| a == "--overload");
     let batch_mode = if fanout {
         NativeBatchMode::FanOut
     } else {
@@ -95,6 +197,9 @@ fn main() -> anyhow::Result<()> {
         max_batch: 8,
         max_wait: Duration::from_millis(2),
     };
+    if overload {
+        return overload_scene(&ir, policy, smoke);
+    }
 
     // --- 1. named deployments of the co-design menu, one coordinator --
     // Each builder run is the paper's staged pipeline: IR → scheme →

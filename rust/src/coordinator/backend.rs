@@ -14,7 +14,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::codegen::ExecPlan;
-use crate::exec::{ExecutorPool, ModelExecutor, Tensor};
+use crate::exec::{ElasticConfig, ExecutorPool, ModelExecutor, ScaleLog,
+                  Tensor};
 use crate::runtime::{DeviceInputs, Executable, HostTensor, Runtime};
 use crate::util::threadpool;
 
@@ -87,6 +88,15 @@ pub trait Backend: Send {
     /// unpadded); returns logits `[n, classes]`. Backends that compiled
     /// for a fixed batch (PJRT) pad internally and slice the result.
     fn infer_batch(&mut self, images: &HostTensor) -> Result<HostTensor>;
+
+    /// Congestion hint from the coordinator: the deployment's queue
+    /// depth (requests admitted and not yet served) observed when the
+    /// batch now arriving was dispatched. Called on the worker thread
+    /// before each [`Backend::infer_batch`]. Elastic backends feed it
+    /// to their pool's watermark controller
+    /// ([`crate::exec::ExecutorPool::observe_queue_depth`]); the
+    /// default ignores it.
+    fn queue_hint(&mut self, _depth: usize) {}
 }
 
 /// Convert one flattened NHWC image into the planar CHW [`Tensor`] the
@@ -152,6 +162,13 @@ pub struct NativeBackend {
     /// Reusable packed `[N][C][H][W]` staging buffer for the fused
     /// path's NHWC conversion (warm after the first batch).
     packed: Vec<f32>,
+    /// When set, `compile()` builds the fan-out pool elastic under this
+    /// config instead of a fixed-width one.
+    elastic: Option<ElasticConfig>,
+    /// Scale-event record shared with the pool — created eagerly so
+    /// callers can keep a handle ([`NativeBackend::scale_log`]) before
+    /// registration consumes the backend.
+    scale_log: Arc<ScaleLog>,
 }
 
 impl NativeBackend {
@@ -172,6 +189,8 @@ impl NativeBackend {
             pool: None,
             fused: None,
             packed: Vec::new(),
+            elastic: None,
+            scale_log: ScaleLog::new(),
         }
     }
 
@@ -181,6 +200,25 @@ impl NativeBackend {
                            -> NativeBackend {
         self.mode = mode;
         self
+    }
+
+    /// Make the fan-out pool elastic: `cfg.max` slots allocated at
+    /// compile time, `cfg.floor` active, resized at queue-depth
+    /// watermark crossings fed in through [`Backend::queue_hint`].
+    /// Only the fan-out pool scales, so this composes with
+    /// [`NativeBatchMode::Auto`]/[`NativeBatchMode::FanOut`] (a forced
+    /// `Fused` backend has no pool to scale). Keep a
+    /// [`NativeBackend::scale_log`] handle before registering the
+    /// backend to observe its scale decisions.
+    pub fn with_elastic(mut self, cfg: ElasticConfig) -> NativeBackend {
+        self.elastic = Some(cfg);
+        self
+    }
+
+    /// The shared scale-event record (empty until traffic crosses a
+    /// watermark; forever empty on non-elastic backends).
+    pub fn scale_log(&self) -> Arc<ScaleLog> {
+        self.scale_log.clone()
     }
 }
 
@@ -208,8 +246,16 @@ impl Backend for NativeBackend {
         // peak_activation_bytes of arena; the fused pipeline is
         // max_batch x). Auto needs both.
         if self.mode != NativeBatchMode::Fused {
-            self.pool =
-                Some(ExecutorPool::new(self.plan.clone(), self.workers));
+            self.pool = Some(match self.elastic {
+                Some(cfg) => ExecutorPool::new_elastic(
+                    self.plan.clone(),
+                    cfg,
+                    self.scale_log.clone(),
+                ),
+                None => {
+                    ExecutorPool::new(self.plan.clone(), self.workers)
+                }
+            });
         }
         if self.mode != NativeBatchMode::FanOut {
             // The fused pipeline shares every weight Arc with the
@@ -283,6 +329,12 @@ impl Backend for NativeBackend {
             logits.extend_from_slice(&t.data);
         }
         Ok(HostTensor::f32(&[n, self.classes], logits))
+    }
+
+    fn queue_hint(&mut self, depth: usize) {
+        if let Some(pool) = &self.pool {
+            pool.observe_queue_depth(depth);
+        }
     }
 }
 

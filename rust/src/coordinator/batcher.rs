@@ -40,6 +40,18 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Outcome of one [`ShardBatcher::push`].
+#[derive(Debug, PartialEq)]
+pub enum Push<T> {
+    /// The push filled the shard; its whole batch comes back.
+    Full(Vec<T>),
+    /// Queued; the shard waits for more items or its deadline.
+    Queued,
+    /// The shard is at its queue cap; the item is handed back so the
+    /// caller can shed it with a typed error.
+    Shed(T),
+}
+
 /// Per-shard batch accumulation under one [`BatchPolicy`]: the
 /// multi-deployment leader routes each request to a deployment (shard),
 /// pushes it here, and flushes a shard's batch when it fills
@@ -47,9 +59,16 @@ impl Default for BatchPolicy {
 /// at the shard's *first* request's enqueue time, so time a request
 /// already spent queued (e.g. behind failover retries) counts against
 /// `max_wait` — expires ([`ShardBatcher::take_expired`]).
+///
+/// Each shard's queue is bounded by [`ShardBatcher::with_queue_cap`]:
+/// a push into a full shard returns [`Push::Shed`] *without* arming the
+/// shard's deadline, so an interval in which every request is shed
+/// leaves no pending deadline and the leader parks on its receive
+/// timeout instead of busy-looping on phantom wakeups.
 pub struct ShardBatcher<T> {
     max_batch: usize,
     max_wait: Duration,
+    queue_cap: usize,
     shards: Vec<Shard<T>>,
 }
 
@@ -59,10 +78,19 @@ struct Shard<T> {
 }
 
 impl<T> ShardBatcher<T> {
+    /// Unbounded shards (no admission at the batcher layer).
     pub fn new(n_shards: usize, policy: BatchPolicy) -> ShardBatcher<T> {
+        Self::with_queue_cap(n_shards, policy, usize::MAX)
+    }
+
+    /// Shards bounded at `queue_cap` pending items each; a push past
+    /// the cap returns [`Push::Shed`].
+    pub fn with_queue_cap(n_shards: usize, policy: BatchPolicy,
+                          queue_cap: usize) -> ShardBatcher<T> {
         ShardBatcher {
             max_batch: policy.max_batch.max(1),
             max_wait: policy.max_wait,
+            queue_cap,
             shards: (0..n_shards)
                 .map(|_| Shard {
                     items: Vec::new(),
@@ -72,24 +100,38 @@ impl<T> ShardBatcher<T> {
         }
     }
 
-    /// Queue `item` on `shard`; returns the shard's full batch when
-    /// this push fills it. A shard's deadline anchors at its first
-    /// item's `enqueued` time (a pre-aged request flushes on the next
-    /// [`ShardBatcher::take_expired`] instead of waiting `max_wait`
-    /// again).
+    /// Queue `item` on `shard`; returns [`Push::Full`] with the whole
+    /// batch when this push fills it, [`Push::Shed`] handing the item
+    /// back when the shard is at its queue cap. A shard's deadline
+    /// anchors at its first item's `enqueued` time (a pre-aged request
+    /// flushes on the next [`ShardBatcher::take_expired`] instead of
+    /// waiting `max_wait` again).
     pub fn push(&mut self, shard: usize, item: T, enqueued: Instant)
-                -> Option<Vec<T>> {
+                -> Push<T> {
         let s = &mut self.shards[shard];
+        // The cap check precedes deadline arming: a shed push into an
+        // empty shard (queue_cap == 0, or a full shed storm) must not
+        // leave a deadline on a shard with nothing to flush — that
+        // stale deadline would wake the leader every sweep and spin it.
+        if s.items.len() >= self.queue_cap {
+            return Push::Shed(item);
+        }
         if s.items.is_empty() {
             s.deadline = Some(enqueued + self.max_wait);
         }
         s.items.push(item);
         if s.items.len() >= self.max_batch {
             s.deadline = None;
-            Some(std::mem::take(&mut s.items))
+            Push::Full(std::mem::take(&mut s.items))
         } else {
-            None
+            Push::Queued
         }
+    }
+
+    /// Pending (queued, not yet dispatched) items on `shard` — the
+    /// admission controller's live congestion signal.
+    pub fn depth(&self, shard: usize) -> usize {
+        self.shards[shard].items.len()
     }
 
     /// The earliest pending deadline across shards — how long the
@@ -138,12 +180,14 @@ mod tests {
         };
         let mut b: ShardBatcher<u32> = ShardBatcher::new(2, policy);
         let now = Instant::now();
-        assert!(b.push(0, 1, now).is_none());
-        assert!(b.push(1, 10, now).is_none());
-        assert!(b.push(0, 2, now).is_none());
+        assert_eq!(b.push(0, 1, now), Push::Queued);
+        assert_eq!(b.push(1, 10, now), Push::Queued);
+        assert_eq!(b.push(0, 2, now), Push::Queued);
         // Shard 0 fills independently of shard 1.
-        assert_eq!(b.push(0, 3, now), Some(vec![1, 2, 3]));
+        assert_eq!(b.push(0, 3, now), Push::Full(vec![1, 2, 3]));
         assert!(!b.is_empty(), "shard 1 still holds its item");
+        assert_eq!(b.depth(0), 0);
+        assert_eq!(b.depth(1), 1);
         assert_eq!(b.drain(), vec![(1, vec![10])]);
         assert!(b.is_empty());
     }
@@ -158,7 +202,7 @@ mod tests {
         let now = Instant::now();
         b.push(0, 1, now);
         assert!(b.next_deadline().is_some());
-        assert!(b.push(0, 2, now).is_some());
+        assert!(matches!(b.push(0, 2, now), Push::Full(_)));
         // The flushed shard must not keep a stale deadline that would
         // wake the leader (or double-flush) later.
         assert!(b.next_deadline().is_none());
@@ -203,5 +247,50 @@ mod tests {
         assert_eq!(b.next_deadline(), Some(dl),
                    "deadline must stay anchored at the first request");
         assert_eq!(b.take_expired(dl), vec![(0, vec![1, 2])]);
+    }
+
+    #[test]
+    fn capped_shard_sheds_and_hands_the_item_back() {
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(100),
+        };
+        let mut b: ShardBatcher<u32> =
+            ShardBatcher::with_queue_cap(1, policy, 2);
+        let now = Instant::now();
+        assert_eq!(b.push(0, 1, now), Push::Queued);
+        assert_eq!(b.push(0, 2, now), Push::Queued);
+        assert_eq!(b.depth(0), 2);
+        // At the cap: the item comes back untouched for typed shedding.
+        assert_eq!(b.push(0, 3, now), Push::Shed(3));
+        assert_eq!(b.depth(0), 2, "a shed push must not grow the shard");
+        // The queued batch still flushes normally on its deadline.
+        let dl = b.next_deadline().unwrap();
+        assert_eq!(b.take_expired(dl), vec![(0, vec![1, 2])]);
+    }
+
+    #[test]
+    fn full_shed_interval_leaves_no_deadline_to_spin_on() {
+        // Regression: with a zero-capacity queue every push sheds. The
+        // old code armed the deadline before the cap check, leaving an
+        // empty shard with a pending deadline — next_deadline() would
+        // then report an already-expired instant forever while
+        // take_expired() flushed nothing, so the leader woke every
+        // sweep and busy-looped. A fully-shed interval must leave the
+        // batcher with no deadline at all so the leader parks.
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        };
+        let mut b: ShardBatcher<u32> =
+            ShardBatcher::with_queue_cap(2, policy, 0);
+        let now = Instant::now();
+        for i in 0..16 {
+            assert_eq!(b.push((i % 2) as usize, i, now), Push::Shed(i));
+        }
+        assert!(b.is_empty());
+        assert_eq!(b.next_deadline(), None,
+                   "shed-only traffic must not arm a deadline");
+        assert!(b.take_expired(now + Duration::from_secs(1)).is_empty());
     }
 }

@@ -84,6 +84,9 @@ struct Inner {
     completed: u64,
     rejected: u64,
     failovers: u64,
+    shed: u64,
+    queue_depth: usize,
+    queue_depth_max: usize,
 }
 
 impl Default for Inner {
@@ -96,6 +99,9 @@ impl Default for Inner {
             completed: 0,
             rejected: 0,
             failovers: 0,
+            shed: 0,
+            queue_depth: 0,
+            queue_depth_max: 0,
         }
     }
 }
@@ -113,6 +119,14 @@ pub struct Summary {
     pub rejected: u64,
     /// Requests re-routed to another backend after an infer failure.
     pub failovers: u64,
+    /// Requests turned away at admission (`ServeError::Overloaded`).
+    /// Shed requests never enter the latency reservoir or the decayed
+    /// mean — admission decisions stay pinned to *served* latency.
+    pub shed: u64,
+    /// Intake queue depth at the last gauge update.
+    pub queue_depth: usize,
+    /// High-water intake queue depth over the sink's lifetime.
+    pub queue_depth_max: usize,
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub mean_queue_ms: f64,
@@ -208,6 +222,20 @@ impl Metrics {
         self.inner.lock().unwrap().failovers += 1;
     }
 
+    /// One request turned away at admission. Deliberately touches only
+    /// the `shed` counter: a shed request has no service latency, so it
+    /// must not perturb the reservoir or the EWMA the SLA router reads.
+    pub fn record_shed(&self) {
+        self.inner.lock().unwrap().shed += 1;
+    }
+
+    /// Update the intake-queue depth gauge (and its high-water mark).
+    pub fn set_queue_depth(&self, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_depth = depth;
+        g.queue_depth_max = g.queue_depth_max.max(depth);
+    }
+
     pub fn summary(&self) -> Summary {
         let g = self.inner.lock().unwrap();
         let [p50, p99] = g.latencies_s.percentiles([50.0, 99.0]);
@@ -216,6 +244,9 @@ impl Metrics {
             completed: g.completed,
             rejected: g.rejected,
             failovers: g.failovers,
+            shed: g.shed,
+            queue_depth: g.queue_depth,
+            queue_depth_max: g.queue_depth_max,
             p50_ms: p50 * 1e3,
             p99_ms: p99 * 1e3,
             mean_queue_ms: if g.completed == 0 {
@@ -320,6 +351,51 @@ mod tests {
         }
         let drifted = m.live_latency_ms().unwrap();
         assert!(drifted > 40.0, "estimate stuck at {drifted} ms");
+    }
+
+    #[test]
+    fn shed_requests_never_contaminate_latency_state() {
+        let m = Metrics::new();
+        for _ in 0..1000 {
+            m.record_shed();
+        }
+        // No latency state may exist: the reservoir is untouched, the
+        // decayed mean is still absent, and the router would fall back
+        // to the deployment's measured prior.
+        assert_eq!(m.live_latency_ms(), None,
+                   "sheds must not seed the EWMA");
+        {
+            let g = m.inner.lock().unwrap();
+            assert_eq!(g.latencies_s.seen, 0);
+            assert!(g.latencies_s.samples.is_empty());
+        }
+        let s = m.summary();
+        assert_eq!(s.shed, 1000);
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.p99_ms, 0.0);
+        // And sheds interleaved with real completions leave the served
+        // latency estimate exactly where completions alone put it.
+        m.record(Duration::from_millis(8), Duration::ZERO, 1);
+        let before = m.live_latency_ms().unwrap();
+        for _ in 0..100 {
+            m.record_shed();
+        }
+        assert_eq!(m.live_latency_ms().unwrap(), before);
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_current_and_high_water() {
+        let m = Metrics::new();
+        assert_eq!(m.summary().queue_depth, 0);
+        assert_eq!(m.summary().queue_depth_max, 0);
+        m.set_queue_depth(3);
+        m.set_queue_depth(9);
+        m.set_queue_depth(2);
+        let s = m.summary();
+        assert_eq!(s.queue_depth, 2, "gauge reads the last update");
+        assert_eq!(s.queue_depth_max, 9, "high-water mark sticks");
     }
 
     #[test]

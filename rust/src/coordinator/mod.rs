@@ -44,7 +44,8 @@ pub mod router;
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender,
+                      SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -54,7 +55,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::runtime::{HostTensor, Runtime};
 pub use backend::{Backend, ModelSignature, NativeBackend,
                   NativeBatchMode, PjrtBackend};
-pub use batcher::{BatchPolicy, ShardBatcher};
+pub use batcher::{BatchPolicy, Push, ShardBatcher};
 pub use deployment::{Deployment, DeploymentBuilder};
 pub use metrics::{BackendReport, DeploymentReport, Metrics, ServeReport,
                   Summary};
@@ -77,6 +78,12 @@ pub enum ServeError {
     NoAdmissibleVariant { sla: Sla },
     /// The request failed on every backend of its deployment.
     Exhausted,
+    /// Load shed: the deployment's bounded queue is past the watermark
+    /// this request's SLA class may enter at (Standard/Quality shed at
+    /// the soft watermark, Realtime only when hard-full). The embedded
+    /// hint grows with queue depth — callers should back off at least
+    /// this long before retrying.
+    Overloaded { retry_after_ms: u64 },
     /// The coordinator has shut down (or is shutting down).
     Stopped,
 }
@@ -99,6 +106,9 @@ impl std::fmt::Display for ServeError {
             ServeError::Exhausted => {
                 write!(f, "request failed on every backend of its \
                            deployment")
+            }
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded; retry in {retry_after_ms} ms")
             }
             ServeError::Stopped => write!(f, "coordinator stopped"),
         }
@@ -176,19 +186,32 @@ pub struct Prediction {
 }
 
 /// Handle for submitting requests.
+///
+/// Submission is backpressured end to end: the intake channel is
+/// *bounded* (never an unbounded buffer), and a coordinator whose
+/// outstanding work has saturated every queue fails submissions fast
+/// with [`ServeError::Overloaded`] instead of buffering them — an
+/// open-loop client can never build an invisible backlog inside the
+/// coordinator.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Submit>,
+    tx: SyncSender<Submit>,
     image_elems: usize,
     names: Arc<Vec<Arc<str>>>,
     closing: Arc<AtomicBool>,
+    /// Shared count of admitted, not-yet-served requests.
+    pending: Arc<AtomicUsize>,
+    /// Sync-path shed threshold: when `pending` reaches it, every
+    /// queue is saturated and submission fails without a round-trip.
+    intake_bound: usize,
 }
 
 impl Client {
     /// Submit a typed request; returns the receiver for the
     /// prediction. Submission-time failures (wrong image size, unknown
-    /// deployment name, coordinator stopped) are returned here;
-    /// routing/execution failures arrive typed on the receiver.
+    /// deployment name, saturated intake, coordinator stopped) are
+    /// returned here; routing/execution failures arrive typed on the
+    /// receiver.
     pub fn infer(&self, req: InferRequest<'_>)
                  -> Result<Receiver<PredictionResult>, ServeError> {
         if req.image.len() != self.image_elems {
@@ -211,17 +234,37 @@ impl Client {
         if self.closing.load(Ordering::SeqCst) {
             return Err(ServeError::Stopped);
         }
+        // Fail-fast shed: outstanding work already exceeds every
+        // queue's capacity, so the leader would only shed this request
+        // anyway — answer here without occupying an intake slot.
+        let depth = self.pending.load(Ordering::SeqCst);
+        if depth >= self.intake_bound {
+            return Err(ServeError::Overloaded {
+                retry_after_ms: router::retry_after_ms(depth, 1.0),
+            });
+        }
         let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Submit {
-                image: req.image,
-                sla: req.sla,
-                deployment,
-                enqueued: Instant::now(),
-                reply: rtx,
-            })
-            .map_err(|_| ServeError::Stopped)?;
-        Ok(rrx)
+        match self.tx.try_send(Submit {
+            image: req.image,
+            sla: req.sla,
+            deployment,
+            enqueued: Instant::now(),
+            reply: rtx,
+        }) {
+            Ok(()) => Ok(rrx),
+            // A full intake channel is backpressure, not an error in
+            // the request: the caller gets a typed shed with a
+            // depth-scaled back-off hint.
+            Err(TrySendError::Full(_)) => Err(ServeError::Overloaded {
+                retry_after_ms: router::retry_after_ms(
+                    self.pending.load(Ordering::SeqCst),
+                    1.0,
+                ),
+            }),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(ServeError::Stopped)
+            }
+        }
     }
 
     /// Thin convenience wrapper: a `Standard`-class request with the
@@ -263,15 +306,26 @@ impl ServeConfig {
 /// A batch of requests dispatched to one backend worker.
 struct Job {
     reqs: Vec<Request>,
+    /// The deployment's queue depth when this batch was dispatched —
+    /// forwarded to the backend as [`Backend::queue_hint`] (elastic
+    /// pools scale on it).
+    depth: usize,
 }
 
+/// Default per-deployment queue bound (outstanding requests). Generous
+/// on purpose: closed-loop clients never approach it, so existing
+/// callers see no sheds, while an open-loop overload is still bounded —
+/// the queue can never grow without limit.
+pub const DEFAULT_QUEUE_CAP: usize = 4096;
+
 /// Builder for a multi-deployment [`Coordinator`]: register named
-/// deployments, set the batching policy and the SLA admission limits,
-/// then [`CoordinatorBuilder::start`].
+/// deployments, set the batching policy, the SLA admission limits and
+/// the queue bound, then [`CoordinatorBuilder::start`].
 pub struct CoordinatorBuilder {
     deployments: Vec<Deployment>,
     policy: BatchPolicy,
     sla: SlaPolicy,
+    queue_cap: usize,
 }
 
 impl CoordinatorBuilder {
@@ -284,6 +338,15 @@ impl CoordinatorBuilder {
     /// Per-SLA admission limits for the live variant router.
     pub fn sla(mut self, sla: SlaPolicy) -> CoordinatorBuilder {
         self.sla = sla;
+        self
+    }
+
+    /// Bound each deployment's queue at `cap` outstanding (admitted,
+    /// not yet served) requests. From the soft watermark (`cap / 2`)
+    /// Standard/Quality requests shed with [`ServeError::Overloaded`];
+    /// at `cap` Realtime sheds too. Default [`DEFAULT_QUEUE_CAP`].
+    pub fn queue_cap(mut self, cap: usize) -> CoordinatorBuilder {
+        self.queue_cap = cap;
         self
     }
 
@@ -301,6 +364,7 @@ impl CoordinatorBuilder {
             deployments,
             policy,
             sla,
+            queue_cap,
         } = self;
         ensure!(!deployments.is_empty(),
                 "register at least one deployment");
@@ -425,15 +489,27 @@ impl CoordinatorBuilder {
         let names: Arc<Vec<Arc<str>>> = Arc::new(
             dep_metrics.iter().map(|(n, _, _)| n.clone()).collect(),
         );
-        let (tx, rx) = mpsc::channel::<Submit>();
+        let n_deps = names.len();
+        // Bounded intake: the channel between clients and the leader
+        // holds at most one coordinator's worth of queue capacity
+        // (clamped to a sane range — the leader drains it far faster
+        // than backends serve, so it only fills when everything else
+        // already has). `intake_bound` is the fail-fast threshold:
+        // pending work can only exceed every per-deployment cap
+        // combined when the system is saturated.
+        let intake_cap =
+            queue_cap.saturating_mul(n_deps).clamp(64, 8192);
+        let intake_bound = queue_cap.saturating_mul(2 * n_deps);
+        let (tx, rx) = mpsc::sync_channel::<Submit>(intake_cap);
         let ctx = LeaderCtx {
             rx,
             retry_rx,
             deps,
             sla_router: Router::with_policy(variants, sla),
             policy,
+            queue_cap,
             global: global.clone(),
-            pending,
+            pending: pending.clone(),
             closing: closing.clone(),
             workers,
         };
@@ -444,6 +520,8 @@ impl CoordinatorBuilder {
                 image_elems,
                 names,
                 closing: closing.clone(),
+                pending,
+                intake_bound,
             },
             metrics: global,
             dep_metrics,
@@ -472,6 +550,7 @@ impl Coordinator {
             deployments: Vec::new(),
             policy: BatchPolicy::default(),
             sla: SlaPolicy::default(),
+            queue_cap: DEFAULT_QUEUE_CAP,
         }
     }
 
@@ -627,6 +706,10 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
     let classes = sig.classes;
     let name: Arc<str> = Arc::from(be.name());
     while let Ok(mut job) = ctx.jobs.recv() {
+        // Forward the dispatch-time congestion signal: elastic pools
+        // grow toward their max under sustained depth and shrink back
+        // once it subsides.
+        be.queue_hint(job.depth);
         let t0 = Instant::now();
         let n = job.reqs.len();
         let mut x = vec![0f32; n * elems];
@@ -767,7 +850,8 @@ fn leader_main(mut ctx: LeaderCtx) {
     // enough that an idle coordinator barely wakes.
     let idle = Duration::from_millis(20);
     let mut shards: ShardBatcher<Request> =
-        ShardBatcher::new(ctx.deps.len(), ctx.policy);
+        ShardBatcher::with_queue_cap(ctx.deps.len(), ctx.policy,
+                                     ctx.queue_cap);
     let mut open = true;
     while open || ctx.pending.load(Ordering::SeqCst) > 0 {
         while let Ok(reqs) = ctx.retry_rx.try_recv() {
@@ -834,7 +918,8 @@ fn drain_stopped(ctx: &LeaderCtx) {
 }
 
 /// Resolve a submission to a deployment (explicit name wins; otherwise
-/// the live SLA router picks) and queue it on that deployment's shard.
+/// the live SLA router picks), run SLA-aware admission against that
+/// deployment's queue depth, and queue the survivor on its shard.
 fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
           sub: Submit) {
     let d = match sub.deployment {
@@ -848,8 +933,22 @@ fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
             }
         },
     };
+    // Admission control before the request costs anything: shed by
+    // depth and live latency so Standard/Quality give way first and
+    // the deployment's outstanding work stays <= queue_cap. Sheds are
+    // counted on their own gauge — never in rejected/latency state.
+    let depth = ctx.sla_router.variants()[d].load() as usize;
+    if let Err(e) = ctx.sla_router.admit(sub.sla, d, depth,
+                                         ctx.queue_cap) {
+        let _ = sub.reply.send(Err(e));
+        ctx.global.record_shed();
+        ctx.deps[d].metrics.record_shed();
+        return;
+    }
     ctx.pending.fetch_add(1, Ordering::SeqCst);
     ctx.sla_router.variants()[d].begin();
+    ctx.deps[d].metrics.set_queue_depth(depth + 1);
+    ctx.global.set_queue_depth(ctx.pending.load(Ordering::SeqCst));
     let enqueued = sub.enqueued;
     let req = Request {
         image: sub.image,
@@ -859,8 +958,25 @@ fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
         failed: 0,
         tries: 0,
     };
-    if let Some(batch) = shards.push(d, req, enqueued) {
-        dispatch(ctx, d, batch);
+    match shards.push(d, req, enqueued) {
+        Push::Full(batch) => dispatch(ctx, d, batch),
+        Push::Queued => {}
+        // Second line of defense (admission already bounds outstanding
+        // work): a capped shard hands the request back; undo its
+        // accounting and shed it typed.
+        Push::Shed(req) => {
+            let hint = router::retry_after_ms(
+                depth,
+                ctx.sla_router.variants()[d].latency_ms(),
+            );
+            let _ = req.reply.send(Err(ServeError::Overloaded {
+                retry_after_ms: hint,
+            }));
+            ctx.global.record_shed();
+            ctx.deps[d].metrics.record_shed();
+            ctx.sla_router.variants()[d].end();
+            ctx.pending.fetch_sub(1, Ordering::SeqCst);
+        }
     }
 }
 
@@ -893,7 +1009,8 @@ fn dispatch(ctx: &mut LeaderCtx, d: usize, reqs: Vec<Request>) {
             first = k;
         }
     }
-    let mut job = Job { reqs };
+    let depth = ctx.sla_router.variants()[d].load() as usize;
+    let mut job = Job { reqs, depth };
     dep.states[first].begin();
     match dep.jobs[first].send(job) {
         Ok(()) => return,

@@ -261,6 +261,49 @@ impl Router {
     pub fn variants(&self) -> &[Variant] {
         &self.variants
     }
+
+    /// Admission control for deployment `dep`'s bounded queue,
+    /// currently `depth` requests deep under capacity `cap`.
+    ///
+    /// Shed order is strict and SLA-aware: `Standard`/`Quality` shed
+    /// first — at the soft watermark (`cap / 2`), or as soon as the
+    /// deployment's live latency exceeds the configured Realtime
+    /// budget while anything is queued — and `Realtime` sheds only
+    /// when the queue is hard-full. The embedded `retry_after_ms`
+    /// grows with `depth` (see [`retry_after_ms`]), so callers back
+    /// off harder the deeper the congestion.
+    pub fn admit(&self, sla: Sla, dep: usize, depth: usize, cap: usize)
+                 -> Result<(), ServeError> {
+        let lat = self.variants[dep].latency_ms();
+        let over_budget = self
+            .policy
+            .realtime_budget_ms
+            .is_some_and(|b| lat > b);
+        let shed = depth >= cap
+            || (sla != Sla::Realtime
+                && (depth >= cap / 2 || (depth > 0 && over_budget)));
+        if shed {
+            Err(ServeError::Overloaded {
+                retry_after_ms: retry_after_ms(depth, lat),
+            })
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Back-off hint embedded in [`ServeError::Overloaded`]: roughly the
+/// time for the queue ahead to drain at the deployment's live per-
+/// request latency, clamped to a sane range so an unmeasured (infinite
+/// prior) or sub-millisecond deployment still yields a usable hint.
+/// Strictly monotone in `depth`.
+pub fn retry_after_ms(depth: usize, latency_ms: f64) -> u64 {
+    let per = if latency_ms.is_finite() {
+        latency_ms.clamp(1.0, 1000.0)
+    } else {
+        1.0
+    };
+    ((depth as f64 + 1.0) * per).ceil() as u64
 }
 
 /// The k-th smallest value of `v` (1-based), on a stack copy — the
@@ -607,6 +650,77 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn admission_sheds_standard_before_realtime() {
+        let r = Router::new(vec![Variant::new("only", 5.0, 0.9)]);
+        let cap = 8;
+        // Below the soft watermark everyone is admitted.
+        assert!(r.admit(Sla::Standard, 0, 3, cap).is_ok());
+        assert!(r.admit(Sla::Realtime, 0, 3, cap).is_ok());
+        // From the soft watermark (cap/2) only Realtime still enters.
+        for depth in cap / 2..cap {
+            assert!(matches!(
+                r.admit(Sla::Standard, 0, depth, cap),
+                Err(ServeError::Overloaded { .. })
+            ));
+            assert!(matches!(
+                r.admit(Sla::Quality, 0, depth, cap),
+                Err(ServeError::Overloaded { .. })
+            ));
+            assert!(r.admit(Sla::Realtime, 0, depth, cap).is_ok(),
+                    "realtime must survive to the hard cap");
+        }
+        // Hard-full sheds every class.
+        assert!(matches!(
+            r.admit(Sla::Realtime, 0, cap, cap),
+            Err(ServeError::Overloaded { .. })
+        ));
+    }
+
+    #[test]
+    fn latency_over_budget_sheds_non_realtime_when_queued() {
+        let policy = SlaPolicy {
+            realtime_budget_ms: Some(3.0),
+            quality_floor: None,
+        };
+        let r = Router::with_policy(
+            vec![Variant::new("slow", 20.0, 0.9)],
+            policy,
+        );
+        // Empty queue: admitted even over budget (nothing to drain).
+        assert!(r.admit(Sla::Standard, 0, 0, 64).is_ok());
+        // Anything queued while the live latency exceeds the Realtime
+        // budget: Standard sheds so Realtime keeps its headroom.
+        assert!(matches!(
+            r.admit(Sla::Standard, 0, 1, 64),
+            Err(ServeError::Overloaded { .. })
+        ));
+        assert!(r.admit(Sla::Realtime, 0, 1, 64).is_ok());
+    }
+
+    #[test]
+    fn retry_after_grows_with_queue_depth() {
+        let mut last = 0u64;
+        for depth in 0..200 {
+            let hint = retry_after_ms(depth, 5.0);
+            assert!(hint > last, "hint must grow with depth");
+            last = hint;
+        }
+        // Unmeasured deployments still produce a finite positive hint.
+        assert!(retry_after_ms(10, f64::INFINITY) >= 1);
+        // And the typed error carries the hint through `admit`.
+        let r = Router::new(vec![Variant::new("v", 5.0, 0.9)]);
+        let e1 = r.admit(Sla::Standard, 0, 8, 8).unwrap_err();
+        let e2 = r.admit(Sla::Standard, 0, 16, 8).unwrap_err();
+        match (e1, e2) {
+            (
+                ServeError::Overloaded { retry_after_ms: a },
+                ServeError::Overloaded { retry_after_ms: b },
+            ) => assert!(b > a, "deeper queue must back off longer"),
+            other => panic!("expected Overloaded pair, got {other:?}"),
+        }
     }
 
     fn states(n: usize) -> Vec<Arc<BackendState>> {

@@ -181,6 +181,74 @@ impl ModelExecutor {
     }
 }
 
+/// Elastic sizing for an [`ExecutorPool`]: the active-slot count moves
+/// between `floor` and `max`, driven by queue-depth watermarks with
+/// consecutive-observation hysteresis so bursty depth readings don't
+/// thrash the pool. Slots are all allocated up front (scaling never
+/// recompiles or reallocates); scaling only changes how many may be
+/// claimed concurrently.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticConfig {
+    /// Minimum active slots (the scale-down target); at least 1.
+    pub floor: usize,
+    /// Maximum active slots (the scale-up ceiling).
+    pub max: usize,
+    /// Scale up one slot after `hysteresis` consecutive observations
+    /// at or above this queue depth.
+    pub high: usize,
+    /// Scale down one slot after `hysteresis` consecutive observations
+    /// at or below this depth; must be below `high` (the dead zone
+    /// between the watermarks is what prevents thrash).
+    pub low: usize,
+    /// Consecutive same-side observations required before either move.
+    pub hysteresis: usize,
+}
+
+/// One elastic resize of an [`ExecutorPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleEvent {
+    /// The queue depth observed at the watermark crossing.
+    pub depth: usize,
+    /// Active slots before the move.
+    pub from: usize,
+    /// Active slots after the move.
+    pub to: usize,
+}
+
+/// Shared append-only record of a pool's scale events — the handle a
+/// test or operator keeps after the pool itself is consumed by a
+/// serving backend ([`crate::coordinator::NativeBackend`]).
+#[derive(Default)]
+pub struct ScaleLog {
+    events: Mutex<Vec<ScaleEvent>>,
+}
+
+impl ScaleLog {
+    pub fn new() -> Arc<ScaleLog> {
+        Arc::new(ScaleLog::default())
+    }
+    fn push(&self, e: ScaleEvent) {
+        self.events.lock().unwrap().push(e);
+    }
+    /// Every scale event so far, in occurrence order.
+    pub fn events(&self) -> Vec<ScaleEvent> {
+        self.events.lock().unwrap().clone()
+    }
+}
+
+/// Watermark streak state of an elastic pool.
+#[derive(Default)]
+struct Streaks {
+    high: usize,
+    low: usize,
+}
+
+struct Elastic {
+    cfg: ElasticConfig,
+    state: Mutex<Streaks>,
+    log: Arc<ScaleLog>,
+}
+
 /// A fixed pool of [`ModelExecutor`] workers sharing one compiled
 /// pipeline: the plan is lowered exactly once per pool ("compile once,
 /// serve everywhere") and the pipeline's `Arc`-bound weights exist once
@@ -191,12 +259,18 @@ impl ModelExecutor {
 /// buffers. Executors run single-threaded (`threads = 1`): parallelism
 /// comes from running pool slots concurrently, which keeps per-image
 /// numerics bit-identical to a sequential `ModelExecutor::run` — the
-/// property the serving tests assert.
+/// property the serving tests assert, and the reason an elastic pool's
+/// results cannot depend on its size.
 ///
 /// Free slots live in a Condvar-blocked index queue: a claimer with no
 /// free slot *parks* until one is released instead of burning a core in
 /// a yield loop — pools shared across concurrent `run_batch` callers
 /// (several serving coordinators, tests) routinely oversubscribe.
+///
+/// An *elastic* pool ([`ExecutorPool::new_elastic`]) additionally
+/// bounds concurrent claims to its live `active` count, which
+/// [`ExecutorPool::observe_queue_depth`] moves between the configured
+/// floor and max at watermark crossings.
 pub struct ExecutorPool {
     slots: Vec<Mutex<ModelExecutor>>,
     /// Indices of currently-free slots.
@@ -205,6 +279,9 @@ pub struct ExecutorPool {
     /// Diagnostic: times a claimer had to park on the condvar (each
     /// increment is one blocking wait, not a spin iteration).
     waits: AtomicUsize,
+    /// Slots currently claimable (`slots.len()` for fixed pools).
+    active: AtomicUsize,
+    elastic: Option<Elastic>,
 }
 
 /// An exclusively-claimed pool slot; releases its index (and wakes one
@@ -256,12 +333,90 @@ impl ExecutorPool {
             free: Mutex::new((0..workers).collect()),
             available: Condvar::new(),
             waits: AtomicUsize::new(0),
+            active: AtomicUsize::new(workers),
+            elastic: None,
         }
     }
 
-    /// Number of executor slots.
+    /// An elastic pool: `cfg.max` slots allocated up front (one lowered
+    /// pipeline shared by all), `cfg.floor` of them active initially.
+    /// [`ExecutorPool::observe_queue_depth`] grows and shrinks the
+    /// active count at watermark crossings; every resize is appended to
+    /// `log`, the handle callers keep for observing scale decisions
+    /// after the pool is consumed by a serving backend.
+    pub fn new_elastic(plan: Arc<ExecPlan>, cfg: ElasticConfig,
+                       log: Arc<ScaleLog>) -> ExecutorPool {
+        assert!(cfg.floor >= 1, "elastic floor must be at least 1");
+        assert!(cfg.max >= cfg.floor,
+                "elastic max ({}) below floor ({})", cfg.max, cfg.floor);
+        assert!(cfg.low < cfg.high,
+                "elastic watermarks must satisfy low < high");
+        assert!(cfg.hysteresis >= 1, "hysteresis must be at least 1");
+        let mut pool = ExecutorPool::new(plan, cfg.max);
+        pool.active = AtomicUsize::new(cfg.floor);
+        pool.elastic = Some(Elastic {
+            cfg,
+            state: Mutex::new(Streaks::default()),
+            log,
+        });
+        pool
+    }
+
+    /// Number of executor slots (the elastic ceiling for elastic
+    /// pools).
     pub fn workers(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Slots currently claimable. Equals [`ExecutorPool::workers`] for
+    /// fixed pools; moves between the configured floor and max for
+    /// elastic ones.
+    pub fn active_workers(&self) -> usize {
+        self.active.load(Ordering::SeqCst).clamp(1, self.slots.len())
+    }
+
+    /// Feed one queue-depth observation to the elastic controller
+    /// (no-op on fixed pools). After `hysteresis` *consecutive*
+    /// observations at or above `high` the pool activates one more
+    /// slot (up to `max`); after `hysteresis` consecutive observations
+    /// at or below `low` it retires one (down to `floor`). A reading
+    /// in the dead zone between the watermarks resets both streaks, so
+    /// only sustained pressure — not a burst — moves the pool.
+    pub fn observe_queue_depth(&self, depth: usize) {
+        let Some(el) = &self.elastic else { return };
+        let mut st = el.state.lock().unwrap();
+        let active = self.active.load(Ordering::SeqCst);
+        if depth >= el.cfg.high && active < el.cfg.max {
+            st.high += 1;
+            st.low = 0;
+            if st.high >= el.cfg.hysteresis {
+                st.high = 0;
+                self.active.store(active + 1, Ordering::SeqCst);
+                el.log.push(ScaleEvent {
+                    depth,
+                    from: active,
+                    to: active + 1,
+                });
+                // Claimers may be parked with free-but-inactive slots
+                // available; the new active bound admits them.
+                self.available.notify_all();
+            }
+        } else if depth <= el.cfg.low && active > el.cfg.floor {
+            st.low += 1;
+            st.high = 0;
+            if st.low >= el.cfg.hysteresis {
+                st.low = 0;
+                self.active.store(active - 1, Ordering::SeqCst);
+                el.log.push(ScaleEvent {
+                    depth,
+                    from: active,
+                    to: active - 1,
+                });
+            }
+        } else {
+            st.high = 0;
+            st.low = 0;
+        }
     }
 
     /// How many times a claimer has blocked waiting for a slot. Bounded
@@ -279,8 +434,13 @@ impl ExecutorPool {
     fn claim(&self) -> PoolSlot<'_> {
         let mut free = self.free.lock().unwrap();
         let index = loop {
-            if let Some(i) = free.pop() {
-                break i;
+            // Only indices below the live active bound are claimable:
+            // a scaled-down elastic pool leaves its retired slots in
+            // the free list but never hands them out, and a scale-up
+            // (which re-checks here after notify_all) re-admits them.
+            let active = self.active.load(Ordering::SeqCst);
+            if let Some(pos) = free.iter().rposition(|&i| i < active) {
+                break free.swap_remove(pos);
             }
             self.waits.fetch_add(1, Ordering::Relaxed);
             free = self.available.wait(free).unwrap();
@@ -303,7 +463,8 @@ impl ExecutorPool {
     /// Run every input through the model, fanning items out across the
     /// pool via `util::threadpool`. Outputs are in input order.
     pub fn run_batch(&self, inputs: &[Tensor]) -> Vec<Tensor> {
-        threadpool::parallel_map(inputs.len(), self.slots.len(), |i| {
+        threadpool::parallel_map(inputs.len(), self.active_workers(),
+                                 |i| {
             Some(self.claim().run(&inputs[i]))
         })
         .into_iter()
@@ -319,7 +480,7 @@ impl ExecutorPool {
     where
         F: Fn(usize) -> Tensor + Sync,
     {
-        threadpool::parallel_map(n, self.slots.len(), |i| {
+        threadpool::parallel_map(n, self.active_workers(), |i| {
             let input = make(i);
             Some(self.claim().run(&input))
         })
@@ -557,6 +718,91 @@ mod tests {
             let want = seq.run(x);
             assert_eq!(want.data, got.data,
                        "quant pool diverged from sequential");
+        }
+    }
+
+    #[test]
+    fn elastic_pool_scales_at_pinned_watermark_crossings() {
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42)
+            .into_shared();
+        let cfg = ElasticConfig {
+            floor: 1,
+            max: 3,
+            high: 4,
+            low: 1,
+            hysteresis: 2,
+        };
+        let log = ScaleLog::new();
+        let pool = ExecutorPool::new_elastic(plan, cfg, log.clone());
+        assert_eq!(pool.workers(), 3, "all slots exist up front");
+        assert_eq!(pool.active_workers(), 1, "starts at the floor");
+        // A fixed depth trace must produce exactly the pinned events:
+        // two highs per step up, a dead-zone reading that resets the
+        // streaks, then two lows per step down.
+        for d in [5, 5, 5, 5, 2, 1, 1, 0, 0] {
+            pool.observe_queue_depth(d);
+        }
+        assert_eq!(
+            log.events(),
+            vec![
+                ScaleEvent { depth: 5, from: 1, to: 2 },
+                ScaleEvent { depth: 5, from: 2, to: 3 },
+                ScaleEvent { depth: 1, from: 3, to: 2 },
+                ScaleEvent { depth: 0, from: 2, to: 1 },
+            ]
+        );
+        assert_eq!(pool.active_workers(), 1, "back at the floor");
+        // Saturation: at max, highs are absorbed without events.
+        for _ in 0..10 {
+            pool.observe_queue_depth(100);
+        }
+        assert_eq!(pool.active_workers(), 3);
+        assert_eq!(log.events().len(), 6, "capped at max");
+        // A single low between highs (hysteresis) must not scale down.
+        pool.observe_queue_depth(0);
+        pool.observe_queue_depth(5);
+        pool.observe_queue_depth(0);
+        assert_eq!(pool.active_workers(), 3,
+                   "one-off lows must not shrink the pool");
+    }
+
+    #[test]
+    fn elastic_pool_matches_fixed_pool_bitwise() {
+        // Slot count must never leak into numerics: an elastic pool
+        // mid-scale produces the same bits as a fixed one.
+        let ir = tiny_ir();
+        let plan = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                              42)
+            .into_shared();
+        let cfg = ElasticConfig {
+            floor: 1,
+            max: 4,
+            high: 2,
+            low: 0,
+            hysteresis: 1,
+        };
+        let pool = ExecutorPool::new_elastic(plan.clone(), cfg,
+                                             ScaleLog::new());
+        let fixed = ExecutorPool::new(plan.clone(), 4);
+        let mut rng = Rng::seed_from(21);
+        let inputs: Vec<Tensor> = (0..8)
+            .map(|_| Tensor::random(3, 12, 12, &mut rng))
+            .collect();
+        let mut seq = ModelExecutor::new(&plan, 1);
+        for round in 0..3 {
+            // Scale somewhere new each round (up, up, down...).
+            pool.observe_queue_depth(if round < 2 { 10 } else { 0 });
+            let a = pool.run_batch(&inputs);
+            let b = fixed.run_batch(&inputs);
+            for ((x, got), fx) in inputs.iter().zip(&a).zip(&b) {
+                let want = seq.run(x);
+                assert_eq!(want.data, got.data,
+                           "elastic pool diverged from sequential");
+                assert_eq!(want.data, fx.data,
+                           "fixed pool diverged from sequential");
+            }
         }
     }
 

@@ -6,6 +6,7 @@
 //!          [--variants dense,cocogen,coco-auto | --scheme S]
 //!          [--sla mixed|realtime|standard|quality]
 //!          [--batch-mode auto|fused|fanout]
+//!          [--rate R] [--queue-cap C]
 //!                             — run the serving coordinator on synthetic
 //!                               traffic and print per-deployment latency
 //!                               metrics; `--backend native` registers
@@ -17,7 +18,13 @@
 //!                               `--scheme S` is shorthand for
 //!                               `--variants S`; `--batch-mode` picks
 //!                               fused batched execution vs per-image
-//!                               pool fan-out (auto = fused for 2+)
+//!                               pool fan-out (auto = fused for 2+);
+//!                               `--rate R` offers requests open-loop
+//!                               at R req/s (default: one burst) and
+//!                               `--queue-cap C` bounds the per-
+//!                               deployment queue (native only) so
+//!                               overload sheds typed `Overloaded`
+//!                               instead of queueing without bound
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -89,7 +96,7 @@ fn main() -> Result<()> {
         "serve" => {
             let flags = parse_flags(cmd, rest, &[
                 "model", "batch", "requests", "backend", "scheme",
-                "variants", "sla", "batch-mode",
+                "variants", "sla", "batch-mode", "rate", "queue-cap",
             ])?;
             serve(&flags)
         }
@@ -154,16 +161,34 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         "--scheme is shorthand for a single-entry --variants; pass one \
          or the other"
     );
+    let rate: Option<f64> = match flags.get("rate") {
+        None => None,
+        Some(v) => {
+            let r: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--rate wants req/s, got '{v}'")
+            })?;
+            anyhow::ensure!(r > 0.0, "--rate must be positive");
+            Some(r)
+        }
+    };
+    let queue_cap: Option<usize> = match flags.get("queue-cap") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("--queue-cap wants a request count, got \
+                             '{v}'")
+        })?),
+    };
     let sla_flag = flags.get("sla").map(String::as_str);
     let (coord, elems) = match backend {
         "pjrt" => {
             anyhow::ensure!(
                 flags.get("scheme").is_none()
                     && flags.get("variants").is_none()
-                    && flags.get("batch-mode").is_none(),
-                "--scheme/--variants/--batch-mode apply to --backend \
-                 native only (the PJRT path serves the compiled AOT \
-                 artifact as-is)"
+                    && flags.get("batch-mode").is_none()
+                    && queue_cap.is_none(),
+                "--scheme/--variants/--batch-mode/--queue-cap apply to \
+                 --backend native only (the PJRT path serves the \
+                 compiled AOT artifact as-is)"
             );
             let model = flags.get("model").map(String::as_str)
                 .unwrap_or("resnet_mini");
@@ -213,6 +238,9 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             };
             let elems = ir.input.c * ir.input.h * ir.input.w;
             let mut builder = Coordinator::builder().policy(policy);
+            if let Some(cap) = queue_cap {
+                builder = builder.queue_cap(cap);
+            }
             for scheme in schemes {
                 if scheme == Scheme::CocoAuto {
                     println!(
@@ -260,22 +288,45 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let mut rng = Rng::seed_from(1);
     let mut pending = Vec::new();
+    let mut shed = 0usize;
+    // With --rate, arrivals follow a fixed-seed open-loop Poisson
+    // schedule — requests fire at their offsets whether or not earlier
+    // ones completed, so a rate past capacity genuinely overloads the
+    // coordinator and the overflow comes back as typed `Overloaded`
+    // sheds (counted, not fatal). Without it, one closed burst.
+    let schedule = rate
+        .map(|r| cocopie::util::bench::arrival_schedule(r, n, 1));
+    let t0 = std::time::Instant::now();
     for i in 0..n {
+        if let Some(s) = &schedule {
+            let elapsed = t0.elapsed();
+            if s[i] > elapsed {
+                std::thread::sleep(s[i] - elapsed);
+            }
+        }
         let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
         let sla = fixed_sla.unwrap_or_else(|| {
             if multi { Sla::mixed(i) } else { Sla::Standard }
         });
-        pending.push((sla, client.infer(InferRequest {
+        match client.infer(InferRequest {
             image: img,
             sla,
             deployment: None,
-        })?));
+        }) {
+            Ok(rx) => pending.push((sla, rx)),
+            Err(ServeError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
     }
     let mut routed: HashMap<(Sla, std::sync::Arc<str>), usize> =
         HashMap::new();
     for (sla, p) in pending {
-        if let Ok(Ok(pred)) = p.recv() {
-            *routed.entry((sla, pred.deployment)).or_insert(0) += 1;
+        match p.recv() {
+            Ok(Ok(pred)) => {
+                *routed.entry((sla, pred.deployment)).or_insert(0) += 1;
+            }
+            Ok(Err(ServeError::Overloaded { .. })) => shed += 1,
+            _ => {}
         }
     }
     drop(client);
@@ -285,6 +336,13 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         "served {} requests: p50 {:.2} ms, p99 {:.2} ms, mean batch {:.1}",
         s.completed, s.p50_ms, s.p99_ms, s.mean_batch
     );
+    if rate.is_some() || shed > 0 {
+        println!(
+            "overload: {shed} shed (typed Overloaded), queue depth \
+             high-water {}",
+            s.queue_depth_max
+        );
+    }
     for dep in &report.deployments {
         println!(
             "  {:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms",

@@ -3,9 +3,19 @@
 //! Warmup + timed iterations with median/p10/p90 reporting. Every
 //! `benches/*.rs` binary uses this; its output lines are the rows of the
 //! paper's tables/figures.
+//!
+//! Also home of the **open-loop** load generator
+//! ([`arrival_schedule`] + [`open_loop_drive`]): arrivals follow a
+//! fixed-seed Poisson schedule and are fired without waiting for
+//! completions, so a coordinator past its capacity sees genuine
+//! overload. (A closed-loop driver self-throttles — its offered rate
+//! collapses to the service rate, and overload behaviour is never
+//! exercised.)
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::{Client, InferRequest, ServeError, Sla};
+use super::rng::Rng;
 use super::stats;
 
 /// Result of a timed measurement.
@@ -118,6 +128,163 @@ impl Table {
     }
 }
 
+/// One SLA class's share of an open-loop run.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    pub sla: Sla,
+    /// Requests the schedule offered in this class.
+    pub offered: usize,
+    pub completed: usize,
+    /// Requests turned away with [`ServeError::Overloaded`] (either at
+    /// submission or typed on the reply channel).
+    pub shed: usize,
+    /// p50 end-to-end latency over *completed* requests, ms.
+    pub p50_ms: f64,
+    /// p99 end-to-end latency over *completed* requests, ms.
+    pub p99_ms: f64,
+}
+
+/// Outcome of one [`open_loop_drive`] run. Every offered request is
+/// accounted for exactly once: `completed + shed + failed + hung ==
+/// offered`. `hung` (a reply channel that neither answered nor closed
+/// within the drain budget) is always a bug in the serving path — the
+/// overload suite asserts it is zero.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub shed: usize,
+    /// Typed non-shed errors (`Exhausted`, `Stopped`, ...).
+    pub failed: usize,
+    pub hung: usize,
+    /// Wall time from the first arrival to the end of the drain.
+    pub elapsed_s: f64,
+    /// Per-SLA breakdown, `[Realtime, Standard, Quality]` order.
+    pub classes: Vec<ClassStats>,
+}
+
+impl OpenLoopReport {
+    /// Completed requests per second of wall time — the survival
+    /// metric under overload (offered rate is meaningless once the
+    /// coordinator sheds).
+    pub fn goodput_rps(&self) -> f64 {
+        self.completed as f64 / self.elapsed_s.max(1e-9)
+    }
+
+    pub fn class(&self, sla: Sla) -> &ClassStats {
+        self.classes.iter().find(|c| c.sla == sla).unwrap()
+    }
+}
+
+fn class_index(sla: Sla) -> usize {
+    match sla {
+        Sla::Realtime => 0,
+        Sla::Standard => 1,
+        Sla::Quality => 2,
+    }
+}
+
+/// Deterministic open-loop arrival schedule: `n` offsets (from the
+/// run's start) of a Poisson process at `rate_hz`, i.e. exponential
+/// inter-arrival gaps, fixed entirely by `seed`. The same seed always
+/// yields the same schedule, so overload tests replay bit-identical
+/// arrival patterns.
+pub fn arrival_schedule(rate_hz: f64, n: usize, seed: u64)
+                       -> Vec<Duration> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::seed_from(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // Inverse-CDF exponential; 1-u in (0,1] keeps ln() finite.
+            t += -(1.0 - rng.f64()).ln() / rate_hz;
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Drive `client` open-loop: fire one request per schedule entry at
+/// its offset — *without* waiting for earlier completions — then drain
+/// every reply channel under one shared `drain_timeout` deadline.
+/// `sla_of(i)` assigns the i-th arrival's SLA class; every request
+/// carries a `vec![0.5; image_elems]` image and leaves deployment
+/// choice to the router.
+pub fn open_loop_drive<F>(client: &Client, image_elems: usize,
+                          schedule: &[Duration], sla_of: F,
+                          drain_timeout: Duration) -> OpenLoopReport
+where
+    F: Fn(usize) -> Sla,
+{
+    let mut offered = [0usize; 3];
+    let mut sheds = [0usize; 3];
+    let mut failed = 0usize;
+    let mut inflight = Vec::with_capacity(schedule.len());
+    let t0 = Instant::now();
+    for (i, off) in schedule.iter().enumerate() {
+        let elapsed = t0.elapsed();
+        if *off > elapsed {
+            std::thread::sleep(*off - elapsed);
+        }
+        let sla = sla_of(i);
+        offered[class_index(sla)] += 1;
+        match client.infer(InferRequest {
+            image: vec![0.5; image_elems],
+            sla,
+            deployment: None,
+        }) {
+            Ok(rx) => inflight.push((sla, rx)),
+            Err(ServeError::Overloaded { .. }) => {
+                sheds[class_index(sla)] += 1;
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    // Drain under one shared deadline: a healthy coordinator answers
+    // every channel (prediction or typed error) long before it, so
+    // `hung` only counts genuinely lost replies.
+    let deadline = Instant::now() + drain_timeout;
+    let mut lat: [Vec<f64>; 3] =
+        [Vec::new(), Vec::new(), Vec::new()];
+    let mut hung = 0usize;
+    for (sla, rx) in inflight {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(Ok(pred)) => {
+                lat[class_index(sla)].push(pred.latency_ms);
+            }
+            Ok(Err(ServeError::Overloaded { .. })) => {
+                sheds[class_index(sla)] += 1;
+            }
+            Ok(Err(_)) => failed += 1,
+            Err(_) => hung += 1,
+        }
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let classes = [Sla::Realtime, Sla::Standard, Sla::Quality]
+        .into_iter()
+        .map(|sla| {
+            let k = class_index(sla);
+            ClassStats {
+                sla,
+                offered: offered[k],
+                completed: lat[k].len(),
+                shed: sheds[k],
+                p50_ms: stats::percentile(&lat[k], 50.0),
+                p99_ms: stats::percentile(&lat[k], 99.0),
+            }
+        })
+        .collect::<Vec<_>>();
+    OpenLoopReport {
+        offered: offered.iter().sum(),
+        completed: lat.iter().map(Vec::len).sum(),
+        shed: sheds.iter().sum(),
+        failed,
+        hung,
+        elapsed_s,
+        classes,
+    }
+}
+
 /// Format helper: `12.3ms` / `45.6us`.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -148,5 +315,26 @@ mod tests {
         assert_eq!(fmt_time(2.0), "2.00s");
         assert_eq!(fmt_time(0.0021), "2.10ms");
         assert_eq!(fmt_time(12e-6), "12.0us");
+    }
+
+    #[test]
+    fn arrival_schedule_is_deterministic_and_monotone() {
+        let a = arrival_schedule(500.0, 256, 7);
+        let b = arrival_schedule(500.0, 256, 7);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]),
+                "offsets must be non-decreasing");
+        let c = arrival_schedule(500.0, 256, 8);
+        assert_ne!(a, c, "a different seed must move the arrivals");
+    }
+
+    #[test]
+    fn arrival_schedule_tracks_the_offered_rate() {
+        // 2000 arrivals at 1 kHz span ~2 s; the exponential gaps
+        // average 1/rate, so the makespan concentrates tightly.
+        let s = arrival_schedule(1000.0, 2000, 42);
+        let span = s.last().unwrap().as_secs_f64();
+        assert!((1.7..2.3).contains(&span),
+                "2000 arrivals at 1kHz spanned {span:.3}s");
     }
 }
