@@ -17,6 +17,11 @@
 //! run the CoCo-Gen plan through `ExecPlan::compile_batched(8)`: fused
 //! batched per-image latency and its speedup over 8 sequential runs
 //! (per-layer weight traffic paid once per batch).
+//!
+//! A second table covers the sequence tier: transformer text encoders
+//! through the same plan/executor stack — dense f32 vs CSR-pruned
+//! projections (`cocogen` on sequences) vs weight-only int8
+//! (`cocogen-quant`), single-input and fused batch-8.
 
 use cocopie::codegen::{
     autotune_plan, autotune_plan_batched, build_plan, PruneConfig, Scheme,
@@ -106,6 +111,70 @@ fn main() {
     println!("(ImageNet spatial dims reduced 224->64; channel plans real — \
               see DESIGN.md §2)\n");
     table.print();
+
+    // -- Sequence tier: the transformer text classifiers through the
+    // same build_plan/ModelExecutor stack. `cocogen` on sequences is
+    // CSR over the non-structured-pruned projections (pattern pruning
+    // is 3x3-specific), `cocogen-quant` weight-only int8 of the dense
+    // projections; the b8 columns run the int8 plan fused.
+    let seq_models = [
+        ("TXT-tiny".to_string(), zoo::tiny_text_encoder()),
+        ("TXT-base".to_string(), zoo::text_encoder(64, 128, 4, 2, 8)),
+    ];
+    let mut seq_table = Table::new(&[
+        "model", "dense(f32)", "csr(pruned)", "int8(quant)",
+        "pruned gain", "b8/img", "b8 gain", "weights d->q", "peak-act",
+    ]);
+    for (name, ir) in &seq_models {
+        if quick && !name.ends_with("tiny") {
+            continue;
+        }
+        let mut rng = Rng::seed_from(7);
+        let input =
+            Tensor::random(1, ir.input.t(), ir.input.d(), &mut rng);
+        let mut row = vec![name.clone()];
+        let mut medians = Vec::new();
+        let mut weights = Vec::new();
+        let mut peak_act = 0usize;
+        for scheme in
+            [Scheme::DenseIm2col, Scheme::CocoGen, Scheme::CocoGenQuant]
+        {
+            let plan = build_plan(ir, scheme, PruneConfig::default(), 42);
+            weights.push(plan.weight_bytes());
+            peak_act = plan.peak_activation_bytes();
+            let mut exec = ModelExecutor::new(&plan, threads);
+            let m = bench(&format!("{name}-{scheme:?}"), 0.5, 30, || {
+                std::hint::black_box(exec.run(&input));
+            });
+            row.push(fmt_time(m.median_s));
+            medians.push(m.median_s);
+        }
+        row.push(format!("{:.2}x", medians[0] / medians[1]));
+        {
+            let plan = build_plan(ir, Scheme::CocoGenQuant,
+                                  PruneConfig::default(), 42);
+            let mut fused =
+                ModelExecutor::new_batched(&plan, threads, FUSED_BATCH);
+            let inputs: Vec<Tensor> = (0..FUSED_BATCH)
+                .map(|_| Tensor::random(1, ir.input.t(), ir.input.d(),
+                                        &mut rng))
+                .collect();
+            let m = bench(&format!("{name}-quant-b{FUSED_BATCH}"), 0.5,
+                          10, || {
+                std::hint::black_box(fused.run_batch(&inputs));
+            });
+            let per_img = m.median_s / FUSED_BATCH as f64;
+            row.push(fmt_time(per_img));
+            // gain over running the same int8 plan 8x sequentially
+            row.push(format!("{:.2}x", medians[2] / per_img));
+        }
+        row.push(format!("{}->{} KB", weights[0] / 1024,
+                         weights[2] / 1024));
+        row.push(format!("{} KB", peak_act / 1024));
+        seq_table.row(&row);
+    }
+    println!("\n== Sequence tier: text-encoder inference latency ==");
+    seq_table.print();
     println!(
         "\npaper shape: CoCo-Gen fastest everywhere; CPU speedups \
          12-44.5x vs TFLite, 2.3-8.1x vs TVM; per-layer engine \

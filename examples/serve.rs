@@ -7,6 +7,12 @@
 //!     → prune config → optional autotune → compiled backends) and
 //!     registered under its menu name (`dense`, `cocogen`, and with
 //!     `--quant`/`--auto`/`--multi` also `cocogen-quant`/`coco-auto`).
+//!     `--seq` adds the sequence tier to the same menu: the
+//!     transformer-encoder text classifier (`zoo::tiny_text_encoder`)
+//!     as deployments `seq-dense` and `seq-cocogen-quant`, and the
+//!     open-loop traffic alternates conv- and text-shaped requests so
+//!     the router proves multi-family SLA routing (each request is
+//!     only eligible for deployments matching its input signature).
 //!     Open-loop mixed-SLA traffic then hits `Client::infer`: the
 //!     leader resolves each request's SLA class to a deployment using
 //!     latency points fed back live from each deployment's `Metrics`,
@@ -21,6 +27,10 @@
 //! (`--smoke --multi` is the multi-deployment smoke step, asserting
 //! SLA-routed traffic reached 2+ deployments).
 //!
+//! `--list` builds the selected deployment menu, prints one row per
+//! deployment (name, scheme, resident weight bytes, peak activation
+//! bytes, measured latency prior) and exits without serving.
+//!
 //! `--overload` replaces the scenes with the bounded soak smoke:
 //! measure the deployment's closed-loop capacity, then offer ~2 s of
 //! open-loop traffic at 2x that rate against a small queue cap. The
@@ -29,8 +39,8 @@
 //! requests. `--smoke --overload` is the CI soak step.
 //!
 //! Run: `cargo run --release --example serve
-//!       [-- --quant | --auto | --multi | --fanout | --smoke
-//!        | --overload]`
+//!       [-- --quant | --auto | --multi | --seq | --fanout | --smoke
+//!        | --list | --overload]`
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,16 +51,19 @@ use cocopie::prelude::*;
 use cocopie::util::bench::{arrival_schedule, open_loop_drive};
 use cocopie::util::rng::Rng;
 
-/// Open-loop mixed-SLA load; returns (wall seconds, served count per
+/// Open-loop mixed-SLA load; requests cycle through the given input
+/// sizes (one per model family) so multi-family menus see traffic at
+/// every signature. Returns (wall seconds, served count per
 /// (SLA, deployment) pair).
 #[allow(clippy::type_complexity)]
-fn drive(coord: &Coordinator, elems: usize, n_requests: usize, seed: u64)
-         -> (f64, HashMap<(Sla, Arc<str>), usize>) {
+fn drive(coord: &Coordinator, sizes: &[usize], n_requests: usize,
+         seed: u64) -> (f64, HashMap<(Sla, Arc<str>), usize>) {
     let client = coord.client();
     let mut rng = Rng::seed_from(seed);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
+        let elems = sizes[i % sizes.len()];
         let img: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
         let sla = Sla::mixed(i);
         pending.push((
@@ -174,8 +187,10 @@ fn main() -> anyhow::Result<()> {
     let quant = std::env::args().any(|a| a == "--quant");
     let auto = std::env::args().any(|a| a == "--auto");
     let multi = std::env::args().any(|a| a == "--multi");
+    let seq = std::env::args().any(|a| a == "--seq");
     let fanout = std::env::args().any(|a| a == "--fanout");
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let list = std::env::args().any(|a| a == "--list");
     let overload = std::env::args().any(|a| a == "--overload");
     let batch_mode = if fanout {
         NativeBatchMode::FanOut
@@ -212,8 +227,7 @@ fn main() -> anyhow::Result<()> {
     if auto || multi {
         schemes.push(Scheme::CocoAuto);
     }
-    let mut builder = Coordinator::builder().policy(policy);
-    let mut weight_kb = Vec::new();
+    let mut deps = Vec::new();
     for scheme in &schemes {
         let mut db = Deployment::builder(scheme.label(), &ir)
             .scheme(*scheme)
@@ -225,16 +239,62 @@ fn main() -> anyhow::Result<()> {
             // is often not the best at n = max_batch.
             db = db.autotune_at(policy.max_batch);
         }
-        let dep = db.build()?;
+        deps.push(db.build()?);
+    }
+    let seq_ir = zoo::tiny_text_encoder();
+    if seq {
+        // The sequence tier on the same menu: the transformer text
+        // classifier, dense and weight-only int8, compiled through the
+        // identical builder pipeline as the convs.
+        for (name, scheme) in [
+            ("seq-dense", Scheme::DenseIm2col),
+            ("seq-cocogen-quant", Scheme::CocoGenQuant),
+        ] {
+            deps.push(
+                Deployment::builder(name, &seq_ir)
+                    .scheme(scheme)
+                    .seed(7)
+                    .batch_mode(batch_mode)
+                    .build()?,
+            );
+        }
+    }
+
+    if list {
+        // `--list`: the deployment table, then exit without serving.
+        println!(
+            "{:<18} {:<14} {:>12} {:>14} {:>10}",
+            "deployment", "scheme", "weight B", "peak act B", "prior ms"
+        );
+        for dep in &deps {
+            let plan =
+                dep.plan().expect("native deployment keeps its plan");
+            println!(
+                "{:<18} {:<14} {:>12} {:>14} {:>10.3}",
+                dep.name(),
+                plan.scheme.label(),
+                plan.weight_bytes(),
+                plan.peak_activation_bytes(),
+                dep.prior_latency_ms()
+            );
+        }
+        return Ok(());
+    }
+
+    let mut builder = Coordinator::builder().policy(policy);
+    println!("deployments (resident weight KB):");
+    for dep in deps {
         let plan = dep.plan().expect("native deployment keeps its plan");
-        weight_kb.push((scheme.label(), plan.weight_bytes() / 1024));
+        println!("  {:16} {:6} KB", dep.name(),
+                 plan.weight_bytes() / 1024);
         builder = builder.register(dep);
     }
-    println!("deployments (resident weight KB):");
-    for (name, kb) in &weight_kb {
-        println!("  {name:16} {kb:6} KB");
-    }
     let elems = ir.input.c * ir.input.h * ir.input.w;
+    let sizes: Vec<usize> = if seq {
+        vec![elems, seq_ir.input.elements()]
+    } else {
+        vec![elems]
+    };
     let coord = builder.start()?;
 
     // A few requests pinned to a named deployment outright — the
@@ -252,7 +312,7 @@ fn main() -> anyhow::Result<()> {
         pinned.deployment, pinned.backend, pinned.class
     );
 
-    let (wall, routed) = drive(&coord, elems, n_requests, 3);
+    let (wall, routed) = drive(&coord, &sizes, n_requests, 3);
     drop(client);
     let report = coord.shutdown_report();
     println!(
@@ -310,6 +370,25 @@ fn main() -> anyhow::Result<()> {
                 report.deployments.len()
             );
         }
+        if seq {
+            // The multi-family smoke: both families must have served
+            // SLA-routed traffic — the signature mask confines each
+            // request to its family, and within the sequence family the
+            // router still picks by latency/accuracy.
+            let seq_active = report
+                .deployments
+                .iter()
+                .filter(|d| {
+                    d.name.starts_with("seq-") && d.summary.completed > 0
+                })
+                .count();
+            anyhow::ensure!(
+                seq_active >= 1 && active > seq_active,
+                "smoke --seq: {seq_active} sequence deployments and {} \
+                 conv deployments served traffic",
+                active - seq_active
+            );
+        }
         println!(
             "smoke: all {} requests served across {active} deployments",
             n_requests + 1
@@ -322,7 +401,7 @@ fn main() -> anyhow::Result<()> {
     cfg.policy = policy;
     match Coordinator::start(cfg) {
         Ok(coord) => {
-            let (wall, _) = drive(&coord, 16 * 16 * 3, 256, 5);
+            let (wall, _) = drive(&coord, &[16 * 16 * 3], 256, 5);
             let s = coord.shutdown();
             println!(
                 "\npjrt: served {} requests in {:.2}s ({:.0} rps), \

@@ -20,7 +20,8 @@
 
 use std::sync::Arc;
 
-use crate::compress::{CsrLayer, DenseLayer, FkwLayer, FlatWeights};
+use crate::compress::{AttnWeights, CsrLayer, DenseLayer, FkwLayer,
+                      FlatWeights, ProjStore};
 use crate::exec::pattern::PatternGemmPlan;
 use crate::exec::tensor::{BatchView, TensorView};
 use crate::exec::winograd::WinogradWeights;
@@ -110,6 +111,21 @@ pub enum CompiledKernel {
     },
     /// Residual add; the skip operand is `CompiledOp::src2`.
     Add { relu: bool },
+    /// Sequence projection `[T, Din] -> [T, Dout]`; the store fixes the
+    /// engine (dense `gemm_nt`, CSR, or int8 dequant-on-load).
+    SeqMatMul { w: ProjStore, relu: bool },
+    /// Per-token layer normalization (gamma in `weights`, beta in
+    /// `bias`).
+    SeqNorm { w: Arc<FlatWeights> },
+    /// Multi-head self-attention; runs out of the arena's shared
+    /// sequence scratch region.
+    SeqAttn {
+        w: Arc<AttnWeights>,
+        heads: usize,
+    },
+    /// Mean over tokens, `[T, D] -> [D, 1, 1]` (the seq -> spatial
+    /// bridge feeding the classifier head).
+    SeqPool,
 }
 
 /// One fully resolved pipeline step.
@@ -164,6 +180,9 @@ impl CompiledPipeline {
         let Some(last_op) = self.ops.last() else {
             return input.clone();
         };
+        // Detach the sequence scratch so attention can write it while
+        // the arena's slots are borrowed for reading.
+        let mut sbuf = std::mem::take(&mut arena.seq_scratch);
         for op in &self.ops {
             let in_elems = op.in_shape.elements();
             let out_elems = op.out_shape.elements();
@@ -257,10 +276,30 @@ impl CompiledPipeline {
                         ops::add_into(view.data, &skip[..out_elems],
                                       *relu, dst);
                     }
+                    CompiledKernel::SeqMatMul { w, relu } => {
+                        ops::proj_into(view.data, op.in_shape.t(),
+                                       op.in_shape.d(), w, *relu, threads,
+                                       dst);
+                    }
+                    CompiledKernel::SeqNorm { w } => {
+                        ops::layernorm_into(view.data, op.in_shape.t(),
+                                            op.in_shape.d(), &w.weights,
+                                            &w.bias, dst);
+                    }
+                    CompiledKernel::SeqAttn { w, heads } => {
+                        ops::attention_into(view.data, op.in_shape.t(),
+                                            op.in_shape.d(), w, *heads,
+                                            threads, &mut sbuf, dst);
+                    }
+                    CompiledKernel::SeqPool => {
+                        ops::seqpool_into(view.data, op.in_shape.t(),
+                                          op.in_shape.d(), dst);
+                    }
                 }
             }
             arena.bufs[op.dst] = dstbuf;
         }
+        arena.seq_scratch = sbuf;
         let shape = last_op.out_shape;
         let mut out = Tensor::from_shape(shape);
         out.data
@@ -299,6 +338,7 @@ impl CompiledPipeline {
                 })
                 .collect();
         };
+        let mut sbuf = std::mem::take(&mut arena.seq_scratch);
         for op in &self.ops {
             let in_elems = n * op.in_shape.elements();
             let out_elems = n * op.out_shape.elements();
@@ -395,10 +435,37 @@ impl CompiledPipeline {
                         ops::add_into(view.data, &skip[..out_elems],
                                       *relu, dst);
                     }
+                    // Projections and layernorm are row-independent, so
+                    // a batch fuses as `n * T` rows of one call — each
+                    // image's accumulation order is untouched.
+                    CompiledKernel::SeqMatMul { w, relu } => {
+                        ops::proj_into(view.data, n * op.in_shape.t(),
+                                       op.in_shape.d(), w, *relu, threads,
+                                       dst);
+                    }
+                    CompiledKernel::SeqNorm { w } => {
+                        ops::layernorm_into(view.data,
+                                            n * op.in_shape.t(),
+                                            op.in_shape.d(), &w.weights,
+                                            &w.bias, dst);
+                    }
+                    CompiledKernel::SeqAttn { w, heads } => {
+                        ops::attention_batch_into(
+                            view.data, n, op.in_shape.t(),
+                            op.in_shape.d(), w, *heads, threads,
+                            &mut sbuf, dst,
+                        );
+                    }
+                    CompiledKernel::SeqPool => {
+                        ops::seqpool_batch_into(view.data, n,
+                                                op.in_shape.t(),
+                                                op.in_shape.d(), dst);
+                    }
                 }
             }
             arena.bufs[op.dst] = dstbuf;
         }
+        arena.seq_scratch = sbuf;
         let shape = last_op.out_shape;
         let per = shape.elements();
         let buf = &arena.bufs[last_op.dst];
@@ -417,6 +484,11 @@ impl CompiledPipeline {
 #[derive(Debug)]
 pub struct Arena {
     bufs: Vec<Vec<f32>>,
+    /// Shared sequence scratch (attention Q/K/V/context rows + the
+    /// `[heads, T, T]` score buffer), sized by the plan's
+    /// `scratch_elems`. Empty for conv-only models; never grows for
+    /// batches either — the batched attention kernel loops per image.
+    seq_scratch: Vec<f32>,
 }
 
 impl Arena {
@@ -429,6 +501,7 @@ impl Arena {
                 .iter()
                 .map(|&n| vec![0f32; n])
                 .collect(),
+            seq_scratch: vec![0f32; p.mem.scratch_elems],
         }
     }
 
@@ -436,7 +509,8 @@ impl Arena {
     /// property). Length-based, so it equals the memory plan's
     /// `peak_bytes` exactly regardless of allocator rounding.
     pub fn bytes(&self) -> usize {
-        self.bufs.iter().map(|b| b.len() * 4).sum()
+        self.bufs.iter().map(|b| b.len() * 4).sum::<usize>()
+            + self.seq_scratch.len() * 4
     }
 
     fn read<'a>(&'a self, input: &'a [f32], id: BufId) -> &'a [f32] {
@@ -573,6 +647,22 @@ pub fn lower_batched(plan: &ExecPlan, batch: usize) -> CompiledPipeline {
             (LayerKind::Add { relu, .. }, _) => {
                 CompiledKernel::Add { relu: *relu }
             }
+            (LayerKind::MatMul { relu, .. }, LayerPlan::Proj(p)) => {
+                CompiledKernel::SeqMatMul {
+                    w: p.clone(),
+                    relu: *relu,
+                }
+            }
+            (LayerKind::LayerNorm, LayerPlan::Norm(w)) => {
+                CompiledKernel::SeqNorm { w: w.clone() }
+            }
+            (LayerKind::SelfAttention { heads }, LayerPlan::Attn(a)) => {
+                CompiledKernel::SeqAttn {
+                    w: a.clone(),
+                    heads: *heads,
+                }
+            }
+            (LayerKind::SeqPool, _) => CompiledKernel::SeqPool,
             (k, p) => panic!(
                 "layer {} kind {:?} has incompatible plan {:?}",
                 layer.name,
@@ -716,6 +806,76 @@ mod tests {
             let want = p1.execute(x, &mut arena_1, &mut scratch, 2);
             assert_eq!(want.data, got.data,
                        "fused batch diverged from single execute");
+        }
+    }
+
+    fn seq_ir() -> crate::ir::ModelIR {
+        let mut b =
+            IrBuilder::new("seq", crate::ir::Shape::seq(8, 16));
+        b.matmul("embed", 16, false);
+        let skip = b.last();
+        b.attention("attn", 2)
+            .add("res", skip, false)
+            .layernorm("ln")
+            .seqpool("pool")
+            .dense("cls", 3, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn seq_lowering_binds_kernels_and_scratch() {
+        let ir = seq_ir();
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 5);
+        let p = lower(&plan);
+        assert!(matches!(p.ops[0].kernel,
+                         CompiledKernel::SeqMatMul { .. }));
+        assert!(matches!(p.ops[1].kernel,
+                         CompiledKernel::SeqAttn { .. }));
+        assert!(matches!(p.ops[3].kernel,
+                         CompiledKernel::SeqNorm { .. }));
+        assert!(matches!(p.ops[4].kernel, CompiledKernel::SeqPool));
+        assert!(p.mem.scratch_elems > 0);
+        // the allocated arena equals the reported peak, scratch included
+        let arena = Arena::for_pipeline(&p);
+        assert_eq!(arena.bytes(), p.peak_activation_bytes());
+    }
+
+    #[test]
+    fn batched_seq_execute_matches_single() {
+        let ir = seq_ir();
+        for scheme in [
+            Scheme::DenseIm2col,
+            Scheme::SparseCsr,
+            Scheme::CocoGenQuant,
+        ] {
+            let plan =
+                build_plan(&ir, scheme, PruneConfig::default(), 9);
+            let p1 = lower(&plan);
+            let pb = lower_batched(&plan, 4);
+            // slots scale with the batch; the attention scratch does not
+            assert!(pb.peak_activation_bytes()
+                    < p1.peak_activation_bytes() * 4);
+            let mut rng = Rng::seed_from(11);
+            let xs: Vec<Tensor> = (0..4)
+                .map(|_| Tensor::random(1, 8, 16, &mut rng))
+                .collect();
+            let mut packed = Vec::new();
+            for t in &xs {
+                packed.extend_from_slice(&t.data);
+            }
+            let mut arena_b = Arena::for_pipeline(&pb);
+            let mut scratch = ExecScratch::default();
+            let outs = pb.execute_batched(4, &packed, &mut arena_b,
+                                          &mut scratch, 2);
+            let mut arena_1 = Arena::for_pipeline(&p1);
+            for (x, got) in xs.iter().zip(&outs) {
+                // different thread count on purpose: sequence kernels
+                // are bit-identical across thread counts
+                let want = p1.execute(x, &mut arena_1, &mut scratch, 1);
+                assert_eq!(want.data, got.data,
+                           "{scheme:?} fused batch diverged");
+            }
         }
     }
 

@@ -10,7 +10,8 @@ pub mod tuner;
 
 use std::sync::Arc;
 
-use crate::compress::{CsrLayer, DenseLayer, FkwLayer, FlatWeights};
+use crate::compress::{AttnWeights, CsrLayer, DenseLayer, FkwLayer,
+                      FlatWeights, ProjStore};
 use crate::ir::{LayerKind, ModelIR};
 use crate::patterns::connectivity::{prune_connectivity, ConnectivityMask};
 use crate::quant::{QuantDense, QuantFkw};
@@ -64,7 +65,16 @@ pub enum LayerPlan {
     Depthwise(Arc<FlatWeights>),
     /// Dense FC: `w[cout][cin]` + bias.
     Fc(Arc<FlatWeights>),
-    /// No weights (pool/add/gap).
+    /// Sequence projection (`LayerKind::MatMul`) in any of the
+    /// compression formats — dense f32, unstructured CSR, or int8.
+    Proj(ProjStore),
+    /// LayerNorm gamma (`weights`) + beta (`bias`); always f32 (a 2*D
+    /// parameter vector compresses nothing worth the error).
+    Norm(Arc<FlatWeights>),
+    /// Self-attention Q/K/V/output projections, each independently
+    /// carried in a [`ProjStore`] format.
+    Attn(Arc<AttnWeights>),
+    /// No weights (pool/add/gap/seqpool).
     None,
 }
 
@@ -82,6 +92,11 @@ impl LayerPlan {
             LayerPlan::Csr(c) => {
                 Some((c.nnz(), c.kh * c.kw * c.cin * c.cout))
             }
+            LayerPlan::Proj(p) => p.nnz(),
+            // Attention FLOPs are dominated by the score/softmax walk,
+            // which pruning never touches — claim no analytic reduction
+            // (conservative; the wall-clock benches measure the truth).
+            LayerPlan::Attn(_) => None,
             _ => None,
         }
     }
@@ -94,7 +109,11 @@ impl LayerPlan {
             LayerPlan::Fkw { layer, .. } => layer.size_bytes(),
             LayerPlan::QuantDense(q) => q.size_bytes(),
             LayerPlan::QuantFkw { layer, .. } => layer.size_bytes(),
-            LayerPlan::Depthwise(w) | LayerPlan::Fc(w) => w.size_bytes(),
+            LayerPlan::Depthwise(w)
+            | LayerPlan::Fc(w)
+            | LayerPlan::Norm(w) => w.size_bytes(),
+            LayerPlan::Proj(p) => p.size_bytes(),
+            LayerPlan::Attn(a) => a.size_bytes(),
             LayerPlan::None => 0,
         }
     }
@@ -252,6 +271,42 @@ pub fn random_dense_weights(ir: &ModelIR, seed: u64) -> Vec<LayerPlan> {
                     (0..*cout).map(|_| rng.normal_f32() * 0.01).collect(),
                 )))
             }
+            LayerKind::MatMul { d_out, .. } => {
+                let d_in = l.input.d();
+                let scale = (2.0 / d_in as f64).sqrt();
+                LayerPlan::Proj(ProjStore::Dense(Arc::new(
+                    FlatWeights::new(
+                        (0..d_in * d_out)
+                            .map(|_| (rng.normal() * scale) as f32)
+                            .collect(),
+                        (0..*d_out)
+                            .map(|_| rng.normal_f32() * 0.01)
+                            .collect(),
+                    ),
+                )))
+            }
+            LayerKind::LayerNorm => {
+                let d = l.input.d();
+                LayerPlan::Norm(Arc::new(FlatWeights::new(
+                    vec![1.0; d],
+                    vec![0.0; d],
+                )))
+            }
+            LayerKind::SelfAttention { .. } => {
+                let d = l.input.d();
+                let scale = (1.0 / d as f64).sqrt();
+                let mut mk = || {
+                    ProjStore::Dense(Arc::new(FlatWeights::new(
+                        (0..d * d)
+                            .map(|_| (rng.normal() * scale) as f32)
+                            .collect(),
+                        (0..d).map(|_| rng.normal_f32() * 0.01).collect(),
+                    )))
+                };
+                let (q, k, v) = (mk(), mk(), mk());
+                let o = mk();
+                LayerPlan::Attn(Arc::new(AttnWeights { q, k, v, o }))
+            }
             _ => LayerPlan::None,
         })
         .collect()
@@ -295,6 +350,29 @@ pub fn build_plan(ir: &ModelIR, scheme: Scheme, prune: PruneConfig,
                     | Scheme::DenseWinograd,
                     p,
                 ) => p,
+                // Sequence projections: unstructured pruning + CSR under
+                // the sparse schemes (pattern/FKW pruning is 3x3-kernel
+                // specific and does not apply to [d_out, d_in] matrices),
+                // weight-only per-channel int8 under CocoGenQuant.
+                // LayerNorm parameters always stay f32.
+                (
+                    Scheme::SparseCsr | Scheme::CocoGen | Scheme::CocoAuto,
+                    LayerPlan::Proj(ProjStore::Dense(w)),
+                ) => LayerPlan::Proj(prune_proj(&w,
+                                                prune.unstructured_keep)),
+                (
+                    Scheme::CocoGenQuant,
+                    LayerPlan::Proj(ProjStore::Dense(w)),
+                ) => LayerPlan::Proj(quant_proj(&w)),
+                (
+                    Scheme::SparseCsr | Scheme::CocoGen | Scheme::CocoAuto,
+                    LayerPlan::Attn(a),
+                ) => LayerPlan::Attn(Arc::new(map_attn(&a, &|w| {
+                    prune_proj(w, prune.unstructured_keep)
+                }))),
+                (Scheme::CocoGenQuant, LayerPlan::Attn(a)) => {
+                    LayerPlan::Attn(Arc::new(map_attn(&a, &quant_proj)))
+                }
                 (Scheme::SparseCsr, LayerPlan::Dense { layer, .. })
                     if l.is_conv3x3() =>
                 {
@@ -373,6 +451,42 @@ pub fn prune_conn_oihw(d: &DenseLayer, keep: f64) -> ConnectivityMask {
         }
     }
     prune_connectivity(&hwio, d.kh, d.kw, d.cin, d.cout, keep)
+}
+
+/// Unstructured pruning of a sequence projection `[d_out, d_in]`,
+/// stored CSR. Projections go through the generic magnitude pass only:
+/// pattern/FKW pruning is defined over 3x3 spatial kernels and has no
+/// analogue for flat matmul weights.
+fn prune_proj(w: &FlatWeights, keep: f64) -> ProjStore {
+    let d_in = w.weights.len() / w.bias.len();
+    let dense = w.to_proj_dense(d_in);
+    let mask = crate::patterns::connectivity::prune_unstructured(
+        &dense.weights, keep);
+    ProjStore::Csr(Arc::new(CsrLayer::from_dense(&dense, Some(&mask))))
+}
+
+/// Weight-only per-channel int8 for a sequence projection (biases and
+/// activations stay f32, mirroring the conv quant path).
+fn quant_proj(w: &FlatWeights) -> ProjStore {
+    let d_in = w.weights.len() / w.bias.len();
+    ProjStore::Int8(Arc::new(QuantDense::quantize(&w.to_proj_dense(d_in))))
+}
+
+/// Apply a projection transform to every still-dense store of an
+/// attention layer (Q/K/V/output); already-compressed stores pass
+/// through unchanged so re-planning is idempotent.
+fn map_attn(a: &AttnWeights, f: &dyn Fn(&FlatWeights) -> ProjStore)
+            -> AttnWeights {
+    let m = |s: &ProjStore| match s {
+        ProjStore::Dense(w) => f(w),
+        other => other.clone(),
+    };
+    AttnWeights {
+        q: m(&a.q),
+        k: m(&a.k),
+        v: m(&a.v),
+        o: m(&a.o),
+    }
 }
 
 /// Parameter auto-tuning (paper §2.1.3) at the single-image regime.
@@ -517,6 +631,18 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize, batch: usize) {
         .zip(plan.layers.iter_mut())
         .collect();
     for (lir, lp) in layers {
+        if let LayerKind::MatMul { relu, .. } = lir.kind {
+            // Sequence projections get their own engine axis (dense
+            // gemm_nt vs CSR vs int8 dequant-on-load). Attention layers
+            // keep the scheme-chosen stores: their four projections run
+            // inside one fused kernel, so there is no per-projection
+            // dispatch to bind.
+            if let LayerPlan::Proj(store) = lp {
+                tune_proj_engine(store, &lir, relu, threads, batch,
+                                 &mut rng);
+            }
+            continue;
+        }
         let LayerKind::Conv { stride, relu, .. } = lir.kind else {
             continue;
         };
@@ -629,6 +755,50 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize, batch: usize) {
             _ => continue,
         }
     }
+}
+
+/// Engine sweep for one sequence projection under `CocoAuto`: the
+/// pruned matrix's dense-f32 twin (zeros resident — identical output
+/// bits, different traversal), its CSR form, and the int8
+/// dequant-on-load variant, each measured through `ops::proj_into` on a
+/// synthetic `[batch * T, d_in]` token matrix — the fused-batch regime
+/// the compiled pipeline actually runs.
+fn tune_proj_engine(store: &mut ProjStore, lir: &crate::ir::Layer,
+                    relu: bool, threads: usize, batch: usize,
+                    rng: &mut Rng) {
+    let (t, d_in) = (lir.input.t(), lir.input.d());
+    let rows = batch * t;
+    let data: Vec<f32> =
+        (0..rows * d_in).map(|_| rng.normal_f32()).collect();
+    let dense = match &*store {
+        ProjStore::Dense(w) => w.to_proj_dense(d_in),
+        ProjStore::Csr(c) => c.to_dense(),
+        ProjStore::Int8(q) => q.dequantize(),
+    };
+    let mut out = vec![0f32; rows * dense.cout];
+    let candidates = [
+        ProjStore::Dense(Arc::new(FlatWeights::new(
+            dense.weights.clone(),
+            dense.bias.clone(),
+        ))),
+        ProjStore::Csr(Arc::new(CsrLayer::from_dense(&dense, None))),
+        ProjStore::Int8(Arc::new(QuantDense::quantize(&dense))),
+    ];
+    let mut best = 0;
+    let mut best_t = f64::INFINITY;
+    for (i, cand) in candidates.iter().enumerate() {
+        let tm = measure(&mut || {
+            crate::exec::ops::proj_into(&data, rows, d_in, cand, relu,
+                                        threads, &mut out);
+            std::hint::black_box(&mut out);
+        });
+        if tm < best_t {
+            best_t = tm;
+            best = i;
+        }
+    }
+    let mut it = candidates.into_iter();
+    *store = it.nth(best).expect("candidate index in range");
 }
 
 /// Warm + best-of-2 wall-clock for one candidate.
@@ -869,5 +1039,77 @@ mod tests {
             }
             _ => panic!("expected dense"),
         }
+    }
+
+    fn seq_ir() -> ModelIR {
+        let mut b =
+            IrBuilder::new("seq", crate::ir::Shape::seq(8, 16));
+        b.matmul("embed", 16, false);
+        let skip = b.last();
+        b.attention("attn", 4)
+            .add("res", skip, false)
+            .layernorm("ln")
+            .seqpool("pool")
+            .dense("cls", 4, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn seq_plans_for_all_schemes() {
+        let ir = seq_ir();
+        for scheme in Scheme::ALL {
+            let plan = build_plan(&ir, scheme, PruneConfig::default(), 1);
+            assert_eq!(plan.layers.len(), ir.layers.len());
+            // LayerNorm parameters are never compressed.
+            assert!(matches!(plan.layers[3], LayerPlan::Norm(_)),
+                    "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn seq_pruning_and_quant_shrink_projection_bytes() {
+        let ir = seq_ir();
+        let dense = build_plan(&ir, Scheme::DenseIm2col,
+                               PruneConfig::default(), 3);
+        let pruned = build_plan(&ir, Scheme::SparseCsr,
+                                PruneConfig::default(), 3);
+        let quant = build_plan(&ir, Scheme::CocoGenQuant,
+                               PruneConfig::default(), 3);
+        // MatMul projection: dense f32 -> CSR (25% keep) -> int8
+        assert!(matches!(dense.layers[0], LayerPlan::Proj(
+            ProjStore::Dense(_))));
+        assert!(matches!(pruned.layers[0], LayerPlan::Proj(
+            ProjStore::Csr(_))));
+        assert!(matches!(quant.layers[0], LayerPlan::Proj(
+            ProjStore::Int8(_))));
+        assert!(pruned.layers[0].weight_bytes()
+                < dense.layers[0].weight_bytes());
+        assert!(quant.layers[0].weight_bytes()
+                < dense.layers[0].weight_bytes());
+        // Attention: all four stores follow the scheme.
+        match (&pruned.layers[1], &quant.layers[1]) {
+            (LayerPlan::Attn(p), LayerPlan::Attn(q)) => {
+                assert!(p.stores().iter().all(|s| matches!(
+                    s, ProjStore::Csr(_))));
+                assert!(q.stores().iter().all(|s| matches!(
+                    s, ProjStore::Int8(_))));
+                assert!(p.nnz().is_some());
+            }
+            p => panic!("expected attn plans, got {p:?}"),
+        }
+        // pruning keeps <50% of projection FLOPs alive
+        assert!(pruned.flop_keep_ratio() < dense.flop_keep_ratio());
+        assert!(pruned.weight_bytes() < dense.weight_bytes());
+        assert!(quant.weight_bytes() < dense.weight_bytes());
+    }
+
+    #[test]
+    fn seq_peak_activation_counts_attention_scratch() {
+        let ir = seq_ir();
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 1);
+        // scratch = 4*T*D + heads*T*T elements, f32
+        let scratch = (4 * 8 * 16 + 4 * 8 * 8) * 4;
+        assert!(plan.peak_activation_bytes() >= scratch);
     }
 }

@@ -9,9 +9,16 @@
 //!   `[cout][cin*kh*kw]` matrix; the baseline the paper compares against
 //!   (and what non-structured pruning must use).
 //! * `DenseLayer` — OIHW dense weights for the naive/im2col/xla engines.
+//! * `ProjStore` / `AttnWeights` — the sequence tier's projection
+//!   matrices (`[d_out, d_in]`): one enum spanning dense f32,
+//!   unstructured-pruned CSR, and weight-only int8, so MatMul and
+//!   attention layers ride the same compression menu as convs.
+
+use std::sync::Arc;
 
 use crate::patterns::connectivity::ConnectivityMask;
 use crate::patterns::{self, PatternId, PATTERN_SET_4};
+use crate::quant::QuantDense;
 
 /// Dense conv weights, OIHW layout: `w[co][ci][ky][kx]`.
 #[derive(Debug, Clone)]
@@ -50,6 +57,117 @@ impl FlatWeights {
 
     pub fn size_bytes(&self) -> usize {
         (self.weights.len() + self.bias.len()) * 4
+    }
+
+    /// View a `[d_out, d_in]` projection as a 1x1 `DenseLayer`, the
+    /// shape the pruning and quantization passes operate on (a per-token
+    /// projection IS a 1x1 conv over a `[d_in, T, 1]` activation).
+    pub fn to_proj_dense(&self, d_in: usize) -> DenseLayer {
+        assert_eq!(self.weights.len() % d_in, 0,
+                   "projection width does not divide the weight count");
+        DenseLayer {
+            cout: self.weights.len() / d_in,
+            cin: d_in,
+            kh: 1,
+            kw: 1,
+            weights: self.weights.clone(),
+            bias: self.bias.clone(),
+        }
+    }
+}
+
+/// Weight store behind one sequence projection (`LayerKind::MatMul`, or
+/// one of an attention layer's Q/K/V/output projections): dense f32,
+/// unstructured-pruned CSR, or weight-only per-channel int8 — the conv
+/// tier's compression menu carried over to `[d_out, d_in]` matrices.
+/// (Pattern/FKW pruning is 3x3-kernel-specific and does not apply.)
+/// Payloads are `Arc`-shared so plans and compiled pipelines bind them
+/// without copying, same as the conv stores.
+#[derive(Debug, Clone)]
+pub enum ProjStore {
+    Dense(Arc<FlatWeights>),
+    /// CSR rows over `[d_out][d_in]` (a 1x1 [`CsrLayer`]).
+    Csr(Arc<CsrLayer>),
+    /// Per-output-channel symmetric int8 (a 1x1 [`QuantDense`]).
+    Int8(Arc<QuantDense>),
+}
+
+impl ProjStore {
+    /// Output width of the projection.
+    pub fn d_out(&self) -> usize {
+        match self {
+            ProjStore::Dense(w) => w.bias.len(),
+            ProjStore::Csr(c) => c.cout,
+            ProjStore::Int8(q) => q.cout,
+        }
+    }
+
+    /// Resident weight bytes of this store.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            ProjStore::Dense(w) => w.size_bytes(),
+            ProjStore::Csr(c) => c.size_bytes(),
+            ProjStore::Int8(q) => q.size_bytes(),
+        }
+    }
+
+    /// (surviving, dense) weight counts for pruned stores, `None` when
+    /// every weight is resident — mirrors `LayerPlan::conv_nnz`.
+    pub fn nnz(&self) -> Option<(usize, usize)> {
+        match self {
+            ProjStore::Csr(c) => {
+                Some((c.nnz(), c.cout * c.cin * c.kh * c.kw))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The four projections of one self-attention layer (fused QKV + output),
+/// each independently compressible.
+#[derive(Debug, Clone)]
+pub struct AttnWeights {
+    pub q: ProjStore,
+    pub k: ProjStore,
+    pub v: ProjStore,
+    pub o: ProjStore,
+}
+
+impl AttnWeights {
+    pub fn stores(&self) -> [&ProjStore; 4] {
+        [&self.q, &self.k, &self.v, &self.o]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.stores().iter().map(|s| s.size_bytes()).sum()
+    }
+
+    /// Aggregate (surviving, dense) weight counts across the four
+    /// projections; dense/int8 stores count fully resident.
+    pub fn nnz(&self) -> Option<(usize, usize)> {
+        if self.stores().iter().all(|s| s.nnz().is_none()) {
+            return None;
+        }
+        let mut kept = 0;
+        let mut total = 0;
+        for s in self.stores() {
+            match s.nnz() {
+                Some((k, t)) => {
+                    kept += k;
+                    total += t;
+                }
+                None => {
+                    let full = match s {
+                        ProjStore::Dense(w) => w.weights.len(),
+                        ProjStore::Int8(q) => q.weights.len(),
+                        ProjStore::Csr(_) => unreachable!(),
+                    };
+                    kept += full;
+                    total += full;
+                }
+            }
+        }
+        Some((kept, total))
     }
 }
 

@@ -141,6 +141,19 @@ impl Deployment {
         &self.name
     }
 
+    /// Declared accuracy operating point (the SLA router's quality
+    /// axis; the surviving-FLOP proxy unless overridden).
+    pub fn accuracy(&self) -> f64 {
+        self.accuracy
+    }
+
+    /// The single-image latency prior seeding the SLA router (ms) —
+    /// measured at build time for native deployments, `INFINITY` for
+    /// `from_backends`/`pjrt` until live traffic measures it.
+    pub fn prior_latency_ms(&self) -> f64 {
+        self.prior_latency_ms
+    }
+
     /// The compiled plan behind this deployment, when it is a native
     /// single-plan deployment — what serving tests run directly through
     /// a [`ModelExecutor`] to pin bit-identical results.

@@ -196,7 +196,9 @@ pub struct Prediction {
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Submit>,
-    image_elems: usize,
+    /// Per-deployment flattened image size, in registration order —
+    /// deployments of different model families accept different sizes.
+    elems: Arc<Vec<usize>>,
     names: Arc<Vec<Arc<str>>>,
     closing: Arc<AtomicBool>,
     /// Shared count of admitted, not-yet-served requests.
@@ -214,12 +216,6 @@ impl Client {
     /// receiver.
     pub fn infer(&self, req: InferRequest<'_>)
                  -> Result<Receiver<PredictionResult>, ServeError> {
-        if req.image.len() != self.image_elems {
-            return Err(ServeError::WrongImageSize {
-                got: req.image.len(),
-                want: self.image_elems,
-            });
-        }
         let deployment = match req.deployment {
             None => None,
             Some(name) => Some(
@@ -231,6 +227,25 @@ impl Client {
                     })?,
             ),
         };
+        // Size validation is per deployment: a pinned request must
+        // match its deployment's signature; an unpinned one must match
+        // at least one registered deployment (the leader then routes it
+        // only among those).
+        match deployment {
+            Some(d) if req.image.len() != self.elems[d] => {
+                return Err(ServeError::WrongImageSize {
+                    got: req.image.len(),
+                    want: self.elems[d],
+                });
+            }
+            None if !self.elems.contains(&req.image.len()) => {
+                return Err(ServeError::WrongImageSize {
+                    got: req.image.len(),
+                    want: self.elems[0],
+                });
+            }
+            _ => {}
+        }
         if self.closing.load(Ordering::SeqCst) {
             return Err(ServeError::Stopped);
         }
@@ -350,15 +365,19 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Register a named deployment. Registration order is report order;
-    /// all deployments must agree on the model signature.
+    /// Register a named deployment. Registration order is report order.
+    /// A deployment's backends must agree on the model signature;
+    /// *across* deployments signatures may differ (conv and sequence
+    /// models serve side by side — requests route only among
+    /// deployments whose signature matches the submitted image).
     pub fn register(mut self, dep: Deployment) -> CoordinatorBuilder {
         self.deployments.push(dep);
         self
     }
 
     /// Start serving: spawn every backend worker (compiles run in
-    /// parallel), verify all signatures agree, and start the leader.
+    /// parallel), verify each deployment's backends agree on its
+    /// signature, and start the leader.
     pub fn start(self) -> Result<Coordinator> {
         let CoordinatorBuilder {
             deployments,
@@ -475,16 +494,28 @@ impl CoordinatorBuilder {
             })??;
             sigs.push((dname, bname, sig));
         }
-        for (dname, bname, sig) in sigs.iter().skip(1) {
-            ensure!(
-                *sig == sigs[0].2,
-                "backend '{bname}' of deployment '{dname}' signature \
-                 {sig:?} disagrees with '{}' ({:?})",
-                sigs[0].1,
-                sigs[0].2
-            );
+        // Signatures must agree *within* a deployment (its backends
+        // serve the same compiled model). Across deployments they may
+        // differ: the sequence tier registers `[T, D, 1]` text models
+        // next to `[H, W, C]` conv models behind one client, and the
+        // leader routes each request only among deployments whose
+        // signature matches the submitted image.
+        let mut dep_sigs: Vec<(Arc<str>, ModelSignature)> = Vec::new();
+        for (dname, bname, sig) in &sigs {
+            match dep_sigs.iter().find(|(n, _)| n == dname) {
+                Some((_, first)) => ensure!(
+                    sig == first,
+                    "backend '{bname}' of deployment '{dname}' \
+                     signature {sig:?} disagrees with its deployment's \
+                     ({first:?})"
+                ),
+                None => dep_sigs.push((dname.clone(), sig.clone())),
+            }
         }
-        let image_elems = sigs[0].2.image_elems();
+        // Per-deployment flattened image size, in registration order.
+        let elems: Arc<Vec<usize>> = Arc::new(
+            dep_sigs.iter().map(|(_, s)| s.image_elems()).collect(),
+        );
 
         let names: Arc<Vec<Arc<str>>> = Arc::new(
             dep_metrics.iter().map(|(n, _, _)| n.clone()).collect(),
@@ -508,6 +539,7 @@ impl CoordinatorBuilder {
             sla_router: Router::with_policy(variants, sla),
             policy,
             queue_cap,
+            elems: elems.clone(),
             global: global.clone(),
             pending: pending.clone(),
             closing: closing.clone(),
@@ -517,7 +549,7 @@ impl CoordinatorBuilder {
         Ok(Coordinator {
             client: Client {
                 tx,
-                image_elems,
+                elems,
                 names,
                 closing: closing.clone(),
                 pending,
@@ -839,6 +871,10 @@ struct LeaderCtx {
     deps: Vec<LeaderDep>,
     sla_router: Router,
     policy: BatchPolicy,
+    queue_cap: usize,
+    /// Per-deployment flattened image size (registration order) — the
+    /// SLA router's eligibility mask is derived from it per request.
+    elems: Arc<Vec<usize>>,
     global: Arc<Metrics>,
     pending: Arc<AtomicUsize>,
     closing: Arc<AtomicBool>,
@@ -924,14 +960,27 @@ fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
           sub: Submit) {
     let d = match sub.deployment {
         Some(d) => d,
-        None => match ctx.sla_router.select(sub.sla) {
-            Ok(d) => d,
-            Err(e) => {
-                let _ = sub.reply.send(Err(e));
-                ctx.global.record_rejected();
-                return;
+        None => {
+            // Route only among deployments whose input signature
+            // matches the submitted image — with conv and sequence
+            // models registered side by side, the families accept
+            // different flattened sizes. The client guarantees at
+            // least one deployment matches.
+            let mask = ctx.elems.iter().enumerate().fold(
+                0u64,
+                |m, (i, &e)| {
+                    if e == sub.image.len() { m | (1u64 << i) } else { m }
+                },
+            );
+            match ctx.sla_router.select_masked(sub.sla, mask) {
+                Ok(d) => d,
+                Err(e) => {
+                    let _ = sub.reply.send(Err(e));
+                    ctx.global.record_rejected();
+                    return;
+                }
             }
-        },
+        }
     };
     // Admission control before the request costs anything: shed by
     // depth and live latency so Standard/Quality give way first and

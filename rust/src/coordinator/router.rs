@@ -200,12 +200,37 @@ impl Router {
     /// broken by latency (`Realtime`/`Standard`) or accuracy-then-
     /// latency (`Quality`).
     pub fn select(&self, sla: Sla) -> Result<usize, ServeError> {
-        let n = self.variants.len();
-        let mut lat = [0f64; MAX_VARIANTS];
-        for (i, v) in self.variants.iter().enumerate() {
-            lat[i] = v.latency_ms();
+        self.select_masked(sla, u64::MAX)
+    }
+
+    /// [`Router::select`] restricted to the variants whose bit is set
+    /// in `mask` (bit `i` = variant `i`). The multi-family coordinator
+    /// uses this to route each request only among deployments whose
+    /// input signature matches the submitted image — a `[T, D]` text
+    /// request must never land on a conv variant. The fastest-third /
+    /// most-accurate-third admission thresholds are computed over the
+    /// *eligible* subset, so a tier of slow text models next to fast
+    /// conv models still gets a meaningful Realtime cut among its own.
+    pub fn select_masked(&self, sla: Sla, mask: u64)
+                         -> Result<usize, ServeError> {
+        // Compact the eligible variants into dense stack buffers; `j`
+        // indexes those, `idx[j]` maps back to the variant index.
+        let mut idx = [0usize; MAX_VARIANTS];
+        let mut m = 0;
+        for i in 0..self.variants.len() {
+            if mask & (1u64 << i) != 0 {
+                idx[m] = i;
+                m += 1;
+            }
         }
-        let k = n.div_ceil(3);
+        if m == 0 {
+            return Err(ServeError::NoAdmissibleVariant { sla });
+        }
+        let mut lat = [0f64; MAX_VARIANTS];
+        for j in 0..m {
+            lat[j] = self.variants[idx[j]].latency_ms();
+        }
+        let k = m.div_ceil(3);
         // One admission threshold per request, then a flat scan. Under
         // a hard budget, a variant with no measurement at all (infinite
         // prior — `from_backends`/`pjrt` deployments) is admitted
@@ -214,34 +239,35 @@ impl Router {
         // completion the measured point governs.
         let lat_cap = match (sla, self.policy.realtime_budget_ms) {
             (Sla::Realtime, Some(budget)) => {
-                for l in &mut lat[..n] {
+                for l in &mut lat[..m] {
                     if l.is_infinite() {
                         *l = budget;
                     }
                 }
                 budget
             }
-            (Sla::Realtime, None) => kth_smallest(&lat[..n], k),
+            (Sla::Realtime, None) => kth_smallest(&lat[..m], k),
             _ => f64::INFINITY,
         };
         let acc_floor = match (sla, self.policy.quality_floor) {
             (Sla::Quality, Some(floor)) => floor,
             (Sla::Quality, None) => {
                 let mut neg = [0f64; MAX_VARIANTS];
-                for (j, v) in self.variants.iter().enumerate() {
-                    neg[j] = -v.accuracy;
+                for j in 0..m {
+                    neg[j] = -self.variants[idx[j]].accuracy;
                 }
-                -kth_smallest(&neg[..n], k)
+                -kth_smallest(&neg[..m], k)
             }
             _ => f64::NEG_INFINITY,
         };
-        (0..n)
-            .filter(|&i| {
-                lat[i] <= lat_cap
-                    && self.variants[i].accuracy >= acc_floor
+        (0..m)
+            .filter(|&j| {
+                lat[j] <= lat_cap
+                    && self.variants[idx[j]].accuracy >= acc_floor
             })
             .min_by(|&a, &b| {
-                let (va, vb) = (&self.variants[a], &self.variants[b]);
+                let (va, vb) =
+                    (&self.variants[idx[a]], &self.variants[idx[b]]);
                 let load = va.load().cmp(&vb.load());
                 if sla == Sla::Quality {
                     load.then(vb.accuracy.total_cmp(&va.accuracy))
@@ -250,6 +276,7 @@ impl Router {
                     load.then(lat[a].total_cmp(&lat[b]))
                 }
             })
+            .map(|j| idx[j])
             .ok_or(ServeError::NoAdmissibleVariant { sla })
     }
 
@@ -590,6 +617,43 @@ mod tests {
         ));
         // Standard is never constrained.
         assert!(r.select(Sla::Standard).is_ok());
+    }
+
+    #[test]
+    fn mask_restricts_the_candidate_set() {
+        let r = mk();
+        // All bits set: identical to plain select.
+        assert_eq!(r.select_masked(Sla::Realtime, u64::MAX).unwrap(), 2);
+        // Fastest variant masked out: Realtime falls to the next.
+        assert_eq!(r.select_masked(Sla::Realtime, 0b011).unwrap(), 1);
+        // Singleton mask pins the choice regardless of SLA.
+        for sla in [Sla::Realtime, Sla::Standard, Sla::Quality] {
+            assert_eq!(r.select_masked(sla, 0b001).unwrap(), 0);
+        }
+        // Empty mask: typed rejection, not a panic.
+        assert!(matches!(
+            r.select_masked(Sla::Standard, 0),
+            Err(ServeError::NoAdmissibleVariant { sla: Sla::Standard })
+        ));
+    }
+
+    #[test]
+    fn mask_thresholds_run_over_the_eligible_subset() {
+        // Two families behind one router: fast conv variants (bits 0-1)
+        // and slow text variants (bits 2-3). With the conv variants
+        // masked out, the fastest-third cut must be computed among the
+        // text variants — not leave text traffic inadmissible because
+        // every text model is slower than the global fastest third.
+        let r = Router::new(vec![
+            Variant::new("conv-a", 1.0, 0.95),
+            Variant::new("conv-b", 2.0, 0.93),
+            Variant::new("text-a", 40.0, 0.91),
+            Variant::new("text-b", 80.0, 0.90),
+        ]);
+        assert_eq!(r.select_masked(Sla::Realtime, 0b1100).unwrap(), 2);
+        // And the most-accurate-third cut likewise: conv-a has the top
+        // global accuracy, but among text variants text-a wins Quality.
+        assert_eq!(r.select_masked(Sla::Quality, 0b1100).unwrap(), 2);
     }
 
     #[test]

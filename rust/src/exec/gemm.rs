@@ -71,6 +71,31 @@ pub fn axpy(y: &mut [f32], x: &[f32], w: f32) {
     }
 }
 
+/// `C[M][N] += A[M][K] * B[N][K]^T` — the transposed-B GEMM the sequence
+/// tier runs: projections keep weights row-major `[d_out, d_in]` (so B's
+/// rows are contiguous), and attention scores are `Q K^T` with both
+/// operands row-major. Each `C[i][j]` is one sequential dot product, so
+/// results are bit-identical for every thread count (threads split rows
+/// of C, never a reduction) — the property the compiled-vs-reference
+/// sequence tests lean on.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
+               n: usize, threads: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    threadpool::parallel_chunks_mut(c, n, threads, |row, c_row| {
+        let a_row = &a[row * k..(row + 1) * k];
+        for (j, out) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (x, w) in a_row.iter().zip(b_row) {
+                acc += x * w;
+            }
+            *out += acc;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +128,42 @@ mod tests {
             let want = reference(&a, &b, m, k, n);
             prop::assert_allclose(&c, &want, 1e-4, 1e-4)
         });
+    }
+
+    #[test]
+    fn gemm_nt_matches_reference_and_ignores_thread_count() {
+        prop::check("gemm-nt-vs-ref", 25, |g| {
+            let m = g.usize(1, 24);
+            let k = g.usize(1, 48);
+            let n = g.usize(1, 32);
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(n * k);
+            let mut c = vec![0f32; m * n];
+            gemm_nt(&a, &b, &mut c, m, k, n, 1);
+            let mut c4 = vec![0f32; m * n];
+            gemm_nt(&a, &b, &mut c4, m, k, n, 4);
+            if c != c4 {
+                return Err("thread count changed gemm_nt bits".into());
+            }
+            // B^T reference via the row-major gemm oracle.
+            let mut bt = vec![0f32; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    bt[kk * n + j] = b[j * k + kk];
+                }
+            }
+            let want = reference(&a, &bt, m, k, n);
+            prop::assert_allclose(&c, &want, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn gemm_nt_accumulates_into_c() {
+        let a = vec![2.0f32, 1.0];
+        let b = vec![3.0f32, -1.0];
+        let mut c = vec![5.0f32];
+        gemm_nt(&a, &b, &mut c, 1, 2, 1, 1);
+        assert_eq!(c[0], 5.0 + 2.0 * 3.0 - 1.0);
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! Shared non-conv ops: depthwise conv, max-pool, global average pool,
-//! fully connected, residual add.
+//! fully connected, residual add — plus the sequence-tier kernels
+//! (per-token projection over any [`ProjStore`] format, layer norm,
+//! multi-head self-attention, sequence mean-pool).
 //!
-//! Each op has two entry points: a one-shot form returning a fresh
-//! [`Tensor`] (benchmarks, oracle tests) and a `*_into` form writing
-//! into a preassigned buffer — what the compiled-op pipeline calls so
-//! steady-state inference allocates nothing beyond its arena.
+//! Each op has a `*_into` form writing into a preassigned buffer — what
+//! the compiled-op pipeline calls so steady-state inference allocates
+//! nothing beyond its arena. The sequence projections keep the same
+//! accumulation order across their dense/CSR/int8 variants (one
+//! sequential dot per output, bias added last), so the pruned and
+//! dequant-on-load paths are bit-identical to the dense kernel run on
+//! their materialized f32 twins — the property `tests/seq_pipeline.rs`
+//! asserts, mirroring the conv engines.
 
+use crate::compress::{AttnWeights, CsrLayer, FlatWeights, ProjStore};
+use crate::exec::gemm;
 use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
+use crate::quant::QuantDense;
 
 /// Depthwise 3x3 conv, SAME padding; weights `w[c][ky][kx]`, `bias[c]`.
 pub fn depthwise3x3(input: &Tensor, weights: &[f32], bias: &[f32],
@@ -209,6 +218,224 @@ pub fn dense_batch_into(input: &[f32], n: usize, weights: &[f32],
     }
 }
 
+/// Per-token projection `[T, d_in] -> [T, d_out]` with dense weights
+/// `[d_out, d_in]` row-major: `out = x W^T + bias` (+ optional ReLU).
+pub fn seq_matmul_into(input: &[f32], t: usize, d_in: usize,
+                       w: &FlatWeights, relu: bool, threads: usize,
+                       out: &mut [f32]) {
+    let d_out = w.bias.len();
+    assert_eq!(input.len(), t * d_in, "projection input size mismatch");
+    assert_eq!(w.weights.len(), d_out * d_in,
+               "projection weight size mismatch");
+    assert_eq!(out.len(), t * d_out, "output buffer size mismatch");
+    for row in out.chunks_mut(d_out) {
+        row.copy_from_slice(&w.bias);
+    }
+    gemm::gemm_nt(input, &w.weights, out, t, d_in, d_out, threads);
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// [`seq_matmul_into`] over CSR rows (unstructured-pruned projection).
+/// Column order inside a row is ascending, so skipping the pruned zeros
+/// reproduces the dense kernel's accumulation bits exactly.
+pub fn seq_matmul_csr_into(input: &[f32], t: usize, d_in: usize,
+                           w: &CsrLayer, relu: bool, out: &mut [f32]) {
+    assert_eq!(w.cin * w.kh * w.kw, d_in, "CSR projection width mismatch");
+    let d_out = w.cout;
+    assert_eq!(input.len(), t * d_in, "projection input size mismatch");
+    assert_eq!(out.len(), t * d_out, "output buffer size mismatch");
+    for (tok, row_out) in out.chunks_mut(d_out).enumerate() {
+        let x = &input[tok * d_in..(tok + 1) * d_in];
+        for (o, dst) in row_out.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for e in w.row_ptr[o] as usize..w.row_ptr[o + 1] as usize {
+                acc += w.values[e] * x[w.col_idx[e] as usize];
+            }
+            let v = w.bias[o] + acc;
+            *dst = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// [`seq_matmul_into`] with weight-only int8 storage, dequantized
+/// in-register (`w ~= q * scale[o]`) — same accumulation order as the
+/// dense kernel on the dequantized twin.
+pub fn seq_matmul_quant_into(input: &[f32], t: usize, d_in: usize,
+                             w: &QuantDense, relu: bool, out: &mut [f32]) {
+    assert_eq!(w.cin * w.kh * w.kw, d_in,
+               "quant projection width mismatch");
+    let d_out = w.cout;
+    assert_eq!(input.len(), t * d_in, "projection input size mismatch");
+    assert_eq!(out.len(), t * d_out, "output buffer size mismatch");
+    for (tok, row_out) in out.chunks_mut(d_out).enumerate() {
+        let x = &input[tok * d_in..(tok + 1) * d_in];
+        for (o, dst) in row_out.iter_mut().enumerate() {
+            let s = w.scales[o];
+            let wrow = &w.weights[o * d_in..(o + 1) * d_in];
+            let mut acc = 0f32;
+            for (q, xi) in wrow.iter().zip(x) {
+                acc += (*q as f32 * s) * xi;
+            }
+            let v = w.bias[o] + acc;
+            *dst = if relu { v.max(0.0) } else { v };
+        }
+    }
+}
+
+/// Per-token projection over any [`ProjStore`] format — the single
+/// dispatch point the compiled sequence kernels call.
+pub fn proj_into(input: &[f32], t: usize, d_in: usize, w: &ProjStore,
+                 relu: bool, threads: usize, out: &mut [f32]) {
+    match w {
+        ProjStore::Dense(f) => {
+            seq_matmul_into(input, t, d_in, f, relu, threads, out)
+        }
+        ProjStore::Csr(c) => {
+            seq_matmul_csr_into(input, t, d_in, c, relu, out)
+        }
+        ProjStore::Int8(q) => {
+            seq_matmul_quant_into(input, t, d_in, q, relu, out)
+        }
+    }
+}
+
+/// Per-token layer normalization over the width `d` with learned
+/// gamma (`w.weights`) and beta (`w.bias`); eps = 1e-5, fp32 statistics.
+pub fn layernorm_into(input: &[f32], t: usize, d: usize, gamma: &[f32],
+                      beta: &[f32], out: &mut [f32]) {
+    assert_eq!(input.len(), t * d, "layernorm input size mismatch");
+    assert_eq!(gamma.len(), d, "layernorm gamma size mismatch");
+    assert_eq!(beta.len(), d, "layernorm beta size mismatch");
+    assert_eq!(out.len(), t * d, "output buffer size mismatch");
+    for (tok, row_out) in out.chunks_mut(d).enumerate() {
+        let x = &input[tok * d..(tok + 1) * d];
+        let mean = x.iter().sum::<f32>() / d as f32;
+        let var = x.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+            / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for ((o, xi), (g, b)) in
+            row_out.iter_mut().zip(x).zip(gamma.iter().zip(beta))
+        {
+            *o = g * (xi - mean) * inv + b;
+        }
+    }
+}
+
+/// Multi-head self-attention `[T, D] -> [T, D]`: Q/K/V projections,
+/// per-head `softmax(Q K^T / sqrt(D/heads)) V` with max-subtracted
+/// (numerically stable) row softmax, then the output projection. All
+/// intermediates — Q, K, V, the context rows, and the `[heads, T, T]`
+/// score buffer — live in `scratch`, whose required capacity is exactly
+/// `Layer::scratch_elems()` so the arena preallocates it and steady-state
+/// inference never grows it.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_into(input: &[f32], t: usize, d: usize, w: &AttnWeights,
+                      heads: usize, threads: usize,
+                      scratch: &mut Vec<f32>, out: &mut [f32]) {
+    assert!(heads > 0 && d % heads == 0,
+            "width {d} does not divide into {heads} heads");
+    let dh = d / heads;
+    assert_eq!(input.len(), t * d, "attention input size mismatch");
+    assert_eq!(out.len(), t * d, "output buffer size mismatch");
+    let need = 4 * t * d + heads * t * t;
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    let (qkvc, scores) = scratch[..need].split_at_mut(4 * t * d);
+    let (q, rest) = qkvc.split_at_mut(t * d);
+    let (k, rest) = rest.split_at_mut(t * d);
+    let (v, ctx) = rest.split_at_mut(t * d);
+    proj_into(input, t, d, &w.q, false, threads, q);
+    proj_into(input, t, d, &w.k, false, threads, k);
+    proj_into(input, t, d, &w.v, false, threads, v);
+    let scale = 1.0 / (dh as f32).sqrt();
+    for h in 0..heads {
+        let off = h * dh;
+        let sc = &mut scores[h * t * t..(h + 1) * t * t];
+        for i in 0..t {
+            let qrow = &q[i * d + off..i * d + off + dh];
+            let srow = &mut sc[i * t..(i + 1) * t];
+            for (j, s) in srow.iter_mut().enumerate() {
+                let krow = &k[j * d + off..j * d + off + dh];
+                let mut acc = 0f32;
+                for (a, b) in qrow.iter().zip(krow) {
+                    acc += a * b;
+                }
+                *s = acc * scale;
+            }
+            let max =
+                srow.iter().fold(f32::NEG_INFINITY, |m, s| m.max(*s));
+            let mut sum = 0f32;
+            for s in srow.iter_mut() {
+                *s = (*s - max).exp();
+                sum += *s;
+            }
+            let inv = 1.0 / sum;
+            for s in srow.iter_mut() {
+                *s *= inv;
+            }
+        }
+    }
+    ctx.fill(0.0);
+    for i in 0..t {
+        let row = &mut ctx[i * d..(i + 1) * d];
+        for h in 0..heads {
+            let off = h * dh;
+            let sc = &scores[h * t * t + i * t..h * t * t + (i + 1) * t];
+            for (j, &p) in sc.iter().enumerate() {
+                gemm::axpy(&mut row[off..off + dh],
+                           &v[j * d + off..j * d + off + dh], p);
+            }
+        }
+    }
+    proj_into(ctx, t, d, &w.o, false, threads, out);
+}
+
+/// Mean-pool over the sequence positions: `[T, D] -> [D]` (the spatial
+/// `[D, 1, 1]` the classifier head consumes).
+pub fn seqpool_into(input: &[f32], t: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(input.len(), t * d, "seqpool input size mismatch");
+    assert_eq!(out.len(), d, "output buffer size mismatch");
+    let inv = 1.0 / t as f32;
+    for (dim, o) in out.iter_mut().enumerate() {
+        let mut acc = 0f32;
+        for tok in 0..t {
+            acc += input[tok * d + dim];
+        }
+        *o = acc * inv;
+    }
+}
+
+/// Batched [`attention_into`]: per-image loop sharing one scratch region
+/// (which is why the memory plan does not scale scratch by the batch).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_batch_into(input: &[f32], n: usize, t: usize, d: usize,
+                            w: &AttnWeights, heads: usize, threads: usize,
+                            scratch: &mut Vec<f32>, out: &mut [f32]) {
+    let per = t * d;
+    assert_eq!(input.len(), n * per, "batched attention input mismatch");
+    assert_eq!(out.len(), n * per, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(per).enumerate() {
+        attention_into(&input[img * per..(img + 1) * per], t, d, w, heads,
+                       threads, scratch, chunk);
+    }
+}
+
+/// Batched [`seqpool_into`]: `out` is `[n][d]`.
+pub fn seqpool_batch_into(input: &[f32], n: usize, t: usize, d: usize,
+                          out: &mut [f32]) {
+    let per = t * d;
+    assert_eq!(input.len(), n * per, "batched seqpool input mismatch");
+    assert_eq!(out.len(), n * d, "output buffer size mismatch");
+    for (img, chunk) in out.chunks_mut(d).enumerate() {
+        seqpool_into(&input[img * per..(img + 1) * per], t, d, chunk);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,5 +523,181 @@ mod tests {
         }
         let out = depthwise3x3(&input, &w, &[0.0; 3], 1, false);
         assert!(out.max_abs_diff(&input) < 1e-6);
+    }
+
+    use std::sync::Arc;
+
+    fn random_proj(rng: &mut Rng, d_in: usize, d_out: usize)
+                   -> FlatWeights {
+        FlatWeights::new(
+            (0..d_in * d_out).map(|_| rng.normal_f32() * 0.3).collect(),
+            (0..d_out).map(|_| rng.normal_f32() * 0.01).collect(),
+        )
+    }
+
+    #[test]
+    fn seq_matmul_matches_manual_dot() {
+        // [T=2, d_in=3] x W[2][3]^T + bias
+        let x = [1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0];
+        let w = FlatWeights::new(vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5],
+                                 vec![0.1, -0.2]);
+        let mut out = vec![0f32; 4];
+        seq_matmul_into(&x, 2, 3, &w, false, 1, &mut out);
+        assert!((out[0] - (0.1 + 1.0 - 3.0)).abs() < 1e-6);
+        assert!((out[1] - (-0.2 + 0.5 * (1.0 + 2.0 + 3.0))).abs() < 1e-6);
+        assert!((out[2] - (0.1 + (-1.0) - 0.0)).abs() < 1e-6);
+        let mut relu = vec![0f32; 4];
+        seq_matmul_into(&x, 2, 3, &w, true, 1, &mut relu);
+        assert!(relu.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn csr_and_quant_projections_bit_match_their_f32_twins() {
+        let mut rng = Rng::seed_from(11);
+        let (t, d_in, d_out) = (7, 24, 16);
+        let x: Vec<f32> =
+            (0..t * d_in).map(|_| rng.normal_f32()).collect();
+        let mut w = random_proj(&mut rng, d_in, d_out);
+        // prune ~60% and keep a dense twin of the pruned weights
+        for v in w.weights.iter_mut() {
+            if rng.f64() < 0.6 {
+                *v = 0.0;
+            }
+        }
+        let csr = CsrLayer::from_dense(&w.to_proj_dense(d_in), None);
+        let mut dense_out = vec![0f32; t * d_out];
+        seq_matmul_into(&x, t, d_in, &w, true, 1, &mut dense_out);
+        let mut csr_out = vec![f32::NAN; t * d_out];
+        seq_matmul_csr_into(&x, t, d_in, &csr, true, &mut csr_out);
+        assert_eq!(dense_out, csr_out,
+                   "CSR projection diverged from its dense twin");
+
+        let q = QuantDense::quantize(&w.to_proj_dense(d_in));
+        let deq = q.dequantize();
+        let deq_flat = FlatWeights::new(deq.weights, deq.bias);
+        let mut quant_out = vec![f32::NAN; t * d_out];
+        seq_matmul_quant_into(&x, t, d_in, &q, true, &mut quant_out);
+        let mut twin_out = vec![0f32; t * d_out];
+        seq_matmul_into(&x, t, d_in, &deq_flat, true, 1, &mut twin_out);
+        assert_eq!(quant_out, twin_out,
+                   "dequant-on-load projection diverged from its twin");
+    }
+
+    #[test]
+    fn layernorm_normalizes_each_token() {
+        let mut rng = Rng::seed_from(4);
+        let (t, d) = (5, 32);
+        let x: Vec<f32> =
+            (0..t * d).map(|_| rng.normal_f32() * 3.0 + 1.0).collect();
+        let gamma = vec![1.0f32; d];
+        let beta = vec![0.0f32; d];
+        let mut out = vec![f32::NAN; t * d];
+        layernorm_into(&x, t, d, &gamma, &beta, &mut out);
+        for row in out.chunks(d) {
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean))
+                .sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+        // gamma/beta shift the normalized values affinely
+        let gamma2 = vec![2.0f32; d];
+        let beta2 = vec![0.5f32; d];
+        let mut out2 = vec![0f32; t * d];
+        layernorm_into(&x, t, d, &gamma2, &beta2, &mut out2);
+        for (a, b) in out.iter().zip(&out2) {
+            assert!((2.0 * a + 0.5 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn seqpool_means_over_tokens() {
+        let x = [1.0f32, 10.0, 3.0, 20.0];
+        let mut out = vec![0f32; 2];
+        seqpool_into(&x, 2, 2, &mut out);
+        assert_eq!(out, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn attention_single_token_is_value_times_output_proj() {
+        // With T = 1 the softmax is the identity weight 1.0, so the op
+        // reduces to o_proj(v_proj(x)) regardless of Q/K.
+        let mut rng = Rng::seed_from(9);
+        let d = 16;
+        let w = AttnWeights {
+            q: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            k: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            v: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            o: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+        };
+        let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mut scratch = Vec::new();
+        let mut out = vec![f32::NAN; d];
+        attention_into(&x, 1, d, &w, 4, 1, &mut scratch, &mut out);
+        let mut v = vec![0f32; d];
+        proj_into(&x, 1, d, &w.v, false, 1, &mut v);
+        let mut want = vec![0f32; d];
+        proj_into(&v, 1, d, &w.o, false, 1, &mut want);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(scratch.len(), 4 * d + 4 * 1 * 1,
+                   "scratch must match Layer::scratch_elems()");
+    }
+
+    #[test]
+    fn attention_rows_sum_to_probability_weighted_values() {
+        // Identical tokens -> identical attention outputs per row.
+        let mut rng = Rng::seed_from(21);
+        let (t, d, heads) = (6, 8, 2);
+        let w = AttnWeights {
+            q: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            k: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            v: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            o: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+        };
+        let token: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> =
+            (0..t).flat_map(|_| token.iter().copied()).collect();
+        let mut scratch = Vec::new();
+        let mut out = vec![0f32; t * d];
+        attention_into(&x, t, d, &w, heads, 1, &mut scratch, &mut out);
+        for row in out.chunks(d).skip(1) {
+            for (a, b) in row.iter().zip(&out[..d]) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_seq_ops_match_per_image_runs() {
+        let mut rng = Rng::seed_from(33);
+        let (n, t, d, heads) = (3, 5, 8, 2);
+        let w = AttnWeights {
+            q: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            k: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            v: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+            o: ProjStore::Dense(Arc::new(random_proj(&mut rng, d, d))),
+        };
+        let x: Vec<f32> =
+            (0..n * t * d).map(|_| rng.normal_f32()).collect();
+        let mut scratch = Vec::new();
+        let mut fused = vec![0f32; n * t * d];
+        attention_batch_into(&x, n, t, d, &w, heads, 1, &mut scratch,
+                             &mut fused);
+        for img in 0..n {
+            let mut one = vec![0f32; t * d];
+            attention_into(&x[img * t * d..(img + 1) * t * d], t, d, &w,
+                           heads, 1, &mut scratch, &mut one);
+            assert_eq!(&fused[img * t * d..(img + 1) * t * d], &one[..]);
+        }
+        let mut pooled = vec![0f32; n * d];
+        seqpool_batch_into(&x, n, t, d, &mut pooled);
+        for img in 0..n {
+            let mut one = vec![0f32; d];
+            seqpool_into(&x[img * t * d..(img + 1) * t * d], t, d,
+                         &mut one);
+            assert_eq!(&pooled[img * d..(img + 1) * d], &one[..]);
+        }
     }
 }

@@ -52,6 +52,13 @@ pub struct MemoryPlan {
     /// Leading batch dimension the capacities were scaled for (1 for
     /// single-image plans).
     pub batch: usize,
+    /// Shared engine-scratch capacity (elements): the max of
+    /// `Layer::scratch_elems()` over the model — for self-attention the
+    /// `[heads, T, T]` score buffer plus Q/K/V/context rows, so the
+    /// footprint depends on sequence length, not just channel counts.
+    /// NOT scaled by `batch`: the batched attention kernel loops per
+    /// image over the one scratch region. Zero for conv-only models.
+    pub scratch_elems: usize,
 }
 
 impl MemoryPlan {
@@ -117,16 +124,25 @@ impl MemoryPlan {
         for e in slot_elems.iter_mut() {
             *e *= batch;
         }
+        let scratch_elems = ir
+            .layers
+            .iter()
+            .map(super::Layer::scratch_elems)
+            .max()
+            .unwrap_or(0);
         MemoryPlan {
             slot_of,
             slot_elems,
             batch,
+            scratch_elems,
         }
     }
 
-    /// Total arena footprint in bytes (f32 activations).
+    /// Total arena footprint in bytes (f32 activations), engine scratch
+    /// included — what `exec::Arena::for_pipeline` allocates and what the
+    /// no-growth regression guard compares against.
     pub fn peak_bytes(&self) -> usize {
-        self.slot_elems.iter().sum::<usize>() * 4
+        (self.slot_elems.iter().sum::<usize>() + self.scratch_elems) * 4
     }
 }
 
@@ -218,6 +234,54 @@ mod tests {
                 assert_eq!(s * 8, *b);
             }
             assert_eq!(single.peak_bytes() * 8, batched.peak_bytes());
+        }
+    }
+
+    fn seq_ir(t: usize, d: usize, heads: usize) -> ModelIR {
+        let mut b = IrBuilder::new("seq", crate::ir::Shape::seq(t, d));
+        b.matmul("embed", d, false);
+        let skip = b.last();
+        b.attention("attn", heads)
+            .add("res", skip, false)
+            .layernorm("ln")
+            .seqpool("pool")
+            .dense("cls", 4, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn attention_scratch_scales_with_sequence_length() {
+        let short = MemoryPlan::build(&seq_ir(8, 16, 2));
+        let long = MemoryPlan::build(&seq_ir(32, 16, 2));
+        // [heads, T, T] + Q/K/V/ctx rows, per the layer's contract.
+        assert_eq!(short.scratch_elems, 4 * 8 * 16 + 2 * 8 * 8);
+        assert_eq!(long.scratch_elems, 4 * 32 * 16 + 2 * 32 * 32);
+        assert!(long.peak_bytes() > short.peak_bytes());
+        // scratch is part of the reported peak
+        assert!(short.peak_bytes()
+                >= (short.slot_elems.iter().sum::<usize>()
+                    + short.scratch_elems) * 4);
+    }
+
+    #[test]
+    fn batched_seq_plan_scales_slots_not_scratch() {
+        let ir = seq_ir(16, 32, 4);
+        let single = MemoryPlan::build(&ir);
+        let batched = MemoryPlan::build_batched(&ir, 8);
+        assert_eq!(single.slot_of, batched.slot_of);
+        for (s, b) in single.slot_elems.iter().zip(&batched.slot_elems) {
+            assert_eq!(s * 8, *b);
+        }
+        // The batched attention kernel loops per image over one scratch
+        // region, so scratch does not carry the batch factor.
+        assert_eq!(single.scratch_elems, batched.scratch_elems);
+        assert!(single.scratch_elems > 0);
+    }
+
+    #[test]
+    fn conv_models_need_no_scratch() {
+        for ir in [chain_ir(), residual_ir()] {
+            assert_eq!(MemoryPlan::build(&ir).scratch_elems, 0);
         }
     }
 

@@ -4,30 +4,100 @@
 //! kernel geometry, pattern/tuning annotations attach in codegen::Plan).
 //!
 //! The LR is richer than a plain op list: every layer records its resolved
-//! input/output spatial shapes, so downstream passes (reorder, tuner,
-//! weight compression, the executors, the hardware model) never re-derive
+//! input/output shapes, so downstream passes (reorder, tuner, weight
+//! compression, the executors, the hardware model) never re-derive
 //! geometry.
+//!
+//! The IR spans two model families behind one [`Shape`] type: spatial
+//! `[C, H, W]` conv nets and sequence `[T, D]` models (token count x
+//! model width). Sequence shapes reuse the planar layout as
+//! `{c: 1, h: T, w: D}`, so every family-agnostic pass (liveness, arena
+//! planning, batching, the serving signature) works on both without a
+//! dispatch; family-specific passes ask [`Shape::family`].
 
 pub mod liveness;
 pub mod zoo;
 
 use anyhow::{bail, Result};
 
-/// Spatial tensor shape: channels, height, width (executors use planar
-/// NCHW layout — see exec::Tensor).
+/// Which model family a shape belongs to. The extents live in the same
+/// three fields either way; the family records how passes should read
+/// them (and lets the builder reject e.g. attention over an image).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Chw {
+pub enum Family {
+    /// `[C, H, W]` image activations (planar NCHW — see exec::Tensor).
+    Spatial,
+    /// `[T, D]` token sequences, stored as `{c: 1, h: T, w: D}`.
+    Sequence,
+}
+
+/// Tensor shape for both model families. Spatial shapes are channels x
+/// height x width; sequence shapes are tokens x width stored in the same
+/// fields as `{c: 1, h: T, w: D}` so executors, liveness, and the serving
+/// signature treat both identically. Equality compares extents only (a
+/// `[T, D]` activation and a `[1, T, D]` image of the same numbers are
+/// the same buffer), which keeps `exec::Tensor::shape()` — always
+/// spatial — comparable against sequence pipeline shapes.
+#[derive(Debug, Clone, Copy)]
+pub struct Shape {
     pub c: usize,
     pub h: usize,
     pub w: usize,
+    family: Family,
 }
 
-impl Chw {
-    pub fn new(c: usize, h: usize, w: usize) -> Self {
-        Chw { c, h, w }
+/// Historical name for [`Shape`] (the type predates the sequence tier);
+/// every spatial call-site keeps compiling unchanged.
+pub type Chw = Shape;
+
+impl PartialEq for Shape {
+    fn eq(&self, other: &Self) -> bool {
+        (self.c, self.h, self.w) == (other.c, other.h, other.w)
     }
+}
+impl Eq for Shape {}
+
+impl Shape {
+    /// Spatial `[C, H, W]` shape.
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Shape {
+            c,
+            h,
+            w,
+            family: Family::Spatial,
+        }
+    }
+
+    /// Sequence `[T, D]` shape (`t` tokens of width `d`).
+    pub fn seq(t: usize, d: usize) -> Self {
+        Shape {
+            c: 1,
+            h: t,
+            w: d,
+            family: Family::Sequence,
+        }
+    }
+
     pub fn elements(&self) -> usize {
         self.c * self.h * self.w
+    }
+
+    pub fn family(&self) -> Family {
+        self.family
+    }
+
+    pub fn is_seq(&self) -> bool {
+        self.family == Family::Sequence
+    }
+
+    /// Sequence length (tokens). Meaningful for sequence shapes.
+    pub fn t(&self) -> usize {
+        self.h
+    }
+
+    /// Sequence width (model dimension). Meaningful for sequence shapes.
+    pub fn d(&self) -> usize {
+        self.w
     }
 }
 
@@ -51,8 +121,23 @@ pub enum LayerKind {
     /// Fully connected over flattened input.
     Dense { cout: usize, relu: bool },
     /// Elementwise residual add with the *output* of an earlier layer
-    /// (index into the model's layer list), then optional ReLU.
+    /// (index into the model's layer list), then optional ReLU. Works
+    /// for both families (a transformer residual is the same flat add).
     Add { from: usize, relu: bool },
+    /// Per-token linear projection `[T, D_in] -> [T, d_out]` (weights
+    /// `[d_out, D_in]` + bias) — the FC of the sequence family.
+    MatMul { d_out: usize, relu: bool },
+    /// Per-token layer normalization over the width `D` with learned
+    /// scale/shift (gamma/beta).
+    LayerNorm,
+    /// Multi-head self-attention: fused per-head Q/K/V projections,
+    /// `softmax(Q K^T / sqrt(D/heads)) V`, then the output projection.
+    /// Shape-preserving: `[T, D] -> [T, D]`.
+    SelfAttention { heads: usize },
+    /// Mean-pool over the sequence positions: `[T, D] -> [D, 1, 1]`
+    /// (spatial), so the existing `Dense` classifier head and the
+    /// serving signature's `h == w == 1` logits check apply unchanged.
+    SeqPool,
 }
 
 /// One layer of the LR.
@@ -60,8 +145,8 @@ pub enum LayerKind {
 pub struct Layer {
     pub name: String,
     pub kind: LayerKind,
-    pub input: Chw,
-    pub output: Chw,
+    pub input: Shape,
+    pub output: Shape,
 }
 
 impl Layer {
@@ -79,11 +164,24 @@ impl Layer {
                 2 * (self.input.elements() * cout) as u64
             }
             LayerKind::Add { .. } => self.output.elements() as u64,
+            LayerKind::MatMul { d_out, .. } => {
+                2 * (self.input.t() * self.input.d() * d_out) as u64
+            }
+            LayerKind::LayerNorm => {
+                // mean + variance + normalize + scale/shift ~ 8 ops/elem
+                8 * self.input.elements() as u64
+            }
+            LayerKind::SelfAttention { heads } => {
+                let (t, d) = (self.input.t(), self.input.d());
+                // 4 projections (QKV + output) + QK^T + scores*V + softmax
+                (8 * t * d * d + 4 * t * t * d + 5 * heads * t * t) as u64
+            }
+            LayerKind::SeqPool => self.input.elements() as u64,
             _ => 0,
         }
     }
 
-    /// Dense weight-parameter count.
+    /// Dense weight-parameter count (biases excluded, like the conv arms).
     pub fn weight_count(&self) -> usize {
         match &self.kind {
             LayerKind::Conv { kh, kw, cout, .. } => {
@@ -91,6 +189,26 @@ impl Layer {
             }
             LayerKind::DwConv { .. } => 9 * self.input.c,
             LayerKind::Dense { cout, .. } => self.input.elements() * cout,
+            LayerKind::MatMul { d_out, .. } => self.input.d() * d_out,
+            LayerKind::LayerNorm => 2 * self.input.d(),
+            LayerKind::SelfAttention { .. } => {
+                4 * self.input.d() * self.input.d()
+            }
+            _ => 0,
+        }
+    }
+
+    /// Engine scratch (elements) this layer needs beyond its output slot.
+    /// Only self-attention uses it: Q/K/V/context rows plus the
+    /// `[heads, T, T]` score buffer — the sequence-length-dependent
+    /// allocation the arena must plan for. NOT scaled by the batch
+    /// dimension: the batched kernel loops per image over one scratch.
+    pub fn scratch_elems(&self) -> usize {
+        match &self.kind {
+            LayerKind::SelfAttention { heads } => {
+                let (t, d) = (self.input.t(), self.input.d());
+                4 * t * d + heads * t * t
+            }
             _ => 0,
         }
     }
@@ -104,15 +222,15 @@ impl Layer {
 #[derive(Debug, Clone)]
 pub struct ModelIR {
     pub name: String,
-    pub input: Chw,
+    pub input: Shape,
     pub layers: Vec<Layer>,
 }
 
 /// Builder that tracks shapes as layers are appended.
 pub struct IrBuilder {
     name: String,
-    input: Chw,
-    cur: Chw,
+    input: Shape,
+    cur: Shape,
     layers: Vec<Layer>,
 }
 
@@ -121,7 +239,7 @@ fn out_dim(size: usize, stride: usize) -> usize {
 }
 
 impl IrBuilder {
-    pub fn new(name: &str, input: Chw) -> Self {
+    pub fn new(name: &str, input: Shape) -> Self {
         IrBuilder {
             name: name.to_string(),
             input,
@@ -142,104 +260,134 @@ impl IrBuilder {
         self.layers.len() - 1
     }
 
-    pub fn cur_shape(&self) -> Chw {
+    pub fn cur_shape(&self) -> Shape {
         self.cur
+    }
+
+    fn push(&mut self, name: &str, kind: LayerKind, out: Shape)
+            -> &mut Self {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind,
+            input: self.cur,
+            output: out,
+        });
+        self.cur = out;
+        self
     }
 
     pub fn conv(&mut self, name: &str, k: usize, cout: usize, stride: usize,
                 relu: bool) -> &mut Self {
-        let out = Chw::new(cout, out_dim(self.cur.h, stride),
-                           out_dim(self.cur.w, stride));
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::Conv {
+        let out = Shape::new(cout, out_dim(self.cur.h, stride),
+                             out_dim(self.cur.w, stride));
+        self.push(
+            name,
+            LayerKind::Conv {
                 kh: k,
                 kw: k,
                 cout,
                 stride,
                 relu,
             },
-            input: self.cur,
-            output: out,
-        });
-        self.cur = out;
-        self
+            out,
+        )
     }
 
     pub fn dwconv(&mut self, name: &str, stride: usize, relu: bool)
                   -> &mut Self {
-        let out = Chw::new(self.cur.c, out_dim(self.cur.h, stride),
-                           out_dim(self.cur.w, stride));
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::DwConv { stride, relu },
-            input: self.cur,
-            output: out,
-        });
-        self.cur = out;
-        self
+        let out = Shape::new(self.cur.c, out_dim(self.cur.h, stride),
+                             out_dim(self.cur.w, stride));
+        self.push(name, LayerKind::DwConv { stride, relu }, out)
     }
 
     pub fn maxpool(&mut self, name: &str) -> &mut Self {
-        let out = Chw::new(self.cur.c, out_dim(self.cur.h, 2),
-                           out_dim(self.cur.w, 2));
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::MaxPool2,
-            input: self.cur,
-            output: out,
-        });
-        self.cur = out;
-        self
+        let out = Shape::new(self.cur.c, out_dim(self.cur.h, 2),
+                             out_dim(self.cur.w, 2));
+        self.push(name, LayerKind::MaxPool2, out)
     }
 
     pub fn gap(&mut self, name: &str) -> &mut Self {
-        let out = Chw::new(self.cur.c, 1, 1);
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::GlobalAvgPool,
-            input: self.cur,
-            output: out,
-        });
-        self.cur = out;
-        self
+        let out = Shape::new(self.cur.c, 1, 1);
+        self.push(name, LayerKind::GlobalAvgPool, out)
     }
 
     pub fn dense(&mut self, name: &str, cout: usize, relu: bool) -> &mut Self {
-        let out = Chw::new(cout, 1, 1);
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::Dense { cout, relu },
-            input: self.cur,
-            output: out,
-        });
-        self.cur = out;
-        self
+        let out = Shape::new(cout, 1, 1);
+        self.push(name, LayerKind::Dense { cout, relu }, out)
     }
 
-    /// Residual add with the output of layer index `from`.
+    /// Residual add with the output of layer index `from`. Both families.
     pub fn add(&mut self, name: &str, from: usize, relu: bool) -> &mut Self {
         let out = self.cur;
-        self.layers.push(Layer {
-            name: name.to_string(),
-            kind: LayerKind::Add { from, relu },
-            input: self.cur,
-            output: out,
-        });
-        self
+        self.push(name, LayerKind::Add { from, relu }, out)
+    }
+
+    fn assert_seq(&self, op: &str, name: &str) {
+        assert!(
+            self.cur.is_seq(),
+            "{op} '{name}' requires a sequence shape, but the current \
+             shape is {:?}",
+            self.cur
+        );
+    }
+
+    /// Per-token linear projection `[T, D] -> [T, d_out]`.
+    pub fn matmul(&mut self, name: &str, d_out: usize, relu: bool)
+                  -> &mut Self {
+        self.assert_seq("matmul", name);
+        let out = Shape::seq(self.cur.t(), d_out);
+        self.push(name, LayerKind::MatMul { d_out, relu }, out)
+    }
+
+    /// Per-token layer normalization over the width `D`.
+    pub fn layernorm(&mut self, name: &str) -> &mut Self {
+        self.assert_seq("layernorm", name);
+        let out = self.cur;
+        self.push(name, LayerKind::LayerNorm, out)
+    }
+
+    /// Multi-head self-attention; `D` must divide evenly into `heads`.
+    pub fn attention(&mut self, name: &str, heads: usize) -> &mut Self {
+        self.assert_seq("attention", name);
+        assert!(
+            heads > 0 && self.cur.d() % heads == 0,
+            "attention '{name}': width {} does not divide into {heads} \
+             heads",
+            self.cur.d()
+        );
+        let out = self.cur;
+        self.push(name, LayerKind::SelfAttention { heads }, out)
+    }
+
+    /// Mean-pool over tokens: `[T, D] -> [D, 1, 1]` (spatial), feeding
+    /// the standard `dense` classifier head.
+    pub fn seqpool(&mut self, name: &str) -> &mut Self {
+        self.assert_seq("seqpool", name);
+        let out = Shape::new(self.cur.d(), 1, 1);
+        self.push(name, LayerKind::SeqPool, out)
     }
 
     pub fn build(self) -> Result<ModelIR> {
-        // Validate Add references and shape agreement.
+        // Validate Add references and shape agreement, naming the
+        // offending layers (not bare indices) so a bad skip-link in a
+        // 50-layer model is findable from the message alone.
         for (i, l) in self.layers.iter().enumerate() {
             if let LayerKind::Add { from, .. } = l.kind {
                 if from >= i {
-                    bail!("layer {i} Add references later layer {from}");
-                }
-                if self.layers[from].output != l.input {
                     bail!(
-                        "Add shape mismatch at layer {i}: {:?} vs {:?}",
-                        self.layers[from].output,
+                        "{}: Add skip-link references layer index {from}, \
+                         but only {i} earlier layer(s) exist",
+                        l.name
+                    );
+                }
+                let src = &self.layers[from];
+                if src.output != l.input {
+                    bail!(
+                        "{}: Add from {} has mismatched shapes: {:?} vs \
+                         {:?}",
+                        l.name,
+                        src.name,
+                        src.output,
                         l.input
                     );
                 }
@@ -307,6 +455,26 @@ mod tests {
     }
 
     #[test]
+    fn build_errors_name_the_offending_layers() {
+        // Shape mismatch: the message carries both layer names.
+        let mut b = IrBuilder::new("t", Chw::new(8, 8, 8));
+        b.conv("conv1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("conv2", 3, 16, 1, false).add("add3", skip, true);
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("add3: Add from conv1"), "got: {err}");
+        assert!(err.contains("mismatched shapes"), "got: {err}");
+
+        // Bad skip-link index: the message names the Add layer.
+        let mut b = IrBuilder::new("t", Chw::new(8, 8, 8));
+        b.conv("c1", 3, 8, 1, true).add("bad_add", 7, false);
+        let err = b.build().unwrap_err().to_string();
+        assert!(err.contains("bad_add: Add skip-link references layer \
+                              index 7"),
+                "got: {err}");
+    }
+
+    #[test]
     #[should_panic(expected = "empty builder")]
     fn last_on_empty_builder_panics_clearly() {
         let b = IrBuilder::new("t", Chw::new(1, 4, 4));
@@ -320,5 +488,54 @@ mod tests {
         let m = b.build().unwrap();
         assert_eq!(m.layers[0].weight_count(), 3 * 3 * 4 * 8);
         assert_eq!(m.layers[0].flops(), 2 * 16 * 16 * 9 * 4 * 8);
+    }
+
+    #[test]
+    fn seq_shapes_compare_by_extents_but_keep_family() {
+        let s = Shape::seq(16, 32);
+        assert_eq!((s.c, s.h, s.w), (1, 16, 32));
+        assert_eq!((s.t(), s.d()), (16, 32));
+        assert!(s.is_seq());
+        assert_eq!(s.family(), Family::Sequence);
+        // Equality ignores family: a [1, T, D] spatial tensor is the
+        // same buffer as a [T, D] sequence activation.
+        assert_eq!(s, Shape::new(1, 16, 32));
+        assert!(!Shape::new(1, 16, 32).is_seq());
+    }
+
+    #[test]
+    fn seq_builder_tracks_shapes_and_counts() {
+        let mut b = IrBuilder::new("seq", Shape::seq(16, 32));
+        b.matmul("embed", 32, false);
+        let skip = b.last();
+        b.attention("attn", 4)
+            .add("res", skip, false)
+            .layernorm("ln")
+            .matmul("ff1", 64, true)
+            .matmul("ff2", 32, false)
+            .seqpool("pool")
+            .dense("cls", 5, false);
+        let m = b.build().unwrap();
+        assert_eq!(m.layers[1].output, Shape::seq(16, 32));
+        assert_eq!(m.layers[4].output, Shape::seq(16, 64));
+        assert_eq!(m.layers[6].output, Shape::new(32, 1, 1));
+        assert_eq!(m.layers[7].output, Shape::new(5, 1, 1));
+        // MatMul params: d_in * d_out, attention 4*D^2, layernorm 2*D.
+        assert_eq!(m.layers[0].weight_count(), 32 * 32);
+        assert_eq!(m.layers[1].weight_count(), 4 * 32 * 32);
+        assert_eq!(m.layers[3].weight_count(), 2 * 32);
+        assert_eq!(m.layers[4].weight_count(), 32 * 64);
+        assert_eq!(m.layers[4].flops(), 2 * 16 * 32 * 64);
+        // Attention scratch: Q/K/V/ctx rows + [heads, T, T] scores.
+        assert_eq!(m.layers[1].scratch_elems(),
+                   4 * 16 * 32 + 4 * 16 * 16);
+        assert_eq!(m.layers[0].scratch_elems(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a sequence shape")]
+    fn seq_ops_reject_spatial_shapes() {
+        let mut b = IrBuilder::new("t", Chw::new(3, 8, 8));
+        b.conv("c1", 3, 8, 1, true).attention("attn", 2);
     }
 }

@@ -9,7 +9,7 @@
 //! channel counts — which determine the arithmetic-intensity regime — are
 //! the real ones.
 
-use super::{Chw, IrBuilder, ModelIR};
+use super::{Chw, IrBuilder, ModelIR, Shape};
 
 /// Input resolutions for the two dataset shapes of Fig. 5.
 pub const IMAGENET_HW: usize = 64; // paper: 224 (see DESIGN.md §2)
@@ -162,9 +162,81 @@ pub fn super_resolution_net(hw: usize) -> ModelIR {
     b.build().expect("super_res IR")
 }
 
+/// Transformer-encoder text classifier over `[T, D]` token embeddings
+/// (the sequence-tier counterpart of the Fig. 5 conv zoo): an input
+/// projection, `blocks` post-norm encoder blocks (self-attention +
+/// 2-layer feed-forward, both residual), then mean-pool + linear head.
+/// Weights are random, as everywhere in the zoo — the serving and
+/// compression comparisons are value-independent.
+pub fn text_encoder(t: usize, d: usize, heads: usize, blocks: usize,
+                    classes: usize) -> ModelIR {
+    let mut b = IrBuilder::new(
+        &format!("text_encoder_{t}x{d}"),
+        Shape::seq(t, d),
+    );
+    // Input projection, so the first block's residual references a
+    // real layer output rather than the model input.
+    b.matmul("embed", d, false);
+    for i in 0..blocks {
+        let skip = b.last();
+        b.attention(&format!("blk{i}_attn"), heads)
+            .add(&format!("blk{i}_res1"), skip, false)
+            .layernorm(&format!("blk{i}_ln1"));
+        let skip2 = b.last();
+        b.matmul(&format!("blk{i}_ff1"), 2 * d, true)
+            .matmul(&format!("blk{i}_ff2"), d, false)
+            .add(&format!("blk{i}_res2"), skip2, false)
+            .layernorm(&format!("blk{i}_ln2"));
+    }
+    b.seqpool("pool").dense("cls", classes, false);
+    b.build().expect("text_encoder IR")
+}
+
+/// Default smoke-sized text classifier served next to the conv zoo
+/// (`seq-dense` / `seq-cocogen-quant` deployments).
+pub fn tiny_text_encoder() -> ModelIR {
+    text_encoder(16, 32, 4, 2, 4)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn text_encoder_builds_and_is_sequence_shaped() {
+        let m = tiny_text_encoder();
+        assert!(m.input.is_seq());
+        assert_eq!(m.input.t(), 16);
+        assert_eq!(m.input.d(), 32);
+        // head output is spatial [classes, 1, 1] so the conv serving
+        // path (argmax over c) applies unchanged
+        let out = m.layers.last().unwrap().output;
+        assert!(!out.is_seq());
+        assert_eq!((out.c, out.h, out.w), (4, 1, 1));
+        assert!(m.flops() > 0);
+        assert!(m.weight_count() > 0);
+        // residuals: two per encoder block
+        let adds = m
+            .layers
+            .iter()
+            .filter(|l| {
+                matches!(l.kind, super::super::LayerKind::Add { .. })
+            })
+            .count();
+        assert_eq!(adds, 4);
+    }
+
+    #[test]
+    fn text_encoder_scales_with_depth_and_length() {
+        let small = text_encoder(16, 32, 4, 1, 4);
+        let deep = text_encoder(16, 32, 4, 3, 4);
+        let long = text_encoder(64, 32, 4, 1, 4);
+        assert!(deep.flops() > small.flops());
+        assert!(deep.weight_count() > small.weight_count());
+        // sequence length scales FLOPs but not weights
+        assert!(long.flops() > small.flops());
+        assert_eq!(long.weight_count(), small.weight_count());
+    }
 
     #[test]
     fn fig5_zoo_builds() {

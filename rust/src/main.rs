@@ -206,7 +206,11 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 "vgg16" => zoo::vgg16(zoo::CIFAR_HW, 10),
                 "resnet50" => zoo::resnet50(zoo::CIFAR_HW, 10),
                 "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
-                other => bail!("unknown timing model {other}"),
+                "text" => zoo::tiny_text_encoder(),
+                other => bail!(
+                    "unknown timing model {other} \
+                     (vgg16|resnet50|mobilenet_v2|text)"
+                ),
             };
             let variants_flag = flags
                 .get("variants")
@@ -236,7 +240,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                     "unknown batch mode {other} (auto|fused|fanout)"
                 ),
             };
-            let elems = ir.input.c * ir.input.h * ir.input.w;
+            let elems = ir.input.elements();
             let mut builder = Coordinator::builder().policy(policy);
             if let Some(cap) = queue_cap {
                 builder = builder.queue_cap(cap);
@@ -398,7 +402,13 @@ fn compress(flags: &HashMap<String, String>) -> Result<()> {
         "vgg16" => zoo::vgg16(zoo::IMAGENET_HW, 1000),
         "resnet50" => zoo::resnet50(zoo::IMAGENET_HW, 1000),
         "mobilenet_v2" => zoo::mobilenet_v2(zoo::IMAGENET_HW, 1000),
-        other => anyhow::bail!("unknown timing model {other}"),
+        // Sequence tier: CSR-pruned projections instead of pattern
+        // kernels, same storage/FLOP report.
+        "text" => zoo::text_encoder(128, 256, 4, 4, 10),
+        other => anyhow::bail!(
+            "unknown timing model {other} \
+             (vgg16|resnet50|mobilenet_v2|text)"
+        ),
     };
     let dense = build_plan(&ir, Scheme::DenseNaive, PruneConfig::default(),
                            7);

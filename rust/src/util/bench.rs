@@ -329,6 +329,27 @@ mod tests {
     }
 
     #[test]
+    fn arrival_schedule_is_pinned_bit_for_bit() {
+        // Regression pin, not just self-consistency: seed 7 at 250 Hz
+        // must reproduce these exact nanosecond offsets on every host
+        // and every run. If this test breaks, the RNG, the inverse-CDF
+        // transform, or the Duration conversion changed — all of which
+        // silently invalidate replayed overload experiments.
+        let got: Vec<u128> = arrival_schedule(250.0, 6, 7)
+            .iter()
+            .map(Duration::as_nanos)
+            .collect();
+        assert_eq!(got, vec![
+            1_921_964u128,
+            4_460_443,
+            14_882_864,
+            16_905_768,
+            20_020_317,
+            23_577_939,
+        ]);
+    }
+
+    #[test]
     fn arrival_schedule_tracks_the_offered_rate() {
         // 2000 arrivals at 1 kHz span ~2 s; the exponential gaps
         // average 1/rate, so the makespan concentrates tightly.

@@ -1,0 +1,271 @@
+//! End-to-end sequence-tier pipeline (transformer-encoder text models
+//! through the same IR → plan → lowering → executor stack as the convs).
+//!
+//! Properties:
+//!  1. the compiled dense pipeline is *bit-identical* to a direct
+//!     per-op reference walk over the IR with the plan's own weights;
+//!  2. the compressed plans are exactly their f32 twins: CSR skips
+//!     exact zeros in dense accumulation order, and the int8 kernels
+//!     are dequant-on-load — both reproduce the twin's bits;
+//!  3. the int8 plan stays within the weight-quantization error bound
+//!     of the same-seed dense plan (mirroring `quant_path.rs`);
+//!  4. storage ordering: int8 < CSR-pruned < dense f32;
+//!  5. the activation arena is sized by sequence length at compile
+//!     time and never grows across runs;
+//!  6. the batch-compiled pipeline matches single-image runs per image.
+
+use std::sync::Arc;
+
+use cocopie::codegen::{build_plan, ExecPlan, LayerPlan, PruneConfig,
+                       Scheme};
+use cocopie::compress::{AttnWeights, FlatWeights, ProjStore};
+use cocopie::exec::{ops, ModelExecutor, Tensor};
+use cocopie::ir::{zoo, LayerKind, ModelIR};
+use cocopie::util::rng::Rng;
+
+fn seq_ir() -> ModelIR {
+    zoo::text_encoder(8, 16, 2, 1, 3)
+}
+
+/// Direct per-op reference: walk the IR layer by layer through the raw
+/// `exec::ops` kernels with the plan's own weights, keeping every
+/// intermediate alive (no arena, no slot reuse) so residual adds read
+/// the exact earlier output.
+fn reference_run(plan: &ExecPlan, x: &Tensor, threads: usize) -> Vec<f32> {
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    let mut scratch = Vec::new();
+    for (i, (lir, lp)) in
+        plan.ir.layers.iter().zip(&plan.layers).enumerate()
+    {
+        let input: &[f32] = if i == 0 { &x.data } else { &outs[i - 1] };
+        let (t, d) = (lir.input.t(), lir.input.d());
+        let mut out = vec![0f32; lir.output.elements()];
+        match (&lir.kind, lp) {
+            (LayerKind::MatMul { relu, .. }, LayerPlan::Proj(p)) => {
+                ops::proj_into(input, t, d, p, *relu, threads, &mut out);
+            }
+            (LayerKind::LayerNorm, LayerPlan::Norm(w)) => {
+                ops::layernorm_into(input, t, d, &w.weights, &w.bias,
+                                    &mut out);
+            }
+            (LayerKind::SelfAttention { heads }, LayerPlan::Attn(a)) => {
+                ops::attention_into(input, t, d, a, *heads, threads,
+                                    &mut scratch, &mut out);
+            }
+            (LayerKind::SeqPool, _) => {
+                ops::seqpool_into(input, t, d, &mut out);
+            }
+            (LayerKind::Add { from, relu }, _) => {
+                ops::add_into(input, &outs[*from], *relu, &mut out);
+            }
+            (LayerKind::Dense { relu, .. }, LayerPlan::Fc(w)) => {
+                ops::dense_into(input, &w.weights, &w.bias, lir.output.c,
+                                *relu, &mut out);
+            }
+            (kind, _) => panic!("unexpected layer in text model: {kind:?}"),
+        }
+        outs.push(out);
+    }
+    outs.pop().unwrap()
+}
+
+/// The f32 twin of a compressed sequence plan: every CSR / int8
+/// projection store replaced by its reconstructed dense form.
+fn densified(s: &ProjStore) -> ProjStore {
+    match s {
+        ProjStore::Dense(_) => s.clone(),
+        ProjStore::Csr(c) => {
+            let d = c.to_dense();
+            ProjStore::Dense(Arc::new(FlatWeights::new(d.weights, d.bias)))
+        }
+        ProjStore::Int8(q) => {
+            let d = q.dequantize();
+            ProjStore::Dense(Arc::new(FlatWeights::new(d.weights, d.bias)))
+        }
+    }
+}
+
+fn f32_twin(plan: &ExecPlan) -> ExecPlan {
+    let layers = plan
+        .layers
+        .iter()
+        .map(|p| match p {
+            LayerPlan::Proj(s) => LayerPlan::Proj(densified(s)),
+            LayerPlan::Attn(a) => LayerPlan::Attn(Arc::new(AttnWeights {
+                q: densified(&a.q),
+                k: densified(&a.k),
+                v: densified(&a.v),
+                o: densified(&a.o),
+            })),
+            other => other.clone(),
+        })
+        .collect();
+    ExecPlan {
+        ir: plan.ir.clone(),
+        layers,
+        scheme: Scheme::DenseIm2col,
+    }
+}
+
+#[test]
+fn dense_compiled_pipeline_matches_per_op_reference() {
+    let ir = seq_ir();
+    let plan = build_plan(&ir, Scheme::DenseIm2col, PruneConfig::default(),
+                          42);
+    let mut exec = ModelExecutor::new(&plan, 2);
+    let mut rng = Rng::seed_from(3);
+    for trial in 0..3 {
+        let x = Tensor::random(1, ir.input.t(), ir.input.d(), &mut rng);
+        let got = exec.run(&x);
+        let want = reference_run(&plan, &x, 1);
+        assert_eq!(got.data, want, "trial {trial}: compiled pipeline \
+                                    diverged from per-op reference");
+    }
+}
+
+#[test]
+fn compressed_seq_plans_match_their_f32_twins_bitwise() {
+    let ir = seq_ir();
+    let mut rng = Rng::seed_from(9);
+    for scheme in [Scheme::SparseCsr, Scheme::CocoGen,
+                   Scheme::CocoGenQuant]
+    {
+        let plan = build_plan(&ir, scheme, PruneConfig::default(), 42);
+        // The scheme actually compressed the projections.
+        let compressed = plan.layers.iter().any(|p| {
+            matches!(p,
+                     LayerPlan::Proj(ProjStore::Csr(_))
+                         | LayerPlan::Proj(ProjStore::Int8(_)))
+        });
+        assert!(compressed, "{scheme:?}: no compressed projection store");
+        let twin = f32_twin(&plan);
+        let mut ex_p = ModelExecutor::new(&plan, 1);
+        let mut ex_t = ModelExecutor::new(&twin, 1);
+        for trial in 0..3 {
+            let x =
+                Tensor::random(1, ir.input.t(), ir.input.d(), &mut rng);
+            let got = ex_p.run(&x);
+            let want = ex_t.run(&x);
+            assert_eq!(
+                got.data, want.data,
+                "{scheme:?} trial {trial}: compressed plan diverged \
+                 from its f32 twin"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_seq_plan_tracks_the_dense_plan_within_error_bound() {
+    // For sequences CocoGenQuant is weight-only int8 of the *dense*
+    // projections (pattern pruning is 3x3-specific), so the int8 plan
+    // is the quantized image of the same-seed dense plan and must stay
+    // within the per-channel symmetric quantization error bound.
+    let ir = seq_ir();
+    let dense = build_plan(&ir, Scheme::DenseIm2col,
+                           PruneConfig::default(), 42);
+    let quant = build_plan(&ir, Scheme::CocoGenQuant,
+                           PruneConfig::default(), 42);
+    let mut ex_d = ModelExecutor::new(&dense, 1);
+    let mut ex_q = ModelExecutor::new(&quant, 1);
+    let mut rng = Rng::seed_from(17);
+    for trial in 0..3 {
+        let x = Tensor::random(1, ir.input.t(), ir.input.d(), &mut rng);
+        let out_d = ex_d.run(&x);
+        let out_q = ex_q.run(&x);
+        assert!(out_q.iter_finite(), "non-finite quant output");
+        let scale = out_d
+            .data
+            .iter()
+            .fold(0f32, |m, v| m.max(v.abs()))
+            .max(1.0);
+        let diff = out_q.max_abs_diff(&out_d);
+        assert!(
+            diff < 0.2 * scale,
+            "trial {trial}: quant vs dense diff {diff} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn seq_storage_ordering_int8_csr_dense() {
+    let ir = seq_ir();
+    let dense = build_plan(&ir, Scheme::DenseIm2col,
+                           PruneConfig::default(), 42);
+    let pruned = build_plan(&ir, Scheme::CocoGen, PruneConfig::default(),
+                            42);
+    let quant = build_plan(&ir, Scheme::CocoGenQuant,
+                           PruneConfig::default(), 42);
+    assert!(
+        quant.weight_bytes() < pruned.weight_bytes(),
+        "int8 {} !< CSR-pruned {}",
+        quant.weight_bytes(),
+        pruned.weight_bytes()
+    );
+    assert!(
+        pruned.weight_bytes() < dense.weight_bytes(),
+        "CSR-pruned {} !< dense {}",
+        pruned.weight_bytes(),
+        dense.weight_bytes()
+    );
+}
+
+#[test]
+fn arena_is_sized_by_sequence_length_and_never_grows() {
+    let mut arena_bytes = Vec::new();
+    for t in [8usize, 16] {
+        let ir = zoo::text_encoder(t, 16, 2, 1, 3);
+        let plan = build_plan(&ir, Scheme::DenseIm2col,
+                              PruneConfig::default(), 7);
+        let mut exec = ModelExecutor::new(&plan, 1);
+        let mut rng = Rng::seed_from(t as u64);
+        let x = Tensor::random(1, t, 16, &mut rng);
+        let first = exec.run(&x);
+        let bytes = exec.arena_bytes();
+        assert_eq!(bytes, plan.peak_activation_bytes(),
+                   "T={t}: arena footprint diverged from the plan's \
+                    declared peak");
+        // Attention scratch (Q/K/V/context + [heads, T, T] scores) is
+        // part of the resident footprint, not a hidden allocation.
+        assert!(bytes >= (4 * t * 16 + 2 * t * t) * 4,
+                "T={t}: arena {bytes} smaller than attention scratch");
+        for _ in 0..3 {
+            let again = exec.run(&x);
+            assert_eq!(again.data, first.data, "T={t}: rerun diverged");
+            assert_eq!(exec.arena_bytes(), bytes,
+                       "T={t}: arena grew across runs");
+        }
+        arena_bytes.push(bytes);
+    }
+    assert!(arena_bytes[1] > arena_bytes[0],
+            "doubling T must enlarge the arena ({arena_bytes:?})");
+}
+
+#[test]
+fn batched_seq_pipeline_matches_single_image_runs() {
+    let ir = seq_ir();
+    let elems = ir.input.elements();
+    for scheme in [Scheme::DenseIm2col, Scheme::CocoGenQuant] {
+        let plan = build_plan(&ir, scheme, PruneConfig::default(), 42);
+        let mut single = ModelExecutor::new(&plan, 1);
+        let mut batched = ModelExecutor::new_batched(&plan, 2, 4);
+        let mut rng = Rng::seed_from(23);
+        let images: Vec<Tensor> = (0..4)
+            .map(|_| {
+                Tensor::random(1, ir.input.t(), ir.input.d(), &mut rng)
+            })
+            .collect();
+        let mut packed = vec![0f32; 4 * elems];
+        for (i, img) in images.iter().enumerate() {
+            packed[i * elems..(i + 1) * elems]
+                .copy_from_slice(&img.data);
+        }
+        let outs = batched.run_batch_packed(4, &packed);
+        assert_eq!(outs.len(), 4);
+        for (i, img) in images.iter().enumerate() {
+            let want = single.run(img);
+            assert_eq!(outs[i].data, want.data,
+                       "{scheme:?}: batched image {i} diverged");
+        }
+    }
+}
