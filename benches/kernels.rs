@@ -7,7 +7,7 @@ use cocopie::codegen::reorder::filter_kernel_reorder;
 use cocopie::codegen::{tuner, TileConfig};
 use cocopie::compress::{CsrLayer, DenseLayer, FkwLayer};
 use cocopie::exec::im2col::Im2colScratch;
-use cocopie::exec::{csr, im2col, naive, pattern, Tensor};
+use cocopie::exec::{csr, gemm, im2col, micro, naive, pattern, Tensor};
 use cocopie::patterns::connectivity::prune_unstructured;
 use cocopie::util::bench::{bench, fmt_time, Table};
 use cocopie::util::rng::Rng;
@@ -73,6 +73,76 @@ fn main() {
     }
     println!("\n== conv engine comparison (3x3, stride 1, fused relu) ==");
     table.print();
+
+    // ---- GEMM microkernel roofline -----------------------------------
+    // Measured GFLOP/s per kernel/tier against the computed peak from
+    // the detected CPU features — how much of the machine the packed
+    // 6x16 microkernel actually converts, and the headline packed-vs-
+    // seed-scalar ratio at ResNet-shaped GEMM sizes (M=cout,
+    // K=cin*3*3, N=H*W after im2col).
+    println!(
+        "\n== GEMM roofline (cpu: {}, tier: {}) ==",
+        micro::cpu_features(),
+        micro::tier().label()
+    );
+    let peak = micro::peak_gflops(threads);
+    let scalar_peak = {
+        micro::set_force_scalar(true);
+        let p = micro::peak_gflops(threads);
+        micro::set_force_scalar(false);
+        p
+    };
+    let mut roof = Table::new(&[
+        "m x k x n", "scalar", "packed", "scalar gf/s", "packed gf/s",
+        "peak gf/s", "packed/peak", "packed/scalar",
+    ]);
+    let gemm_shapes: &[(usize, usize, usize)] = &[
+        (64, 576, 3136),  // conv2_x: 64 <- 64*3*3 over 56x56
+        (128, 1152, 784), // conv3_x: 128 <- 128*3*3 over 28x28
+        (256, 2304, 196), // conv4_x: 256 <- 256*3*3 over 14x14
+    ];
+    for &(m, k, n) in gemm_shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let mut out = vec![0f32; m * n];
+        // Seed scalar kernel, pinned via the force-scalar override.
+        micro::set_force_scalar(true);
+        let t_scalar = bench("gemm-scalar", 0.4, 100, || {
+            out.fill(0.0);
+            gemm::gemm(&a, &b, &mut out, m, k, n, threads);
+            std::hint::black_box(&mut out);
+        });
+        micro::set_force_scalar(false);
+        // Packed microkernel at the detected tier, weights pre-packed
+        // (the compiled-pipeline regime: A packed once, B per batch).
+        let pa = micro::PackedA::pack(&a, m, k);
+        let mut pb = Vec::new();
+        let t_packed = bench("gemm-packed", 0.4, 100, || {
+            out.fill(0.0);
+            micro::pack_b(&b, k, n, &mut pb);
+            micro::gemm_packed(pa.buf(), &pb, &mut out, m, k, n,
+                               threads);
+            std::hint::black_box(&mut out);
+        });
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let gf_s = flops / t_scalar.median_s / 1e9;
+        let gf_p = flops / t_packed.median_s / 1e9;
+        roof.row(&[
+            format!("{m}x{k}x{n}"),
+            fmt_time(t_scalar.median_s),
+            fmt_time(t_packed.median_s),
+            format!("{gf_s:.2}"),
+            format!("{gf_p:.2}"),
+            format!("{peak:.0}"),
+            format!("{:.1}%", 100.0 * gf_p / peak),
+            format!("{:.2}x", t_scalar.median_s / t_packed.median_s),
+        ]);
+    }
+    roof.print();
+    println!(
+        "scalar-tier peak for reference: {scalar_peak:.0} gf/s \
+         ({threads} threads)"
+    );
 
     // ---- reorder ablation --------------------------------------------
     println!("\n== filter-kernel reorder ablation (128x28x28 -> 128) ==");

@@ -27,9 +27,13 @@
 //! (`--smoke --multi` is the multi-deployment smoke step, asserting
 //! SLA-routed traffic reached 2+ deployments).
 //!
-//! `--list` builds the selected deployment menu, prints one row per
-//! deployment (name, scheme, resident weight bytes, peak activation
-//! bytes, measured latency prior) and exits without serving.
+//! `--list` builds the selected deployment menu, prints the detected
+//! CPU features and one row per deployment (name, scheme, resident
+//! weight bytes, peak activation bytes, measured latency prior, kernel
+//! dispatch tier) and exits without serving.
+//!
+//! `--no-simd` pins every kernel to the portable scalar tier before
+//! anything compiles or autotunes (same as `COCOPIE_FORCE_SCALAR=1`).
 //!
 //! `--overload` replaces the scenes with the bounded soak smoke:
 //! measure the deployment's closed-loop capacity, then offer ~2 s of
@@ -40,7 +44,7 @@
 //!
 //! Run: `cargo run --release --example serve
 //!       [-- --quant | --auto | --multi | --seq | --fanout | --smoke
-//!        | --list | --overload]`
+//!        | --list | --overload | --no-simd]`
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -192,6 +196,11 @@ fn main() -> anyhow::Result<()> {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let list = std::env::args().any(|a| a == "--list");
     let overload = std::env::args().any(|a| a == "--overload");
+    if std::env::args().any(|a| a == "--no-simd") {
+        // Must land before any deployment builds: the builder compiles
+        // and autotunes under whatever tier is pinned here.
+        cocopie::exec::micro::set_force_scalar(true);
+    }
     let batch_mode = if fanout {
         NativeBatchMode::FanOut
     } else {
@@ -263,19 +272,26 @@ fn main() -> anyhow::Result<()> {
     if list {
         // `--list`: the deployment table, then exit without serving.
         println!(
-            "{:<18} {:<14} {:>12} {:>14} {:>10}",
-            "deployment", "scheme", "weight B", "peak act B", "prior ms"
+            "cpu features: {} -> kernel tier {}",
+            cocopie::exec::micro::cpu_features(),
+            cocopie::exec::micro::tier().label()
+        );
+        println!(
+            "{:<18} {:<14} {:>12} {:>14} {:>10} {:>10}",
+            "deployment", "scheme", "weight B", "peak act B", "prior ms",
+            "kernels"
         );
         for dep in &deps {
             let plan =
                 dep.plan().expect("native deployment keeps its plan");
             println!(
-                "{:<18} {:<14} {:>12} {:>14} {:>10.3}",
+                "{:<18} {:<14} {:>12} {:>14} {:>10.3} {:>10}",
                 dep.name(),
                 plan.scheme.label(),
                 plan.weight_bytes(),
                 plan.peak_activation_bytes(),
-                dep.prior_latency_ms()
+                dep.prior_latency_ms(),
+                dep.kernel_tier()
             );
         }
         return Ok(());

@@ -25,8 +25,8 @@ use crate::compress::{AttnWeights, CsrLayer, DenseLayer, FkwLayer,
 use crate::exec::pattern::PatternGemmPlan;
 use crate::exec::tensor::{BatchView, TensorView};
 use crate::exec::winograd::WinogradWeights;
-use crate::exec::{csr, im2col, naive, ops, pattern, winograd, ExecScratch,
-                  Tensor};
+use crate::exec::{csr, im2col, micro, naive, ops, pattern, winograd,
+                  ExecScratch, Tensor};
 use crate::ir::liveness::MemoryPlan;
 use crate::ir::{Chw, LayerKind};
 use crate::quant::{QuantDense, QuantFkw};
@@ -54,6 +54,16 @@ pub enum CompiledKernel {
     },
     ConvIm2col {
         w: Arc<DenseLayer>,
+        stride: usize,
+        relu: bool,
+    },
+    /// im2col with the weight panel packed at lowering into the
+    /// register-tiled microkernel layout — every inference skips the
+    /// A-pack. Selected by the autotuner where it wins; falls back to
+    /// the plain im2col path on the scalar dispatch tier.
+    ConvIm2colPacked {
+        w: Arc<DenseLayer>,
+        pack: Arc<micro::PackedA>,
         stride: usize,
         relu: bool,
     },
@@ -209,6 +219,14 @@ impl CompiledPipeline {
                                             threads, &mut scratch.im2col,
                                             dst);
                     }
+                    CompiledKernel::ConvIm2colPacked {
+                        w, pack, stride, relu,
+                    } => {
+                        im2col::conv2d_packed_into(
+                            view, w, pack, *stride, *relu, threads,
+                            &mut scratch.im2col, dst,
+                        );
+                    }
                     CompiledKernel::ConvWinograd { w, relu } => {
                         winograd::conv2d_pre_into(
                             view, w, *relu, threads, &mut scratch.wino_u,
@@ -361,6 +379,14 @@ impl CompiledPipeline {
                     CompiledKernel::ConvIm2col { w, stride, relu } => {
                         im2col::conv2d_batch_into(
                             view, w, *stride, *relu, threads,
+                            &mut scratch.im2col, dst,
+                        );
+                    }
+                    CompiledKernel::ConvIm2colPacked {
+                        w, pack, stride, relu,
+                    } => {
+                        im2col::conv2d_packed_batch_into(
+                            view, w, pack, *stride, *relu, threads,
                             &mut scratch.im2col, dst,
                         );
                     }
@@ -560,6 +586,20 @@ pub fn lower_batched(plan: &ExecPlan, batch: usize) -> CompiledPipeline {
                 {
                     CompiledKernel::ConvWinograd {
                         w: Arc::new(WinogradWeights::transform(d)),
+                        relu: *relu,
+                    }
+                }
+                // Compile-time A-panel packing: done once per
+                // pipeline, Arc-shared like any bound weight tensor.
+                DenseEngine::Im2colPacked => {
+                    CompiledKernel::ConvIm2colPacked {
+                        w: d.clone(),
+                        pack: Arc::new(micro::PackedA::pack(
+                            &d.weights,
+                            d.cout,
+                            d.cin * d.kh * d.kw,
+                        )),
+                        stride: *stride,
                         relu: *relu,
                     }
                 }

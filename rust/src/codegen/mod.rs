@@ -33,6 +33,11 @@ pub enum DenseEngine {
     /// Winograd F(2x2,3x3) — legal for 3x3 stride-1 only; the lowering
     /// falls back to im2col elsewhere.
     Winograd,
+    /// im2col with the weight panel packed once at lowering into the
+    /// register-tiled SIMD microkernel layout. Autotuner-selected only;
+    /// the kernel falls back to plain im2col on the scalar dispatch
+    /// tier, so outputs are bit-identical to `Im2col` on every tier.
+    Im2colPacked,
 }
 
 /// Which executor strategy a layer uses. Weight payloads are `Arc`-shared
@@ -733,6 +738,27 @@ fn autotune_engines(plan: &mut ExecPlan, threads: usize, batch: usize) {
                         best_t = t_wino;
                         best_eng = DenseEngine::Winograd;
                     }
+                }
+                // Packed-microkernel candidate: A panel packed once
+                // here (as the lowering will), B packed per batch
+                // inside the kernel. On the scalar tier this runs the
+                // plain im2col path, so the measurement simply ties.
+                let pack = Arc::new(crate::exec::micro::PackedA::pack(
+                    &d.weights,
+                    d.cout,
+                    d.cin * d.kh * d.kw,
+                ));
+                let t_packed = measure(&mut || {
+                    let view = crate::exec::BatchView::new(
+                        batch, c, h, w, &data);
+                    crate::exec::im2col::conv2d_packed_batch_into(
+                        view, &d, &pack, stride, relu, threads,
+                        &mut scratch, &mut out);
+                    std::hint::black_box(&mut out);
+                });
+                if t_packed < best_t {
+                    best_t = t_packed;
+                    best_eng = DenseEngine::Im2colPacked;
                 }
                 let qd = Arc::new(QuantDense::quantize(&d));
                 let t_quant = measure(&mut || {

@@ -53,6 +53,7 @@ pub struct Deployment {
     pub(crate) accuracy: f64,
     pub(crate) prior_latency_ms: f64,
     plan: Option<Arc<ExecPlan>>,
+    kernel_tier: &'static str,
 }
 
 impl Deployment {
@@ -84,6 +85,7 @@ impl Deployment {
             accuracy: plan.flop_keep_ratio(),
             prior_latency_ms: prior,
             plan: Some(plan),
+            kernel_tier: crate::exec::micro::tier().label(),
         }
     }
 
@@ -100,6 +102,7 @@ impl Deployment {
             accuracy: 1.0,
             prior_latency_ms: f64::INFINITY,
             plan: None,
+            kernel_tier: crate::exec::micro::tier().label(),
         }
     }
 
@@ -159,6 +162,13 @@ impl Deployment {
     /// a [`ModelExecutor`] to pin bit-identical results.
     pub fn plan(&self) -> Option<&Arc<ExecPlan>> {
         self.plan.as_ref()
+    }
+
+    /// The kernel dispatch tier the deployment was built (and, for
+    /// tuned plans, autotuned) under — `"avx2+fma"` or `"scalar"`. See
+    /// [`crate::exec::micro::tier`].
+    pub fn kernel_tier(&self) -> &'static str {
+        self.kernel_tier
     }
 }
 
@@ -271,6 +281,7 @@ impl DeploymentBuilder {
             accuracy,
             prior_latency_ms: prior,
             plan: Some(plan),
+            kernel_tier: crate::exec::micro::tier().label(),
         })
     }
 }

@@ -1,21 +1,33 @@
 //! Blocked single-precision GEMM for the im2col engine and FC layers.
 //!
-//! `C[M][N] += A[M][K] * B[K][N]`, all row-major. The kernel processes
-//! 4 rows of A at a time with a K-blocked broadcast-AXPY inner loop over
+//! `C[M][N] += A[M][K] * B[K][N]`, all row-major. On the SIMD dispatch
+//! tier (see [`crate::exec::micro`]) both operands are packed into
+//! register-tiled panels and run through the explicit AVX2+FMA 6x16
+//! microkernel. On the scalar tier the seed kernel runs unchanged: 4
+//! rows of A at a time with a K-blocked broadcast-AXPY inner loop over
 //! contiguous rows of B — auto-vectorizes well and keeps the B row in
 //! registers/L1 across the 4 accumulator rows.
 
+use crate::exec::micro;
 use crate::util::threadpool;
 
 const KC: usize = 256; // K-panel kept in L1/L2 between row sweeps
 const MR: usize = 4; // register rows
 
-/// C = A * B (+ existing C contents). Row-major everywhere.
+/// C = A * B (+ existing C contents). Row-major everywhere. Dispatches
+/// once per call on the cached CPU tier; per-element results are
+/// independent of thread count and of where a column sits in the
+/// operand (so batched and single-image conv calls stay bit-identical
+/// per image on either tier).
 pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
             n: usize, threads: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    if micro::tier().is_simd() {
+        micro::gemm_simd(a, b, c, m, k, n, threads);
+        return;
+    }
     // Parallelize over blocks of MR rows of C.
     threadpool::parallel_chunks_mut(c, MR * n, threads, |blk, c_blk| {
         let row0 = blk * MR;
@@ -62,13 +74,12 @@ fn micro_4(a: &[f32], b: &[f32], c_blk: &mut [f32], row0: usize, k0: usize,
     }
 }
 
-/// y += w * x over equal-length slices.
+/// y += w * x over equal-length slices, tier-dispatched (AVX2 FMA on
+/// the SIMD tier, the seed scalar loop otherwise).
 #[inline]
 pub fn axpy(y: &mut [f32], x: &[f32], w: f32) {
     debug_assert_eq!(y.len(), x.len());
-    for (yo, xo) in y.iter_mut().zip(x.iter()) {
-        *yo += w * *xo;
-    }
+    micro::axpy(y, x, w);
 }
 
 /// `C[M][N] += A[M][K] * B[N][K]^T` — the transposed-B GEMM the sequence

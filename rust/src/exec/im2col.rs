@@ -2,7 +2,8 @@
 //! (stands in for TVM's default CPU conv lowering in Fig. 5).
 
 use crate::compress::DenseLayer;
-use crate::exec::gemm::gemm;
+use crate::exec::gemm::{axpy, gemm};
+use crate::exec::micro;
 use crate::exec::tensor::{fill_shifted_row, same_pad, BatchView, Tensor,
                           TensorView};
 use crate::quant::QuantDense;
@@ -17,6 +18,10 @@ pub struct Im2colScratch {
     /// Batched-path GEMM output `[cout][n*hw]`, scattered into the
     /// `[n][cout][hw]` activation layout after the per-layer GEMM.
     acc: Vec<f32>,
+    /// Packed B panel for the compile-time-packed conv kernel (the
+    /// activation side repacks per call; the weight side is packed
+    /// once at lowering).
+    pack_b: Vec<f32>,
 }
 
 /// Fill `scratch` with the `[K][N*HW]` patch matrix for a (kh, kw, cin)
@@ -93,6 +98,79 @@ pub fn conv2d_into(input: TensorView<'_>, layer: &DenseLayer,
             *v = v.max(0.0);
         }
     }
+}
+
+/// [`conv2d_into`] running a compile-time-packed weight panel through
+/// the register-tiled microkernel ([`micro::gemm_packed`]): the A-pack
+/// was done once at lowering, so per inference only the patch matrix
+/// is packed. On the scalar tier this falls back to [`conv2d_into`]
+/// (the pack is simply unused) — and on the SIMD tier the dispatched
+/// [`gemm`] runs the identical packed kernel — so the packed engine is
+/// bit-identical to the im2col engine on every tier, which is what
+/// lets the autotuner register it without disturbing the
+/// compiled-vs-direct bit-identity oracles.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_packed_into(input: TensorView<'_>, layer: &DenseLayer,
+                          pack: &micro::PackedA, stride: usize,
+                          relu: bool, threads: usize,
+                          scratch: &mut Im2colScratch, out: &mut [f32]) {
+    if !micro::tier().is_simd() {
+        conv2d_into(input, layer, stride, relu, threads, scratch, out);
+        return;
+    }
+    let (h_out, w_out) = im2col_patches(BatchView::of_single(input),
+                                        layer.kh, layer.kw, layer.cin,
+                                        stride, scratch);
+    let hw = h_out * w_out;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    debug_assert_eq!((pack.m, pack.k), (layer.cout, kdim));
+    assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
+    for co in 0..layer.cout {
+        out[co * hw..(co + 1) * hw].fill(layer.bias[co]);
+    }
+    micro::pack_b(&scratch.buf, kdim, hw, &mut scratch.pack_b);
+    micro::gemm_packed(pack.buf(), &scratch.pack_b, out, layer.cout,
+                       kdim, hw, threads);
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
+/// Fused batched [`conv2d_packed_into`]: one B-pack and one tiled GEMM
+/// for the whole batch. Bit-identical per image to the single-image
+/// packed path (tile columns accumulate independently of their panel
+/// position).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_packed_batch_into(input: BatchView<'_>, layer: &DenseLayer,
+                                pack: &micro::PackedA, stride: usize,
+                                relu: bool, threads: usize,
+                                scratch: &mut Im2colScratch,
+                                out: &mut [f32]) {
+    if !micro::tier().is_simd() {
+        conv2d_batch_into(input, layer, stride, relu, threads, scratch,
+                          out);
+        return;
+    }
+    let n = input.n;
+    let (h_out, w_out) = im2col_patches(input, layer.kh, layer.kw,
+                                        layer.cin, stride, scratch);
+    let hw = h_out * w_out;
+    let nhw = n * hw;
+    let kdim = layer.cin * layer.kh * layer.kw;
+    debug_assert_eq!((pack.m, pack.k), (layer.cout, kdim));
+    assert_eq!(out.len(), n * layer.cout * hw,
+               "output buffer size mismatch");
+    scratch.acc.clear();
+    scratch.acc.resize(layer.cout * nhw, 0.0);
+    for co in 0..layer.cout {
+        scratch.acc[co * nhw..(co + 1) * nhw].fill(layer.bias[co]);
+    }
+    micro::pack_b(&scratch.buf, kdim, nhw, &mut scratch.pack_b);
+    micro::gemm_packed(pack.buf(), &scratch.pack_b, &mut scratch.acc,
+                       layer.cout, kdim, nhw, threads);
+    scatter_batch(&scratch.acc, out, n, layer.cout, hw, relu, |v, _| v);
 }
 
 /// Fused batched conv: one `[K][n*hw]` patch matrix and a *single* GEMM
@@ -183,10 +261,9 @@ pub fn conv2d_quant_into(input: TensorView<'_>, layer: &QuantDense,
                 continue;
             }
             let w = qw as f32;
-            let src = &cols[k * hw..(k + 1) * hw];
-            for (o, i) in plane.iter_mut().zip(src.iter()) {
-                *o += w * *i;
-            }
+            // Tier-dispatched AXPY: the dequantized weight broadcasts
+            // against the patch row (AVX2 FMA on the SIMD tier).
+            axpy(plane, &cols[k * hw..(k + 1) * hw], w);
         }
         let scale = layer.scales[co];
         let bias = layer.bias[co];
@@ -225,10 +302,7 @@ pub fn conv2d_quant_batch_into(input: BatchView<'_>, layer: &QuantDense,
                     continue;
                 }
                 let w = qw as f32;
-                let src = &cols[k * nhw..(k + 1) * nhw];
-                for (o, i) in plane.iter_mut().zip(src.iter()) {
-                    *o += w * *i;
-                }
+                axpy(plane, &cols[k * nhw..(k + 1) * nhw], w);
             }
         },
     );
@@ -359,6 +433,80 @@ mod tests {
                                   &mut scratch, &mut want_q);
                 if got_q[i * per..(i + 1) * per] != want_q[..] {
                     return Err(format!("quant batch diverged at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_conv_bit_matches_im2col_conv() {
+        // On the SIMD tier both paths run the identical packed kernel
+        // (per-call pack vs compile-time pack of the same weights); on
+        // the scalar tier the packed entry falls back to the plain
+        // path. Either way: bit-identical, single and batched.
+        prop::check("im2col-packed-vs-plain", 15, |g| {
+            let n = g.usize(1, 4);
+            let cin = g.usize(1, 5);
+            let cout = g.usize(1, 9);
+            let h = g.usize(3, 10);
+            let w = g.usize(3, 10);
+            let k = *g.pick(&[1usize, 3]);
+            let stride = *g.pick(&[1usize, 2]);
+            let relu = g.bool();
+            let mut rng = g.rng().clone();
+            let layer = DenseLayer {
+                cout,
+                cin,
+                kh: k,
+                kw: k,
+                weights: (0..cout * cin * k * k)
+                    .map(|_| rng.normal_f32())
+                    .collect(),
+                bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+            };
+            let pack = micro::PackedA::pack(&layer.weights, cout,
+                                            cin * k * k);
+            let per = {
+                let (ho, _) = same_pad(h, k, stride);
+                let (wo, _) = same_pad(w, k, stride);
+                cout * ho * wo
+            };
+            let mut scratch = Im2colScratch::default();
+            let images: Vec<Tensor> = (0..n)
+                .map(|_| Tensor::random(cin, h, w, &mut rng))
+                .collect();
+            let mut flat = Vec::new();
+            for t in &images {
+                flat.extend_from_slice(&t.data);
+            }
+            let view = crate::exec::tensor::BatchView::new(
+                n, cin, h, w, &flat);
+            let mut want_b = vec![0f32; n * per];
+            conv2d_batch_into(view, &layer, stride, relu, 2,
+                              &mut scratch, &mut want_b);
+            let view = crate::exec::tensor::BatchView::new(
+                n, cin, h, w, &flat);
+            let mut got_b = vec![0f32; n * per];
+            conv2d_packed_batch_into(view, &layer, &pack, stride, relu,
+                                     2, &mut scratch, &mut got_b);
+            if got_b != want_b {
+                return Err("packed batch diverged from im2col".into());
+            }
+            for (i, t) in images.iter().enumerate() {
+                let mut want = vec![0f32; per];
+                conv2d_into(t.view(), &layer, stride, relu, 1,
+                            &mut scratch, &mut want);
+                let mut got = vec![0f32; per];
+                conv2d_packed_into(t.view(), &layer, &pack, stride,
+                                   relu, 1, &mut scratch, &mut got);
+                if got != want {
+                    return Err(format!(
+                        "packed single diverged at image {i}"));
+                }
+                if got_b[i * per..(i + 1) * per] != got[..] {
+                    return Err(format!(
+                        "packed batch != packed single at {i}"));
                 }
             }
             Ok(())

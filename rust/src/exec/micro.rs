@@ -1,0 +1,618 @@
+//! Packed, runtime-dispatched SIMD GEMM microkernels.
+//!
+//! The paper's latency numbers come from compiler-level kernel work:
+//! reshaping the inner loops for the target ISA rather than leaning on
+//! autovectorization. This module is that layer for the native x86-64
+//! path. It provides
+//!
+//! * one-time CPU feature detection cached in a [`OnceLock`]
+//!   ([`tier`]), with a deterministic scalar override
+//!   (`COCOPIE_FORCE_SCALAR` / [`set_force_scalar`]) so both paths can
+//!   be exercised on any host;
+//! * BLIS-style panel packing: the weight (A) operand into `MR`-row
+//!   strips ([`pack_a`], [`PackedA`] for the once-per-compile form) and
+//!   the activation (B) operand into `NR`-column panels ([`pack_b`]),
+//!   both k-major and zero-padded so edge tiles run the full-width
+//!   kernel;
+//! * a 6x16 register-tiled microkernel per tier — explicit AVX2+FMA
+//!   intrinsics under `target_feature`, and a portable scalar twin —
+//!   driven by [`gemm_packed`];
+//! * dispatched [`dot`] / [`axpy`] primitives for the GEMV-shaped
+//!   seams (FC rows, attention scores, the pattern-GEMM U-row and int8
+//!   dequant-on-load AXPY streams).
+//!
+//! Numerics contract: within one tier every kernel is deterministic,
+//! thread-count-invariant, and position-independent per output element
+//! (a C column's value never depends on which tile or batch slot it
+//! occupied), which is what keeps the pipeline bit-identity pins
+//! (batched vs single, compiled vs direct) green per tier. Across
+//! tiers results differ only by FMA/reassociation rounding.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::threadpool;
+
+/// Microkernel register rows (A-panel strip height).
+pub const MR: usize = 6;
+/// Microkernel register columns (B-panel width; two AVX2 vectors).
+pub const NR: usize = 16;
+
+/// Kernel dispatch tier, resolved once per process (modulo the
+/// force-scalar override) and consulted by every dispatched kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Packed 6x16 microkernels using AVX2 vector FMA.
+    Avx2Fma,
+    /// The portable scalar kernels (the seed implementations).
+    Scalar,
+}
+
+impl Tier {
+    /// Whether this tier runs the explicit-SIMD kernels.
+    pub fn is_simd(self) -> bool {
+        self != Tier::Scalar
+    }
+
+    /// Short display name for benches and `serve --list`.
+    pub fn label(self) -> &'static str {
+        match self {
+            Tier::Avx2Fma => "avx2+fma",
+            Tier::Scalar => "scalar",
+        }
+    }
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static ENV_FORCE: OnceLock<bool> = OnceLock::new();
+static DETECTED: OnceLock<Tier> = OnceLock::new();
+
+/// Pin dispatch to the scalar tier at runtime (`serve --no-simd`).
+/// Takes effect on the next [`tier`] call; `false` restores
+/// auto-detection (the cross-tier tests flip this both ways).
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+fn force_scalar() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+        || *ENV_FORCE.get_or_init(|| {
+            std::env::var("COCOPIE_FORCE_SCALAR")
+                .is_ok_and(|v| !v.is_empty() && v != "0")
+        })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Tier {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    {
+        Tier::Avx2Fma
+    } else {
+        Tier::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> Tier {
+    Tier::Scalar
+}
+
+/// The dispatch tier every kernel call routes through: scalar when
+/// forced (env `COCOPIE_FORCE_SCALAR=1` or [`set_force_scalar`]),
+/// otherwise the CPU-detected tier, cached after the first call.
+pub fn tier() -> Tier {
+    if force_scalar() {
+        Tier::Scalar
+    } else {
+        *DETECTED.get_or_init(detect)
+    }
+}
+
+/// Human-readable list of the SIMD features the dispatcher inspects,
+/// as detected on this CPU (ignores any force-scalar override).
+pub fn cpu_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut have: Vec<&str> = Vec::new();
+        for (name, on) in [
+            ("avx", is_x86_feature_detected!("avx")),
+            ("avx2", is_x86_feature_detected!("avx2")),
+            ("fma", is_x86_feature_detected!("fma")),
+            ("avx512f", is_x86_feature_detected!("avx512f")),
+        ] {
+            if on {
+                have.push(name);
+            }
+        }
+        if have.is_empty() {
+            "x86-64 scalar".to_string()
+        } else {
+            have.join("+")
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        "portable scalar".to_string()
+    }
+}
+
+/// Estimated peak f32 GFLOP/s for `threads` cores at the current
+/// dispatch tier: 8 lanes x 2 flops (FMA) x 2 issue ports per cycle
+/// for AVX2+FMA, 2 scalar flops per cycle otherwise, at the clock
+/// reported by `/proc/cpuinfo` (2.0 GHz fallback). A roofline
+/// denominator for the kernel bench, not a measurement.
+pub fn peak_gflops(threads: usize) -> f64 {
+    let per_cycle = if tier().is_simd() { 8.0 * 2.0 * 2.0 } else { 2.0 };
+    per_cycle * cpu_ghz() * threads.max(1) as f64
+}
+
+fn cpu_ghz() -> f64 {
+    let mut best = 0f64;
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            let Some(rest) = line.strip_prefix("cpu MHz") else {
+                continue;
+            };
+            if let Some(v) = rest.split(':').nth(1) {
+                if let Ok(mhz) = v.trim().parse::<f64>() {
+                    best = best.max(mhz);
+                }
+            }
+        }
+    }
+    if best > 0.0 {
+        best / 1000.0
+    } else {
+        2.0
+    }
+}
+
+/// Pack row-major `A[M][K]` into `ceil(M/MR)` strips of `MR` rows,
+/// k-major within each strip (`buf[strip][kk][r]`), zero-padding the
+/// final strip so every tile runs the full-height kernel. The padded
+/// rows never reach `C`: [`gemm_packed`] stores only real rows.
+pub fn pack_a(a: &[f32], m: usize, k: usize, buf: &mut Vec<f32>) {
+    assert_eq!(a.len(), m * k, "A size mismatch");
+    let strips = m.div_ceil(MR);
+    buf.clear();
+    buf.resize(strips * MR * k, 0.0);
+    for s in 0..strips {
+        let base = s * MR * k;
+        let rows = MR.min(m - s * MR);
+        for r in 0..rows {
+            let row = &a[(s * MR + r) * k..(s * MR + r + 1) * k];
+            for (kk, &v) in row.iter().enumerate() {
+                buf[base + kk * MR + r] = v;
+            }
+        }
+    }
+}
+
+/// Pack row-major `B[K][N]` into `ceil(N/NR)` column panels, k-major
+/// within each panel (`buf[panel][kk][j]`), zero-padding the final
+/// panel. Zero columns cost redundant FMAs on the edge tile but keep
+/// every real column's accumulation sequence independent of its panel
+/// position — the property the batched-vs-single bit pins rely on.
+pub fn pack_b(b: &[f32], k: usize, n: usize, buf: &mut Vec<f32>) {
+    assert_eq!(b.len(), k * n, "B size mismatch");
+    let panels = n.div_ceil(NR);
+    buf.clear();
+    buf.resize(panels * NR * k, 0.0);
+    for p in 0..panels {
+        let base = p * NR * k;
+        let j0 = p * NR;
+        let width = NR.min(n - j0);
+        for kk in 0..k {
+            let src = &b[kk * n + j0..kk * n + j0 + width];
+            buf[base + kk * NR..base + kk * NR + width]
+                .copy_from_slice(src);
+        }
+    }
+}
+
+/// The weight operand packed once — at pipeline compile time for the
+/// packed conv kernel, so every inference skips the A-pack entirely
+/// and the panel is `Arc`-shared like any other bound weight tensor.
+#[derive(Debug, Clone)]
+pub struct PackedA {
+    buf: Vec<f32>,
+    /// Logical row count (M = cout).
+    pub m: usize,
+    /// Shared dimension (K = cin*kh*kw).
+    pub k: usize,
+}
+
+impl PackedA {
+    /// Pack row-major `a[M][K]`.
+    pub fn pack(a: &[f32], m: usize, k: usize) -> PackedA {
+        let mut buf = Vec::new();
+        pack_a(a, m, k, &mut buf);
+        PackedA { buf, m, k }
+    }
+
+    /// The packed strips, `ceil(M/MR) * MR * K` elements.
+    pub fn buf(&self) -> &[f32] {
+        &self.buf
+    }
+
+    /// Resident bytes of the packed panel.
+    pub fn bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Portable scalar 6x16 tile: `tile = A_strip * B_panel` over the full
+/// shared dimension. Each tile element accumulates in k-order with
+/// separate multiply and add — the rounding the scalar tier pins.
+fn tile_scalar(ap: &[f32], bp: &[f32], k: usize,
+               tile: &mut [f32; MR * NR]) {
+    tile.fill(0.0);
+    for kk in 0..k {
+        let arow = &ap[kk * MR..kk * MR + MR];
+        let brow = &bp[kk * NR..kk * NR + NR];
+        for (r, &av) in arow.iter().enumerate() {
+            let crow = &mut tile[r * NR..(r + 1) * NR];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// AVX2+FMA 6x16 tile: 12 `__m256` accumulators (6 rows x 2 vectors),
+/// one broadcast per A element against two B vector loads per k step.
+///
+/// # Safety
+/// Caller must have verified `avx2` and `fma` are available, and
+/// `ap`/`bp` must hold at least `k*MR` / `k*NR` elements.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn tile_avx2(ap: &[f32], bp: &[f32], k: usize,
+                    tile: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= k * MR && bp.len() >= k * NR);
+    let a = ap.as_ptr();
+    let b = bp.as_ptr();
+    let mut acc = [_mm256_setzero_ps(); MR * 2];
+    for kk in 0..k {
+        let b0 = _mm256_loadu_ps(b.add(kk * NR));
+        let b1 = _mm256_loadu_ps(b.add(kk * NR + 8));
+        let arow = a.add(kk * MR);
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*arow.add(r));
+            acc[2 * r] = _mm256_fmadd_ps(av, b0, acc[2 * r]);
+            acc[2 * r + 1] = _mm256_fmadd_ps(av, b1, acc[2 * r + 1]);
+        }
+    }
+    let out = tile.as_mut_ptr();
+    for r in 0..MR {
+        _mm256_storeu_ps(out.add(r * NR), acc[2 * r]);
+        _mm256_storeu_ps(out.add(r * NR + 8), acc[2 * r + 1]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn run_tile(simd: bool, ap: &[f32], bp: &[f32], k: usize,
+            tile: &mut [f32; MR * NR]) {
+    if simd {
+        // SAFETY: `simd` is true only after `tier()` confirmed
+        // avx2+fma on this CPU; slice sizes are checked by the caller.
+        unsafe { tile_avx2(ap, bp, k, tile) };
+    } else {
+        tile_scalar(ap, bp, k, tile);
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn run_tile(simd: bool, ap: &[f32], bp: &[f32], k: usize,
+            tile: &mut [f32; MR * NR]) {
+    let _ = simd;
+    tile_scalar(ap, bp, k, tile);
+}
+
+/// `C[M][N] += packed_A * packed_B` over panels from [`pack_a`] /
+/// [`pack_b`]. Threads split `C` into `MR`-row strips (never a
+/// reduction), every tile accumulates in registers over the full
+/// shared dimension, and only real rows/columns are stored — so
+/// results are bit-identical for every thread count and every panel
+/// alignment of a given column, on both tiers.
+pub fn gemm_packed(ap: &[f32], bp: &[f32], c: &mut [f32], m: usize,
+                   k: usize, n: usize, threads: usize) {
+    let strips = m.div_ceil(MR);
+    let panels = n.div_ceil(NR);
+    assert_eq!(ap.len(), strips * MR * k, "packed A size mismatch");
+    assert_eq!(bp.len(), panels * NR * k, "packed B size mismatch");
+    assert_eq!(c.len(), m * n, "output size mismatch");
+    let simd = tier().is_simd();
+    threadpool::parallel_chunks_mut(c, MR * n, threads, |strip, blk| {
+        let a_strip = &ap[strip * MR * k..(strip + 1) * MR * k];
+        let rows = blk.len() / n;
+        let mut tile = [0f32; MR * NR];
+        for p in 0..panels {
+            let j0 = p * NR;
+            let width = NR.min(n - j0);
+            let b_panel = &bp[p * NR * k..(p + 1) * NR * k];
+            run_tile(simd, a_strip, b_panel, k, &mut tile);
+            for r in 0..rows {
+                let dst = &mut blk[r * n + j0..r * n + j0 + width];
+                let src = &tile[r * NR..r * NR + width];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += *s;
+                }
+            }
+        }
+    });
+}
+
+thread_local! {
+    /// Per-thread A/B pack buffers for the drop-in `gemm` SIMD path,
+    /// so repeated layer calls on one executor thread reuse capacity.
+    static GEMM_PACKS: RefCell<(Vec<f32>, Vec<f32>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// SIMD-tier body of `exec::gemm::gemm`: pack both operands into
+/// thread-local buffers and run the tiled kernel. Bitwise identical to
+/// the compile-time-packed path ([`PackedA`] + [`gemm_packed`]) on the
+/// same inputs, which is what lets the autotuner's packed engine and
+/// the dispatched im2col engine coexist under one bit-identity oracle.
+pub(crate) fn gemm_simd(a: &[f32], b: &[f32], c: &mut [f32], m: usize,
+                        k: usize, n: usize, threads: usize) {
+    GEMM_PACKS.with(|cell| {
+        let mut packs = cell.borrow_mut();
+        let (pa, pb) = &mut *packs;
+        pack_a(a, m, k, pa);
+        pack_b(b, k, n, pb);
+        gemm_packed(pa, pb, c, m, k, n, threads);
+    });
+}
+
+/// Tier-dispatched dot product over equal-length slices. The scalar
+/// path is the seed's sequential multiply-add; the AVX2 path uses two
+/// 8-lane FMA accumulators and a horizontal sum.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if tier().is_simd() {
+        // SAFETY: tier() confirmed avx2+fma.
+        return unsafe { dot_avx2(a, b) };
+    }
+    let mut acc = 0f32;
+    for (x, w) in a.iter().zip(b) {
+        acc += x * w;
+    }
+    acc
+}
+
+/// # Safety
+/// Caller must have verified `avx2` and `fma` are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut v0 = _mm256_setzero_ps();
+    let mut v1 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        v0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)),
+                             _mm256_loadu_ps(bp.add(i)), v0);
+        v1 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i + 8)),
+                             _mm256_loadu_ps(bp.add(i + 8)), v1);
+        i += 16;
+    }
+    if i + 8 <= n {
+        v0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)),
+                             _mm256_loadu_ps(bp.add(i)), v0);
+        i += 8;
+    }
+    let v = _mm256_add_ps(v0, v1);
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    let mut acc = _mm_cvtss_f32(s);
+    while i < n {
+        acc += *ap.add(i) * *bp.add(i);
+        i += 1;
+    }
+    acc
+}
+
+/// Tier-dispatched `y += w * x`. Every `y[j]` receives exactly one
+/// multiply-add per call on either tier (lanes are independent), so
+/// AXPY-built results stay position-independent per element — the
+/// batched-vs-single pins hold per tier.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], w: f32) {
+    #[cfg(target_arch = "x86_64")]
+    if tier().is_simd() {
+        // SAFETY: tier() confirmed avx2+fma.
+        unsafe { axpy_avx2(y, x, w) };
+        return;
+    }
+    for (yo, xo) in y.iter_mut().zip(x.iter()) {
+        *yo += w * *xo;
+    }
+}
+
+/// # Safety
+/// Caller must have verified `avx2` and `fma` are available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_avx2(y: &mut [f32], x: &[f32], w: f32) {
+    use std::arch::x86_64::*;
+    let n = y.len().min(x.len());
+    let wv = _mm256_set1_ps(w);
+    let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let yv = _mm256_loadu_ps(yp.add(i));
+        let xv = _mm256_loadu_ps(xp.add(i));
+        _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(wv, xv, yv));
+        i += 8;
+    }
+    while i < n {
+        *yp.add(i) += w * *xp.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn reference(a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
+                 -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn packed_gemm_matches_reference_across_shapes() {
+        prop::check("packed-gemm-vs-ref", 25, |g| {
+            let m = g.usize(1, 30);
+            let k = g.usize(1, 40);
+            let n = g.usize(1, 50);
+            let a = g.normal_vec(m * k);
+            let b = g.normal_vec(k * n);
+            let pa = PackedA::pack(&a, m, k);
+            let mut pb = Vec::new();
+            pack_b(&b, k, n, &mut pb);
+            let mut c = vec![0f32; m * n];
+            gemm_packed(pa.buf(), &pb, &mut c, m, k, n, g.usize(1, 4));
+            let want = reference(&a, &b, m, k, n);
+            prop::assert_allclose(&c, &want, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn packed_gemm_thread_invariant_and_accumulating() {
+        let mut rng = Rng::seed_from(9);
+        let (m, k, n) = (13, 37, 29); // ragged tails on every axis
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let pa = PackedA::pack(&a, m, k);
+        let mut pb = Vec::new();
+        pack_b(&b, k, n, &mut pb);
+        let base: Vec<f32> =
+            (0..m * n).map(|_| rng.normal_f32()).collect();
+        let mut c1 = base.clone();
+        gemm_packed(pa.buf(), &pb, &mut c1, m, k, n, 1);
+        let mut c4 = base.clone();
+        gemm_packed(pa.buf(), &pb, &mut c4, m, k, n, 4);
+        assert_eq!(c1, c4, "thread count changed packed gemm bits");
+        let mut again = base.clone();
+        gemm_packed(pa.buf(), &pb, &mut again, m, k, n, 1);
+        assert_eq!(c1, again, "packed gemm not run-to-run deterministic");
+        // C accumulation: re-running adds the product a second time.
+        let mut twice = c1.clone();
+        gemm_packed(pa.buf(), &pb, &mut twice, m, k, n, 2);
+        let prod = reference(&a, &b, m, k, n);
+        for ((t, o), p) in twice.iter().zip(&c1).zip(&prod) {
+            let want = *o + *p;
+            assert!((t - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "not accumulating into C");
+        }
+    }
+
+    #[test]
+    fn pack_layouts_zero_pad_tails() {
+        // m=7 -> two strips, second has one real row; n=5 -> one panel
+        // with 11 zero columns.
+        let m = 7;
+        let k = 3;
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 + 1.0).collect();
+        let mut pa = Vec::new();
+        pack_a(&a, m, k, &mut pa);
+        assert_eq!(pa.len(), 2 * MR * k);
+        // strip 1, kk=0 holds rows 6..12 -> only row 6 is real.
+        let strip1 = &pa[MR * k..MR * k + MR];
+        assert_eq!(strip1[0], a[6 * k]);
+        assert!(strip1[1..].iter().all(|v| *v == 0.0));
+        let n = 5;
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 - 2.0).collect();
+        let mut pb = Vec::new();
+        pack_b(&b, k, n, &mut pb);
+        assert_eq!(pb.len(), NR * k);
+        for kk in 0..k {
+            let row = &pb[kk * NR..(kk + 1) * NR];
+            assert_eq!(&row[..n], &b[kk * n..(kk + 1) * n]);
+            assert!(row[n..].iter().all(|v| *v == 0.0));
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_tile_matches_scalar_tile() {
+        if !(is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma"))
+        {
+            return;
+        }
+        let mut rng = Rng::seed_from(4);
+        let k = 53;
+        let ap: Vec<f32> =
+            (0..k * MR).map(|_| rng.normal_f32()).collect();
+        let bp: Vec<f32> =
+            (0..k * NR).map(|_| rng.normal_f32()).collect();
+        let mut scalar = [0f32; MR * NR];
+        tile_scalar(&ap, &bp, k, &mut scalar);
+        let mut simd = [0f32; MR * NR];
+        // SAFETY: feature presence checked above.
+        unsafe { tile_avx2(&ap, &bp, k, &mut simd) };
+        for (s, v) in scalar.iter().zip(&simd) {
+            assert!((s - v).abs() <= 1e-4 * s.abs().max(1.0),
+                    "tile kernels diverged: {s} vs {v}");
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy_match_scalar_semantics() {
+        let mut rng = Rng::seed_from(11);
+        for len in [0usize, 1, 7, 8, 9, 16, 17, 40] {
+            let a: Vec<f32> =
+                (0..len).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> =
+                (0..len).map(|_| rng.normal_f32()).collect();
+            let mut want = 0f32;
+            for (x, w) in a.iter().zip(&b) {
+                want += x * w;
+            }
+            let got = dot(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "dot len {len}: {got} vs {want}");
+            let mut y = a.clone();
+            axpy(&mut y, &b, 0.5);
+            for ((yv, av), bv) in y.iter().zip(&a).zip(&b) {
+                let w = av + 0.5 * bv;
+                assert!((yv - w).abs() <= 1e-5 * w.abs().max(1.0),
+                        "axpy len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn tier_reporting_is_populated() {
+        let t = tier();
+        assert!(!t.label().is_empty());
+        assert!(!cpu_features().is_empty());
+        assert!(peak_gflops(1) > 0.0);
+        assert!(peak_gflops(4) > peak_gflops(1));
+    }
+}

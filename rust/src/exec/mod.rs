@@ -11,6 +11,7 @@
 pub mod csr;
 pub mod gemm;
 pub mod im2col;
+pub mod micro;
 pub mod naive;
 pub mod ops;
 pub mod pattern;

@@ -14,6 +14,7 @@
 
 use crate::compress::{AttnWeights, CsrLayer, FlatWeights, ProjStore};
 use crate::exec::gemm;
+use crate::exec::micro;
 use crate::exec::tensor::{same_pad, BatchView, Tensor, TensorView};
 use crate::quant::QuantDense;
 
@@ -136,12 +137,22 @@ pub fn dense(input: &Tensor, weights: &[f32], bias: &[f32], cout: usize,
 }
 
 /// [`dense`] over a flat input slice, writing into a preassigned output
-/// buffer of `cout` elements.
+/// buffer of `cout` elements. On the SIMD tier each output row runs
+/// the vectorized [`micro::dot`]; the scalar tier keeps the seed's
+/// bias-first sequential accumulation.
 pub fn dense_into(input: &[f32], weights: &[f32], bias: &[f32],
                   cout: usize, relu: bool, out: &mut [f32]) {
     let cin = input.len();
     assert_eq!(weights.len(), cout * cin);
     assert_eq!(out.len(), cout, "output buffer size mismatch");
+    if micro::tier().is_simd() {
+        for (co, o) in out.iter_mut().enumerate() {
+            let row = &weights[co * cin..(co + 1) * cin];
+            let acc = bias[co] + micro::dot(row, input);
+            *o = if relu { acc.max(0.0) } else { acc };
+        }
+        return;
+    }
     for (co, o) in out.iter_mut().enumerate() {
         let row = &weights[co * cin..(co + 1) * cin];
         let mut acc = bias[co];
@@ -361,11 +372,9 @@ pub fn attention_into(input: &[f32], t: usize, d: usize, w: &AttnWeights,
             let srow = &mut sc[i * t..(i + 1) * t];
             for (j, s) in srow.iter_mut().enumerate() {
                 let krow = &k[j * d + off..j * d + off + dh];
-                let mut acc = 0f32;
-                for (a, b) in qrow.iter().zip(krow) {
-                    acc += a * b;
-                }
-                *s = acc * scale;
+                // Tier-dispatched: the scalar path is the seed's
+                // sequential multiply-add over the head slice.
+                *s = micro::dot(qrow, krow) * scale;
             }
             let max =
                 srow.iter().fold(f32::NEG_INFINITY, |m, s| m.max(*s));

@@ -682,11 +682,9 @@ fn conv2d_gemm_view_batch_into(input: BatchView<'_>, layer: &FkwView<'_>,
                         {
                             let u_row = &u_mat[r * nhw + img * hw
                                 ..r * nhw + (img + 1) * hw];
-                            for (o, i) in
-                                plane.iter_mut().zip(u_row.iter())
-                            {
-                                *o += w * *i;
-                            }
+                            // Tier-dispatched AXPY (AVX2 FMA on the
+                            // SIMD tier) over the U row.
+                            crate::exec::gemm::axpy(plane, u_row, w);
                         }
                     }
                 }
@@ -745,9 +743,7 @@ fn tap_rows(plane: &mut [f32], in_plane: &[f32], w: f32, dy: usize,
                 let src0 = x_lo + dx - pad_w;
                 let dst = &mut out_row[x_lo..x_hi];
                 let src = &in_row[src0..src0 + (x_hi - x_lo)];
-                for (o, i) in dst.iter_mut().zip(src.iter()) {
-                    *o += w * *i;
-                }
+                crate::exec::gemm::axpy(dst, src, w);
             }
         } else {
             for (x, o) in out_row.iter_mut().enumerate() {

@@ -6,7 +6,7 @@
 //!          [--variants dense,cocogen,coco-auto | --scheme S]
 //!          [--sla mixed|realtime|standard|quality]
 //!          [--batch-mode auto|fused|fanout]
-//!          [--rate R] [--queue-cap C]
+//!          [--rate R] [--queue-cap C] [--no-simd]
 //!                             — run the serving coordinator on synthetic
 //!                               traffic and print per-deployment latency
 //!                               metrics; `--backend native` registers
@@ -97,6 +97,7 @@ fn main() -> Result<()> {
             let flags = parse_flags(cmd, rest, &[
                 "model", "batch", "requests", "backend", "scheme",
                 "variants", "sla", "batch-mode", "rate", "queue-cap",
+                "no-simd",
             ])?;
             serve(&flags)
         }
@@ -145,6 +146,12 @@ fn info() -> Result<()> {
 }
 
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    // Kernel-dispatch override: pin every engine to the portable
+    // scalar tier before any pipeline compiles or autotunes.
+    // `COCOPIE_FORCE_SCALAR=1` in the environment does the same.
+    if flags.contains_key("no-simd") {
+        cocopie::exec::micro::set_force_scalar(true);
+    }
     let backend = flags.get("backend").map(String::as_str).unwrap_or("pjrt");
     let batch: usize =
         flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);

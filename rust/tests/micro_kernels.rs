@@ -1,0 +1,195 @@
+//! Cross-tier microkernel contract: the SIMD dispatch tier and the
+//! scalar tier must agree within FMA/reassociation tolerance on every
+//! dispatched kernel, and each tier must be bitwise deterministic
+//! run-to-run and thread-count-invariant.
+//!
+//! Flipping the tier mutates process-global dispatch state, so these
+//! tests live in their own integration-test binary (its own process —
+//! the lib unit tests and the pipeline bit-identity pins never see a
+//! flipped tier) and serialize on one mutex. Under
+//! `COCOPIE_FORCE_SCALAR=1` (the CI forced-scalar pass) both "tiers"
+//! resolve to scalar and the agreement checks become exact-equality
+//! smokes — still valid runs.
+
+use std::sync::Mutex;
+
+use cocopie::codegen::{build_plan, PruneConfig, Scheme};
+use cocopie::compress::DenseLayer;
+use cocopie::exec::im2col::{self, Im2colScratch};
+use cocopie::exec::{gemm, micro, ModelExecutor, Tensor};
+use cocopie::ir::{Chw, IrBuilder, ModelIR};
+use cocopie::util::prop;
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores auto-detection even when an assertion unwinds mid-flip, so
+/// a failing test cannot leave the rest of this binary pinned scalar.
+struct ScalarGuard;
+
+impl Drop for ScalarGuard {
+    fn drop(&mut self) {
+        micro::set_force_scalar(false);
+    }
+}
+
+/// Run `f` under the auto-detected tier, then under forced scalar.
+fn with_tiers<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    let _lock = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = ScalarGuard;
+    micro::set_force_scalar(false);
+    let auto = f();
+    micro::set_force_scalar(true);
+    let scalar = f();
+    (auto, scalar)
+}
+
+#[test]
+fn force_scalar_pins_the_tier() {
+    let _lock = TIER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = ScalarGuard;
+    micro::set_force_scalar(true);
+    assert_eq!(micro::tier(), micro::Tier::Scalar);
+    assert_eq!(micro::tier().label(), "scalar");
+    assert!(!micro::tier().is_simd());
+    micro::set_force_scalar(false);
+    // Auto detection is host-dependent but must be stable and labeled.
+    assert_eq!(micro::tier(), micro::tier());
+    assert!(!micro::tier().label().is_empty());
+}
+
+#[test]
+fn gemm_tiers_agree_on_ragged_shapes() {
+    prop::check("gemm-cross-tier", 20, |g| {
+        // Hits full 6x16 tiles and ragged M/N/K tails alike.
+        let m = g.usize(1, 40);
+        let k = g.usize(1, 80);
+        let n = g.usize(1, 50);
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(k * n);
+        let threads = g.usize(1, 4);
+        let (simd, scalar) = with_tiers(|| {
+            let mut c = vec![0f32; m * n];
+            gemm::gemm(&a, &b, &mut c, m, k, n, threads);
+            c
+        });
+        prop::assert_allclose(&simd, &scalar, 1e-4, 1e-4)
+    });
+}
+
+#[test]
+fn packed_gemm_dot_and_axpy_cross_tier() {
+    prop::check("packed-cross-tier", 15, |g| {
+        let m = g.usize(1, 25);
+        let k = g.usize(1, 60);
+        let n = g.usize(1, 40);
+        let a = g.normal_vec(m * k);
+        let b = g.normal_vec(k * n);
+        let x = g.normal_vec(k);
+        let y0 = g.normal_vec(k);
+        let (simd, scalar) = with_tiers(|| {
+            let pa = micro::PackedA::pack(&a, m, k);
+            let mut pb = Vec::new();
+            micro::pack_b(&b, k, n, &mut pb);
+            let mut c = vec![0f32; m * n];
+            micro::gemm_packed(pa.buf(), &pb, &mut c, m, k, n, 2);
+            let mut y = y0.clone();
+            micro::axpy(&mut y, &x, 0.75);
+            c.push(micro::dot(&a[..k.min(a.len())], &x));
+            c.extend_from_slice(&y);
+            c
+        });
+        prop::assert_allclose(&simd, &scalar, 1e-4, 1e-4)
+    });
+}
+
+#[test]
+fn each_tier_is_bitwise_deterministic() {
+    let (m, k, n) = (13, 37, 29); // ragged on every axis
+    let mut rng = cocopie::util::rng::Rng::seed_from(21);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    with_tiers(|| {
+        let mut c1 = vec![0f32; m * n];
+        gemm::gemm(&a, &b, &mut c1, m, k, n, 1);
+        let mut c4 = vec![0f32; m * n];
+        gemm::gemm(&a, &b, &mut c4, m, k, n, 4);
+        assert_eq!(c1, c4, "thread count changed gemm bits within a tier");
+        let mut again = vec![0f32; m * n];
+        gemm::gemm(&a, &b, &mut again, m, k, n, 1);
+        assert_eq!(c1, again, "gemm not run-to-run deterministic");
+        c1
+    });
+}
+
+#[test]
+fn im2col_conv_agrees_across_tiers() {
+    prop::check("conv-cross-tier", 10, |g| {
+        let cin = g.usize(1, 5);
+        let cout = g.usize(1, 9);
+        let h = g.usize(3, 11);
+        let w = g.usize(3, 11);
+        let k = *g.pick(&[1usize, 3]);
+        let stride = *g.pick(&[1usize, 2]);
+        let relu = g.bool();
+        let rng = g.rng();
+        let layer = DenseLayer {
+            cout,
+            cin,
+            kh: k,
+            kw: k,
+            weights: (0..cout * cin * k * k)
+                .map(|_| rng.normal_f32())
+                .collect(),
+            bias: (0..cout).map(|_| rng.normal_f32()).collect(),
+        };
+        let input = Tensor::random(cin, h, w, rng);
+        let (simd, scalar) = with_tiers(|| {
+            let mut scratch = Im2colScratch::default();
+            im2col::conv2d(&input, &layer, stride, relu, 2, &mut scratch)
+        });
+        prop::assert_allclose(&simd.data, &scalar.data, 1e-3, 1e-4)
+    });
+}
+
+fn tiny_ir() -> ModelIR {
+    let mut b = IrBuilder::new("xtier", Chw::new(3, 12, 12));
+    b.conv("c1", 3, 8, 1, true)
+        .conv("c2", 3, 12, 2, true)
+        .conv("p1", 1, 12, 1, true)
+        .gap("g")
+        .dense("fc", 6, false);
+    b.build().unwrap()
+}
+
+#[test]
+fn full_pipelines_agree_across_tiers() {
+    // End-to-end: every dispatched seam at once (im2col GEMM, pattern
+    // U-multiply, int8 dequant AXPY streams, FC rows), per scheme.
+    let ir = tiny_ir();
+    let mut rng = cocopie::util::rng::Rng::seed_from(5);
+    let x = Tensor::random(ir.input.c, ir.input.h, ir.input.w, &mut rng);
+    for scheme in
+        [Scheme::DenseIm2col, Scheme::CocoGen, Scheme::CocoGenQuant]
+    {
+        let plan = build_plan(&ir, scheme, PruneConfig::default(), 7);
+        let (simd, scalar) = with_tiers(|| {
+            let mut exec = ModelExecutor::new(&plan, 2);
+            let y1 = exec.run(&x);
+            let y2 = exec.run(&x);
+            assert_eq!(y1.data, y2.data,
+                       "pipeline not bitwise deterministic within a \
+                        tier ({scheme:?})");
+            y1
+        });
+        let scale = scalar
+            .data
+            .iter()
+            .fold(0f32, |m, v| m.max(v.abs()))
+            .max(1.0);
+        let diff = simd.max_abs_diff(&scalar);
+        assert!(
+            diff <= 1e-3 * scale,
+            "{scheme:?}: tiers diverged by {diff} (scale {scale})"
+        );
+    }
+}
