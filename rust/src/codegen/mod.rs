@@ -7,6 +7,7 @@
 pub mod lower;
 pub mod reorder;
 pub mod tuner;
+pub mod verify;
 
 use std::sync::Arc;
 
@@ -20,6 +21,7 @@ use crate::util::rng::Rng;
 pub use lower::{lower, lower_batched, Arena, BufId, CompiledKernel,
                 CompiledOp, CompiledPipeline};
 pub use tuner::TileConfig;
+pub use verify::{kernel_label, verify_pipeline, VerifyError};
 
 /// Which lowering a *dense* conv layer compiles to. Fixed by the scheme
 /// for the `Dense*` baselines; measured per layer (at the layer's real
@@ -868,9 +870,13 @@ impl ExecPlan {
 
     /// Compile this plan into its op pipeline (see `lower`): per-layer
     /// kernel choice, bound weights, and arena slot assignment, all
-    /// resolved ahead of serving.
+    /// resolved ahead of serving. The lowered pipeline is checked by
+    /// the static verifier (`codegen::verify`); a plan that fails
+    /// verification panics here rather than executing with corrupt
+    /// metadata. Use [`ExecPlan::verify_batched`] for the non-panicking
+    /// typed-error path.
     pub fn compile(&self) -> CompiledPipeline {
-        lower(self)
+        self.compile_batched(1)
     }
 
     /// Compile with a leading batch dimension (see `lower_batched`):
@@ -878,9 +884,26 @@ impl ExecPlan {
     /// `CompiledPipeline::execute_batched` runs a fused walk whose
     /// per-layer weight traffic is paid once per batch. Weights stay
     /// `Arc`-shared with this plan and any other pipeline compiled from
-    /// it.
+    /// it. Panics if the lowered pipeline fails static verification.
     pub fn compile_batched(&self, batch: usize) -> CompiledPipeline {
-        lower_batched(self, batch.max(1))
+        match self.verify_batched(batch) {
+            Ok(p) => p,
+            Err(e) => panic!("plan '{}' failed static verification: {e}",
+                             self.ir.name),
+        }
+    }
+
+    /// Lower this plan at the given batch and run the static verifier
+    /// over the result, returning the pipeline only if every dataflow,
+    /// arena-aliasing, metadata-bounds, and legality proof holds. This
+    /// is the typed-error path used by `Deployment::builder` and the
+    /// `verify` CLI subcommand; `compile`/`compile_batched` wrap it
+    /// with a panic.
+    pub fn verify_batched(&self, batch: usize)
+                          -> Result<CompiledPipeline, VerifyError> {
+        let p = lower_batched(self, batch.max(1));
+        verify::verify_pipeline(&p, self.scheme)?;
+        Ok(p)
     }
 
     /// Surviving-FLOP ratio vs dense (the analytic speedup bound).

@@ -1,0 +1,1330 @@
+//! Static plan verification: prove a [`CompiledPipeline`] safe to run
+//! before it ever executes.
+//!
+//! Pattern row maps, CSR indices, int8 group scales, packed GEMM
+//! panels, and arena slot reuse are all compiler-fabricated metadata
+//! that the kernels (including the unsafe SIMD microkernels in
+//! `exec::micro`) consume without whole-plan checks — one bad index is
+//! silent memory corruption, not a typed error. This pass runs once at
+//! `ExecPlan::compile()` / `Deployment` registration and proves,
+//! without executing anything:
+//!
+//! * **Dataflow** — every op reads its predecessor's output (op 0 the
+//!   model input), shapes and model families agree along the chain,
+//!   and each kernel's output geometry matches the engine's actual
+//!   SAME-padding / pooling arithmetic.
+//! * **Arena non-aliasing** — liveness is re-derived from the ops
+//!   alone (not trusted from the plan): no two simultaneously-live
+//!   values share a slot, every op writes only slots whose tenant is
+//!   dead (which is exactly the out-of-place guarantee
+//!   `CompiledPipeline::execute` relies on when it `mem::take`s the
+//!   destination buffer), every slot is large enough for its tenants,
+//!   and `peak_activation_bytes()` equals the independently verified
+//!   arena size.
+//! * **Metadata bounds** — CSR column indices < `cin*kh*kw`, FKW
+//!   filter orders are permutations and offsets monotone, pattern row
+//!   maps land inside the packed U panel, `PackedA` panels match the
+//!   GEMM they feed (the `gemm_packed` seam), quant group sizes divide
+//!   weight counts with finite/nonzero scales, and every f32 weight
+//!   array is NaN/Inf-free.
+//! * **Scheme legality** — the scheme×kernel matrix implied by
+//!   `build_plan` + `autotune_engines` (e.g. quant kernels only under
+//!   `CocoGenQuant`/`CocoAuto`; the FC head is structurally f32).
+//!
+//! Violations return a typed [`VerifyError`] naming the op, slot, and
+//! invariant. `Deployment::builder` refuses to register an invalid
+//! plan; `ExecPlan::compile` panics with the rendered error; the
+//! `verify` CLI subcommand checks any scheme×model combo. The proven
+//! bounds back the `// SAFETY:` contracts at the kernel seams, whose
+//! `debug_assert!` twins stay as in-kernel tripwires.
+
+use std::fmt;
+
+use crate::compress::{CsrLayer, DenseLayer, FkwKernel, FkwLayer,
+                      ProjStore};
+use crate::exec::micro;
+use crate::exec::pattern::PatternGemmPlan;
+use crate::exec::tensor::same_pad;
+use crate::exec::winograd::WinogradWeights;
+use crate::ir::{Chw, Family};
+use crate::patterns::PATTERN_SET_4;
+use crate::quant::{QuantDense, QuantFkw};
+
+use super::lower::{BufId, CompiledKernel, CompiledOp,
+                   CompiledPipeline};
+use super::Scheme;
+
+/// A statically detected plan violation. Every variant names the op
+/// (pipeline index), the slot where one is involved, and the invariant
+/// that failed, so the error alone locates the corruption.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VerifyError {
+    /// An op's `src` is not its predecessor's `dst` (op 0 must read
+    /// the model input).
+    BrokenChain {
+        op: usize,
+        kernel: &'static str,
+        got: BufId,
+        expected: BufId,
+    },
+    /// A shape-valued invariant failed (chain shapes, kernel output
+    /// geometry, skip operand shape).
+    ShapeMismatch {
+        op: usize,
+        kernel: &'static str,
+        invariant: &'static str,
+        expected: Chw,
+        got: Chw,
+    },
+    /// A scalar extent invariant failed (channel counts, weight/bias
+    /// lengths, head divisibility, ...).
+    ExtentMismatch {
+        op: usize,
+        kernel: &'static str,
+        invariant: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// Spatial/sequence family disagreement along the chain or with a
+    /// kernel's requirement.
+    FamilyMismatch {
+        op: usize,
+        kernel: &'static str,
+        invariant: &'static str,
+    },
+    /// An `Add` op without a skip slot operand.
+    MissingSkipOperand { op: usize },
+    /// A non-`Add` op carrying a skip operand.
+    UnexpectedSkipOperand { op: usize, kernel: &'static str },
+    /// An op references a slot the arena does not have.
+    SlotOutOfRange { op: usize, slot: usize, slots: usize },
+    /// An op reads a slot no earlier op has written.
+    ReadBeforeWrite { op: usize, slot: usize },
+    /// An op writes a slot whose current tenant (produced by
+    /// `producer`, live through `live_until`) is still live — two
+    /// simultaneously-live values would share memory.
+    SlotAliasesLiveValue {
+        op: usize,
+        slot: usize,
+        producer: usize,
+        live_until: usize,
+    },
+    /// A slot's planned capacity is below what its tenants need.
+    SlotTooSmall {
+        slot: usize,
+        need_elems: usize,
+        have_elems: usize,
+    },
+    /// The shared sequence scratch is smaller than attention needs.
+    ScratchTooSmall { need_elems: usize, have_elems: usize },
+    /// `peak_activation_bytes()` disagrees with the independently
+    /// re-derived arena footprint.
+    ArenaSizeMismatch {
+        verified_bytes: usize,
+        reported_bytes: usize,
+    },
+    /// CSR row pointers / value arrays are structurally inconsistent.
+    CsrStructureCorrupt { op: usize, detail: &'static str },
+    /// A CSR column index escapes the layer's `cin*kh*kw` extent.
+    CsrColOutOfBounds {
+        op: usize,
+        row: usize,
+        entry: usize,
+        col: u32,
+        extent: usize,
+    },
+    /// FKW filter order / offsets / kernel entries are structurally
+    /// inconsistent (`index` points at the offending entry).
+    PatternStructureCorrupt {
+        op: usize,
+        invariant: &'static str,
+        index: usize,
+    },
+    /// A pattern tap maps outside the packed U panel (`u32::MAX`
+    /// means the tap is unmapped).
+    PatternRowMapOutOfBounds {
+        op: usize,
+        entry: usize,
+        tap: usize,
+        row: u32,
+        n_rows: usize,
+    },
+    /// A compile-time `PackedA` panel disagrees with the GEMM it
+    /// feeds (the `gemm_packed` seam).
+    PackedPanelMismatch {
+        op: usize,
+        invariant: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// Int8 weight counts do not divide into per-channel quant groups
+    /// (or the scale count disagrees with the channel count).
+    QuantGroupMismatch {
+        op: usize,
+        invariant: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// A dequant scale is NaN, infinite, or zero.
+    QuantScaleInvalid { op: usize, channel: usize, value: f32 },
+    /// A NaN/Inf in an f32 weight array.
+    NonFiniteWeight {
+        op: usize,
+        kernel: &'static str,
+        array: &'static str,
+        index: usize,
+    },
+    /// A kernel the scheme's compression pipeline cannot have
+    /// produced (e.g. an int8 kernel under a dense scheme).
+    IllegalKernel {
+        op: usize,
+        kernel: &'static str,
+        scheme: Scheme,
+    },
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use VerifyError as E;
+        match self {
+            E::BrokenChain { op, kernel, got, expected } => write!(
+                f,
+                "op {op} ({kernel}): reads {got:?} but the chain \
+                 expects {expected:?}"
+            ),
+            E::ShapeMismatch { op, kernel, invariant, expected, got } => {
+                write!(
+                    f,
+                    "op {op} ({kernel}): {invariant}: expected \
+                     {expected:?}, got {got:?}"
+                )
+            }
+            E::ExtentMismatch {
+                op, kernel, invariant, expected, got,
+            } => write!(
+                f,
+                "op {op} ({kernel}): {invariant}: expected \
+                 {expected}, got {got}"
+            ),
+            E::FamilyMismatch { op, kernel, invariant } => {
+                write!(f, "op {op} ({kernel}): {invariant}")
+            }
+            E::MissingSkipOperand { op } => {
+                write!(f, "op {op} (add): missing skip slot operand")
+            }
+            E::UnexpectedSkipOperand { op, kernel } => write!(
+                f,
+                "op {op} ({kernel}): unexpected skip operand on a \
+                 non-add kernel"
+            ),
+            E::SlotOutOfRange { op, slot, slots } => write!(
+                f,
+                "op {op}: references slot {slot} but the arena has \
+                 {slots} slot(s)"
+            ),
+            E::ReadBeforeWrite { op, slot } => write!(
+                f,
+                "op {op}: reads slot {slot} before any op wrote it"
+            ),
+            E::SlotAliasesLiveValue {
+                op, slot, producer, live_until,
+            } => write!(
+                f,
+                "op {op}: writes slot {slot} while op {producer}'s \
+                 value is still live (until op {live_until}) — \
+                 simultaneously-live values would alias"
+            ),
+            E::SlotTooSmall { slot, need_elems, have_elems } => {
+                write!(
+                    f,
+                    "slot {slot}: tenants need {need_elems} elems \
+                     but the plan sized it {have_elems}"
+                )
+            }
+            E::ScratchTooSmall { need_elems, have_elems } => write!(
+                f,
+                "sequence scratch: attention needs {need_elems} \
+                 elems but the plan sized it {have_elems}"
+            ),
+            E::ArenaSizeMismatch { verified_bytes, reported_bytes } => {
+                write!(
+                    f,
+                    "arena: verified footprint {verified_bytes} B != \
+                     reported peak_activation_bytes {reported_bytes} B"
+                )
+            }
+            E::CsrStructureCorrupt { op, detail } => {
+                write!(f, "op {op} (csr): {detail}")
+            }
+            E::CsrColOutOfBounds { op, row, entry, col, extent } => {
+                write!(
+                    f,
+                    "op {op} (csr): row {row} entry {entry} column \
+                     {col} escapes input extent {extent}"
+                )
+            }
+            E::PatternStructureCorrupt { op, invariant, index } => {
+                write!(
+                    f,
+                    "op {op} (pattern): {invariant} (entry {index})"
+                )
+            }
+            E::PatternRowMapOutOfBounds {
+                op, entry, tap, row, n_rows,
+            } => write!(
+                f,
+                "op {op} (pattern-gemm): kernel entry {entry} tap \
+                 {tap} maps to U row {row} outside the {n_rows}-row \
+                 packed panel"
+            ),
+            E::PackedPanelMismatch {
+                op, invariant, expected, got,
+            } => write!(
+                f,
+                "op {op} (im2col-packed): {invariant}: expected \
+                 {expected}, got {got}"
+            ),
+            E::QuantGroupMismatch {
+                op, invariant, expected, got,
+            } => write!(
+                f,
+                "op {op} (quant): {invariant}: expected {expected}, \
+                 got {got}"
+            ),
+            E::QuantScaleInvalid { op, channel, value } => write!(
+                f,
+                "op {op} (quant): scale for channel {channel} is \
+                 {value} (must be finite and nonzero)"
+            ),
+            E::NonFiniteWeight { op, kernel, array, index } => write!(
+                f,
+                "op {op} ({kernel}): non-finite value in {array} at \
+                 index {index}"
+            ),
+            E::IllegalKernel { op, kernel, scheme } => write!(
+                f,
+                "op {op}: kernel {kernel} is not producible by \
+                 scheme {}",
+                scheme.label()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Stable label for a compiled kernel, used in error messages and the
+/// `verify` CLI report.
+pub fn kernel_label(kernel: &CompiledKernel) -> &'static str {
+    use CompiledKernel as K;
+    match kernel {
+        K::ConvNaive { .. } => "conv-naive",
+        K::ConvIm2col { .. } => "conv-im2col",
+        K::ConvIm2colPacked { .. } => "conv-im2col-packed",
+        K::ConvWinograd { .. } => "conv-winograd",
+        K::ConvCsr { .. } => "conv-csr",
+        K::ConvPattern { .. } => "conv-pattern",
+        K::ConvPatternGemm { .. } => "conv-pattern-gemm",
+        K::ConvQuantDense { .. } => "conv-quant-dense",
+        K::ConvQuantPattern { .. } => "conv-quant-pattern",
+        K::ConvQuantPatternGemm { .. } => "conv-quant-pattern-gemm",
+        K::Depthwise { .. } => "depthwise",
+        K::MaxPool2 => "maxpool2",
+        K::GlobalAvgPool => "gap",
+        K::Fc { .. } => "fc",
+        K::Add { .. } => "add",
+        K::SeqMatMul { .. } => "seq-matmul",
+        K::SeqNorm { .. } => "seq-norm",
+        K::SeqAttn { .. } => "seq-attn",
+        K::SeqPool => "seq-pool",
+    }
+}
+
+/// Statically verify a compiled pipeline against `scheme`.
+///
+/// Checks run in severity order per op — slot ranges, dataflow,
+/// kernel metadata/bounds, scheme legality — then the whole-pipeline
+/// arena liveness proof. The first violation is returned.
+pub fn verify_pipeline(p: &CompiledPipeline, scheme: Scheme)
+                       -> Result<(), VerifyError> {
+    let n_slots = p.mem.slot_elems.len();
+    for (i, op) in p.ops.iter().enumerate() {
+        check_slots(i, op, n_slots)?;
+        check_dataflow(i, op, p)?;
+        let cx = Ctx {
+            op: i,
+            kernel: kernel_label(&op.kernel),
+        };
+        check_kernel(cx, op)?;
+        check_legality(i, op, scheme)?;
+    }
+    check_arena(p)
+}
+
+/// Error-construction context: which op a helper is checking.
+#[derive(Clone, Copy)]
+struct Ctx {
+    op: usize,
+    kernel: &'static str,
+}
+
+impl Ctx {
+    fn extent(self, invariant: &'static str, expected: usize,
+              got: usize) -> VerifyError {
+        VerifyError::ExtentMismatch {
+            op: self.op,
+            kernel: self.kernel,
+            invariant,
+            expected,
+            got,
+        }
+    }
+
+    fn shape(self, invariant: &'static str, expected: Chw, got: Chw)
+             -> VerifyError {
+        VerifyError::ShapeMismatch {
+            op: self.op,
+            kernel: self.kernel,
+            invariant,
+            expected,
+            got,
+        }
+    }
+
+    fn family(self, invariant: &'static str) -> VerifyError {
+        VerifyError::FamilyMismatch {
+            op: self.op,
+            kernel: self.kernel,
+            invariant,
+        }
+    }
+}
+
+fn check_slots(i: usize, op: &CompiledOp, n_slots: usize)
+               -> Result<(), VerifyError> {
+    let mut refs = vec![op.dst];
+    if let BufId::Slot(s) = op.src {
+        refs.push(s);
+    }
+    if let Some(BufId::Slot(s)) = op.src2 {
+        refs.push(s);
+    }
+    for slot in refs {
+        if slot >= n_slots {
+            return Err(VerifyError::SlotOutOfRange {
+                op: i,
+                slot,
+                slots: n_slots,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn check_dataflow(i: usize, op: &CompiledOp, p: &CompiledPipeline)
+                  -> Result<(), VerifyError> {
+    let kernel = kernel_label(&op.kernel);
+    let cx = Ctx { op: i, kernel };
+    let (expected_src, want_in) = if i == 0 {
+        (BufId::Input, p.input)
+    } else {
+        let prev = &p.ops[i - 1];
+        (BufId::Slot(prev.dst), prev.out_shape)
+    };
+    if op.src != expected_src {
+        return Err(VerifyError::BrokenChain {
+            op: i,
+            kernel,
+            got: op.src,
+            expected: expected_src,
+        });
+    }
+    if op.in_shape != want_in {
+        return Err(cx.shape("in_shape vs producer out_shape",
+                            want_in, op.in_shape));
+    }
+    if op.in_shape.family() != want_in.family() {
+        return Err(cx.family("in_shape family vs producer family"));
+    }
+    match (&op.kernel, op.src2) {
+        (CompiledKernel::Add { .. }, Some(BufId::Slot(s))) => {
+            // The skip operand reads its slot's *current* tenant: the
+            // most recent writer before this op.
+            let Some(j) = (0..i).rev().find(|&j| p.ops[j].dst == s)
+            else {
+                return Err(VerifyError::ReadBeforeWrite {
+                    op: i,
+                    slot: s,
+                });
+            };
+            if p.ops[j].out_shape != op.in_shape {
+                return Err(cx.shape("skip operand shape",
+                                    op.in_shape,
+                                    p.ops[j].out_shape));
+            }
+            Ok(())
+        }
+        (CompiledKernel::Add { .. }, _) => {
+            Err(VerifyError::MissingSkipOperand { op: i })
+        }
+        (_, None) => Ok(()),
+        (_, Some(_)) => Err(VerifyError::UnexpectedSkipOperand {
+            op: i,
+            kernel,
+        }),
+    }
+}
+
+/// SAME-padding conv output geometry — the exact arithmetic every
+/// conv engine uses (`exec::tensor::same_pad`).
+fn conv_out(i: Chw, cout: usize, kh: usize, kw: usize,
+            stride: usize) -> Chw {
+    let (h, _) = same_pad(i.h, kh, stride);
+    let (w, _) = same_pad(i.w, kw, stride);
+    Chw::new(cout, h, w)
+}
+
+fn check_conv_geom(cx: Ctx, i: Chw, o: Chw,
+                   (cout, cin, kh, kw): (usize, usize, usize, usize),
+                   stride: usize) -> Result<(), VerifyError> {
+    if i.family() != Family::Spatial
+        || o.family() != Family::Spatial
+    {
+        return Err(cx.family(
+            "conv kernels require spatial activations",
+        ));
+    }
+    if stride == 0 {
+        return Err(cx.extent("conv stride must be nonzero", 1, 0));
+    }
+    if i.c != cin {
+        return Err(cx.extent("input channels vs cin", cin, i.c));
+    }
+    let want = conv_out(i, cout, kh, kw, stride);
+    if o != want {
+        return Err(cx.shape("conv output geometry", want, o));
+    }
+    Ok(())
+}
+
+fn check_finite(cx: Ctx, array: &'static str, data: &[f32])
+                -> Result<(), VerifyError> {
+    match data.iter().position(|v| !v.is_finite()) {
+        Some(index) => Err(VerifyError::NonFiniteWeight {
+            op: cx.op,
+            kernel: cx.kernel,
+            array,
+            index,
+        }),
+        None => Ok(()),
+    }
+}
+
+fn check_bias(cx: Ctx, bias: &[f32], cout: usize)
+              -> Result<(), VerifyError> {
+    if bias.len() != cout {
+        return Err(cx.extent("bias length vs cout", cout,
+                             bias.len()));
+    }
+    check_finite(cx, "bias", bias)
+}
+
+fn check_dense_conv(cx: Ctx, w: &DenseLayer, i: Chw, o: Chw,
+                    stride: usize) -> Result<(), VerifyError> {
+    check_conv_geom(cx, i, o, (w.cout, w.cin, w.kh, w.kw), stride)?;
+    let want = w.cout * w.cin * w.kh * w.kw;
+    if w.weights.len() != want {
+        return Err(cx.extent("dense weight count", want,
+                             w.weights.len()));
+    }
+    check_finite(cx, "weights", &w.weights)?;
+    check_bias(cx, &w.bias, w.cout)
+}
+
+/// The `gemm_packed` seam: a compile-time `PackedA` panel must match
+/// the layer it will multiply — M = cout rows, K = cin*kh*kw depth,
+/// and a buffer of exactly `ceil(M/MR)*MR*K` zero-padded elements.
+/// This is the release-mode promotion of the `debug_assert!` at the
+/// `exec::im2col::conv2d_packed_into` seam.
+fn check_packed_panel(cx: Ctx, w: &DenseLayer, pack: &micro::PackedA)
+                      -> Result<(), VerifyError> {
+    let mismatch = |invariant, expected, got| {
+        VerifyError::PackedPanelMismatch {
+            op: cx.op,
+            invariant,
+            expected,
+            got,
+        }
+    };
+    let kdim = w.cin * w.kh * w.kw;
+    if pack.m != w.cout {
+        return Err(mismatch("panel rows (m) vs cout", w.cout,
+                            pack.m));
+    }
+    if pack.k != kdim {
+        return Err(mismatch("panel depth (k) vs cin*kh*kw", kdim,
+                            pack.k));
+    }
+    let want = pack.m.div_ceil(micro::MR) * micro::MR * pack.k;
+    if pack.buf().len() != want {
+        return Err(mismatch("panel buffer length", want,
+                            pack.buf().len()));
+    }
+    check_finite(cx, "packed panel", pack.buf())
+}
+
+fn check_csr(cx: Ctx, c: &CsrLayer) -> Result<(), VerifyError> {
+    let corrupt = |detail| VerifyError::CsrStructureCorrupt {
+        op: cx.op,
+        detail,
+    };
+    let nnz = c.col_idx.len();
+    if c.row_ptr.len() != c.cout + 1 {
+        return Err(corrupt("row_ptr length != cout + 1"));
+    }
+    if c.row_ptr.first() != Some(&0) {
+        return Err(corrupt("row_ptr does not start at 0"));
+    }
+    if c.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(corrupt("row_ptr not monotone"));
+    }
+    if c.row_ptr.last().copied() != Some(nnz as u32) {
+        return Err(corrupt("row_ptr end != nnz"));
+    }
+    if c.values.len() != nnz {
+        return Err(corrupt("values/col_idx length mismatch"));
+    }
+    let extent = c.cin * c.kh * c.kw;
+    for (row, w) in c.row_ptr.windows(2).enumerate() {
+        for entry in w[0] as usize..w[1] as usize {
+            let col = c.col_idx[entry];
+            if col as usize >= extent {
+                return Err(VerifyError::CsrColOutOfBounds {
+                    op: cx.op,
+                    row,
+                    entry,
+                    col,
+                    extent,
+                });
+            }
+        }
+    }
+    check_finite(cx, "values", &c.values)?;
+    check_bias(cx, &c.bias, c.cout)
+}
+
+/// The structural fields shared by `FkwLayer` and `QuantFkw`.
+struct FkwParts<'a> {
+    cout: usize,
+    cin: usize,
+    filter_order: &'a [u32],
+    offsets: &'a [u32],
+    kernels: &'a [FkwKernel],
+    weights_len: usize,
+}
+
+fn check_fkw_structure(cx: Ctx, p: &FkwParts<'_>)
+                       -> Result<(), VerifyError> {
+    let bad = |invariant, index| {
+        VerifyError::PatternStructureCorrupt {
+            op: cx.op,
+            invariant,
+            index,
+        }
+    };
+    if p.filter_order.len() != p.cout {
+        return Err(bad("filter_order length != cout",
+                       p.filter_order.len()));
+    }
+    let mut seen = vec![false; p.cout];
+    for (i, &fo) in p.filter_order.iter().enumerate() {
+        let fo = fo as usize;
+        if fo >= p.cout || seen[fo] {
+            return Err(bad("filter_order is not a permutation", i));
+        }
+        seen[fo] = true;
+    }
+    if p.offsets.len() != p.cout + 1 {
+        return Err(bad("offsets length != cout + 1",
+                       p.offsets.len()));
+    }
+    if p.offsets.first() != Some(&0) {
+        return Err(bad("offsets do not start at 0", 0));
+    }
+    if let Some(i) = p.offsets.windows(2).position(|w| w[0] > w[1]) {
+        return Err(bad("offsets not monotone", i));
+    }
+    if p.offsets.last().copied() != Some(p.kernels.len() as u32) {
+        return Err(bad("offsets end != kernel count", p.cout));
+    }
+    for (e, k) in p.kernels.iter().enumerate() {
+        if (k.ci as usize) >= p.cin {
+            return Err(bad("kernel input channel out of range", e));
+        }
+        if (k.pattern as usize) >= PATTERN_SET_4.len() {
+            return Err(bad("pattern id out of range", e));
+        }
+    }
+    if p.weights_len != 4 * p.kernels.len() {
+        return Err(bad("weights != 4 per surviving kernel",
+                       p.weights_len));
+    }
+    Ok(())
+}
+
+fn check_fkw(cx: Ctx, w: &FkwLayer, i: Chw, o: Chw, stride: usize)
+             -> Result<(), VerifyError> {
+    check_conv_geom(cx, i, o, (w.cout, w.cin, 3, 3), stride)?;
+    check_fkw_structure(cx, &FkwParts {
+        cout: w.cout,
+        cin: w.cin,
+        filter_order: &w.filter_order,
+        offsets: &w.offsets,
+        kernels: &w.kernels,
+        weights_len: w.weights.len(),
+    })?;
+    check_finite(cx, "weights", &w.weights)?;
+    check_bias(cx, &w.bias, w.cout)
+}
+
+fn check_scales(cx: Ctx, scales: &[f32]) -> Result<(), VerifyError> {
+    for (channel, &value) in scales.iter().enumerate() {
+        if !value.is_finite() || value == 0.0 {
+            return Err(VerifyError::QuantScaleInvalid {
+                op: cx.op,
+                channel,
+                value,
+            });
+        }
+    }
+    Ok(())
+}
+
+fn check_quant_fkw(cx: Ctx, w: &QuantFkw, i: Chw, o: Chw,
+                   stride: usize) -> Result<(), VerifyError> {
+    check_conv_geom(cx, i, o, (w.cout, w.cin, 3, 3), stride)?;
+    check_fkw_structure(cx, &FkwParts {
+        cout: w.cout,
+        cin: w.cin,
+        filter_order: &w.filter_order,
+        offsets: &w.offsets,
+        kernels: &w.kernels,
+        weights_len: w.weights_q.len(),
+    })?;
+    if w.scales.len() != w.cout {
+        return Err(VerifyError::QuantGroupMismatch {
+            op: cx.op,
+            invariant: "scale count vs out channels",
+            expected: w.cout,
+            got: w.scales.len(),
+        });
+    }
+    check_scales(cx, &w.scales)?;
+    check_bias(cx, &w.bias, w.cout)
+}
+
+fn check_quant_dense(cx: Ctx, q: &QuantDense)
+                     -> Result<(), VerifyError> {
+    let group = q.cin * q.kh * q.kw;
+    if q.weights.len() != q.cout * group {
+        return Err(VerifyError::QuantGroupMismatch {
+            op: cx.op,
+            invariant: "int8 weights vs cout * group size",
+            expected: q.cout * group,
+            got: q.weights.len(),
+        });
+    }
+    if q.scales.len() != q.cout {
+        return Err(VerifyError::QuantGroupMismatch {
+            op: cx.op,
+            invariant: "scale count vs out channels",
+            expected: q.cout,
+            got: q.scales.len(),
+        });
+    }
+    check_scales(cx, &q.scales)?;
+    check_bias(cx, &q.bias, q.cout)
+}
+
+/// Every tap of every surviving kernel must map to a live row of the
+/// packed U panel — the bound `build_u_matrix`/`filter_gemm` index
+/// with. Requires `check_fkw_structure` to have validated `ci` and
+/// pattern ids first.
+fn check_row_map(cx: Ctx, gp: &PatternGemmPlan, cin: usize,
+                 kernels: &[FkwKernel]) -> Result<(), VerifyError> {
+    let map = gp.row_map();
+    if map.len() != cin * 9 {
+        return Err(VerifyError::PatternStructureCorrupt {
+            op: cx.op,
+            invariant: "row map length != cin * 9",
+            index: map.len(),
+        });
+    }
+    let n_rows = gp.n_rows();
+    for (entry, k) in kernels.iter().enumerate() {
+        let taps = &PATTERN_SET_4[k.pattern as usize];
+        for (tap, &(dy, dx)) in taps.iter().enumerate() {
+            let row = map[k.ci as usize * 9 + dy * 3 + dx];
+            if row == u32::MAX || row as usize >= n_rows {
+                return Err(VerifyError::PatternRowMapOutOfBounds {
+                    op: cx.op,
+                    entry,
+                    tap,
+                    row,
+                    n_rows,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate one sequence projection store against its input width;
+/// returns the store's output width.
+fn check_proj(cx: Ctx, store: &ProjStore, d_in: usize)
+              -> Result<usize, VerifyError> {
+    match store {
+        ProjStore::Dense(w) => {
+            let d_out = w.bias.len();
+            if w.weights.len() != d_in * d_out {
+                return Err(cx.extent(
+                    "projection weights vs d_in * d_out",
+                    d_in * d_out,
+                    w.weights.len(),
+                ));
+            }
+            check_finite(cx, "weights", &w.weights)?;
+            check_finite(cx, "bias", &w.bias)?;
+            Ok(d_out)
+        }
+        ProjStore::Csr(c) => {
+            if c.kh * c.kw != 1 {
+                return Err(cx.extent("projection CSR kernel extent",
+                                     1, c.kh * c.kw));
+            }
+            if c.cin != d_in {
+                return Err(cx.extent("projection CSR cin vs d_in",
+                                     d_in, c.cin));
+            }
+            check_csr(cx, c)?;
+            Ok(c.cout)
+        }
+        ProjStore::Int8(q) => {
+            if q.kh * q.kw != 1 {
+                return Err(cx.extent(
+                    "projection int8 kernel extent",
+                    1,
+                    q.kh * q.kw,
+                ));
+            }
+            if q.cin != d_in {
+                return Err(cx.extent("projection int8 cin vs d_in",
+                                     d_in, q.cin));
+            }
+            check_quant_dense(cx, q)?;
+            Ok(q.cout)
+        }
+    }
+}
+
+fn check_seq_families(cx: Ctx, i: Chw, o: Chw)
+                      -> Result<(), VerifyError> {
+    if i.family() != Family::Sequence
+        || o.family() != Family::Sequence
+    {
+        return Err(cx.family(
+            "sequence kernels require [T, D] activations",
+        ));
+    }
+    Ok(())
+}
+
+fn check_kernel(cx: Ctx, op: &CompiledOp) -> Result<(), VerifyError> {
+    use CompiledKernel as K;
+    let (i, o) = (op.in_shape, op.out_shape);
+    match &op.kernel {
+        K::ConvNaive { w, stride, .. }
+        | K::ConvIm2col { w, stride, .. } => {
+            check_dense_conv(cx, w, i, o, *stride)
+        }
+        K::ConvIm2colPacked { w, pack, stride, .. } => {
+            check_dense_conv(cx, w, i, o, *stride)?;
+            check_packed_panel(cx, w, pack)
+        }
+        K::ConvWinograd { w, .. } => {
+            // Winograd F(2,3) is 3x3 stride-1 only; the transform
+            // bakes the stride in.
+            check_conv_geom(cx, i, o, (w.cout, w.cin, 3, 3), 1)?;
+            check_winograd(cx, w)
+        }
+        K::ConvCsr { w, stride, .. } => {
+            check_conv_geom(cx, i, o, (w.cout, w.cin, w.kh, w.kw),
+                            *stride)?;
+            check_csr(cx, w)
+        }
+        K::ConvPattern { w, stride, .. } => {
+            check_fkw(cx, w, i, o, *stride)
+        }
+        K::ConvPatternGemm { w, stride, gp, .. } => {
+            check_fkw(cx, w, i, o, *stride)?;
+            check_row_map(cx, gp, w.cin, &w.kernels)
+        }
+        K::ConvQuantDense { w, stride, .. } => {
+            check_conv_geom(cx, i, o, (w.cout, w.cin, w.kh, w.kw),
+                            *stride)?;
+            check_quant_dense(cx, w)
+        }
+        K::ConvQuantPattern { w, stride, .. } => {
+            check_quant_fkw(cx, w, i, o, *stride)
+        }
+        K::ConvQuantPatternGemm { w, stride, gp, .. } => {
+            check_quant_fkw(cx, w, i, o, *stride)?;
+            check_row_map(cx, gp, w.cin, &w.kernels)
+        }
+        K::Depthwise { w, stride, .. } => {
+            check_conv_geom(cx, i, o, (i.c, i.c, 3, 3), *stride)?;
+            if w.weights.len() != 9 * i.c {
+                return Err(cx.extent(
+                    "depthwise weights vs 9 * channels",
+                    9 * i.c,
+                    w.weights.len(),
+                ));
+            }
+            check_finite(cx, "weights", &w.weights)?;
+            check_bias(cx, &w.bias, i.c)
+        }
+        K::MaxPool2 => {
+            let want =
+                Chw::new(i.c, i.h.div_ceil(2), i.w.div_ceil(2));
+            if i.family() != Family::Spatial {
+                return Err(cx.family(
+                    "maxpool requires spatial activations",
+                ));
+            }
+            if o != want {
+                return Err(cx.shape("maxpool output geometry",
+                                    want, o));
+            }
+            Ok(())
+        }
+        K::GlobalAvgPool => {
+            if i.family() != Family::Spatial {
+                return Err(cx.family(
+                    "gap requires spatial activations",
+                ));
+            }
+            let want = Chw::new(i.c, 1, 1);
+            if o != want {
+                return Err(cx.shape("gap output geometry", want, o));
+            }
+            Ok(())
+        }
+        K::Fc { w, .. } => {
+            let cout = w.bias.len();
+            let want = i.elements() * cout;
+            if w.weights.len() != want {
+                return Err(cx.extent("fc weights vs in_elems * cout",
+                                     want, w.weights.len()));
+            }
+            let want_o = Chw::new(cout, 1, 1);
+            if o != want_o {
+                return Err(cx.shape("fc output geometry", want_o, o));
+            }
+            check_finite(cx, "weights", &w.weights)?;
+            check_finite(cx, "bias", &w.bias)
+        }
+        K::Add { .. } => {
+            if o != i {
+                return Err(cx.shape("add preserves shape", i, o));
+            }
+            Ok(())
+        }
+        K::SeqMatMul { w, .. } => {
+            check_seq_families(cx, i, o)?;
+            let d_out = check_proj(cx, w, i.d())?;
+            if o.t() != i.t() {
+                return Err(cx.extent("token count preserved", i.t(),
+                                     o.t()));
+            }
+            if o.d() != d_out {
+                return Err(cx.extent(
+                    "projection width vs store d_out",
+                    d_out,
+                    o.d(),
+                ));
+            }
+            Ok(())
+        }
+        K::SeqNorm { w } => {
+            check_seq_families(cx, i, o)?;
+            if o != i {
+                return Err(cx.shape("layernorm preserves shape", i,
+                                    o));
+            }
+            if w.weights.len() != i.d() {
+                return Err(cx.extent("gamma length vs width", i.d(),
+                                     w.weights.len()));
+            }
+            if w.bias.len() != i.d() {
+                return Err(cx.extent("beta length vs width", i.d(),
+                                     w.bias.len()));
+            }
+            check_finite(cx, "gamma", &w.weights)?;
+            check_finite(cx, "beta", &w.bias)
+        }
+        K::SeqAttn { w, heads } => {
+            check_seq_families(cx, i, o)?;
+            if o != i {
+                return Err(cx.shape("attention preserves shape", i,
+                                    o));
+            }
+            if *heads == 0 {
+                return Err(cx.extent("attention heads nonzero", 1,
+                                     0));
+            }
+            if i.d() % heads != 0 {
+                return Err(cx.extent("width divisible by heads", 0,
+                                     i.d() % heads));
+            }
+            for store in w.stores() {
+                let d_out = check_proj(cx, store, i.d())?;
+                if d_out != i.d() {
+                    return Err(cx.extent(
+                        "attention projection is square",
+                        i.d(),
+                        d_out,
+                    ));
+                }
+            }
+            Ok(())
+        }
+        K::SeqPool => {
+            if i.family() != Family::Sequence
+                || o.family() != Family::Spatial
+            {
+                return Err(cx.family(
+                    "seqpool bridges sequence to spatial",
+                ));
+            }
+            let want = Chw::new(i.d(), 1, 1);
+            if o != want {
+                return Err(cx.shape("seqpool output geometry", want,
+                                    o));
+            }
+            Ok(())
+        }
+    }
+}
+
+fn check_winograd(cx: Ctx, w: &WinogradWeights)
+                  -> Result<(), VerifyError> {
+    let want = 16 * w.cout * w.cin;
+    if w.v.len() != want {
+        return Err(cx.extent("winograd V vs 16 * cout * cin", want,
+                             w.v.len()));
+    }
+    check_finite(cx, "winograd V", &w.v)?;
+    check_bias(cx, &w.bias, w.cout)
+}
+
+/// The scheme×kernel legality matrix implied by `build_plan` and the
+/// `CocoAuto` engine sweep (`autotune_engines`). `ConvIm2col` is the
+/// universal dense fallback (non-3x3 layers keep it under every
+/// scheme); quant kernels exist only under `CocoGenQuant` or a
+/// `CocoAuto` sweep that measured them faster; `Fc`/`SeqNorm` are
+/// structurally f32 under every scheme (quant never touches the FC
+/// head — there is no quant variant to produce).
+fn scheme_allows(scheme: Scheme, kernel: &CompiledKernel) -> bool {
+    use CompiledKernel as K;
+    use Scheme as S;
+    match kernel {
+        K::ConvNaive { .. } => {
+            matches!(scheme, S::DenseNaive | S::CocoAuto)
+        }
+        K::ConvIm2col { .. } => true,
+        K::ConvIm2colPacked { .. } => matches!(scheme, S::CocoAuto),
+        K::ConvWinograd { .. } => {
+            matches!(scheme, S::DenseWinograd | S::CocoAuto)
+        }
+        K::ConvCsr { .. } => matches!(scheme, S::SparseCsr),
+        K::ConvPattern { .. } | K::ConvPatternGemm { .. } => {
+            matches!(scheme, S::CocoGen | S::CocoAuto)
+        }
+        K::ConvQuantDense { .. }
+        | K::ConvQuantPattern { .. }
+        | K::ConvQuantPatternGemm { .. } => {
+            matches!(scheme, S::CocoGenQuant | S::CocoAuto)
+        }
+        K::Depthwise { .. }
+        | K::MaxPool2
+        | K::GlobalAvgPool
+        | K::Fc { .. }
+        | K::Add { .. }
+        | K::SeqNorm { .. }
+        | K::SeqPool => true,
+        K::SeqMatMul { w, .. } => proj_allowed(scheme, w, false),
+        K::SeqAttn { w, .. } => w
+            .stores()
+            .iter()
+            .all(|s| proj_allowed(scheme, s, true)),
+    }
+}
+
+/// Projection-store legality. Attention stores are scheme-chosen (no
+/// per-projection sweep), so `CocoAuto` attention never carries dense
+/// or int8 stores; standalone projections get the engine sweep and
+/// may carry any store under `CocoAuto`.
+fn proj_allowed(scheme: Scheme, store: &ProjStore,
+                attn: bool) -> bool {
+    use Scheme as S;
+    match (store, attn) {
+        (ProjStore::Dense(_), false) => matches!(
+            scheme,
+            S::DenseNaive
+                | S::DenseIm2col
+                | S::DenseWinograd
+                | S::CocoAuto
+        ),
+        (ProjStore::Dense(_), true) => matches!(
+            scheme,
+            S::DenseNaive | S::DenseIm2col | S::DenseWinograd
+        ),
+        (ProjStore::Csr(_), _) => matches!(
+            scheme,
+            S::SparseCsr | S::CocoGen | S::CocoAuto
+        ),
+        (ProjStore::Int8(_), false) => {
+            matches!(scheme, S::CocoGenQuant | S::CocoAuto)
+        }
+        (ProjStore::Int8(_), true) => {
+            matches!(scheme, S::CocoGenQuant)
+        }
+    }
+}
+
+fn check_legality(i: usize, op: &CompiledOp, scheme: Scheme)
+                  -> Result<(), VerifyError> {
+    if scheme_allows(scheme, &op.kernel) {
+        Ok(())
+    } else {
+        Err(VerifyError::IllegalKernel {
+            op: i,
+            kernel: kernel_label(&op.kernel),
+            scheme,
+        })
+    }
+}
+
+fn reads_slot(op: &CompiledOp, s: usize) -> bool {
+    op.src == BufId::Slot(s) || op.src2 == Some(BufId::Slot(s))
+}
+
+/// Re-derive liveness from the ops alone (never trusting
+/// `mem.slot_of`) and prove the arena plan sound: no aliasing of
+/// live values, every write out-of-place, capacities sufficient, and
+/// the reported `peak_activation_bytes()` equal to the verified
+/// footprint.
+fn check_arena(p: &CompiledPipeline) -> Result<(), VerifyError> {
+    let n = p.ops.len();
+    let n_slots = p.mem.slot_elems.len();
+    // Live range of each op's value: the last op reading its slot
+    // before the slot is overwritten (`n` for the model output,
+    // which the caller copies out after the walk).
+    let mut live_until = vec![0usize; n];
+    for (t, op) in p.ops.iter().enumerate() {
+        let s = op.dst;
+        let mut until = t;
+        for (j, later) in p.ops.iter().enumerate().skip(t + 1) {
+            if reads_slot(later, s) {
+                until = j;
+            }
+            if later.dst == s {
+                break;
+            }
+        }
+        if t == n - 1 {
+            until = n;
+        }
+        live_until[t] = until;
+    }
+    let mut writer: Vec<Option<usize>> = vec![None; n_slots];
+    let mut need = vec![0usize; n_slots];
+    for (i, op) in p.ops.iter().enumerate() {
+        for src in [Some(op.src), op.src2].into_iter().flatten() {
+            if let BufId::Slot(s) = src {
+                if writer[s].is_none() {
+                    return Err(VerifyError::ReadBeforeWrite {
+                        op: i,
+                        slot: s,
+                    });
+                }
+            }
+        }
+        // A tenant read *by* this op has live_until >= i, so this
+        // single check also proves every op is out-of-place — the
+        // invariant `CompiledPipeline::execute` relies on when it
+        // `mem::take`s the destination buffer.
+        if let Some(t) = writer[op.dst] {
+            if live_until[t] >= i {
+                return Err(VerifyError::SlotAliasesLiveValue {
+                    op: i,
+                    slot: op.dst,
+                    producer: t,
+                    live_until: live_until[t],
+                });
+            }
+        }
+        writer[op.dst] = Some(i);
+        let elems = op.out_shape.elements() * p.mem.batch;
+        need[op.dst] = need[op.dst].max(elems);
+    }
+    for (slot, (&have, &want)) in
+        p.mem.slot_elems.iter().zip(&need).enumerate()
+    {
+        if have < want {
+            return Err(VerifyError::SlotTooSmall {
+                slot,
+                need_elems: want,
+                have_elems: have,
+            });
+        }
+    }
+    // Sequence scratch: [heads, T, T] scores + Q/K/V/context rows,
+    // shared (not batch-scaled — the batched kernel loops per image).
+    let scratch = p
+        .ops
+        .iter()
+        .map(|op| match op.kernel {
+            CompiledKernel::SeqAttn { heads, .. } => {
+                let (t, d) = (op.in_shape.t(), op.in_shape.d());
+                4 * t * d + heads * t * t
+            }
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0);
+    if p.mem.scratch_elems < scratch {
+        return Err(VerifyError::ScratchTooSmall {
+            need_elems: scratch,
+            have_elems: p.mem.scratch_elems,
+        });
+    }
+    let verified = (need.iter().sum::<usize>() + scratch) * 4;
+    let reported = p.peak_activation_bytes();
+    if verified != reported {
+        return Err(VerifyError::ArenaSizeMismatch {
+            verified_bytes: verified,
+            reported_bytes: reported,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{build_plan, lower, lower_batched,
+                         PruneConfig};
+    use crate::ir::{Chw, IrBuilder, ModelIR, Shape};
+
+    fn conv_ir() -> ModelIR {
+        let mut b = IrBuilder::new("vres", Chw::new(3, 12, 12));
+        b.conv("c1", 3, 8, 1, true);
+        let skip = b.last();
+        b.conv("c2", 3, 8, 1, false)
+            .add("a", skip, true)
+            .conv("p1", 1, 12, 1, true)
+            .maxpool("mp")
+            .gap("g")
+            .dense("fc", 5, false);
+        b.build().unwrap()
+    }
+
+    fn seq_ir() -> ModelIR {
+        let mut b = IrBuilder::new("vseq", Shape::seq(8, 16));
+        b.matmul("embed", 16, false);
+        let skip = b.last();
+        b.attention("attn", 2)
+            .add("res", skip, false)
+            .layernorm("ln")
+            .seqpool("pool")
+            .dense("cls", 4, false);
+        b.build().unwrap()
+    }
+
+    #[test]
+    fn accepts_every_scheme_on_both_families() {
+        for ir in [conv_ir(), seq_ir()] {
+            for scheme in Scheme::ALL {
+                let plan = build_plan(&ir, scheme,
+                                      PruneConfig::default(), 3);
+                let single = lower(&plan);
+                verify_pipeline(&single, scheme).unwrap_or_else(|e| {
+                    panic!("{} / {}: {e}", ir.name, scheme.label())
+                });
+                let batched = lower_batched(&plan, 4);
+                verify_pipeline(&batched, scheme).unwrap_or_else(
+                    |e| {
+                        panic!("{} / {} (batched): {e}", ir.name,
+                               scheme.label())
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_pipeline_verifies() {
+        let ir = ModelIR {
+            name: "empty".into(),
+            input: Chw::new(1, 1, 1),
+            layers: Vec::new(),
+        };
+        let plan =
+            build_plan(&ir, Scheme::DenseIm2col,
+                       PruneConfig::default(), 1);
+        verify_pipeline(&lower(&plan), Scheme::DenseIm2col).unwrap();
+    }
+
+    #[test]
+    fn every_kernel_gets_a_label() {
+        let plan = build_plan(&conv_ir(), Scheme::CocoGenQuant,
+                              PruneConfig::default(), 3);
+        for op in lower(&plan).ops {
+            assert!(!kernel_label(&op.kernel).is_empty());
+        }
+    }
+
+    #[test]
+    fn errors_render_op_slot_and_invariant() {
+        let e = VerifyError::SlotAliasesLiveValue {
+            op: 3,
+            slot: 1,
+            producer: 0,
+            live_until: 4,
+        };
+        let s = e.to_string();
+        assert!(s.contains("op 3") && s.contains("slot 1"),
+                "unhelpful message: {s}");
+        let e = VerifyError::CsrColOutOfBounds {
+            op: 2,
+            row: 7,
+            entry: 41,
+            col: 99,
+            extent: 72,
+        };
+        assert!(e.to_string().contains("72"));
+    }
+
+    #[test]
+    fn quant_kernels_are_illegal_under_dense_schemes() {
+        let plan = build_plan(&conv_ir(), Scheme::CocoGenQuant,
+                              PruneConfig::default(), 3);
+        let p = lower(&plan);
+        let err =
+            verify_pipeline(&p, Scheme::DenseIm2col).unwrap_err();
+        assert!(matches!(err,
+                         VerifyError::IllegalKernel { .. }),
+                "{err}");
+    }
+}

@@ -30,7 +30,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::codegen::{autotune_plan_batched, build_plan, ExecPlan,
                      PruneConfig, Scheme};
@@ -265,6 +265,20 @@ impl DeploymentBuilder {
             autotune_plan_batched(&mut plan, self.tune_threads, batch);
         }
         let plan = plan.into_shared();
+        // Registration gate: refuse any plan the static verifier
+        // (codegen::verify) cannot prove safe — dataflow, arena
+        // aliasing, metadata bounds, and scheme legality — both at
+        // batch 1 and at the tuned batch the backend will serve.
+        for batch in [Some(1), tune_batch.filter(|&b| b > 1)]
+            .into_iter()
+            .flatten()
+        {
+            if let Err(e) = plan.verify_batched(batch) {
+                bail!("deployment '{}': plan rejected by static \
+                       verifier at batch {batch}: {e}",
+                      self.name);
+            }
+        }
         let prior = measure_prior_ms(&plan);
         let accuracy =
             self.accuracy.unwrap_or_else(|| plan.flop_keep_ratio());

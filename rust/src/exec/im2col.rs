@@ -123,6 +123,10 @@ pub fn conv2d_packed_into(input: TensorView<'_>, layer: &DenseLayer,
                                         stride, scratch);
     let hw = h_out * w_out;
     let kdim = layer.cin * layer.kh * layer.kw;
+    // Debug twin of the verifier's `PackedPanelMismatch` proof
+    // (`codegen::verify`), which checks pack.m/pack.k/buf length
+    // against the conv this panel feeds at compile time — release
+    // builds are covered there, before any kernel runs.
     debug_assert_eq!((pack.m, pack.k), (layer.cout, kdim));
     assert_eq!(out.len(), layer.cout * hw, "output buffer size mismatch");
     for co in 0..layer.cout {
@@ -159,6 +163,8 @@ pub fn conv2d_packed_batch_into(input: BatchView<'_>, layer: &DenseLayer,
     let hw = h_out * w_out;
     let nhw = n * hw;
     let kdim = layer.cin * layer.kh * layer.kw;
+    // Debug twin of the verifier's `PackedPanelMismatch` proof — see
+    // `conv2d_packed_into`.
     debug_assert_eq!((pack.m, pack.k), (layer.cout, kdim));
     assert_eq!(out.len(), n * layer.cout * hw,
                "output buffer size mismatch");

@@ -81,6 +81,13 @@ impl<'a> FkwView<'a> {
     /// store — a stack array, never a heap allocation.
     #[inline]
     fn wts(&self, e: usize, co: usize) -> [f32; 4] {
+        // Twin of the verifier's FKW structure proof
+        // (codegen::verify): offsets end at the kernel count and
+        // weights carry 4 entries per kernel, so `e * 4 + 3` stays
+        // in bounds; `co` comes from `filter_order`, a verified
+        // permutation of `0..cout == scales.len()`.
+        debug_assert!(e < self.kernels.len() && co < self.cout,
+                      "kernel entry outside the verified structure");
         match self.weights {
             FkwWeights::F32(w) => {
                 [w[e * 4], w[e * 4 + 1], w[e * 4 + 2], w[e * 4 + 3]]
@@ -487,6 +494,19 @@ impl PatternGemmPlan {
             n_rows: next as usize,
         }
     }
+
+    /// Number of live rows in the packed U matrix. Exposed so the
+    /// static plan verifier (`codegen::verify`) can prove every
+    /// surviving tap maps inside the panel before the plan serves.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// The row map `[(ci * 9) + dy*3 + dx] -> U row` (`u32::MAX` =
+    /// unused tap). Exposed for the verifier's bounds proof.
+    pub fn row_map(&self) -> &[u32] {
+        &self.row_of
+    }
 }
 
 /// Pattern-aware im2col + GEMM path: build the shifted-input matrix
@@ -589,6 +609,10 @@ fn build_u_matrix(input: BatchView<'_>, cin: usize, gp: &PatternGemmPlan,
                     if r == u32::MAX {
                         continue;
                     }
+                    // Twin of the verifier's row-map proof
+                    // (codegen::verify): live rows index inside U.
+                    debug_assert!((r as usize) < gp.n_rows,
+                                  "row map escapes the U panel");
                     let dst = &mut u_mat[r as usize * nhw + img * hw
                         ..r as usize * nhw + (img + 1) * hw];
                     for y in 0..h_out {
@@ -676,6 +700,11 @@ fn conv2d_gemm_view_batch_into(input: BatchView<'_>, layer: &FkwView<'_>,
                         let r = row_of
                             [kern.ci as usize * 9 + dy * 3 + dx]
                             as usize;
+                        // Twin of the verifier's row-map proof: a
+                        // surviving tap is never unmapped (u32::MAX)
+                        // and lands inside the packed U panel.
+                        debug_assert!(r < gp.n_rows,
+                                      "tap row escapes the U panel");
                         let w = wts[t];
                         for (img, plane) in
                             planes.iter_mut().enumerate()

@@ -42,6 +42,13 @@ pub fn last_uses(ir: &ModelIR) -> Vec<usize> {
 /// (`batch` records the factor), so a batch-compiled pipeline serves
 /// fused batches out of the same fixed arena — weights and slot
 /// assignment identical to the single-image plan, capacities scaled.
+///
+/// This greedy assignment is a *claim*, not a proof: the static
+/// verifier (`codegen::verify`) independently re-derives liveness from
+/// the lowered ops at compile/register time and rejects any plan where
+/// two simultaneously-live values would share a slot, a write lands
+/// in-place, a capacity falls short, or [`MemoryPlan::peak_bytes`]
+/// disagrees with the verified footprint.
 #[derive(Debug, Clone)]
 pub struct MemoryPlan {
     /// Arena slot holding each layer's output.

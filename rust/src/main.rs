@@ -29,6 +29,16 @@
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
 //!                               storage + FLOP report
+//!   verify [--model M|all] [--scheme S] [--batch B]
+//!                             — run the static plan verifier
+//!                               (`codegen::verify`) over compiled
+//!                               pipelines without executing them:
+//!                               every scheme (or one via `--scheme`)
+//!                               against the conv zoo + text encoder
+//!                               (or one via `--model`), at batch 1 and
+//!                               `--batch` (default 8); prints one line
+//!                               per combo and exits nonzero on the
+//!                               first typed `VerifyError`
 //!   explore [--configs N]    — real-tier CoCo-Tune exploration demo
 //!
 //! Unknown flags are rejected per subcommand: a typo'd `--scehme` is a
@@ -110,6 +120,11 @@ fn main() -> Result<()> {
             let flags = parse_flags(cmd, rest, &["model"])?;
             compress(&flags)
         }
+        "verify" => {
+            let flags =
+                parse_flags(cmd, rest, &["model", "scheme", "batch"])?;
+            verify_cmd(&flags)
+        }
         "explore" => {
             let flags = parse_flags(cmd, rest, &["configs"])?;
             explore(&flags)
@@ -118,7 +133,8 @@ fn main() -> Result<()> {
             println!("cocopie {} — compression-compilation co-design",
                      cocopie::version());
             println!(
-                "usage: cocopie <info|serve|train|compress|explore> [flags]"
+                "usage: cocopie \
+                 <info|serve|train|compress|verify|explore> [flags]"
             );
             Ok(())
         }
@@ -426,6 +442,71 @@ fn compress(flags: &HashMap<String, String>) -> Result<()> {
              coco.weight_bytes() / (1 << 20),
              dense.weight_bytes() as f64 / coco.weight_bytes() as f64,
              coco.flop_keep_ratio());
+    Ok(())
+}
+
+/// `verify`: compile scheme×model combos and run only the static
+/// verifier over each — dataflow, arena non-aliasing, compressed-
+/// metadata bounds, and scheme legality — never executing a kernel.
+/// This is the CLI face of the same gate `Deployment::builder`
+/// applies at registration time.
+fn verify_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").map(String::as_str).unwrap_or("all");
+    let batch: usize =
+        flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let schemes: Vec<Scheme> = match flags.get("scheme") {
+        None => Scheme::ALL.to_vec(),
+        Some(s) => {
+            let Some(scheme) = Scheme::parse(s) else {
+                bail!("unknown scheme '{s}' (try one of: dense, \
+                       cocogen, cocogen-quant, coco-auto)");
+            };
+            vec![scheme]
+        }
+    };
+    let names: Vec<&str> = match model {
+        "all" => vec!["vgg16", "resnet50", "mobilenet_v2", "text"],
+        m => vec![m],
+    };
+    let mut combos = 0usize;
+    for name in &names {
+        let ir = match *name {
+            "vgg16" => zoo::vgg16(zoo::CIFAR_HW, 10),
+            "resnet50" => zoo::resnet50(zoo::CIFAR_HW, 10),
+            "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
+            "text" => zoo::tiny_text_encoder(),
+            other => bail!(
+                "unknown timing model {other} \
+                 (all|vgg16|resnet50|mobilenet_v2|text)"
+            ),
+        };
+        for &scheme in &schemes {
+            let plan =
+                build_plan(&ir, scheme, PruneConfig::default(), 7);
+            for b in [1, batch.max(1)] {
+                let pipe = match plan.verify_batched(b) {
+                    Ok(p) => p,
+                    Err(e) => bail!(
+                        "{name} x {} at batch {b}: REJECTED: {e}",
+                        scheme.label()
+                    ),
+                };
+                println!(
+                    "{name:14} {:14} batch {b:3}  ok: {:3} ops, {} KB \
+                     arena",
+                    scheme.label(),
+                    pipe.ops.len(),
+                    pipe.mem.peak_bytes() / 1024
+                );
+                combos += 1;
+                if b == 1 && batch <= 1 {
+                    break;
+                }
+            }
+        }
+    }
+    println!("verified {combos} scheme x model x batch combos; all \
+              proofs hold");
     Ok(())
 }
 
