@@ -42,9 +42,18 @@
 //! goodput nonzero, and answer every reply channel — zero hung
 //! requests. `--smoke --overload` is the CI soak step.
 //!
+//! `--lifecycle` replaces the scenes with the hot-swap soak: v1
+//! serves an open-loop Poisson stream (rate set from a measured
+//! capacity probe) while v2 registers on the *running* coordinator,
+//! canaries through staged traffic weights (5% → 25% → 100%) judged
+//! on windowed p99/shed/failover deltas against the incumbent,
+//! promotes, and v1 drains out. Asserts the canary promoted, zero
+//! hung reply channels, and zero non-shed failures — a hot-swap
+//! never drops in-flight work. `--smoke --lifecycle` is the CI step.
+//!
 //! Run: `cargo run --release --example serve
 //!       [-- --quant | --auto | --multi | --seq | --fanout | --smoke
-//!        | --list | --overload | --no-simd]`
+//!        | --list | --overload | --lifecycle | --no-simd]`
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -187,6 +196,117 @@ fn overload_scene(ir: &ModelIR, policy: BatchPolicy, smoke: bool)
     Ok(())
 }
 
+/// The hot-swap soak (`--lifecycle`): measure closed-loop capacity,
+/// then serve an open-loop Poisson stream at half of it while a v2
+/// registers live, canaries through 5% → 25% → 100%, promotes on
+/// windowed metrics, and v1 drains out. Asserts the promote landed
+/// and that no request was dropped or hung across the swap.
+fn lifecycle_scene(ir: &ModelIR, policy: BatchPolicy)
+                   -> anyhow::Result<()> {
+    let elems = ir.input.c * ir.input.h * ir.input.w;
+    let v1 = Deployment::builder("model@1", ir)
+        .scheme(Scheme::CocoGen)
+        .seed(7)
+        .build()?;
+    let coord =
+        Coordinator::builder().policy(policy).register(v1).start()?;
+    // Capacity probe: closed-loop with a small in-flight window, so
+    // the offered rate below stays comfortably under service rate and
+    // the swap is judged on latency, not on queueing collapse.
+    let probe = 96;
+    let client = coord.client();
+    let t0 = Instant::now();
+    let mut pending = std::collections::VecDeque::new();
+    for _ in 0..probe {
+        if pending.len() >= 8 {
+            let _ = pending.pop_front().unwrap().recv();
+        }
+        pending.push_back(client.submit(vec![0.5; elems])?);
+    }
+    while let Some(p) = pending.pop_front() {
+        let _ = p.recv();
+    }
+    let capacity =
+        probe as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let rate = (capacity * 0.5).max(50.0);
+    let cfg = CanaryConfig {
+        stages: vec![0.05, 0.25, 1.0],
+        stage_window: Duration::from_secs(10),
+        min_requests: 16,
+        max_p99_ratio: 2.5,
+        p99_floor_ms: 5.0,
+        max_shed_excess: 1.0,
+        max_failovers: 0,
+        poll: Duration::from_millis(5),
+    };
+    // Size the stream to outlast every stage's evidence window with
+    // 3x margin — a starved window reads as insufficient evidence
+    // and rolls the canary back.
+    let fill_s: f64 = cfg
+        .stages
+        .iter()
+        .map(|w| cfg.min_requests as f64 / (w * rate))
+        .sum();
+    let dur_s = (fill_s * 3.0).clamp(4.0, 30.0);
+    let n_req = (rate * dur_s) as usize;
+    println!(
+        "lifecycle soak: capacity ~{capacity:.0} rps, offering \
+         {n_req} requests open-loop at {rate:.0} rps while model@2 \
+         canaries in"
+    );
+    let sched = arrival_schedule(rate, n_req, 0x11FE);
+    let driver = std::thread::spawn(move || {
+        open_loop_drive(&client, elems, &sched, |_| Sla::Standard,
+                        Duration::from_secs(30))
+    });
+    std::thread::sleep(Duration::from_millis(200));
+    let lc = coord.lifecycle();
+    let v2 = Deployment::builder("model@2", ir)
+        .scheme(Scheme::CocoGenQuant)
+        .seed(7)
+        .build()?;
+    let t_swap = Instant::now();
+    let outcome = lc.canary(v2, "model@1", &cfg)?;
+    let swap_s = t_swap.elapsed().as_secs_f64();
+    let r = driver.join().unwrap();
+    println!(
+        "  swap {swap_s:.1}s, outcome {outcome:?}; {} completed, \
+         {} shed, {} failed, {} hung in {:.2}s (goodput {:.0} rps)",
+        r.completed, r.shed, r.failed, r.hung, r.elapsed_s,
+        r.goodput_rps()
+    );
+    for (name, state) in lc.status() {
+        println!("  {name:16} {state:?}");
+    }
+    anyhow::ensure!(
+        outcome == CanaryOutcome::Promoted,
+        "lifecycle soak: canary failed to promote: {outcome:?}"
+    );
+    anyhow::ensure!(r.hung == 0,
+                    "lifecycle soak: {} reply channels hung", r.hung);
+    anyhow::ensure!(r.failed == 0,
+                    "lifecycle soak: {} non-shed failures", r.failed);
+    let status = lc.status();
+    anyhow::ensure!(
+        status.iter().any(|(n, s)| {
+            &**n == "model@2" && *s == SlotState::Live
+        }) && status.iter().any(|(n, s)| {
+            &**n == "model@1" && *s == SlotState::Retired
+        }),
+        "lifecycle soak: unexpected post-swap registry {status:?}"
+    );
+    let report = coord.shutdown_report();
+    for dep in &report.deployments {
+        println!(
+            "  {:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms",
+            dep.name, dep.summary.completed, dep.summary.p50_ms,
+            dep.summary.p99_ms
+        );
+    }
+    println!("lifecycle soak: pass");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let quant = std::env::args().any(|a| a == "--quant");
     let auto = std::env::args().any(|a| a == "--auto");
@@ -223,6 +343,9 @@ fn main() -> anyhow::Result<()> {
     };
     if overload {
         return overload_scene(&ir, policy, smoke);
+    }
+    if std::env::args().any(|a| a == "--lifecycle") {
+        return lifecycle_scene(&ir, policy);
     }
 
     // --- 1. named deployments of the co-design menu, one coordinator --

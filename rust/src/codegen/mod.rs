@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 
 pub use lower::{lower, lower_batched, Arena, BufId, CompiledKernel,
                 CompiledOp, CompiledPipeline};
-pub use tuner::TileConfig;
+pub use tuner::{observed_tune_batch, TileConfig};
 pub use verify::{kernel_label, verify_pipeline, VerifyError};
 
 /// Which lowering a *dense* conv layer compiles to. Fixed by the scheme

@@ -93,6 +93,19 @@ pub fn quick_candidates(h_out: usize) -> Vec<TileConfig> {
     out
 }
 
+/// The batch size a live re-tune should target, from the observed
+/// mean batch of the serving window (`Summary::mean_batch`): the
+/// nearest integer, clamped to `[1, max_batch]`. An empty window (NaN
+/// mean) or a sub-unit mean tunes at batch 1 — never at a batch the
+/// coordinator would not actually form.
+pub fn observed_tune_batch(mean_batch: f64, max_batch: usize)
+                           -> usize {
+    if !mean_batch.is_finite() || mean_batch < 1.0 {
+        return 1;
+    }
+    (mean_batch.round() as usize).clamp(1, max_batch.max(1))
+}
+
 /// Auto-tune: run `run(cfg)` for each candidate (each candidate measured
 /// `reps` times, best-of), return the fastest config and the measured
 /// table for reporting.
@@ -131,6 +144,16 @@ mod tests {
             assert!(c.co_block >= 1);
         }
         assert!(!candidates(0).is_empty());
+    }
+
+    #[test]
+    fn observed_tune_batch_clamps_and_survives_empty_windows() {
+        assert_eq!(observed_tune_batch(f64::NAN, 8), 1);
+        assert_eq!(observed_tune_batch(0.2, 8), 1);
+        assert_eq!(observed_tune_batch(3.4, 8), 3);
+        assert_eq!(observed_tune_batch(3.6, 8), 4);
+        assert_eq!(observed_tune_batch(100.0, 8), 8);
+        assert_eq!(observed_tune_batch(2.0, 0), 1);
     }
 
     #[test]

@@ -128,6 +128,31 @@ impl<T> ShardBatcher<T> {
         }
     }
 
+    /// Grow the batcher by one empty shard (a deployment registered on
+    /// a *running* coordinator); returns the new shard's index. Shard
+    /// indices are stable: existing shards never move.
+    pub fn add_shard(&mut self) -> usize {
+        self.shards.push(Shard {
+            items: Vec::new(),
+            deadline: None,
+        });
+        self.shards.len() - 1
+    }
+
+    /// Flush one shard unconditionally — the retire drain: a
+    /// deployment leaving the menu hands its queued batch to the
+    /// dispatcher instead of dropping it. `None` when the shard holds
+    /// nothing. Clears the shard's deadline either way.
+    pub fn take_shard(&mut self, shard: usize) -> Option<Vec<T>> {
+        let s = &mut self.shards[shard];
+        s.deadline = None;
+        if s.items.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut s.items))
+        }
+    }
+
     /// Pending (queued, not yet dispatched) items on `shard` — the
     /// admission controller's live congestion signal.
     pub fn depth(&self, shard: usize) -> usize {
@@ -267,6 +292,49 @@ mod tests {
         // The queued batch still flushes normally on its deadline.
         let dl = b.next_deadline().unwrap();
         assert_eq!(b.take_expired(dl), vec![(0, vec![1, 2])]);
+    }
+
+    #[test]
+    fn add_shard_extends_without_disturbing_existing_shards() {
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(100),
+        };
+        let mut b: ShardBatcher<u32> = ShardBatcher::new(1, policy);
+        let now = Instant::now();
+        b.push(0, 1, now);
+        let dl = b.next_deadline().unwrap();
+        // Live registration: the new shard appends; shard 0's queue
+        // and deadline are untouched.
+        assert_eq!(b.add_shard(), 1);
+        assert_eq!(b.depth(0), 1);
+        assert_eq!(b.depth(1), 0);
+        assert_eq!(b.next_deadline(), Some(dl));
+        assert_eq!(b.push(1, 10, now), Push::Queued);
+        assert_eq!(b.take_expired(dl), vec![(0, vec![1]), (1, vec![10])]);
+    }
+
+    #[test]
+    fn take_shard_drains_one_shard_and_clears_its_deadline() {
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(100),
+        };
+        let mut b: ShardBatcher<u32> = ShardBatcher::new(2, policy);
+        let now = Instant::now();
+        b.push(0, 1, now);
+        b.push(0, 2, now);
+        b.push(1, 10, now);
+        // Retire drain: the retiring shard's queue comes back whole —
+        // drained, not dropped — and its deadline is gone so the
+        // leader never re-wakes for the dead shard.
+        assert_eq!(b.take_shard(0), Some(vec![1, 2]));
+        assert_eq!(b.take_shard(0), None, "second drain finds nothing");
+        assert_eq!(b.depth(0), 0);
+        // The surviving shard keeps its queue and deadline.
+        assert_eq!(b.depth(1), 1);
+        let dl = b.next_deadline().expect("survivor keeps its deadline");
+        assert_eq!(b.take_expired(dl), vec![(1, vec![10])]);
     }
 
     #[test]

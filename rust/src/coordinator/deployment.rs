@@ -265,20 +265,11 @@ impl DeploymentBuilder {
             autotune_plan_batched(&mut plan, self.tune_threads, batch);
         }
         let plan = plan.into_shared();
-        // Registration gate: refuse any plan the static verifier
-        // (codegen::verify) cannot prove safe — dataflow, arena
-        // aliasing, metadata bounds, and scheme legality — both at
-        // batch 1 and at the tuned batch the backend will serve.
-        for batch in [Some(1), tune_batch.filter(|&b| b > 1)]
-            .into_iter()
-            .flatten()
-        {
-            if let Err(e) = plan.verify_batched(batch) {
-                bail!("deployment '{}': plan rejected by static \
-                       verifier at batch {batch}: {e}",
-                      self.name);
-            }
+        let mut batches = vec![1];
+        if let Some(b) = tune_batch.filter(|&b| b > 1) {
+            batches.push(b);
         }
+        verify_for_serving(&self.name, &plan, &batches)?;
         let prior = measure_prior_ms(&plan);
         let accuracy =
             self.accuracy.unwrap_or_else(|| plan.flop_keep_ratio());
@@ -298,6 +289,28 @@ impl DeploymentBuilder {
             kernel_tier: crate::exec::micro::tier().label(),
         })
     }
+}
+
+/// Registration gate shared by [`DeploymentBuilder::build`] and the
+/// live [`super::Lifecycle`]: refuse any plan the static verifier
+/// (`codegen::verify`) cannot prove safe — dataflow, arena aliasing,
+/// metadata bounds, and scheme legality — at each serving batch size
+/// in `batches` (deduplicated; zero is checked as batch 1).
+pub(crate) fn verify_for_serving(name: &str, plan: &ExecPlan,
+                                 batches: &[usize]) -> Result<()> {
+    let mut seen = Vec::new();
+    for &b in batches {
+        let b = b.max(1);
+        if seen.contains(&b) {
+            continue;
+        }
+        seen.push(b);
+        if let Err(e) = plan.verify_batched(b) {
+            bail!("deployment '{name}': plan rejected by static \
+                   verifier at batch {b}: {e}");
+        }
+    }
+    Ok(())
 }
 
 /// Measured single-image latency prior (ms): one warm-up plus best-of-2

@@ -1,0 +1,798 @@
+//! Live deployment lifecycle — the control plane of a *running*
+//! [`super::Coordinator`].
+//!
+//! The builder freezes a menu at startup; this module un-freezes it.
+//! A [`Lifecycle`] handle (cloneable, off-thread) can
+//! [`register`](Lifecycle::register) new versions — compiled and
+//! warmed off the leader thread, gated by the static plan verifier —
+//! and [`retire`](Lifecycle::retire) old ones, which *drain* their
+//! shard queues (never drop them) and only return once the last
+//! outstanding request, failover retries included, has resolved.
+//!
+//! On top of the registry sit two controllers:
+//!
+//! * [`Lifecycle::canary`] drives a staged rollout
+//!   (e.g. 5% → 25% → 100% of the incumbent's unpinned traffic,
+//!   split by the deployment tier's deficit-round-robin `Split`
+//!   policy), judging each stage from *windowed* [`Metrics`] deltas —
+//!   live p99, shed rate, failovers — against the incumbent, and
+//!   promotes or rolls back automatically.
+//! * [`Retuner`] periodically re-runs the batched auto-tuner at the
+//!   batch size the deployment has actually been serving (the
+//!   observed windowed mean, not the build-time guess) and, when the
+//!   re-tuned plan measurably wins, hot-swaps it in as
+//!   `name@(v+1)` through the same canary gate. Weights stay
+//!   `Arc`-shared between versions, so the swap is pointer-flip
+//!   cheap.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::codegen::{autotune_plan_batched, observed_tune_batch,
+                     ExecPlan};
+use crate::exec::{ModelExecutor, Tensor};
+
+use super::deployment::verify_for_serving;
+use super::metrics::{Metrics, Summary};
+use super::{router, spawn_deployment, Control, Deployment, Installed,
+            Registry, Request, SharedDepMetrics, SlotState,
+            SpawnedDep};
+
+/// A versioned deployment identity, rendered `name@version`
+/// (`"cocogen@3"`). A bare name parses as version 1, so pre-lifecycle
+/// deployment names are valid version-1 ids.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DeploymentId {
+    pub name: String,
+    pub version: u32,
+}
+
+impl DeploymentId {
+    pub fn new(name: &str, version: u32) -> DeploymentId {
+        DeploymentId {
+            name: name.to_string(),
+            version,
+        }
+    }
+
+    /// Parse `"name@3"`; a bare `"name"` is version 1.
+    pub fn parse(s: &str) -> Result<DeploymentId> {
+        match s.rsplit_once('@') {
+            None => {
+                ensure!(!s.is_empty(), "empty deployment id");
+                Ok(DeploymentId {
+                    name: s.to_string(),
+                    version: 1,
+                })
+            }
+            Some((name, v)) => {
+                ensure!(!name.is_empty(),
+                        "empty deployment name in '{s}'");
+                let version: u32 = v.parse().map_err(|_| {
+                    anyhow!("bad version '{v}' in deployment id '{s}'")
+                })?;
+                ensure!(version >= 1,
+                        "version must be >= 1 in '{s}'");
+                Ok(DeploymentId {
+                    name: name.to_string(),
+                    version,
+                })
+            }
+        }
+    }
+
+    /// The next version of the same deployment.
+    pub fn next(&self) -> DeploymentId {
+        DeploymentId {
+            name: self.name.clone(),
+            version: self.version + 1,
+        }
+    }
+}
+
+impl std::fmt::Display for DeploymentId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>)
+           -> std::fmt::Result {
+        write!(f, "{}@{}", self.name, self.version)
+    }
+}
+
+impl FromStr for DeploymentId {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<DeploymentId> {
+        DeploymentId::parse(s)
+    }
+}
+
+/// Control-plane handle onto a running coordinator. Cloneable and
+/// thread-safe: registration compiles and warms the new version's
+/// backends on the *calling* thread (serving continues untouched),
+/// then hands the finished structures to the leader, which installs
+/// them between batches.
+#[derive(Clone)]
+pub struct Lifecycle {
+    control: Sender<Control>,
+    registry: Arc<RwLock<Registry>>,
+    dep_metrics: SharedDepMetrics,
+    global: Arc<Metrics>,
+    pending: Arc<AtomicUsize>,
+    retry: Sender<Vec<Request>>,
+    max_batch: usize,
+}
+
+impl Lifecycle {
+    pub(crate) fn new(
+        control: Sender<Control>, registry: Arc<RwLock<Registry>>,
+        dep_metrics: SharedDepMetrics, global: Arc<Metrics>,
+        pending: Arc<AtomicUsize>, retry: Sender<Vec<Request>>,
+        max_batch: usize,
+    ) -> Lifecycle {
+        Lifecycle {
+            control,
+            registry,
+            dep_metrics,
+            global,
+            pending,
+            retry,
+            max_batch,
+        }
+    }
+
+    /// Register a new deployment version on the running coordinator
+    /// and make it immediately routable (state `Live`). Returns its
+    /// slot index. Compile and warm-up run on this thread; the plan
+    /// must pass the static verifier at batch 1 *and* the
+    /// coordinator's serving batch before any traffic can reach it.
+    pub fn register(&self, dep: Deployment) -> Result<usize> {
+        self.install(dep, SlotState::Live)
+    }
+
+    /// Register a version as a `Canary`: warm and serving, but outside
+    /// the unpinned rotation until [`Lifecycle::canary_weight`] routes
+    /// it a traffic share (or a promote flips it `Live`).
+    pub fn register_canary(&self, dep: Deployment) -> Result<usize> {
+        self.install(dep, SlotState::Canary)
+    }
+
+    fn install(&self, dep: Deployment, state: SlotState)
+               -> Result<usize> {
+        ensure!(!dep.name.is_empty(),
+                "deployment names must be non-empty");
+        ensure!(!dep.backends.is_empty(),
+                "deployment '{}' has no backends", dep.name);
+        ensure!(
+            dep.backends.len() <= 64,
+            "deployment '{}': at most 64 backends (failed-backend \
+             tracking is a u64 bitmask)",
+            dep.name
+        );
+        {
+            let reg = self.registry.read().unwrap();
+            ensure!(
+                !reg.slots.iter().any(|s| s.name == dep.name),
+                "duplicate deployment name '{}'",
+                dep.name
+            );
+            ensure!(
+                reg.slots.len() < router::MAX_VARIANTS,
+                "at most {} deployments over a coordinator's lifetime",
+                router::MAX_VARIANTS
+            );
+        }
+        // Registration gate: no version becomes routable unless the
+        // static verifier proves its plan safe at every batch size the
+        // coordinator will form.
+        if let Some(plan) = dep.plan() {
+            verify_for_serving(&dep.name, plan,
+                               &[1, self.max_batch])?;
+        }
+        let mut sd = spawn_deployment(dep, self.max_batch,
+                                      &self.global, &self.pending,
+                                      &self.retry)?;
+        // Blocks here — on the *caller's* thread — until every backend
+        // has compiled; the leader never waits on a compile.
+        let sig = sd.signature()?;
+        let SpawnedDep {
+            name,
+            dep,
+            variant,
+            workers,
+            bms,
+            metrics,
+            plan,
+            ..
+        } = sd;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let msg = Box::new(Installed {
+            name: name.clone(),
+            elems: sig.image_elems(),
+            state,
+            dep,
+            variant,
+            workers,
+            metrics: metrics.clone(),
+            plan,
+        });
+        self.control
+            .send(Control::Install {
+                msg,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        let slot = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator stopped"))?
+            .map_err(|e| anyhow!(e))?;
+        self.dep_metrics
+            .lock()
+            .unwrap()
+            .push((name, metrics, bms));
+        Ok(slot)
+    }
+
+    /// Retire a version: it leaves the rotation at once (late `infer`s
+    /// get a typed [`super::ServeError::Retired`]), its shard queue is
+    /// *drained* to the backends, and this call returns — with the
+    /// retiree's final summary — only once its outstanding count,
+    /// failover retries included, reaches zero.
+    pub fn retire(&self, name: &str) -> Result<Summary> {
+        self.retire_to(name, None)
+    }
+
+    /// [`Lifecycle::retire`], naming the `successor` version embedded
+    /// in the [`super::ServeError::Retired`] hint late clients see.
+    pub fn retire_to(&self, name: &str,
+                     successor: Option<Arc<str>>) -> Result<Summary> {
+        let slot = self.slot_of(name)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.control
+            .send(Control::Retire {
+                slot,
+                successor,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator stopped"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Route `weight` (in `[0, 1]`) of the incumbent's unpinned
+    /// traffic to the canary via the deficit-round-robin `Split`
+    /// policy. Call again with a new weight to advance a rollout
+    /// stage.
+    pub fn canary_weight(&self, incumbent: &str, canary: &str,
+                         weight: f64) -> Result<()> {
+        let incumbent = self.slot_of(incumbent)?;
+        let canary = self.slot_of(canary)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.control
+            .send(Control::CanarySet {
+                incumbent,
+                canary,
+                weight,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator stopped"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Tear the canary split down. `promote` flips the canary slot
+    /// `Live` (it joins the unpinned rotation); otherwise it stays
+    /// `Canary` for the controller to retire (rollback).
+    pub fn canary_end(&self, promote: bool) -> Result<()> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.control
+            .send(Control::CanaryEnd {
+                promote,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator stopped"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Every registered version and its lifecycle state, in
+    /// registration order (tombstones included).
+    pub fn status(&self) -> Vec<(Arc<str>, SlotState)> {
+        self.registry
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .map(|s| (s.name.clone(), s.state))
+            .collect()
+    }
+
+    /// Drive a full staged rollout of `dep` against `incumbent`:
+    /// register it as a canary, walk `cfg.stages`, and at each stage
+    /// reset both versions' metric windows, wait for evidence, and
+    /// judge the canary's windowed p99 / shed rate / failovers against
+    /// the incumbent's. Any failed stage rolls back (canary drained
+    /// and retired, incumbent untouched); surviving every stage
+    /// promotes the canary `Live` and retires the incumbent.
+    pub fn canary(&self, dep: Deployment, incumbent: &str,
+                  cfg: &CanaryConfig) -> Result<CanaryOutcome> {
+        ensure!(!cfg.stages.is_empty(),
+                "canary needs at least one stage");
+        let canary_name: Arc<str> = dep.name.clone();
+        // Resolve the incumbent before compiling anything.
+        self.slot_of(incumbent)?;
+        self.register_canary(dep)?;
+        let inc_m = self.slot_metrics(incumbent)?;
+        let can_m = self.slot_metrics(&canary_name)?;
+        for (stage, &weight) in cfg.stages.iter().enumerate() {
+            if let Err(e) =
+                self.canary_weight(incumbent, &canary_name, weight)
+            {
+                let _ = self.retire_to(&canary_name,
+                                       Some(Arc::from(incumbent)));
+                return Err(e);
+            }
+            // Epoch-tagged window reset: this stage's evidence starts
+            // clean on both sides, unpolluted by the predecessor
+            // stage (or the incumbent's whole history).
+            inc_m.reset_window();
+            can_m.reset_window();
+            let t0 = Instant::now();
+            while can_m.window_completed() < cfg.min_requests
+                && t0.elapsed() < cfg.stage_window
+            {
+                std::thread::sleep(cfg.poll);
+            }
+            if let Some(reason) = judge(&inc_m.window_summary(),
+                                        &can_m.window_summary(), cfg)
+            {
+                self.canary_end(false)?;
+                let _ = self.retire_to(&canary_name,
+                                       Some(Arc::from(incumbent)));
+                return Ok(CanaryOutcome::RolledBack {
+                    stage,
+                    weight,
+                    reason,
+                });
+            }
+        }
+        self.canary_end(true)?;
+        self.retire_to(incumbent, Some(canary_name))?;
+        Ok(CanaryOutcome::Promoted)
+    }
+
+    pub(crate) fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub(crate) fn slot_plan(&self, name: &str)
+                            -> Result<(Option<Arc<ExecPlan>>, f64)> {
+        let reg = self.registry.read().unwrap();
+        let s = reg
+            .slots
+            .iter()
+            .find(|s| &*s.name == name)
+            .ok_or_else(|| anyhow!("unknown deployment '{name}'"))?;
+        ensure!(s.state == SlotState::Live,
+                "deployment '{name}' is not live");
+        Ok((s.plan.clone(), s.metrics.summary().mean_batch))
+    }
+
+    fn slot_of(&self, name: &str) -> Result<usize> {
+        self.registry
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .position(|s| &*s.name == name)
+            .ok_or_else(|| anyhow!("unknown deployment '{name}'"))
+    }
+
+    fn slot_metrics(&self, name: &str) -> Result<Arc<Metrics>> {
+        self.registry
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .find(|s| &*s.name == name)
+            .map(|s| s.metrics.clone())
+            .ok_or_else(|| anyhow!("unknown deployment '{name}'"))
+    }
+}
+
+/// Staged-rollout policy for [`Lifecycle::canary`].
+#[derive(Debug, Clone)]
+pub struct CanaryConfig {
+    /// Traffic fractions routed to the canary, one rollout stage
+    /// each (default `5% → 25% → 100%`).
+    pub stages: Vec<f64>,
+    /// Maximum wall-clock per stage before judging with whatever
+    /// evidence arrived.
+    pub stage_window: Duration,
+    /// Minimum canary completions a stage window must hold to
+    /// promote — fewer is "insufficient evidence" and rolls back.
+    pub min_requests: u64,
+    /// Rollback when the canary's windowed p99 exceeds the
+    /// incumbent's windowed p99 times this ratio.
+    pub max_p99_ratio: f64,
+    /// Floor (ms) below which p99 deltas are timer noise, not
+    /// regressions — both sides are raised to it before comparing.
+    pub p99_floor_ms: f64,
+    /// Allowed canary shed-rate excess over the incumbent's.
+    pub max_shed_excess: f64,
+    /// Allowed canary failovers per stage window.
+    pub max_failovers: u64,
+    /// Poll interval while a stage window fills.
+    pub poll: Duration,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> CanaryConfig {
+        CanaryConfig {
+            stages: vec![0.05, 0.25, 1.0],
+            stage_window: Duration::from_secs(5),
+            min_requests: 32,
+            max_p99_ratio: 1.5,
+            p99_floor_ms: 5.0,
+            max_shed_excess: 0.05,
+            max_failovers: 0,
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
+/// What a staged rollout decided.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CanaryOutcome {
+    /// Every stage passed: the canary is `Live`, the incumbent
+    /// drained and retired.
+    Promoted,
+    /// A stage failed: the canary drained and retired, the incumbent
+    /// untouched.
+    RolledBack {
+        stage: usize,
+        weight: f64,
+        reason: String,
+    },
+}
+
+/// The promote/rollback decision for one canary stage, from the two
+/// windowed summaries. `None` means the stage passes.
+fn judge(inc: &Summary, can: &Summary, cfg: &CanaryConfig)
+         -> Option<String> {
+    if can.completed < cfg.min_requests {
+        return Some(format!(
+            "insufficient evidence: {} canary completions in the \
+             stage window (need {})",
+            can.completed, cfg.min_requests
+        ));
+    }
+    if can.failovers > cfg.max_failovers {
+        return Some(format!(
+            "{} failovers in the canary window (allowed {})",
+            can.failovers, cfg.max_failovers
+        ));
+    }
+    let shed_rate = |s: &Summary| {
+        s.shed as f64 / (s.completed + s.shed).max(1) as f64
+    };
+    let excess = shed_rate(can) - shed_rate(inc);
+    if excess > cfg.max_shed_excess {
+        return Some(format!(
+            "canary shed rate exceeds the incumbent's by {excess:.3}"
+        ));
+    }
+    // With an empty incumbent window (e.g. the 100% stage routes it
+    // nothing) there is no latency baseline — p99 cannot regress
+    // against nothing, so only the absolute gates above apply.
+    let budget = if inc.completed > 0 {
+        inc.p99_ms.max(cfg.p99_floor_ms) * cfg.max_p99_ratio
+    } else {
+        f64::INFINITY
+    };
+    if can.p99_ms.max(cfg.p99_floor_ms) > budget {
+        return Some(format!(
+            "canary windowed p99 {:.2} ms over budget {:.2} ms",
+            can.p99_ms, budget
+        ));
+    }
+    None
+}
+
+/// Policy for the background [`Retuner`] (and one-shot
+/// [`retune_once`]).
+#[derive(Debug, Clone)]
+pub struct RetunerConfig {
+    /// Minimum measured speedup (incumbent time / re-tuned time)
+    /// before a re-tuned plan is worth a canary rollout.
+    pub min_speedup: f64,
+    /// Threads the offline tuner and comparison measure with.
+    pub threads: usize,
+    /// Rollout gate a winning plan must pass.
+    pub canary: CanaryConfig,
+    /// Interval between re-tune passes.
+    pub interval: Duration,
+}
+
+impl Default for RetunerConfig {
+    fn default() -> RetunerConfig {
+        RetunerConfig {
+            min_speedup: 1.05,
+            threads: 1,
+            canary: CanaryConfig::default(),
+            interval: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What one re-tune pass did.
+#[derive(Debug, Clone)]
+pub enum RetuneOutcome {
+    /// The deployment has no attached plan to re-tune (custom
+    /// backends).
+    NoPlan,
+    /// Re-tuned and measured at the observed batch; the incumbent
+    /// plan kept winning (speedup below the configured minimum).
+    Kept {
+        observed_batch: usize,
+        speedup: f64,
+    },
+    /// The re-tuned plan won offline and went through the canary gate
+    /// as version `id`.
+    Swapped {
+        id: String,
+        speedup: f64,
+        outcome: CanaryOutcome,
+    },
+}
+
+/// One re-tune pass: re-run the batched auto-tuner at the batch size
+/// the deployment has *actually* been serving (its observed mean
+/// batch from [`Metrics`], not the build-time guess), measure the
+/// tuned plan against the incumbent's, and when it wins by at least
+/// `cfg.min_speedup`, roll it out as `name@(v+1)` through the canary
+/// gate. Weights are `Arc`-shared between the plans, so the re-tuned
+/// version costs metadata, not a second copy of the model.
+pub fn retune_once(lc: &Lifecycle, name: &str, cfg: &RetunerConfig)
+                   -> Result<RetuneOutcome> {
+    let (plan, mean_batch) = lc.slot_plan(name)?;
+    let Some(plan) = plan else {
+        return Ok(RetuneOutcome::NoPlan);
+    };
+    let batch = observed_tune_batch(mean_batch, lc.max_batch());
+    // A serving plan is shared immutably; tune a field-wise copy
+    // (weights stay shared) and compare both at the observed batch.
+    let mut tuned = ExecPlan {
+        ir: plan.ir.clone(),
+        layers: plan.layers.clone(),
+        scheme: plan.scheme,
+    };
+    autotune_plan_batched(&mut tuned, cfg.threads, batch);
+    let tuned = tuned.into_shared();
+    let t_old = measure_batch_ms(&plan, cfg.threads, batch);
+    let t_new = measure_batch_ms(&tuned, cfg.threads, batch);
+    let speedup = t_old / t_new.max(1e-9);
+    if speedup < cfg.min_speedup {
+        return Ok(RetuneOutcome::Kept {
+            observed_batch: batch,
+            speedup,
+        });
+    }
+    let id = DeploymentId::parse(name)?.next();
+    let dep = Deployment::from_plan(&id.to_string(), tuned);
+    let outcome = lc.canary(dep, name, &cfg.canary)?;
+    Ok(RetuneOutcome::Swapped {
+        id: id.to_string(),
+        speedup,
+        outcome,
+    })
+}
+
+/// Measured batched latency (ms): one warm-up plus best-of-2 direct
+/// executor runs on zero images at the target batch — the same
+/// protocol as the build-time latency prior, at the serving batch.
+fn measure_batch_ms(plan: &Arc<ExecPlan>, threads: usize,
+                    batch: usize) -> f64 {
+    let inp = plan.ir.input;
+    let mut exec = ModelExecutor::new_batched(plan, threads, batch);
+    let images: Vec<Tensor> = (0..batch)
+        .map(|_| Tensor::zeros(inp.c, inp.h, inp.w))
+        .collect();
+    exec.run_batch(&images); // warm: arena + scratch allocation
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        exec.run_batch(&images);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best * 1e3
+}
+
+/// Background re-tuning loop: wakes every `cfg.interval`, runs
+/// [`retune_once`] on the named deployment — following it across
+/// promoted swaps, so `model@2` re-tunes as `model@3` next pass — and
+/// records each outcome. [`Retuner::stop`] (or drop) signals the loop
+/// and joins it.
+pub struct Retuner {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Vec<RetuneOutcome>>>,
+}
+
+impl Retuner {
+    pub fn spawn(lc: Lifecycle, name: &str, cfg: RetunerConfig)
+                 -> Retuner {
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let mut current = name.to_string();
+        let handle = std::thread::spawn(move || {
+            let mut outcomes = Vec::new();
+            'passes: loop {
+                // Interruptible sleep: stop() must not wait out a
+                // long interval.
+                let t0 = Instant::now();
+                while t0.elapsed() < cfg.interval {
+                    if flag.load(Ordering::SeqCst) {
+                        break 'passes;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                match retune_once(&lc, &current, &cfg) {
+                    Ok(o) => {
+                        if let RetuneOutcome::Swapped {
+                            id,
+                            outcome: CanaryOutcome::Promoted,
+                            ..
+                        } = &o
+                        {
+                            current = id.clone();
+                        }
+                        outcomes.push(o);
+                    }
+                    // Coordinator gone, or the slot was retired under
+                    // us — either way this retuner's job is over.
+                    Err(_) => break 'passes,
+                }
+            }
+            outcomes
+        });
+        Retuner {
+            stop,
+            handle: Some(handle),
+        }
+    }
+
+    /// Signal the loop and join it, returning every pass's outcome.
+    pub fn stop(mut self) -> Vec<RetuneOutcome> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.handle
+            .take()
+            .and_then(|h| h.join().ok())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Retuner {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deployment_id_parses_versions_and_bare_names() {
+        let id = DeploymentId::parse("cocogen@3").unwrap();
+        assert_eq!(id.name, "cocogen");
+        assert_eq!(id.version, 3);
+        assert_eq!(id.to_string(), "cocogen@3");
+        let bare = DeploymentId::parse("cocogen").unwrap();
+        assert_eq!(bare, DeploymentId::new("cocogen", 1));
+        assert_eq!(bare.next().to_string(), "cocogen@2");
+        // FromStr round-trips through the same parser.
+        let fs: DeploymentId = "seq@7".parse().unwrap();
+        assert_eq!(fs, DeploymentId::new("seq", 7));
+    }
+
+    #[test]
+    fn deployment_id_rejects_malformed_ids() {
+        assert!(DeploymentId::parse("").is_err());
+        assert!(DeploymentId::parse("@2").is_err());
+        assert!(DeploymentId::parse("m@").is_err());
+        assert!(DeploymentId::parse("m@zero").is_err());
+        assert!(DeploymentId::parse("m@0").is_err());
+        // An embedded '@' belongs to the name; the *last* one is the
+        // version separator.
+        let odd = DeploymentId::parse("a@b@2").unwrap();
+        assert_eq!(odd.name, "a@b");
+        assert_eq!(odd.version, 2);
+    }
+
+    fn summary(completed: u64, p99_ms: f64, shed: u64,
+               failovers: u64) -> Summary {
+        Summary {
+            completed,
+            rejected: 0,
+            failovers,
+            shed,
+            queue_depth: 0,
+            queue_depth_max: 0,
+            p50_ms: p99_ms / 2.0,
+            p99_ms,
+            mean_queue_ms: 0.0,
+            mean_batch: 1.0,
+        }
+    }
+
+    fn cfg() -> CanaryConfig {
+        CanaryConfig {
+            min_requests: 10,
+            ..CanaryConfig::default()
+        }
+    }
+
+    #[test]
+    fn judge_passes_a_clean_canary() {
+        let inc = summary(100, 20.0, 0, 0);
+        let can = summary(50, 24.0, 0, 0);
+        assert_eq!(judge(&inc, &can, &cfg()), None);
+    }
+
+    #[test]
+    fn judge_rolls_back_on_p99_regression() {
+        let inc = summary(100, 20.0, 0, 0);
+        let can = summary(50, 31.0, 0, 0); // > 20 * 1.5
+        let reason = judge(&inc, &can, &cfg()).unwrap();
+        assert!(reason.contains("p99"), "{reason}");
+    }
+
+    #[test]
+    fn judge_ignores_sub_floor_noise() {
+        // 0.4 ms vs 0.1 ms is a 4x ratio but both are under the 5 ms
+        // floor — noise, not a regression.
+        let inc = summary(100, 0.1, 0, 0);
+        let can = summary(50, 0.4, 0, 0);
+        assert_eq!(judge(&inc, &can, &cfg()), None);
+    }
+
+    #[test]
+    fn judge_rolls_back_on_failovers_and_sheds() {
+        let inc = summary(100, 20.0, 0, 0);
+        let failing = summary(50, 20.0, 0, 1);
+        assert!(judge(&inc, &failing, &cfg())
+            .unwrap()
+            .contains("failover"));
+        let shedding = summary(50, 20.0, 25, 0); // 33% shed rate
+        assert!(judge(&inc, &shedding, &cfg())
+            .unwrap()
+            .contains("shed"));
+    }
+
+    #[test]
+    fn judge_requires_evidence_but_not_an_incumbent_baseline() {
+        let inc = summary(100, 20.0, 0, 0);
+        let sparse = summary(3, 1.0, 0, 0);
+        assert!(judge(&inc, &sparse, &cfg())
+            .unwrap()
+            .contains("insufficient"));
+        // Empty incumbent window (100% stage): no p99 baseline, only
+        // the absolute gates apply.
+        let empty_inc = summary(0, 0.0, 0, 0);
+        let can = summary(50, 400.0, 0, 0);
+        assert_eq!(judge(&empty_inc, &can, &cfg()), None);
+    }
+}

@@ -74,6 +74,43 @@ impl Reservoir {
 /// history.
 const LATENCY_EWMA_ALPHA: f64 = 1.0 / 16.0;
 
+/// One measurement window: the same counters/reservoir as the lifetime
+/// view, but resettable. The canary controller compares incumbent and
+/// canary over the *same* observation window, so a version's p99 is
+/// never polluted by its predecessor's (or its own warm-up) samples.
+struct Window {
+    latencies_s: Reservoir,
+    latency_ewma_s: Option<f64>,
+    queue_wait_sum_s: f64,
+    batch_size_sum: f64,
+    completed: u64,
+    rejected: u64,
+    failovers: u64,
+    shed: u64,
+    queue_depth_max: usize,
+}
+
+impl Window {
+    fn fresh(epoch: u64) -> Window {
+        Window {
+            // Epoch-salted seed keeps windows deterministic yet
+            // decorrelated from each other and the lifetime reservoir.
+            latencies_s: Reservoir::new(
+                LATENCY_RESERVOIR,
+                0x4C41_54 ^ epoch.wrapping_mul(0x9E37_79B9),
+            ),
+            latency_ewma_s: None,
+            queue_wait_sum_s: 0.0,
+            batch_size_sum: 0.0,
+            completed: 0,
+            rejected: 0,
+            failovers: 0,
+            shed: 0,
+            queue_depth_max: 0,
+        }
+    }
+}
+
 struct Inner {
     latencies_s: Reservoir,
     /// Exponentially decayed mean latency (s); `None` until the first
@@ -87,6 +124,10 @@ struct Inner {
     shed: u64,
     queue_depth: usize,
     queue_depth_max: usize,
+    /// Bumped by [`Metrics::reset_window`]; tags which observation
+    /// window the `window` state belongs to.
+    epoch: u64,
+    window: Window,
 }
 
 impl Default for Inner {
@@ -102,6 +143,8 @@ impl Default for Inner {
             shed: 0,
             queue_depth: 0,
             queue_depth_max: 0,
+            epoch: 0,
+            window: Window::fresh(0),
         }
     }
 }
@@ -201,6 +244,15 @@ impl Metrics {
         g.queue_wait_sum_s += queue_wait.as_secs_f64();
         g.batch_size_sum += batch_size as f64;
         g.completed += 1;
+        let w = &mut g.window;
+        w.latencies_s.push(s);
+        w.latency_ewma_s = Some(match w.latency_ewma_s {
+            None => s,
+            Some(e) => e + LATENCY_EWMA_ALPHA * (s - e),
+        });
+        w.queue_wait_sum_s += queue_wait.as_secs_f64();
+        w.batch_size_sum += batch_size as f64;
+        w.completed += 1;
     }
 
     /// The live end-to-end latency operating point, in ms: an
@@ -214,19 +266,25 @@ impl Metrics {
     }
 
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.rejected += 1;
+        g.window.rejected += 1;
     }
 
     /// One request handed to another backend after this one failed.
     pub fn record_failover(&self) {
-        self.inner.lock().unwrap().failovers += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.failovers += 1;
+        g.window.failovers += 1;
     }
 
     /// One request turned away at admission. Deliberately touches only
     /// the `shed` counter: a shed request has no service latency, so it
     /// must not perturb the reservoir or the EWMA the SLA router reads.
     pub fn record_shed(&self) {
-        self.inner.lock().unwrap().shed += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.shed += 1;
+        g.window.shed += 1;
     }
 
     /// Update the intake-queue depth gauge (and its high-water mark).
@@ -234,6 +292,63 @@ impl Metrics {
         let mut g = self.inner.lock().unwrap();
         g.queue_depth = depth;
         g.queue_depth_max = g.queue_depth_max.max(depth);
+        g.window.queue_depth_max = g.window.queue_depth_max.max(depth);
+    }
+
+    /// Start a fresh observation window: windowed counters, reservoir,
+    /// and the windowed decayed mean all reset; the lifetime view is
+    /// untouched. Bumps the window epoch. The canary controller calls
+    /// this on incumbent and canary at each stage boundary so both are
+    /// judged over the same interval, and a version's windowed p99 is
+    /// never polluted by its predecessor's (or warm-up) samples.
+    pub fn reset_window(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.epoch += 1;
+        let epoch = g.epoch;
+        g.window = Window::fresh(epoch);
+    }
+
+    /// The current window epoch ([`Metrics::reset_window`] count).
+    pub fn window_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Completions since the last [`Metrics::reset_window`] — the cheap
+    /// poll the canary controller uses to wait for a minimum sample
+    /// size before judging a stage.
+    pub fn window_completed(&self) -> u64 {
+        self.inner.lock().unwrap().window.completed
+    }
+
+    /// [`Summary`] over the current observation window only (since the
+    /// last [`Metrics::reset_window`]). `queue_depth` is the live gauge
+    /// (a gauge has no window); `queue_depth_max` is the high-water
+    /// mark within the window.
+    pub fn window_summary(&self) -> Summary {
+        let g = self.inner.lock().unwrap();
+        let w = &g.window;
+        let [p50, p99] = w.latencies_s.percentiles([50.0, 99.0]);
+        let denom = w.completed.max(1) as f64;
+        Summary {
+            completed: w.completed,
+            rejected: w.rejected,
+            failovers: w.failovers,
+            shed: w.shed,
+            queue_depth: g.queue_depth,
+            queue_depth_max: w.queue_depth_max,
+            p50_ms: p50 * 1e3,
+            p99_ms: p99 * 1e3,
+            mean_queue_ms: if w.completed == 0 {
+                0.0
+            } else {
+                w.queue_wait_sum_s / denom * 1e3
+            },
+            mean_batch: if w.completed == 0 {
+                0.0
+            } else {
+                w.batch_size_sum / denom
+            },
+        }
     }
 
     pub fn summary(&self) -> Summary {
@@ -396,6 +511,56 @@ mod tests {
         let s = m.summary();
         assert_eq!(s.queue_depth, 2, "gauge reads the last update");
         assert_eq!(s.queue_depth_max, 9, "high-water mark sticks");
+    }
+
+    #[test]
+    fn window_reset_forgets_predecessor_latency() {
+        let m = Metrics::new();
+        // A slow "predecessor" era.
+        for _ in 0..200 {
+            m.record(Duration::from_millis(80), Duration::ZERO, 1);
+        }
+        assert!(m.window_summary().p99_ms > 70.0);
+        assert_eq!(m.window_epoch(), 0);
+        m.reset_window();
+        assert_eq!(m.window_epoch(), 1);
+        assert_eq!(m.window_completed(), 0);
+        // An empty window reports zero latency, not the old era's.
+        assert_eq!(m.window_summary().p99_ms, 0.0);
+        // The fast successor era: its windowed p99 must reflect only
+        // its own samples, while the lifetime view still remembers the
+        // slow history.
+        for _ in 0..200 {
+            m.record(Duration::from_millis(3), Duration::ZERO, 2);
+        }
+        let w = m.window_summary();
+        assert_eq!(w.completed, 200);
+        assert!(w.p99_ms < 10.0, "windowed p99 polluted: {}", w.p99_ms);
+        assert_eq!(w.mean_batch, 2.0);
+        let life = m.summary();
+        assert_eq!(life.completed, 400);
+        assert!(life.p99_ms > 70.0, "lifetime view must keep history");
+    }
+
+    #[test]
+    fn window_counters_reset_independently_of_lifetime() {
+        let m = Metrics::new();
+        m.record_shed();
+        m.record_failover();
+        m.record_rejected();
+        m.set_queue_depth(7);
+        m.set_queue_depth(0);
+        let w = m.window_summary();
+        assert_eq!((w.shed, w.failovers, w.rejected), (1, 1, 1));
+        assert_eq!(w.queue_depth_max, 7);
+        m.reset_window();
+        let w = m.window_summary();
+        assert_eq!((w.shed, w.failovers, w.rejected), (0, 0, 0));
+        assert_eq!(w.queue_depth_max, 0,
+                   "window high-water must restart");
+        let life = m.summary();
+        assert_eq!((life.shed, life.failovers, life.rejected), (1, 1, 1));
+        assert_eq!(life.queue_depth_max, 7);
     }
 
     #[test]

@@ -39,6 +39,7 @@
 pub mod backend;
 pub mod batcher;
 pub mod deployment;
+pub mod lifecycle;
 pub mod metrics;
 pub mod router;
 
@@ -46,17 +47,21 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender,
                       SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::codegen::ExecPlan;
 use crate::runtime::{HostTensor, Runtime};
 pub use backend::{Backend, ModelSignature, NativeBackend,
                   NativeBatchMode, PjrtBackend};
 pub use batcher::{BatchPolicy, Push, ShardBatcher};
 pub use deployment::{Deployment, DeploymentBuilder};
+pub use lifecycle::{retune_once, CanaryConfig, CanaryOutcome,
+                    DeploymentId, Lifecycle, RetuneOutcome, Retuner,
+                    RetunerConfig};
 pub use metrics::{BackendReport, DeploymentReport, Metrics, ServeReport,
                   Summary};
 pub use router::{BackendState, BatchRouter, Router, RouterPolicy, Sla,
@@ -73,6 +78,11 @@ pub enum ServeError {
     WrongImageSize { got: usize, want: usize },
     /// `InferRequest::deployment` names no registered deployment.
     UnknownDeployment(String),
+    /// The named deployment version has been retired (or is draining
+    /// out) under the live lifecycle registry. `current_version` names
+    /// the successor that took over its traffic, when one exists —
+    /// clients pinned to a retired version re-pin to it.
+    Retired { current_version: Option<Arc<str>> },
     /// The request's SLA class admits no registered variant under the
     /// configured [`SlaPolicy`].
     NoAdmissibleVariant { sla: Sla },
@@ -97,6 +107,11 @@ impl std::fmt::Display for ServeError {
             ServeError::UnknownDeployment(name) => {
                 write!(f, "unknown deployment '{name}'")
             }
+            ServeError::Retired { current_version } => match current_version {
+                Some(v) => write!(f, "deployment retired; current \
+                                      version is '{v}'"),
+                None => write!(f, "deployment retired"),
+            },
             ServeError::NoAdmissibleVariant { sla } => {
                 write!(f,
                        "no registered deployment admissible for SLA \
@@ -116,6 +131,158 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+/// Lifecycle state of one slot in the versioned deployment registry.
+///
+/// ```text
+///             canary_weight / promote
+///   Canary ────────────────────────► Live
+///     │ rollback (retire)              │ retire
+///     ▼                                ▼
+///   Draining ──(outstanding == 0)──► Retired
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotState {
+    /// Routable: in the unpinned SLA-routing mask and pinnable.
+    Live,
+    /// Warm and serving, but outside the unpinned rotation — traffic
+    /// reaches it only through the canary split or an explicit pin.
+    Canary,
+    /// Retiring: refuses new work (typed [`ServeError::Retired`]);
+    /// everything already admitted drains to completion.
+    Draining,
+    /// Drained and out of rotation. Slots are tombstones, never
+    /// reused, so a slot index pinned inside an in-flight request
+    /// stays valid for the coordinator's lifetime.
+    Retired,
+}
+
+/// One registered deployment version, registry view. Kept deliberately
+/// small: the leader's hot-path structures (job senders, batch router,
+/// backend states) live leader-side; the registry is the shared
+/// source of truth for *identity and lifecycle state*.
+pub(crate) struct Slot {
+    pub(crate) name: Arc<str>,
+    /// Flattened image size this version's signature accepts.
+    pub(crate) elems: usize,
+    pub(crate) state: SlotState,
+    /// Successor version, for the [`ServeError::Retired`] hint.
+    pub(crate) successor: Option<Arc<str>>,
+    /// The deployment's metrics sink (canary windows, retuner's
+    /// observed batch distribution).
+    pub(crate) metrics: Arc<Metrics>,
+    /// The compiled plan behind a native single-plan deployment —
+    /// what the retuner re-tunes.
+    pub(crate) plan: Option<Arc<ExecPlan>>,
+}
+
+/// The versioned deployment registry, shared (behind an `RwLock`)
+/// between clients (name resolution + size checks), the lifecycle
+/// handle (control-plane validation), and the leader — the registry's
+/// only writer. Append-only: at most [`router::MAX_VARIANTS`]
+/// registrations over a coordinator's lifetime.
+pub(crate) struct Registry {
+    pub(crate) slots: Vec<Slot>,
+}
+
+/// Shared per-deployment metrics table (deployment, sink, per-backend
+/// sinks) — appended by live registration, read by
+/// [`Coordinator::shutdown_report`].
+pub(crate) type SharedDepMetrics =
+    Arc<Mutex<Vec<(Arc<str>, Arc<Metrics>, Vec<(Arc<str>, Arc<Metrics>)>)>>>;
+
+/// A fully spawned deployment, handed from the lifecycle handle (which
+/// compiled and warmed it off the leader thread) to the leader, which
+/// installs it into the routing structures between batches.
+pub(crate) struct Installed {
+    pub(crate) name: Arc<str>,
+    pub(crate) elems: usize,
+    pub(crate) state: SlotState,
+    pub(crate) dep: LeaderDep,
+    pub(crate) variant: Variant,
+    pub(crate) workers: Vec<JoinHandle<()>>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) plan: Option<Arc<ExecPlan>>,
+}
+
+/// Control-plane operations, [`Lifecycle`] → leader. The leader
+/// applies them between batches, so the data path never takes a lock
+/// against the control path.
+pub(crate) enum Control {
+    /// Install a spawned deployment; replies with its slot index.
+    Install {
+        msg: Box<Installed>,
+        reply: Sender<std::result::Result<usize, String>>,
+    },
+    /// Begin draining a slot; the reply arrives only once its
+    /// outstanding count reaches zero (satellite: drained, not
+    /// dropped), carrying the retiree's final summary.
+    Retire {
+        slot: usize,
+        successor: Option<Arc<str>>,
+        reply: Sender<std::result::Result<Summary, String>>,
+    },
+    /// Split the incumbent's unpinned traffic with a canary slot at
+    /// `weight` (fraction to the canary, in `[0, 1]`).
+    CanarySet {
+        incumbent: usize,
+        canary: usize,
+        weight: f64,
+        reply: Sender<std::result::Result<(), String>>,
+    },
+    /// End the canary split. `promote` flips the canary slot Live;
+    /// otherwise it stays Canary for the caller to retire (rollback).
+    CanaryEnd {
+        promote: bool,
+        reply: Sender<std::result::Result<(), String>>,
+    },
+}
+
+/// A pending retire: the leader polls the slot each loop iteration and
+/// replies once shard queue and outstanding count are both empty.
+struct DrainWaiter {
+    slot: usize,
+    reply: Sender<std::result::Result<Summary, String>>,
+}
+
+/// Leader-side canary split state. Reuses the deployment-tier `Split`
+/// deficit-round-robin router over a two-entry phantom backend pair
+/// (index 0 = incumbent, 1 = canary) so the traffic split inherits
+/// DRR's bounded deficit instead of needing a second weighting scheme.
+struct CanaryState {
+    incumbent: usize,
+    canary: usize,
+    weight: f64,
+    /// `None` at the degenerate weights (`w <= 0` or `w >= 1`, which
+    /// `Split` rejects): all traffic goes one way.
+    split: Option<BatchRouter>,
+    duo: [Arc<BackendState>; 2],
+    /// The canary's image size — the redirect only applies to requests
+    /// the canary can actually serve.
+    canary_elems: usize,
+}
+
+impl CanaryState {
+    /// Which slot this unpinned request goes to.
+    fn pick(&mut self) -> usize {
+        match self.split.as_mut() {
+            None => {
+                if self.weight >= 1.0 {
+                    self.canary
+                } else {
+                    self.incumbent
+                }
+            }
+            Some(r) => {
+                if r.pick(&self.duo) == 0 {
+                    self.incumbent
+                } else {
+                    self.canary
+                }
+            }
+        }
+    }
+}
 
 /// The typed request form: one NHWC image (flattened), the SLA class
 /// the router resolves when no explicit deployment is named.
@@ -154,7 +321,9 @@ struct Submit {
 }
 
 /// A resolved classification request owned by the leader/workers.
-struct Request {
+/// `pub(crate)` only so the lifecycle handle can hold a clone of the
+/// failover-retry sender; its fields stay module-private.
+pub(crate) struct Request {
     image: Vec<f32>,
     /// Index of the deployment this request resolved to.
     deployment: usize,
@@ -196,10 +365,11 @@ pub struct Prediction {
 #[derive(Clone)]
 pub struct Client {
     tx: SyncSender<Submit>,
-    /// Per-deployment flattened image size, in registration order —
-    /// deployments of different model families accept different sizes.
-    elems: Arc<Vec<usize>>,
-    names: Arc<Vec<Arc<str>>>,
+    /// The live deployment registry: name resolution, per-version
+    /// image sizes, and lifecycle states all read through here, so a
+    /// version registered (or retired) after this client was cloned is
+    /// visible immediately.
+    registry: Arc<RwLock<Registry>>,
     closing: Arc<AtomicBool>,
     /// Shared count of admitted, not-yet-served requests.
     pending: Arc<AtomicUsize>,
@@ -211,41 +381,70 @@ pub struct Client {
 impl Client {
     /// Submit a typed request; returns the receiver for the
     /// prediction. Submission-time failures (wrong image size, unknown
-    /// deployment name, saturated intake, coordinator stopped) are
-    /// returned here; routing/execution failures arrive typed on the
-    /// receiver.
+    /// deployment name, retired version, saturated intake, coordinator
+    /// stopped) are returned here; routing/execution failures arrive
+    /// typed on the receiver.
     pub fn infer(&self, req: InferRequest<'_>)
                  -> Result<Receiver<PredictionResult>, ServeError> {
-        let deployment = match req.deployment {
-            None => None,
-            Some(name) => Some(
-                self.names
-                    .iter()
-                    .position(|n| &**n == name)
-                    .ok_or_else(|| {
-                        ServeError::UnknownDeployment(name.to_string())
-                    })?,
-            ),
+        let deployment = {
+            let reg = self.registry.read().unwrap();
+            let deployment = match req.deployment {
+                None => None,
+                Some(name) => {
+                    let d = reg
+                        .slots
+                        .iter()
+                        .position(|s| &*s.name == name)
+                        .ok_or_else(|| {
+                            ServeError::UnknownDeployment(
+                                name.to_string(),
+                            )
+                        })?;
+                    // A pin to a draining/retired version is refused
+                    // with the successor's name — late `infer`s never
+                    // hold a drain open.
+                    if matches!(reg.slots[d].state,
+                                SlotState::Draining
+                                    | SlotState::Retired)
+                    {
+                        return Err(ServeError::Retired {
+                            current_version: reg.slots[d]
+                                .successor
+                                .clone(),
+                        });
+                    }
+                    Some(d)
+                }
+            };
+            // Size validation is per deployment: a pinned request must
+            // match its deployment's signature; an unpinned one must
+            // match at least one *live* deployment (the leader then
+            // routes it only among those).
+            match deployment {
+                Some(d) if req.image.len() != reg.slots[d].elems => {
+                    return Err(ServeError::WrongImageSize {
+                        got: req.image.len(),
+                        want: reg.slots[d].elems,
+                    });
+                }
+                None if !reg.slots.iter().any(|s| {
+                    s.state == SlotState::Live
+                        && s.elems == req.image.len()
+                }) =>
+                {
+                    return Err(ServeError::WrongImageSize {
+                        got: req.image.len(),
+                        want: reg
+                            .slots
+                            .first()
+                            .map(|s| s.elems)
+                            .unwrap_or(0),
+                    });
+                }
+                _ => {}
+            }
+            deployment
         };
-        // Size validation is per deployment: a pinned request must
-        // match its deployment's signature; an unpinned one must match
-        // at least one registered deployment (the leader then routes it
-        // only among those).
-        match deployment {
-            Some(d) if req.image.len() != self.elems[d] => {
-                return Err(ServeError::WrongImageSize {
-                    got: req.image.len(),
-                    want: self.elems[d],
-                });
-            }
-            None if !self.elems.contains(&req.image.len()) => {
-                return Err(ServeError::WrongImageSize {
-                    got: req.image.len(),
-                    want: self.elems[0],
-                });
-            }
-            _ => {}
-        }
         if self.closing.load(Ordering::SeqCst) {
             return Err(ServeError::Stopped);
         }
@@ -289,9 +488,21 @@ impl Client {
         self.infer(InferRequest::new(image))
     }
 
-    /// The registered deployment names, in registration order.
-    pub fn deployments(&self) -> &[Arc<str>] {
-        &self.names
+    /// The names of the deployments currently accepting work
+    /// (live, canary, or warming — everything not yet retired), in
+    /// registration order.
+    pub fn deployments(&self) -> Vec<Arc<str>> {
+        self.registry
+            .read()
+            .unwrap()
+            .slots
+            .iter()
+            .filter(|s| {
+                !matches!(s.state,
+                          SlotState::Draining | SlotState::Retired)
+            })
+            .map(|s| s.name.clone())
+            .collect()
     }
 }
 
@@ -415,152 +626,217 @@ impl CoordinatorBuilder {
         let pending = Arc::new(AtomicUsize::new(0));
         let closing = Arc::new(AtomicBool::new(false));
         let (retry_tx, retry_rx) = mpsc::channel::<Vec<Request>>();
+        let (control_tx, control_rx) = mpsc::channel::<Control>();
+        let max_batch = policy.max_batch;
 
-        // Spawn every worker first so the backends compile in parallel,
-        // then collect their signatures: startup costs the slowest
-        // compile, not the sum.
-        let mut init_rxs = Vec::new();
-        let mut deps = Vec::with_capacity(deployments.len());
-        let mut dep_metrics = Vec::with_capacity(deployments.len());
-        let mut variants = Vec::with_capacity(deployments.len());
-        let mut workers = Vec::new();
+        // Spawn every deployment's workers first so the backends
+        // compile in parallel, then collect their signatures: startup
+        // costs the slowest compile, not the sum.
+        let mut spawned = Vec::with_capacity(deployments.len());
         for dep in deployments {
-            // Validate the batch-routing policy before consuming the
-            // deployment's backends.
-            let batch_router = BatchRouter::new(dep.router.clone(),
-                                                dep.backends.len())?;
-            let dep_name = dep.name.clone();
-            let dm = Arc::new(Metrics::new());
-            let tracker = Arc::new(AtomicU64::new(0));
-            let n_backends = dep.backends.len();
-            let mut jobs = Vec::with_capacity(n_backends);
-            let mut states = Vec::with_capacity(n_backends);
-            let mut bms = Vec::with_capacity(n_backends);
-            for (index, be) in dep.backends.into_iter().enumerate() {
-                let bname: Arc<str> = Arc::from(be.name());
-                let state = BackendState::new(&bname);
-                let bm = Arc::new(Metrics::new());
-                let (job_tx, job_rx) = mpsc::channel::<Job>();
-                let (init_tx, init_rx) =
-                    mpsc::channel::<Result<ModelSignature>>();
-                let ctx = WorkerCtx {
-                    index,
-                    n_backends,
-                    max_batch: policy.max_batch,
-                    jobs: job_rx,
-                    init_tx,
-                    state: state.clone(),
-                    metrics: bm.clone(),
-                    dep_metrics: dm.clone(),
-                    global: global.clone(),
-                    retry: retry_tx.clone(),
-                    pending: pending.clone(),
-                    tracker: tracker.clone(),
-                    dep_name: dep_name.clone(),
-                };
-                let handle =
-                    std::thread::spawn(move || backend_worker(be, ctx));
-                init_rxs.push((dep_name.clone(), bname.clone(),
-                               init_rx));
-                jobs.push(job_tx);
-                states.push(state);
-                bms.push((bname, bm));
-                workers.push(handle);
-            }
-            variants.push(Variant::live(
-                dep_name.clone(),
-                dep.accuracy,
-                dep.prior_latency_ms,
-                dm.clone(),
-                tracker,
-            ));
-            deps.push(LeaderDep {
-                jobs,
-                states,
-                router: batch_router,
-                metrics: dm.clone(),
+            spawned.push(spawn_deployment(dep, max_batch, &global,
+                                          &pending, &retry_tx)?);
+        }
+        let mut deps = Vec::with_capacity(spawned.len());
+        let mut dep_metrics = Vec::with_capacity(spawned.len());
+        let mut variants = Vec::with_capacity(spawned.len());
+        let mut workers = Vec::new();
+        let mut slots = Vec::with_capacity(spawned.len());
+        for mut sd in spawned {
+            // Signatures must agree *within* a deployment (its
+            // backends serve the same compiled model). Across
+            // deployments they may differ: the sequence tier registers
+            // `[T, D, 1]` text models next to `[H, W, C]` conv models
+            // behind one client, and the leader routes each request
+            // only among deployments whose signature matches the
+            // submitted image.
+            let sig = sd.signature()?;
+            slots.push(Slot {
+                name: sd.name.clone(),
+                elems: sig.image_elems(),
+                state: SlotState::Live,
+                successor: None,
+                metrics: sd.metrics.clone(),
+                plan: sd.plan.clone(),
             });
-            dep_metrics.push((dep_name, dm, bms));
+            variants.push(sd.variant);
+            deps.push(sd.dep);
+            workers.extend(sd.workers);
+            dep_metrics.push((sd.name, sd.metrics, sd.bms));
         }
-        // Only workers hold retry senders from here on, so the retry
-        // channel drains exactly when the workers are done.
-        drop(retry_tx);
 
-        let mut sigs = Vec::with_capacity(init_rxs.len());
-        for (dname, bname, init_rx) in init_rxs {
-            let sig = init_rx.recv().map_err(|_| {
-                anyhow!("backend '{bname}' of deployment '{dname}' \
-                         died during compile")
-            })??;
-            sigs.push((dname, bname, sig));
-        }
-        // Signatures must agree *within* a deployment (its backends
-        // serve the same compiled model). Across deployments they may
-        // differ: the sequence tier registers `[T, D, 1]` text models
-        // next to `[H, W, C]` conv models behind one client, and the
-        // leader routes each request only among deployments whose
-        // signature matches the submitted image.
-        let mut dep_sigs: Vec<(Arc<str>, ModelSignature)> = Vec::new();
-        for (dname, bname, sig) in &sigs {
-            match dep_sigs.iter().find(|(n, _)| n == dname) {
-                Some((_, first)) => ensure!(
-                    sig == first,
-                    "backend '{bname}' of deployment '{dname}' \
-                     signature {sig:?} disagrees with its deployment's \
-                     ({first:?})"
-                ),
-                None => dep_sigs.push((dname.clone(), sig.clone())),
-            }
-        }
-        // Per-deployment flattened image size, in registration order.
-        let elems: Arc<Vec<usize>> = Arc::new(
-            dep_sigs.iter().map(|(_, s)| s.image_elems()).collect(),
-        );
-
-        let names: Arc<Vec<Arc<str>>> = Arc::new(
-            dep_metrics.iter().map(|(n, _, _)| n.clone()).collect(),
-        );
-        let n_deps = names.len();
+        let n_deps = slots.len();
+        let registry = Arc::new(RwLock::new(Registry { slots }));
+        let dep_metrics: SharedDepMetrics =
+            Arc::new(Mutex::new(dep_metrics));
         // Bounded intake: the channel between clients and the leader
         // holds at most one coordinator's worth of queue capacity
         // (clamped to a sane range — the leader drains it far faster
         // than backends serve, so it only fills when everything else
         // already has). `intake_bound` is the fail-fast threshold:
         // pending work can only exceed every per-deployment cap
-        // combined when the system is saturated.
+        // combined when the system is saturated. Both are sized from
+        // the builder-time menu; live registrations reuse them (the
+        // clamp keeps the bound sane either way).
         let intake_cap =
             queue_cap.saturating_mul(n_deps).clamp(64, 8192);
         let intake_bound = queue_cap.saturating_mul(2 * n_deps);
         let (tx, rx) = mpsc::sync_channel::<Submit>(intake_cap);
+        let lifecycle = Lifecycle::new(
+            control_tx,
+            registry.clone(),
+            dep_metrics.clone(),
+            global.clone(),
+            pending.clone(),
+            retry_tx,
+            max_batch,
+        );
         let ctx = LeaderCtx {
             rx,
             retry_rx,
+            control_rx,
             deps,
             sla_router: Router::with_policy(variants, sla),
             policy,
             queue_cap,
-            elems: elems.clone(),
+            registry: registry.clone(),
             global: global.clone(),
             pending: pending.clone(),
             closing: closing.clone(),
             workers,
+            drains: Vec::new(),
+            canary: None,
         };
         let leader = std::thread::spawn(move || leader_main(ctx));
         Ok(Coordinator {
             client: Client {
                 tx,
-                elems,
-                names,
+                registry,
                 closing: closing.clone(),
                 pending,
                 intake_bound,
             },
             metrics: global,
             dep_metrics,
+            lifecycle,
             closing,
             leader: Some(leader),
         })
     }
+}
+
+/// A deployment whose backend workers have been spawned (compiles
+/// running in parallel on their threads) but whose signatures have not
+/// been collected yet.
+pub(crate) struct SpawnedDep {
+    pub(crate) name: Arc<str>,
+    pub(crate) dep: LeaderDep,
+    pub(crate) variant: Variant,
+    pub(crate) workers: Vec<JoinHandle<()>>,
+    pub(crate) bms: Vec<(Arc<str>, Arc<Metrics>)>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) plan: Option<Arc<ExecPlan>>,
+    init_rxs: Vec<(Arc<str>, Receiver<Result<ModelSignature>>)>,
+}
+
+impl SpawnedDep {
+    /// Block until every backend's compile finishes and check that
+    /// they agree on one model signature.
+    pub(crate) fn signature(&mut self) -> Result<ModelSignature> {
+        let mut first: Option<ModelSignature> = None;
+        for (bname, init_rx) in self.init_rxs.drain(..) {
+            let sig = init_rx.recv().map_err(|_| {
+                anyhow!("backend '{bname}' of deployment '{}' died \
+                         during compile",
+                        self.name)
+            })??;
+            match &first {
+                Some(f) => ensure!(
+                    &sig == f,
+                    "backend '{bname}' of deployment '{}' signature \
+                     {sig:?} disagrees with its deployment's ({f:?})",
+                    self.name
+                ),
+                None => first = Some(sig),
+            }
+        }
+        first.ok_or_else(|| {
+            anyhow!("deployment '{}' has no backends", self.name)
+        })
+    }
+}
+
+/// Spawn one deployment's backend workers (each starts compiling
+/// immediately) and assemble its leader-side routing state. Shared by
+/// [`CoordinatorBuilder::start`] (the static menu) and
+/// [`Lifecycle::register`] (live registration on a running
+/// coordinator).
+pub(crate) fn spawn_deployment(
+    dep: Deployment, max_batch: usize, global: &Arc<Metrics>,
+    pending: &Arc<AtomicUsize>, retry: &Sender<Vec<Request>>,
+) -> Result<SpawnedDep> {
+    // Validate the batch-routing policy before consuming the
+    // deployment's backends.
+    let batch_router =
+        BatchRouter::new(dep.router.clone(), dep.backends.len())?;
+    let dep_name = dep.name.clone();
+    let accuracy = dep.accuracy;
+    let prior_latency_ms = dep.prior_latency_ms;
+    let plan = dep.plan().cloned();
+    let dm = Arc::new(Metrics::new());
+    let tracker = Arc::new(AtomicU64::new(0));
+    let n_backends = dep.backends.len();
+    let mut jobs = Vec::with_capacity(n_backends);
+    let mut states = Vec::with_capacity(n_backends);
+    let mut bms = Vec::with_capacity(n_backends);
+    let mut workers = Vec::with_capacity(n_backends);
+    let mut init_rxs = Vec::with_capacity(n_backends);
+    for (index, be) in dep.backends.into_iter().enumerate() {
+        let bname: Arc<str> = Arc::from(be.name());
+        let state = BackendState::new(&bname);
+        let bm = Arc::new(Metrics::new());
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) =
+            mpsc::channel::<Result<ModelSignature>>();
+        let ctx = WorkerCtx {
+            index,
+            n_backends,
+            max_batch,
+            jobs: job_rx,
+            init_tx,
+            state: state.clone(),
+            metrics: bm.clone(),
+            dep_metrics: dm.clone(),
+            global: global.clone(),
+            retry: retry.clone(),
+            pending: pending.clone(),
+            tracker: tracker.clone(),
+            dep_name: dep_name.clone(),
+        };
+        let handle =
+            std::thread::spawn(move || backend_worker(be, ctx));
+        init_rxs.push((bname.clone(), init_rx));
+        jobs.push(job_tx);
+        states.push(state);
+        bms.push((bname, bm));
+        workers.push(handle);
+    }
+    Ok(SpawnedDep {
+        name: dep_name.clone(),
+        dep: LeaderDep {
+            jobs,
+            states,
+            router: batch_router,
+            metrics: dm.clone(),
+        },
+        variant: Variant::live(dep_name, accuracy, prior_latency_ms,
+                               dm.clone(), tracker),
+        workers,
+        bms,
+        metrics: dm,
+        plan,
+        init_rxs,
+    })
 }
 
 /// The serving coordinator: named deployments behind one client.
@@ -568,9 +844,8 @@ pub struct Coordinator {
     client: Client,
     /// Aggregate metrics across all deployments.
     pub metrics: Arc<Metrics>,
-    #[allow(clippy::type_complexity)]
-    dep_metrics:
-        Vec<(Arc<str>, Arc<Metrics>, Vec<(Arc<str>, Arc<Metrics>)>)>,
+    dep_metrics: SharedDepMetrics,
+    lifecycle: Lifecycle,
     closing: Arc<AtomicBool>,
     leader: Option<JoinHandle<()>>,
 }
@@ -618,9 +893,17 @@ impl Coordinator {
         self.client.clone()
     }
 
-    /// The registered deployment names, in registration order.
+    /// A cloneable control-plane handle: register, canary, retune and
+    /// retire deployment versions on this *running* coordinator (see
+    /// [`Lifecycle`]).
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lifecycle.clone()
+    }
+
+    /// The deployment names currently accepting work, in registration
+    /// order (retired versions drop out; live registrations appear).
     pub fn deployments(&self) -> Vec<Arc<str>> {
-        self.client.names.as_ref().clone()
+        self.client.deployments()
     }
 
     /// Submit a typed request through the coordinator's own client
@@ -681,6 +964,8 @@ impl Coordinator {
             overall: self.metrics.summary(),
             deployments: self
                 .dep_metrics
+                .lock()
+                .unwrap()
                 .iter()
                 .map(|(name, dm, bms)| DeploymentReport {
                     name: name.clone(),
@@ -857,7 +1142,7 @@ fn backend_worker(mut be: Box<dyn Backend>, ctx: WorkerCtx) {
 }
 
 /// One deployment's routing state, leader side.
-struct LeaderDep {
+pub(crate) struct LeaderDep {
     jobs: Vec<Sender<Job>>,
     states: Vec<Arc<BackendState>>,
     router: BatchRouter,
@@ -868,17 +1153,26 @@ struct LeaderDep {
 struct LeaderCtx {
     rx: Receiver<Submit>,
     retry_rx: Receiver<Vec<Request>>,
+    /// Lifecycle control plane: install/retire/canary ops, applied
+    /// between batches so the data path never takes a lock against
+    /// the control path.
+    control_rx: Receiver<Control>,
     deps: Vec<LeaderDep>,
     sla_router: Router,
     policy: BatchPolicy,
     queue_cap: usize,
-    /// Per-deployment flattened image size (registration order) — the
-    /// SLA router's eligibility mask is derived from it per request.
-    elems: Arc<Vec<usize>>,
+    /// The shared registry — lifecycle state plus per-slot image size
+    /// (the SLA router's eligibility mask is derived from it per
+    /// request). The leader is its only writer.
+    registry: Arc<RwLock<Registry>>,
     global: Arc<Metrics>,
     pending: Arc<AtomicUsize>,
     closing: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
+    /// Retires in progress, polled each loop turn.
+    drains: Vec<DrainWaiter>,
+    /// The (single) active canary traffic split, if any.
+    canary: Option<CanaryState>,
 }
 
 fn leader_main(mut ctx: LeaderCtx) {
@@ -890,6 +1184,9 @@ fn leader_main(mut ctx: LeaderCtx) {
                                      ctx.queue_cap);
     let mut open = true;
     while open || ctx.pending.load(Ordering::SeqCst) > 0 {
+        while let Ok(op) = ctx.control_rx.try_recv() {
+            handle_control(&mut ctx, &mut shards, op);
+        }
         while let Ok(reqs) = ctx.retry_rx.try_recv() {
             dispatch_retry(&mut ctx, reqs);
         }
@@ -897,6 +1194,7 @@ fn leader_main(mut ctx: LeaderCtx) {
         for (d, batch) in shards.take_expired(now) {
             dispatch(&mut ctx, d, batch);
         }
+        service_drains(&mut ctx, &shards);
         if open {
             // Block until new work or the earliest shard deadline.
             let timeout = shards
@@ -927,6 +1225,10 @@ fn leader_main(mut ctx: LeaderCtx) {
             dispatch_retry(&mut ctx, reqs);
         }
     }
+    // Out of the loop means `pending == 0` and the shards are empty,
+    // so every in-progress retire has drained — answer the waiters
+    // before tearing the workers down.
+    service_drains(&mut ctx, &shards);
     // A request that raced past the closing flag gets a typed error
     // instead of a silently dropped reply channel.
     drain_stopped(&ctx);
@@ -953,33 +1255,278 @@ fn drain_stopped(ctx: &LeaderCtx) {
     }
 }
 
+/// Apply one lifecycle control operation between batches.
+fn handle_control(ctx: &mut LeaderCtx,
+                  shards: &mut ShardBatcher<Request>, op: Control) {
+    match op {
+        Control::Install { msg, reply } => {
+            let _ = reply.send(install(ctx, shards, *msg));
+        }
+        Control::Retire {
+            slot,
+            successor,
+            reply,
+        } => retire_begin(ctx, shards, slot, successor, reply),
+        Control::CanarySet {
+            incumbent,
+            canary,
+            weight,
+            reply,
+        } => {
+            let _ = reply
+                .send(canary_set(ctx, incumbent, canary, weight));
+        }
+        Control::CanaryEnd { promote, reply } => {
+            let _ = reply.send(canary_end(ctx, promote));
+        }
+    }
+}
+
+/// Install a spawned deployment into every leader-side structure. The
+/// indices stay in lockstep (registry slot == SLA variant == leader
+/// dep == shard) and are append-only, so an in-flight request's slot
+/// index survives any later registration.
+fn install(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
+           m: Installed) -> std::result::Result<usize, String> {
+    {
+        let mut reg = ctx.registry.write().unwrap();
+        if reg.slots.iter().any(|s| s.name == m.name) {
+            return Err(format!("duplicate deployment name '{}'",
+                               m.name));
+        }
+        if reg.slots.len() >= router::MAX_VARIANTS {
+            return Err(format!(
+                "at most {} deployments over a coordinator's lifetime",
+                router::MAX_VARIANTS
+            ));
+        }
+        reg.slots.push(Slot {
+            name: m.name.clone(),
+            elems: m.elems,
+            state: m.state,
+            successor: None,
+            metrics: m.metrics,
+            plan: m.plan,
+        });
+    }
+    let slot = ctx.sla_router.push(m.variant);
+    ctx.deps.push(m.dep);
+    ctx.workers.extend(m.workers);
+    let shard = shards.add_shard();
+    debug_assert_eq!(slot, shard);
+    Ok(slot)
+}
+
+/// Flip a slot to `Draining` and flush its shard queue to the
+/// backends — retire *drains* queued work, it never drops it. The
+/// reply is parked on a [`DrainWaiter`]; [`service_drains`] answers it
+/// once the slot's outstanding count reaches zero.
+fn retire_begin(
+    ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
+    slot: usize, successor: Option<Arc<str>>,
+    reply: Sender<std::result::Result<Summary, String>>,
+) {
+    if slot >= ctx.deps.len() {
+        let _ = reply.send(Err(format!("no such slot {slot}")));
+        return;
+    }
+    if let Some(cs) = &ctx.canary {
+        if cs.incumbent == slot || cs.canary == slot {
+            let _ = reply.send(Err(
+                "slot is part of the active canary split; end the \
+                 canary first"
+                    .to_string(),
+            ));
+            return;
+        }
+    }
+    {
+        let mut reg = ctx.registry.write().unwrap();
+        let s = &mut reg.slots[slot];
+        if matches!(s.state,
+                    SlotState::Draining | SlotState::Retired)
+        {
+            let _ = reply.send(Err(format!(
+                "deployment '{}' is already retired",
+                s.name
+            )));
+            return;
+        }
+        s.state = SlotState::Draining;
+        s.successor = successor;
+    }
+    if let Some(batch) = shards.take_shard(slot) {
+        dispatch(ctx, slot, batch);
+    }
+    ctx.drains.push(DrainWaiter { slot, reply });
+}
+
+/// Put the (single) canary traffic split in place, or retarget its
+/// weight for the next rollout stage.
+fn canary_set(ctx: &mut LeaderCtx, incumbent: usize, canary: usize,
+              weight: f64) -> std::result::Result<(), String> {
+    if !weight.is_finite() || !(0.0..=1.0).contains(&weight) {
+        return Err(format!("canary weight {weight} outside [0, 1]"));
+    }
+    if incumbent == canary {
+        return Err("incumbent and canary must be distinct"
+            .to_string());
+    }
+    if incumbent.max(canary) >= ctx.deps.len() {
+        return Err(format!(
+            "no such slot {}",
+            incumbent.max(canary)
+        ));
+    }
+    let canary_elems = {
+        let reg = ctx.registry.read().unwrap();
+        if reg.slots[incumbent].state != SlotState::Live {
+            return Err(format!("incumbent '{}' is not live",
+                               reg.slots[incumbent].name));
+        }
+        if reg.slots[canary].state != SlotState::Canary {
+            return Err(format!(
+                "canary '{}' is not in the Canary state",
+                reg.slots[canary].name
+            ));
+        }
+        reg.slots[canary].elems
+    };
+    // `Split` requires strictly positive weights; the degenerate ends
+    // route everything one way without a router.
+    let split = if weight > 0.0 && weight < 1.0 {
+        Some(
+            BatchRouter::new(
+                RouterPolicy::Split(vec![1.0 - weight, weight]),
+                2,
+            )
+            .map_err(|e| format!("{e:#}"))?,
+        )
+    } else {
+        None
+    };
+    ctx.canary = Some(CanaryState {
+        incumbent,
+        canary,
+        weight,
+        split,
+        duo: [BackendState::new("incumbent"),
+              BackendState::new("canary")],
+        canary_elems,
+    });
+    Ok(())
+}
+
+/// Tear the canary split down; on promote the canary slot joins the
+/// unpinned Live rotation (rollback leaves it Canary for the
+/// controller to retire).
+fn canary_end(ctx: &mut LeaderCtx, promote: bool)
+              -> std::result::Result<(), String> {
+    let cs = match ctx.canary.take() {
+        Some(cs) => cs,
+        None => return Err("no active canary split".to_string()),
+    };
+    if promote {
+        ctx.registry.write().unwrap().slots[cs.canary].state =
+            SlotState::Live;
+    }
+    Ok(())
+}
+
+/// Answer every pending retire whose slot has fully drained: shard
+/// queue empty *and* outstanding count zero (failover-forwarded
+/// requests keep the count up, so a drain waits for them too). The
+/// drained slot's job senders are dropped — its workers exit — and the
+/// registry marks it `Retired`.
+fn service_drains(ctx: &mut LeaderCtx,
+                  shards: &ShardBatcher<Request>) {
+    let mut i = 0;
+    while i < ctx.drains.len() {
+        let slot = ctx.drains[i].slot;
+        let done = shards.depth(slot) == 0
+            && ctx.sla_router.variants()[slot].load() == 0;
+        if !done {
+            i += 1;
+            continue;
+        }
+        let w = ctx.drains.swap_remove(i);
+        ctx.deps[slot].jobs.clear();
+        ctx.registry.write().unwrap().slots[slot].state =
+            SlotState::Retired;
+        let _ = w.reply.send(Ok(ctx.deps[slot].metrics.summary()));
+    }
+}
+
 /// Resolve a submission to a deployment (explicit name wins; otherwise
 /// the live SLA router picks), run SLA-aware admission against that
 /// deployment's queue depth, and queue the survivor on its shard.
 fn accept(ctx: &mut LeaderCtx, shards: &mut ShardBatcher<Request>,
           sub: Submit) {
     let d = match sub.deployment {
-        Some(d) => d,
+        Some(d) => {
+            // Re-check lifecycle state leader-side: the slot may have
+            // begun draining after the client resolved the pin, and a
+            // draining slot must admit nothing new or its drain never
+            // terminates.
+            let successor = {
+                let reg = ctx.registry.read().unwrap();
+                match reg.slots[d].state {
+                    SlotState::Draining | SlotState::Retired => {
+                        Some(reg.slots[d].successor.clone())
+                    }
+                    _ => None,
+                }
+            };
+            if let Some(current_version) = successor {
+                let _ = sub.reply.send(Err(ServeError::Retired {
+                    current_version,
+                }));
+                ctx.global.record_rejected();
+                return;
+            }
+            d
+        }
         None => {
-            // Route only among deployments whose input signature
-            // matches the submitted image — with conv and sequence
-            // models registered side by side, the families accept
-            // different flattened sizes. The client guarantees at
-            // least one deployment matches.
-            let mask = ctx.elems.iter().enumerate().fold(
-                0u64,
-                |m, (i, &e)| {
-                    if e == sub.image.len() { m | (1u64 << i) } else { m }
-                },
-            );
-            match ctx.sla_router.select_masked(sub.sla, mask) {
+            // Route only among *live* deployments whose input
+            // signature matches the submitted image — with conv and
+            // sequence models registered side by side, the families
+            // accept different flattened sizes, and canary/draining
+            // versions are outside the unpinned rotation.
+            let mask = {
+                let reg = ctx.registry.read().unwrap();
+                reg.slots.iter().enumerate().fold(
+                    0u64,
+                    |m, (i, s)| {
+                        if s.state == SlotState::Live
+                            && s.elems == sub.image.len()
+                        {
+                            m | (1u64 << i)
+                        } else {
+                            m
+                        }
+                    },
+                )
+            };
+            let mut d = match ctx.sla_router.select_masked(sub.sla,
+                                                           mask) {
                 Ok(d) => d,
                 Err(e) => {
                     let _ = sub.reply.send(Err(e));
                     ctx.global.record_rejected();
                     return;
                 }
+            };
+            // Staged rollout: a fraction of the incumbent's unpinned
+            // traffic (deficit-round-robin over the split weights)
+            // goes to the canary instead.
+            if let Some(cs) = ctx.canary.as_mut() {
+                if d == cs.incumbent
+                    && cs.canary_elems == sub.image.len()
+                {
+                    d = cs.pick();
+                }
             }
+            d
         }
     };
     // Admission control before the request costs anything: shed by
@@ -1043,6 +1590,14 @@ fn dispatch_retry(ctx: &mut LeaderCtx, reqs: Vec<Request>) {
 /// backend, or here when *every* worker thread of the deployment is
 /// gone.
 fn dispatch(ctx: &mut LeaderCtx, d: usize, reqs: Vec<Request>) {
+    // A retired slot's job senders are cleared and its workers are
+    // gone; nothing should reach here for one (drains wait for every
+    // outstanding request, including failover retries), but a typed
+    // rejection beats indexing an empty sender list.
+    if ctx.deps[d].jobs.is_empty() {
+        reject(ctx, d, reqs);
+        return;
+    }
     let dep = &mut ctx.deps[d];
     let mut first = dep.router.pick(&dep.states);
     // Backends every request in this batch has already failed on

@@ -289,6 +289,20 @@ impl Router {
         &self.variants
     }
 
+    /// Append a variant on a *running* router (live deployment
+    /// registration); returns its index. Indices are stable — the
+    /// lifecycle registry retires variants by masking them out of
+    /// [`Router::select_masked`] eligibility, never by removal, so a
+    /// variant index pinned inside an in-flight request stays valid
+    /// for the life of the coordinator.
+    pub fn push(&mut self, v: Variant) -> usize {
+        assert!(self.variants.len() < MAX_VARIANTS,
+                "at most {MAX_VARIANTS} variants over a \
+                 coordinator's lifetime");
+        self.variants.push(v);
+        self.variants.len() - 1
+    }
+
     /// Admission control for deployment `dep`'s bounded queue,
     /// currently `depth` requests deep under capacity `cap`.
     ///
@@ -692,6 +706,22 @@ mod tests {
             r.select(Sla::Realtime),
             Err(ServeError::NoAdmissibleVariant { sla: Sla::Realtime })
         ));
+    }
+
+    #[test]
+    fn push_extends_a_live_router_with_stable_indices() {
+        let mut r = mk();
+        assert_eq!(r.variants().len(), 3);
+        let i = r.push(Variant::new("pattern-16x", 1.0, 0.88));
+        assert_eq!(i, 3);
+        assert_eq!(&*r.variants()[3].name, "pattern-16x");
+        // Existing indices are untouched and the new variant is
+        // immediately routable under its own mask bit.
+        assert_eq!(&*r.variants()[0].name, "dense");
+        assert_eq!(r.select_masked(Sla::Realtime, 0b1000).unwrap(), 3);
+        // Masked out, it is invisible: the old menu still routes as
+        // before.
+        assert_eq!(r.select_masked(Sla::Realtime, 0b0111).unwrap(), 2);
     }
 
     #[test]

@@ -60,12 +60,16 @@ pub mod data;
 pub mod prelude {
     pub use crate::codegen::{autotune_plan, autotune_plan_batched,
                              build_plan, ExecPlan, PruneConfig, Scheme};
-    pub use crate::coordinator::{BatchPolicy, Client, Coordinator,
+    pub use crate::coordinator::{BatchPolicy, CanaryConfig,
+                                 CanaryOutcome, Client, Coordinator,
                                  CoordinatorBuilder, Deployment,
-                                 DeploymentBuilder, InferRequest,
+                                 DeploymentBuilder, DeploymentId,
+                                 InferRequest, Lifecycle,
                                  NativeBackend, NativeBatchMode,
                                  Prediction, PredictionResult,
+                                 RetuneOutcome, Retuner, RetunerConfig,
                                  RouterPolicy, ServeConfig, ServeError,
-                                 ServeReport, Sla, SlaPolicy, Summary};
+                                 ServeReport, Sla, SlaPolicy,
+                                 SlotState, Summary};
     pub use crate::exec::{ExecutorPool, ModelExecutor};
 }

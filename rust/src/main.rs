@@ -24,7 +24,15 @@
 //!                               `--queue-cap C` bounds the per-
 //!                               deployment queue (native only) so
 //!                               overload sheds typed `Overloaded`
-//!                               instead of queueing without bound
+//!                               instead of queueing without bound;
+//!                               `--lifecycle` runs the hot-swap scene
+//!                               instead: v1 serves open-loop Poisson
+//!                               traffic while v2 registers on the
+//!                               *running* coordinator, canaries
+//!                               through staged weights
+//!                               (5% → 25% → 100%), promotes on
+//!                               windowed metrics, and v1 drains out
+//!                               with zero dropped requests
 //!   train  [--model M] [--dataset D] [--steps N]
 //!                             — train a model via the AOT train_step
 //!   compress [--model NAME]   — pattern-compress a timing model, print
@@ -107,9 +115,13 @@ fn main() -> Result<()> {
             let flags = parse_flags(cmd, rest, &[
                 "model", "batch", "requests", "backend", "scheme",
                 "variants", "sla", "batch-mode", "rate", "queue-cap",
-                "no-simd",
+                "no-simd", "lifecycle",
             ])?;
-            serve(&flags)
+            if flags.contains_key("lifecycle") {
+                serve_lifecycle(&flags)
+            } else {
+                serve(&flags)
+            }
         }
         "train" => {
             let flags =
@@ -386,6 +398,142 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         for ((sla, name), count) in rows {
             println!("  {:8} -> {:16} {count:5} reqs", sla.label(), name);
         }
+    }
+    Ok(())
+}
+
+/// `serve --lifecycle`: the hot-swap scene. v1 serves an open-loop
+/// Poisson stream while v2 registers on the *running* coordinator,
+/// canaries through staged traffic weights, promotes (or rolls back)
+/// on windowed metric deltas, and the loser drains out — every
+/// in-flight request answered, zero dropped.
+fn serve_lifecycle(flags: &HashMap<String, String>) -> Result<()> {
+    anyhow::ensure!(
+        flags.get("backend").map(String::as_str).unwrap_or("native")
+            == "native",
+        "--lifecycle drives the native path (hot-swap needs \
+         builder-made versions)"
+    );
+    for banned in
+        ["variants", "scheme", "sla", "batch-mode", "queue-cap"]
+    {
+        anyhow::ensure!(
+            !flags.contains_key(banned),
+            "--{banned} does not combine with --lifecycle (the scene \
+             builds its own v1/v2 schemes)"
+        );
+    }
+    if flags.contains_key("no-simd") {
+        cocopie::exec::micro::set_force_scalar(true);
+    }
+    let model = flags.get("model").map(String::as_str)
+        .unwrap_or("mobilenet_v2");
+    let ir = match model {
+        "vgg16" => zoo::vgg16(zoo::CIFAR_HW, 10),
+        "resnet50" => zoo::resnet50(zoo::CIFAR_HW, 10),
+        "mobilenet_v2" => zoo::mobilenet_v2(zoo::CIFAR_HW, 10),
+        "text" => zoo::tiny_text_encoder(),
+        other => bail!(
+            "unknown timing model {other} \
+             (vgg16|resnet50|mobilenet_v2|text)"
+        ),
+    };
+    let batch: usize =
+        flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let rate: f64 = flags
+        .get("rate")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200.0);
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    // The stream must outlast the canary's stage windows, or the
+    // starved windows read as insufficient evidence and roll back.
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or((rate * 12.0) as usize);
+    let elems = ir.input.elements();
+    let v1 = format!("{model}@1");
+    let v2 = format!("{model}@2");
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(3),
+        })
+        .register(
+            Deployment::builder(&v1, &ir)
+                .scheme(Scheme::CocoGen)
+                .seed(7)
+                .build()?,
+        )
+        .start()?;
+    let lc = coord.lifecycle();
+    let client = coord.client();
+    let schedule =
+        cocopie::util::bench::arrival_schedule(rate, n, 11);
+    println!(
+        "lifecycle: {v1} serving {n} open-loop arrivals at \
+         {rate:.0} req/s; hot-swapping to {v2} mid-stream"
+    );
+    let driver = std::thread::spawn(move || {
+        cocopie::util::bench::open_loop_drive(
+            &client,
+            elems,
+            &schedule,
+            |_| Sla::Standard,
+            std::time::Duration::from_secs(30),
+        )
+    });
+    // Let v1 accumulate a little history before the swap starts.
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let dep2 = Deployment::builder(&v2, &ir)
+        .scheme(Scheme::CocoGenQuant)
+        .seed(7)
+        .build()?;
+    let cfg = CanaryConfig {
+        stages: vec![0.05, 0.25, 1.0],
+        stage_window: std::time::Duration::from_secs(3),
+        min_requests: 16,
+        max_p99_ratio: 2.0,
+        p99_floor_ms: 5.0,
+        max_shed_excess: 0.25,
+        max_failovers: 0,
+        poll: std::time::Duration::from_millis(10),
+    };
+    let t_swap = std::time::Instant::now();
+    match lc.canary(dep2, &v1, &cfg)? {
+        CanaryOutcome::Promoted => println!(
+            "canary promoted in {:.1}s: {v2} live, {v1} drained and \
+             retired",
+            t_swap.elapsed().as_secs_f64()
+        ),
+        CanaryOutcome::RolledBack { stage, weight, reason } => {
+            println!(
+                "canary rolled back at stage {stage} (weight \
+                 {weight:.2}): {reason}"
+            )
+        }
+    }
+    for (name, state) in lc.status() {
+        println!("  {name:16} {state:?}");
+    }
+    let report = driver.join().unwrap();
+    println!(
+        "open loop: {} offered, {} completed, {} shed, {} failed, \
+         {} hung, goodput {:.0} req/s",
+        report.offered, report.completed, report.shed,
+        report.failed, report.hung, report.goodput_rps()
+    );
+    anyhow::ensure!(
+        report.hung == 0 && report.failed == 0,
+        "requests lost across the hot-swap"
+    );
+    let report = coord.shutdown_report();
+    for dep in &report.deployments {
+        println!(
+            "  {:16} {:5} reqs  p50 {:7.2} ms  p99 {:7.2} ms",
+            dep.name, dep.summary.completed, dep.summary.p50_ms,
+            dep.summary.p99_ms
+        );
     }
     Ok(())
 }

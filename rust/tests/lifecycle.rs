@@ -1,0 +1,497 @@
+//! Integration: the live deployment lifecycle — register/retire on a
+//! running coordinator, canary promote/rollback from windowed metrics,
+//! and the observed-batch retuner.
+//!
+//! The invariants under test: a new version becomes routable without
+//! restarting anything; a retiring version *drains* (never drops) its
+//! queued work and refuses late traffic with a typed error; and every
+//! in-flight request resolves bit-identically to the version that
+//! admitted it, even while a hot-swap runs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use cocopie::coordinator::backend::nhwc_to_chw;
+use cocopie::coordinator::{Backend, ModelSignature};
+use cocopie::ir::{Chw, IrBuilder, ModelIR};
+use cocopie::prelude::*;
+use cocopie::runtime::HostTensor;
+use cocopie::util::rng::Rng;
+
+const H: usize = 10;
+const W: usize = 10;
+const C: usize = 3;
+const CLASSES: usize = 6;
+const ELEMS: usize = H * W * C;
+
+fn tiny_ir() -> ModelIR {
+    let mut b = IrBuilder::new("lc_t", Chw::new(C, H, W));
+    b.conv("c1", 3, 8, 1, true)
+        .conv("c2", 3, 16, 2, true)
+        .gap("g")
+        .dense("fc", CLASSES, false);
+    b.build().unwrap()
+}
+
+fn images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n)
+        .map(|_| (0..ELEMS).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+/// Direct (coordinator-free) prediction for one NHWC image.
+fn direct_predict(plan: &ExecPlan, img: &[f32]) -> (usize, f32) {
+    let out =
+        ModelExecutor::new(plan, 1).run(&nhwc_to_chw(img, H, W, C));
+    out.data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(cl, s)| (cl, *s))
+        .unwrap()
+}
+
+/// A backend with a controllable service time: deterministic logits
+/// (class 0), `delay` per batch — the knob that forces a canary
+/// latency regression.
+struct SleepyBackend {
+    name: &'static str,
+    delay: Duration,
+}
+
+impl Backend for SleepyBackend {
+    fn name(&self) -> &str {
+        self.name
+    }
+    fn compile(&mut self, _max_batch: usize) -> Result<ModelSignature> {
+        Ok(ModelSignature {
+            input_shape: vec![H, W, C],
+            classes: CLASSES,
+        })
+    }
+    fn infer_batch(&mut self, images: &HostTensor)
+                   -> Result<HostTensor> {
+        std::thread::sleep(self.delay);
+        let n = images.shape()[0];
+        let mut row = vec![0f32; CLASSES];
+        row[0] = 1.0;
+        Ok(HostTensor::f32(&[n, CLASSES], row.repeat(n)))
+    }
+}
+
+fn sleepy(name: &'static str, delay_ms: u64) -> Deployment {
+    Deployment::from_backends(
+        name,
+        vec![Box::new(SleepyBackend {
+            name,
+            delay: Duration::from_millis(delay_ms),
+        })],
+    )
+    .with_prior_latency_ms(1.0)
+}
+
+#[test]
+fn register_makes_a_new_version_routable_on_a_running_coordinator() {
+    let ir = tiny_ir();
+    let v1 = Deployment::builder("model@1", &ir)
+        .scheme(Scheme::CocoGen)
+        .seed(42)
+        .build()
+        .unwrap();
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        })
+        .register(v1)
+        .start()
+        .expect("start");
+    // Warm traffic proves the coordinator is live before we touch it.
+    coord.submit(images(1, 1).remove(0)).unwrap().recv()
+        .unwrap().unwrap();
+
+    let lc = coord.lifecycle();
+    let v2 = Deployment::builder("model@2", &ir)
+        .scheme(Scheme::CocoGenQuant)
+        .seed(42)
+        .build()
+        .unwrap();
+    let plan2 = v2.plan().unwrap().clone();
+    let slot = lc.register(v2).expect("live registration");
+    assert_eq!(slot, 1);
+    let names = coord.deployments();
+    assert!(names.iter().any(|n| &**n == "model@1"));
+    assert!(names.iter().any(|n| &**n == "model@2"));
+
+    // The freshly registered version serves pinned traffic
+    // bit-identically to its own plan.
+    for img in images(8, 9) {
+        let pred = coord
+            .infer(InferRequest {
+                image: img.clone(),
+                sla: Sla::Standard,
+                deployment: Some("model@2"),
+            })
+            .unwrap()
+            .recv()
+            .expect("reply")
+            .expect("served");
+        assert_eq!(&*pred.deployment, "model@2");
+        let (class, score) = direct_predict(&plan2, &img);
+        assert_eq!(pred.class, class);
+        assert_eq!(pred.score, score);
+    }
+
+    // Registration is gated: duplicate names are refused.
+    let dup = Deployment::builder("model@2", &ir)
+        .scheme(Scheme::CocoGen)
+        .build()
+        .unwrap();
+    assert!(lc.register(dup).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn retire_drains_queued_requests_and_types_late_traffic() {
+    // Six requests queue against a 100 ms/batch backend; retire must
+    // return only after all six served (drained, not dropped), and a
+    // late pin gets the typed Retired error with the successor hint.
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+        })
+        .register(sleepy("slow@1", 100))
+        .register(sleepy("keeper", 0))
+        .start()
+        .expect("start");
+    let lc = coord.lifecycle();
+    let pending: Vec<_> = images(6, 3)
+        .into_iter()
+        .map(|image| {
+            coord
+                .infer(InferRequest {
+                    image,
+                    sla: Sla::Standard,
+                    deployment: Some("slow@1"),
+                })
+                .unwrap()
+        })
+        .collect();
+    let summary = lc
+        .retire_to("slow@1", Some(Arc::from("keeper")))
+        .expect("retire");
+    assert_eq!(summary.completed, 6,
+               "retire must wait for every queued request");
+    assert_eq!(summary.rejected, 0, "drained, not dropped");
+    // All six replies are already resolved — served, not dropped.
+    for rx in pending {
+        rx.recv_timeout(Duration::from_millis(50))
+            .expect("drained replies resolve before retire returns")
+            .expect("served");
+    }
+    // Late pins are refused, typed, with the successor hint.
+    let err = coord
+        .infer(InferRequest {
+            image: vec![0.1; ELEMS],
+            sla: Sla::Standard,
+            deployment: Some("slow@1"),
+        })
+        .err();
+    assert_eq!(
+        err,
+        Some(ServeError::Retired {
+            current_version: Some(Arc::from("keeper")),
+        })
+    );
+    // The retired version is out of the menu; unpinned traffic lands
+    // on the keeper.
+    assert_eq!(coord.deployments(), vec![Arc::<str>::from("keeper")]);
+    let pred = coord.submit(vec![0.1; ELEMS]).unwrap().recv()
+        .unwrap().unwrap();
+    assert_eq!(&*pred.deployment, "keeper");
+    // Double retire is a typed control error, not a hang.
+    assert!(lc.retire("slow@1").is_err());
+    coord.shutdown();
+}
+
+/// Closed-loop background load: unpinned Standard requests until
+/// `stop`, counting failures (there must be none).
+fn spawn_load(client: Client, stop: Arc<AtomicBool>, threads: usize)
+              -> Vec<std::thread::JoinHandle<u64>> {
+    (0..threads)
+        .map(|t| {
+            let client = client.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(0xBEEF + t as u64);
+                let mut failed = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let image: Vec<f32> =
+                        (0..ELEMS).map(|_| rng.normal_f32()).collect();
+                    let ok = client
+                        .infer(InferRequest {
+                            image,
+                            sla: Sla::Standard,
+                            deployment: None,
+                        })
+                        .ok()
+                        .and_then(|rx| rx.recv().ok())
+                        .map(|r| r.is_ok())
+                        .unwrap_or(false);
+                    if !ok {
+                        failed += 1;
+                    }
+                }
+                failed
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn injected_latency_canary_rolls_back() {
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        })
+        .register(sleepy("model@1", 0))
+        .start()
+        .expect("start");
+    let lc = coord.lifecycle();
+    let stop = Arc::new(AtomicBool::new(false));
+    let load = spawn_load(coord.client(), stop.clone(), 4);
+
+    let cfg = CanaryConfig {
+        stages: vec![0.5],
+        stage_window: Duration::from_secs(5),
+        min_requests: 10,
+        max_p99_ratio: 1.5,
+        p99_floor_ms: 1.0,
+        max_shed_excess: 1.0,
+        max_failovers: 0,
+        poll: Duration::from_millis(5),
+    };
+    // The canary serves 40 ms/batch against a sub-millisecond
+    // incumbent: an unambiguous windowed-p99 regression.
+    let outcome = lc
+        .canary(sleepy("model@2", 40), "model@1", &cfg)
+        .expect("controller ran");
+    match outcome {
+        CanaryOutcome::RolledBack { stage, reason, .. } => {
+            assert_eq!(stage, 0);
+            assert!(reason.contains("p99"), "{reason}");
+        }
+        CanaryOutcome::Promoted => {
+            panic!("a 40x latency regression must not promote")
+        }
+    }
+    // Rollback leaves the incumbent untouched and the canary retired.
+    let status = lc.status();
+    assert!(status.iter().any(|(n, s)| {
+        &**n == "model@1" && *s == SlotState::Live
+    }));
+    assert!(status.iter().any(|(n, s)| {
+        &**n == "model@2" && *s == SlotState::Retired
+    }));
+    // A late pin to the rolled-back canary names the incumbent.
+    let err = coord
+        .infer(InferRequest {
+            image: vec![0.1; ELEMS],
+            sla: Sla::Standard,
+            deployment: Some("model@2"),
+        })
+        .err();
+    assert_eq!(
+        err,
+        Some(ServeError::Retired {
+            current_version: Some(Arc::from("model@1")),
+        })
+    );
+    stop.store(true, Ordering::SeqCst);
+    let failed: u64 = load.into_iter()
+        .map(|h| h.join().unwrap())
+        .sum();
+    assert_eq!(failed, 0,
+               "no request may fail across a canary rollback");
+    coord.shutdown();
+}
+
+#[test]
+fn clean_canary_promotes_and_in_flight_pins_stay_bit_identical() {
+    // The hot-swap invariant: requests pinned to (and admitted by) v1
+    // keep resolving bit-identically to v1's plan while v2 registers,
+    // canaries and takes over — no torn reads of the swapped state —
+    // and the first pin after v1 retires gets the typed hint.
+    let ir = tiny_ir();
+    let v1 = Deployment::builder("model@1", &ir)
+        .scheme(Scheme::CocoGen)
+        .seed(42)
+        .build()
+        .unwrap();
+    let plan1 = v1.plan().unwrap().clone();
+    let coord = Coordinator::builder()
+        .policy(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        })
+        .register(v1)
+        .start()
+        .expect("start");
+    let lc = coord.lifecycle();
+    let stop = Arc::new(AtomicBool::new(false));
+    // Unpinned load feeds the canary's evidence windows.
+    let load = spawn_load(coord.client(), stop.clone(), 2);
+    // Pinned load: v1 by name, until the retire hint arrives.
+    let pin_client = coord.client();
+    let pinner = std::thread::spawn(move || {
+        let mut rng = Rng::seed_from(0xA11CE);
+        let mut served: Vec<(Vec<f32>, usize, f32)> = Vec::new();
+        let hint = loop {
+            let image: Vec<f32> =
+                (0..ELEMS).map(|_| rng.normal_f32()).collect();
+            match pin_client.infer(InferRequest {
+                image: image.clone(),
+                sla: Sla::Standard,
+                deployment: Some("model@1"),
+            }) {
+                // The typed Retired error can surface at submit time
+                // (registry re-check) or on the receiver (the request
+                // raced the leader-side drain flip) — both mean the
+                // swap landed.
+                Ok(rx) => match rx.recv().expect("reply") {
+                    Ok(pred) => {
+                        assert_eq!(&*pred.deployment, "model@1",
+                                   "pinned request routed elsewhere");
+                        served.push((image, pred.class, pred.score));
+                    }
+                    Err(ServeError::Retired { current_version }) => {
+                        break current_version;
+                    }
+                    Err(e) => panic!("unexpected pin failure: {e}"),
+                },
+                Err(ServeError::Retired { current_version }) => {
+                    break current_version;
+                }
+                Err(e) => panic!("unexpected pin failure: {e}"),
+            }
+        };
+        (served, hint)
+    });
+
+    // v2 is a different scheme (int8): if a v1-admitted request were
+    // ever torn onto v2, its logits would differ and the bit-identity
+    // check below would catch it.
+    let v2 = Deployment::builder("model@2", &ir)
+        .scheme(Scheme::CocoGenQuant)
+        .seed(42)
+        .build()
+        .unwrap();
+    let plan2 = v2.plan().unwrap().clone();
+    let cfg = CanaryConfig {
+        stages: vec![0.5, 1.0],
+        stage_window: Duration::from_secs(5),
+        min_requests: 5,
+        max_p99_ratio: 50.0,
+        p99_floor_ms: 25.0,
+        max_shed_excess: 1.0,
+        max_failovers: 0,
+        poll: Duration::from_millis(5),
+    };
+    let outcome =
+        lc.canary(v2, "model@1", &cfg).expect("controller ran");
+    assert_eq!(outcome, CanaryOutcome::Promoted,
+               "an equivalent canary must promote");
+    stop.store(true, Ordering::SeqCst);
+
+    let (served, hint) = pinner.join().unwrap();
+    assert_eq!(hint, Some(Arc::from("model@2")),
+               "the retire hint must name the promoted version");
+    assert!(!served.is_empty(),
+            "the pinner must have served requests during the swap");
+    for (img, class, score) in &served {
+        let (want_class, want_score) = direct_predict(&plan1, img);
+        assert_eq!(*class, want_class,
+                   "v1-admitted request diverged from v1's plan");
+        assert_eq!(*score, want_score,
+                   "v1-admitted request diverged from v1's plan");
+    }
+    let failed: u64 = load.into_iter()
+        .map(|h| h.join().unwrap())
+        .sum();
+    assert_eq!(failed, 0,
+               "no unpinned request may fail across a promote");
+    // Post-swap: v2 is the menu, and serves its own plan.
+    assert_eq!(coord.deployments(),
+               vec![Arc::<str>::from("model@2")]);
+    let img = images(1, 77).remove(0);
+    let pred = coord.submit(img.clone()).unwrap().recv()
+        .unwrap().unwrap();
+    assert_eq!(&*pred.deployment, "model@2");
+    let (class, score) = direct_predict(&plan2, &img);
+    assert_eq!(pred.class, class);
+    assert_eq!(pred.score, score);
+    coord.shutdown();
+}
+
+#[test]
+fn retune_once_keeps_the_incumbent_unless_it_wins() {
+    use cocopie::coordinator::{retune_once, RetuneOutcome,
+                               RetunerConfig};
+    let ir = tiny_ir();
+    let coord = Coordinator::builder()
+        .register(
+            Deployment::builder("tuned@1", &ir)
+                .scheme(Scheme::CocoGen)
+                .seed(42)
+                .build()
+                .unwrap(),
+        )
+        .register(sleepy("planless", 0))
+        .start()
+        .expect("start");
+    let lc = coord.lifecycle();
+    // Serve a little traffic so the observed batch is real.
+    for img in images(6, 13) {
+        coord
+            .infer(InferRequest {
+                image: img,
+                sla: Sla::Standard,
+                deployment: Some("tuned@1"),
+            })
+            .unwrap()
+            .recv()
+            .unwrap()
+            .unwrap();
+    }
+    // An infinite speedup bar can never be met: the pass must re-tune,
+    // measure, and keep the incumbent — no swap, no new version.
+    let cfg = RetunerConfig {
+        min_speedup: f64::INFINITY,
+        ..RetunerConfig::default()
+    };
+    match retune_once(&lc, "tuned@1", &cfg).expect("retune ran") {
+        RetuneOutcome::Kept {
+            observed_batch,
+            speedup,
+        } => {
+            assert!(observed_batch >= 1);
+            assert!(speedup.is_finite() && speedup > 0.0);
+        }
+        other => panic!("expected Kept, got {other:?}"),
+    }
+    assert_eq!(coord.deployments().len(), 2,
+               "a kept re-tune must not grow the menu");
+    // A deployment with no attached plan has nothing to re-tune.
+    assert!(matches!(
+        retune_once(&lc, "planless", &cfg).expect("ran"),
+        RetuneOutcome::NoPlan
+    ));
+    // Unknown names are typed errors.
+    assert!(retune_once(&lc, "ghost", &cfg).is_err());
+    coord.shutdown();
+}
